@@ -1,0 +1,49 @@
+//! Quickstart: cluster a handful of 2-d points with exact HAC via RAC.
+//!
+//! ```bash
+//! cargo run --offline --release --example quickstart
+//! ```
+
+use rac_hac::data::{Dataset, Metric};
+use rac_hac::knn::complete_graph;
+use rac_hac::linkage::Linkage;
+use rac_hac::rac::RacEngine;
+
+fn main() {
+    // Three obvious groups of 2-d points.
+    #[rustfmt::skip]
+    let points: &[[f32; 2]] = &[
+        [0.0, 0.0], [0.1, 0.2], [0.2, 0.1],      // group A
+        [5.0, 5.0], [5.1, 5.2], [4.9, 5.1],      // group B
+        [10.0, 0.0], [10.2, 0.1], [9.9, -0.1],   // group C
+    ];
+    let ds = Dataset {
+        n: points.len(),
+        d: 2,
+        metric: Metric::L2,
+        rows: points.iter().flatten().copied().collect(),
+    };
+
+    // Complete dissimilarity graph -> RAC with average linkage.
+    let g = complete_graph(&ds);
+    let result = RacEngine::new(&g, Linkage::Average).run();
+
+    println!("merge list (order within a round is by leader id):");
+    for m in result.dendrogram.merges() {
+        println!("  {:>2} + {:>2}  at dissimilarity {:.3}", m.a, m.b, m.weight);
+    }
+    println!(
+        "\n{} merges in {} parallel rounds (sequential HAC would need {} steps)",
+        result.metrics.total_merges(),
+        result.metrics.merge_rounds(),
+        result.metrics.total_merges(),
+    );
+
+    // Cut the hierarchy into 3 flat clusters.
+    let labels = result.dendrogram.cut_k(3);
+    println!("\nflat cut at k=3: {labels:?}");
+    assert_eq!(labels[0], labels[1]);
+    assert_eq!(labels[3], labels[4]);
+    assert_ne!(labels[0], labels[3]);
+    println!("quickstart OK");
+}

@@ -1,0 +1,68 @@
+//! Scaling study (paper Fig 3 in miniature): how RAC's runtime responds to
+//! more machines and more CPUs per machine.
+//!
+//! ```bash
+//! cargo run --offline --release --example scaling_study
+//! ```
+//!
+//! The full parameter sweep that regenerates Fig 3's four panels lives in
+//! `cargo bench --bench fig3_scaling`; this example is the quick
+//! human-readable version.
+
+use std::time::Instant;
+
+use rac_hac::data::gaussian_mixture;
+use rac_hac::dist::{DistConfig, DistRacEngine};
+use rac_hac::knn::{knn_graph, Backend};
+use rac_hac::linkage::Linkage;
+
+fn main() -> anyhow::Result<()> {
+    let n = 6000;
+    println!("dataset: SIFT-like n={n} d=64, kNN k=12, complete linkage\n");
+    let ds = gaussian_mixture(n, 64, 48, 0.8, 0.02, 7);
+    let g = knn_graph(&ds, 12, Backend::Native, None)?;
+    println!("graph: {} edges, max degree {}\n", g.m(), g.max_degree());
+
+    let run = |machines: usize, cpus: usize| {
+        let t = Instant::now();
+        let r = DistRacEngine::new(
+            &g,
+            Linkage::Complete,
+            DistConfig::new(machines, cpus),
+        )
+        .run();
+        (t.elapsed(), r)
+    };
+
+    println!("-- machines sweep (1 cpu each; paper Fig 3a/3b) --");
+    let (base_t, base_r) = run(1, 1);
+    println!(
+        "  1 machine : {base_t:>9.2?}  (1.00x)  [{} rounds, {} net msgs]",
+        base_r.metrics.merge_rounds(),
+        base_r.metrics.total_net_messages()
+    );
+    for machines in [2, 4, 8] {
+        let (t, r) = run(machines, 1);
+        println!(
+            "  {machines} machines: {t:>9.2?}  ({:.2}x)  [{} rounds, {} net msgs]",
+            base_t.as_secs_f64() / t.as_secs_f64(),
+            r.metrics.merge_rounds(),
+            r.metrics.total_net_messages()
+        );
+        assert!(r.dendrogram.same_clustering(&base_r.dendrogram, 1e-9));
+    }
+
+    println!("\n-- CPUs sweep (4 machines; paper Fig 3c) --");
+    let (base_t, _) = run(4, 1);
+    println!("  1 cpu/machine : {base_t:>9.2?}  (1.00x)");
+    for cpus in [2, 4] {
+        let (t, _) = run(4, cpus);
+        println!(
+            "  {cpus} cpus/machine: {t:>9.2?}  ({:.2}x)",
+            base_t.as_secs_f64() / t.as_secs_f64()
+        );
+    }
+
+    println!("\n(identical dendrograms across all topologies — Theorem 1 in action)");
+    Ok(())
+}

@@ -1,0 +1,77 @@
+"""AOT lowering: JAX (L2 + L1) -> HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``). The text
+parser reassigns ids and round-trips cleanly — see
+/opt/xla-example/load_hlo/ and its README.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (the Makefile does
+this). Emits one ``<name>.hlo.txt`` per variant plus ``manifest.json``
+describing shapes so the Rust runtime can size its buffers.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(fn, specs) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated variant names to (re)build; default all",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {}
+    for name, (fn, specs, meta) in model.variants().items():
+        if only is not None and name not in only:
+            continue
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        text = lower_variant(fn, specs)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            **meta,
+            "file": os.path.basename(path),
+            "inputs": [list(s.shape) for s in specs],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    man_path = os.path.join(args.out_dir, "manifest.json")
+    # Merge with an existing manifest so --only rebuilds do not drop entries.
+    if only is not None and os.path.exists(man_path):
+        with open(man_path) as f:
+            old = json.load(f)
+        old.update(manifest)
+        manifest = old
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {man_path} ({len(manifest)} variants)")
+
+
+if __name__ == "__main__":
+    main()

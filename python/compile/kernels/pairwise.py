@@ -1,0 +1,116 @@
+"""Layer-1 Pallas kernels: tiled pairwise dissimilarity blocks.
+
+The paper's numeric hot-spot is dissimilarity-graph construction: squared-l2
+over SIFT-style dense vectors and cosine over bag-of-words vectors. On the
+authors' CPU fleet this was a blocked BLAS job; here it is re-thought for the
+TPU memory hierarchy (see DESIGN.md §Hardware-Adaptation):
+
+* the cross-term ``x @ y.T`` is an MXU contraction; tiles are kept at
+  multiples of 128 in both output dimensions so the systolic array is fully
+  occupied;
+* each grid step holds one ``(tm, d)`` X-tile, one ``(tn, d)`` Y-tile and one
+  ``(tm, tn)`` output tile in VMEM — the full distance matrix never exists in
+  HBM at once when the caller streams blocks;
+* the row-norm corrections for l2 are fused into the same tile so distances
+  leave the kernel finished.
+
+The kernels MUST be lowered with ``interpret=True`` on this image: real TPU
+lowering emits a Mosaic custom-call that the CPU PJRT plugin cannot execute.
+The AOT path (aot.py) bakes the interpreted lowering into plain HLO, which is
+what the Rust runtime loads.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sq_l2_kernel(x_ref, y_ref, o_ref):
+    """One (tm, tn) tile of the squared-l2 distance matrix.
+
+    o[i, j] = ||x_i||^2 + ||y_j||^2 - 2 x_i . y_j, clamped at 0.
+    The matmul accumulates in f32 (``preferred_element_type``) so bf16 inputs
+    keep MXU-native precision behaviour.
+    """
+    x = x_ref[...].astype(jnp.float32)
+    y = y_ref[...].astype(jnp.float32)
+    cross = jax.lax.dot_general(
+        x,
+        y,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    xx = jnp.sum(x * x, axis=1, keepdims=True)
+    yy = jnp.sum(y * y, axis=1, keepdims=True)
+    o_ref[...] = jnp.maximum(xx + yy.T - 2.0 * cross, 0.0)
+
+
+def _cosine_kernel(x_ref, y_ref, o_ref):
+    """One (tm, tn) tile of the cosine dissimilarity matrix.
+
+    Rows are normalised in-tile (epsilon-guarded), then 1 - x_n @ y_n.T.
+    Normalising inside the tile costs O((tm+tn)d) FLOPs against the
+    O(tm*tn*d) contraction — negligible — and saves a separate HBM pass.
+    """
+    x = x_ref[...].astype(jnp.float32)
+    y = y_ref[...].astype(jnp.float32)
+    xn = x * jax.lax.rsqrt(jnp.maximum(jnp.sum(x * x, axis=1, keepdims=True), 1e-24))
+    yn = y * jax.lax.rsqrt(jnp.maximum(jnp.sum(y * y, axis=1, keepdims=True), 1e-24))
+    cross = jax.lax.dot_general(
+        xn,
+        yn,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = 1.0 - cross
+
+
+def _tiled_pairwise(kernel, x, y, *, tm, tn):
+    """Run ``kernel`` over an (m/tm, n/tn) grid of output tiles.
+
+    Both X and Y keep their full feature dimension ``d`` resident per tile
+    (d <= 512 in all our variants, comfortably inside VMEM); the grid walks
+    output tiles so each X-tile is re-read n/tn times — the standard
+    matmul-style schedule the paper performed with blocked BLAS.
+    """
+    m, d = x.shape
+    n, _ = y.shape
+    if m % tm or n % tn:
+        raise ValueError(f"shape ({m},{n}) not divisible by tile ({tm},{tn})")
+    grid = (m // tm, n // tn)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tn, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls.
+    )(x, y)
+
+
+def pairwise_sq_l2(x, y, *, tm=128, tn=128):
+    """Pallas tiled squared-l2 distance block. See ``ref.pairwise_sq_l2``."""
+    return _tiled_pairwise(_sq_l2_kernel, x, y, tm=tm, tn=tn)
+
+
+def pairwise_cosine(x, y, *, tm=128, tn=128):
+    """Pallas tiled cosine dissimilarity block. See ``ref.pairwise_cosine``."""
+    return _tiled_pairwise(_cosine_kernel, x, y, tm=tm, tn=tn)
+
+
+@functools.lru_cache(maxsize=None)
+def vmem_footprint_bytes(tm: int, tn: int, d: int, in_dtype_bytes: int = 4) -> int:
+    """Estimated VMEM residency of one grid step, used by the perf report.
+
+    One X tile + one Y tile (input dtype) + one f32 output tile + the two
+    f32 upcast copies the interpreter materialises (worst case).
+    """
+    tiles_in = (tm * d + tn * d) * in_dtype_bytes
+    upcast = (tm * d + tn * d) * 4
+    out = tm * tn * 4
+    return tiles_in + upcast + out

@@ -1,0 +1,49 @@
+"""Pure-jnp reference oracles for the Pallas pairwise-dissimilarity kernels.
+
+These are the ground truth the pytest suite checks the Layer-1 kernels
+against. They intentionally avoid any Pallas machinery: plain jnp only.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_sq_l2(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Squared euclidean distance matrix D[i, j] = ||x_i - y_j||^2.
+
+    Args:
+        x: [m, d] float array.
+        y: [n, d] float array.
+    Returns:
+        [m, n] float32 array of squared distances.
+    """
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    xx = jnp.sum(x * x, axis=1, keepdims=True)  # [m, 1]
+    yy = jnp.sum(y * y, axis=1, keepdims=True).T  # [1, n]
+    cross = x @ y.T  # [m, n]
+    d = xx + yy - 2.0 * cross
+    # Numerical floor: exact distances are non-negative.
+    return jnp.maximum(d, 0.0)
+
+
+def pairwise_cosine(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Cosine dissimilarity matrix D[i, j] = 1 - cos(x_i, y_j).
+
+    Zero vectors are guarded with an epsilon on the norm (matching the
+    kernel's normalisation).
+    """
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    xn = x / jnp.maximum(jnp.linalg.norm(x, axis=1, keepdims=True), 1e-12)
+    yn = y / jnp.maximum(jnp.linalg.norm(y, axis=1, keepdims=True), 1e-12)
+    return 1.0 - xn @ yn.T
+
+
+def knn_from_block(d: jnp.ndarray, k: int):
+    """Reference top-k nearest (smallest distance) per row of a block.
+
+    Returns (values [m, k], indices [m, k]) sorted ascending by distance.
+    """
+    neg_vals, idx = jax.lax.top_k(-d, k)
+    return -neg_vals, idx

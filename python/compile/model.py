@@ -1,0 +1,111 @@
+"""Layer-2 JAX compute graph: blocked dissimilarity-graph construction.
+
+The Rust coordinator builds kNN / epsilon-ball graphs by streaming tile
+pairs of the dataset through these functions (AOT-compiled to HLO once by
+``aot.py``). Each function is a pure block computation:
+
+* ``distance_block_*``  — full (m, n) dissimilarity tile.
+* ``knn_block_*``       — dissimilarity tile fused with per-row top-k, so
+  only (m, k) values + indices cross the PJRT boundary instead of (m, n).
+  The k-way merge across column blocks happens in Rust.
+
+All heavy lifting is delegated to the Layer-1 Pallas kernels in
+``kernels/pairwise.py``; this layer adds the top-k selection and fixes the
+AOT-visible signatures. Python never runs at clustering time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import pairwise
+
+
+def distance_block_l2(x, y):
+    """Squared-l2 dissimilarity tile D[m, n] (tuple-wrapped for AOT)."""
+    return (pairwise.pairwise_sq_l2(x, y),)
+
+
+def distance_block_cosine(x, y):
+    """Cosine dissimilarity tile D[m, n] (tuple-wrapped for AOT)."""
+    return (pairwise.pairwise_cosine(x, y),)
+
+
+def _knn_block(dist_fn, x, y, k):
+    # NOTE: deliberately NOT lax.top_k — jax lowers it to the `topk(...,
+    # largest=true)` HLO instruction, which the xla crate's bundled XLA
+    # 0.5.1 text parser predates. k unrolled argmin+mask steps lower to
+    # reduce/select ops every XLA version parses, and k <= 32 keeps the
+    # unroll small. Ties resolve to the lowest index (argmin), matching the
+    # Rust coordinator's (weight, id) tie-break.
+    d = dist_fn(x, y)
+    n = d.shape[1]
+    cols = jnp.arange(n, dtype=jnp.int32)[None, :]
+    vals, idxs = [], []
+    for _ in range(k):
+        i = jnp.argmin(d, axis=1).astype(jnp.int32)
+        v = jnp.min(d, axis=1)
+        vals.append(v)
+        idxs.append(i)
+        d = jnp.where(cols == i[:, None], jnp.inf, d)
+    return jnp.stack(vals, axis=1), jnp.stack(idxs, axis=1)
+
+
+def knn_block_l2(x, y, *, k):
+    """Per-row k nearest of the l2 tile: (vals[m, k], idx[m, k])."""
+    return _knn_block(pairwise.pairwise_sq_l2, x, y, k)
+
+
+def knn_block_cosine(x, y, *, k):
+    """Per-row k nearest of the cosine tile: (vals[m, k], idx[m, k])."""
+    return _knn_block(pairwise.pairwise_cosine, x, y, k)
+
+
+# ---------------------------------------------------------------------------
+# AOT variant registry.
+#
+# Each entry fixes the static shapes one compiled PJRT executable serves.
+# Rust pads the tail tiles up to these shapes (distances to padded rows are
+# discarded on the Rust side via the index output / row counts).
+# ---------------------------------------------------------------------------
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def variants():
+    """name -> (jittable fn taking concrete specs, example args, meta).
+
+    meta is serialised into artifacts/manifest.json for the Rust runtime.
+    """
+    out = {}
+
+    def add(name, fn, shapes, meta):
+        out[name] = (fn, [_spec(s) for s in shapes], meta)
+
+    for d in (64, 128):
+        add(
+            f"dist_l2_m256_n256_d{d}",
+            distance_block_l2,
+            [(256, d), (256, d)],
+            {"kind": "distance", "metric": "l2", "m": 256, "n": 256, "d": d},
+        )
+        add(
+            f"dist_cos_m256_n256_d{d}",
+            distance_block_cosine,
+            [(256, d), (256, d)],
+            {"kind": "distance", "metric": "cosine", "m": 256, "n": 256, "d": d},
+        )
+        for k in (32,):
+            add(
+                f"knn_l2_m256_n1024_d{d}_k{k}",
+                lambda x, y, k=k: knn_block_l2(x, y, k=k),
+                [(256, d), (1024, d)],
+                {"kind": "knn", "metric": "l2", "m": 256, "n": 1024, "d": d, "k": k},
+            )
+            add(
+                f"knn_cos_m256_n1024_d{d}_k{k}",
+                lambda x, y, k=k: knn_block_cosine(x, y, k=k),
+                [(256, d), (1024, d)],
+                {"kind": "knn", "metric": "cosine", "m": 256, "n": 1024, "d": d, "k": k},
+            )
+    return out

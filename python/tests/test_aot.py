@@ -1,0 +1,79 @@
+"""AOT path: lowering produces loadable HLO text with the expected interface.
+
+These tests exercise exactly what the Rust runtime consumes: HLO text with a
+tuple-rooted ENTRY whose parameter shapes match the manifest.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot, model
+
+
+def test_lower_distance_variant_to_hlo_text():
+    fn, specs, meta = model.variants()["dist_l2_m256_n256_d64"]
+    text = aot.lower_variant(fn, specs)
+    assert "ENTRY" in text
+    assert "f32[256,64]" in text  # parameters
+    assert "f32[256,256]" in text  # output tile
+    # return_tuple=True: root must be a tuple for Rust's to_tuple().
+    assert "tuple" in text
+
+
+def test_lower_knn_variant_has_two_outputs():
+    fn, specs, meta = model.variants()["knn_l2_m256_n1024_d64_k32"]
+    text = aot.lower_variant(fn, specs)
+    assert "ENTRY" in text
+    assert "f32[256,32]" in text
+    assert "s32[256,32]" in text
+
+
+def test_hlo_text_has_no_mosaic_custom_call():
+    # interpret=True must lower Pallas to plain HLO; a tpu_custom_call would
+    # be unloadable on the CPU PJRT plugin.
+    fn, specs, _ = model.variants()["dist_cos_m256_n256_d64"]
+    text = aot.lower_variant(fn, specs)
+    assert "tpu_custom_call" not in text
+    assert "mosaic" not in text.lower()
+
+
+def test_aot_main_writes_artifacts_and_manifest(tmp_path):
+    out = tmp_path / "artifacts"
+    env = dict(os.environ, PYTHONPATH=os.path.dirname(os.path.dirname(__file__)))
+    subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "compile.aot",
+            "--out-dir",
+            str(out),
+            "--only",
+            "dist_l2_m256_n256_d64",
+        ],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(__file__)),
+        env=env,
+    )
+    man = json.loads((out / "manifest.json").read_text())
+    assert man["dist_l2_m256_n256_d64"]["metric"] == "l2"
+    hlo = (out / "dist_l2_m256_n256_d64.hlo.txt").read_text()
+    assert "ENTRY" in hlo
+
+
+def test_manifest_merge_on_partial_rebuild(tmp_path):
+    out = tmp_path / "artifacts"
+    env = dict(os.environ, PYTHONPATH=os.path.dirname(os.path.dirname(__file__)))
+    cwd = os.path.dirname(os.path.dirname(__file__))
+    for only in ("dist_l2_m256_n256_d64", "dist_cos_m256_n256_d64"):
+        subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out-dir", str(out), "--only", only],
+            check=True,
+            cwd=cwd,
+            env=env,
+        )
+    man = json.loads((out / "manifest.json").read_text())
+    assert set(man) >= {"dist_l2_m256_n256_d64", "dist_cos_m256_n256_d64"}

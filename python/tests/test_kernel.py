@@ -1,0 +1,148 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes/tilings; every case asserts allclose against
+``kernels.ref``. This is the core numeric signal for the whole stack — the
+AOT artifacts are these exact kernels baked to HLO.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pairwise, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed, dtype=np.float32, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * scale).astype(dtype)
+
+
+# --- fixed-shape smoke tests -------------------------------------------------
+
+@pytest.mark.parametrize("m,n,d,tm,tn", [
+    (128, 128, 64, 128, 128),
+    (256, 256, 128, 128, 128),
+    (256, 1024, 64, 128, 256),
+    (128, 384, 32, 64, 128),
+])
+def test_sq_l2_matches_ref(m, n, d, tm, tn):
+    x, y = rand((m, d), 1), rand((n, d), 2)
+    got = pairwise.pairwise_sq_l2(x, y, tm=tm, tn=tn)
+    want = ref.pairwise_sq_l2(x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,n,d,tm,tn", [
+    (128, 128, 64, 128, 128),
+    (256, 256, 128, 128, 128),
+    (256, 1024, 64, 128, 256),
+])
+def test_cosine_matches_ref(m, n, d, tm, tn):
+    x, y = rand((m, d), 3), rand((n, d), 4)
+    got = pairwise.pairwise_cosine(x, y, tm=tm, tn=tn)
+    want = ref.pairwise_cosine(x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_sq_l2_self_distance_zero():
+    x = rand((128, 64), 5)
+    d = np.asarray(pairwise.pairwise_sq_l2(x, x))
+    np.testing.assert_allclose(np.diag(d), np.zeros(128), atol=1e-3)
+
+
+def test_sq_l2_nonnegative_with_duplicates():
+    # Duplicated rows stress the max(., 0) clamp: the analytic form goes
+    # slightly negative in f32 for identical vectors.
+    x = rand((128, 64), 6)
+    x[64:] = x[:64]
+    d = np.asarray(pairwise.pairwise_sq_l2(x, x))
+    assert (d >= 0).all()
+
+
+def test_cosine_zero_vector_guard():
+    x = rand((128, 64), 7)
+    x[0, :] = 0.0
+    d = np.asarray(pairwise.pairwise_cosine(x, x))
+    assert np.isfinite(d).all()
+
+
+def test_cosine_range():
+    x = rand((128, 32), 8)
+    d = np.asarray(pairwise.pairwise_cosine(x, x))
+    assert (d >= -1e-5).all() and (d <= 2.0 + 1e-5).all()
+
+
+def test_sq_l2_symmetry():
+    x = rand((128, 64), 9)
+    y = rand((128, 64), 10)
+    dxy = np.asarray(pairwise.pairwise_sq_l2(x, y))
+    dyx = np.asarray(pairwise.pairwise_sq_l2(y, x))
+    np.testing.assert_allclose(dxy, dyx.T, rtol=1e-5, atol=1e-4)
+
+
+def test_bf16_inputs_accumulate_in_f32():
+    x = rand((128, 64), 11).astype(jnp.bfloat16)
+    y = rand((128, 64), 12).astype(jnp.bfloat16)
+    got = pairwise.pairwise_sq_l2(x, y)
+    assert got.dtype == jnp.float32
+    want = ref.pairwise_sq_l2(x.astype(jnp.float32), y.astype(jnp.float32))
+    # bf16 inputs lose mantissa; tolerance reflects input rounding only.
+    np.testing.assert_allclose(got, want, rtol=3e-2, atol=3e-1)
+
+
+def test_tile_must_divide_shape():
+    x, y = rand((100, 64), 13), rand((128, 64), 14)
+    with pytest.raises(ValueError):
+        pairwise.pairwise_sq_l2(x, y, tm=64, tn=64)
+
+
+# --- hypothesis sweeps -------------------------------------------------------
+
+TILES = st.sampled_from([32, 64, 128])
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    mi=st.integers(1, 3),
+    ni=st.integers(1, 3),
+    d=st.sampled_from([8, 32, 64, 128]),
+    tm=TILES,
+    tn=TILES,
+    seed=st.integers(0, 2**31 - 1),
+    metric=st.sampled_from(["l2", "cosine"]),
+)
+def test_hypothesis_kernel_vs_ref(mi, ni, d, tm, tn, seed, metric):
+    m, n = mi * tm, ni * tn
+    x, y = rand((m, d), seed, scale=2.0), rand((n, d), seed + 1, scale=0.5)
+    if metric == "l2":
+        got = pairwise.pairwise_sq_l2(x, y, tm=tm, tn=tn)
+        want = ref.pairwise_sq_l2(x, y)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+    else:
+        got = pairwise.pairwise_cosine(x, y, tm=tm, tn=tn)
+        want = ref.pairwise_cosine(x, y)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    d=st.sampled_from([16, 64]),
+    dtype=st.sampled_from([np.float32, np.float64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_dtypes(d, dtype, seed):
+    x = rand((64, d), seed, dtype=dtype)
+    y = rand((64, d), seed + 7, dtype=dtype)
+    got = pairwise.pairwise_sq_l2(x, y, tm=64, tn=64)
+    want = ref.pairwise_sq_l2(jnp.asarray(x, jnp.float32), jnp.asarray(y, jnp.float32))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_vmem_footprint_reported():
+    fp = pairwise.vmem_footprint_bytes(128, 128, 128)
+    # 2 input tiles + upcasts + out tile; must sit far below 16 MiB VMEM.
+    assert 0 < fp < 8 * 2**20

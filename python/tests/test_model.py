@@ -1,0 +1,86 @@
+"""Layer-2 correctness: model block functions, top-k fusion, variant registry."""
+
+import jax
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed):
+    return np.random.default_rng(seed).standard_normal(shape).astype(np.float32)
+
+
+def test_distance_block_l2_tuple_wrapped():
+    x, y = rand((256, 64), 0), rand((256, 64), 1)
+    (d,) = model.distance_block_l2(x, y)
+    np.testing.assert_allclose(d, ref.pairwise_sq_l2(x, y), rtol=1e-5, atol=1e-4)
+
+
+def test_distance_block_cosine_tuple_wrapped():
+    x, y = rand((256, 64), 2), rand((256, 64), 3)
+    (d,) = model.distance_block_cosine(x, y)
+    np.testing.assert_allclose(d, ref.pairwise_cosine(x, y), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("metric", ["l2", "cosine"])
+def test_knn_block_matches_argsort(metric):
+    x, y = rand((256, 64), 4), rand((1024, 64), 5)
+    k = 32
+    if metric == "l2":
+        vals, idx = model.knn_block_l2(x, y, k=k)
+        full = np.asarray(ref.pairwise_sq_l2(x, y))
+    else:
+        vals, idx = model.knn_block_cosine(x, y, k=k)
+        full = np.asarray(ref.pairwise_cosine(x, y))
+    vals, idx = np.asarray(vals), np.asarray(idx)
+    assert vals.shape == (256, k) and idx.shape == (256, k)
+    assert idx.dtype == np.int32
+    # Values must be the k smallest per row, ascending.
+    want_vals = np.sort(full, axis=1)[:, :k]
+    np.testing.assert_allclose(vals, want_vals, rtol=1e-4, atol=1e-4)
+    assert (np.diff(vals, axis=1) >= -1e-6).all()
+    # Indices must point at the values they claim.
+    np.testing.assert_allclose(
+        np.take_along_axis(full, idx, axis=1), vals, rtol=1e-5, atol=1e-5
+    )
+
+
+def test_knn_values_consistent_with_indices_under_ties():
+    # All-equal rows: any index permutation is fine, values must all match.
+    x = np.ones((256, 64), np.float32)
+    y = np.ones((1024, 64), np.float32)
+    vals, idx = model.knn_block_l2(x, y, k=8)
+    np.testing.assert_allclose(np.asarray(vals), 0.0, atol=1e-4)
+    assert ((np.asarray(idx) >= 0) & (np.asarray(idx) < 1024)).all()
+
+
+def test_variants_registry_shapes():
+    vs = model.variants()
+    assert len(vs) >= 8
+    for name, (fn, specs, meta) in vs.items():
+        assert meta["kind"] in ("distance", "knn")
+        assert [list(s.shape) for s in specs] == [
+            [meta["m"], meta["d"]],
+            [meta["n"], meta["d"]],
+        ]
+        if meta["kind"] == "knn":
+            assert meta["k"] <= meta["n"]
+
+
+@pytest.mark.parametrize(
+    "name", ["dist_l2_m256_n256_d64", "knn_cos_m256_n1024_d128_k32"]
+)
+def test_variant_executes(name):
+    fn, specs, meta = model.variants()[name]
+    args = [rand(tuple(s.shape), i) for i, s in enumerate(specs)]
+    out = fn(*args)
+    if meta["kind"] == "distance":
+        assert out[0].shape == (meta["m"], meta["n"])
+    else:
+        vals, idx = out
+        assert vals.shape == (meta["m"], meta["k"])
+        assert idx.shape == (meta["m"], meta["k"])

@@ -1,0 +1,84 @@
+//! Shared workload builders for the bench harness.
+//!
+//! Graphs are cached under `target/bench_cache/` (the binary graph format
+//! from `graph::io`), so re-running a bench skips the brute-force kNN
+//! builds. Delete the directory to force a rebuild.
+
+#![allow(dead_code)]
+
+use std::path::PathBuf;
+
+use rac_hac::data::{gaussian_mixture, topic_docs};
+use rac_hac::graph::{read_graph, write_graph, Graph};
+use rac_hac::knn::{knn_graph, Backend};
+
+fn cache_dir() -> PathBuf {
+    let dir = PathBuf::from("target/bench_cache");
+    std::fs::create_dir_all(&dir).expect("create bench cache dir");
+    dir
+}
+
+/// Build-or-load a cached graph.
+pub fn cached(name: &str, build: impl FnOnce() -> Graph) -> Graph {
+    let path = cache_dir().join(format!("{name}.bin"));
+    if let Ok(g) = read_graph(&path) {
+        return g;
+    }
+    eprintln!("[bench] building workload {name} (cached for future runs)...");
+    let g = build();
+    write_graph(&g, &path).expect("write graph cache");
+    g
+}
+
+/// SIFT-like kNN workload (DESIGN.md substitute for the SIFT rows).
+pub fn sift_knn(n: usize, d: usize, k: usize, seed: u64) -> Graph {
+    cached(&format!("sift_n{n}_d{d}_k{k}_s{seed}"), || {
+        let ds = gaussian_mixture(n, d, (n / 128).max(8), 0.8, 0.02, seed);
+        knn_graph(&ds, k, Backend::Native, None).expect("knn")
+    })
+}
+
+/// Web/doc-like cosine kNN workload (substitute for WEB88M). The paper's
+/// WEB88M graph has mean degree ~4500, so the kNN substitute is dense-ish
+/// (k in the tens-to-hundreds).
+pub fn docs_knn(n: usize, d: usize, topics: usize, k: usize, seed: u64) -> Graph {
+    cached(&format!("docs_n{n}_d{d}_t{topics}_k{k}_s{seed}"), || {
+        let ds = topic_docs(n, d, topics, seed);
+        knn_graph(&ds, k, Backend::Native, None).expect("knn")
+    })
+}
+
+/// Complete cosine graph over doc-like data. News20 (355M edges = n²) and
+/// RCV1 (0.5B ≈ n²) are COMPLETE graphs in paper Table 3 — the kNN
+/// versions behave very differently under average linkage (cosine hubs),
+/// so Fig-2 fidelity requires the complete graph.
+pub fn docs_complete(n: usize, d: usize, topics: usize, seed: u64) -> Graph {
+    cached(&format!("docsc_n{n}_d{d}_t{topics}_s{seed}"), || {
+        let ds = topic_docs(n, d, topics, seed);
+        rac_hac::knn::complete_graph(&ds)
+    })
+}
+
+/// Dense complete-graph workload over a small SIFT-like dataset (the
+/// paper's SIFT1M row is a complete graph; scaled down per DESIGN.md).
+pub fn sift_complete(n: usize, d: usize, seed: u64) -> Graph {
+    cached(&format!("siftc_n{n}_d{d}_s{seed}"), || {
+        let ds = gaussian_mixture(n, d, (n / 64).max(4), 0.8, 0.02, seed);
+        rac_hac::knn::complete_graph(&ds)
+    })
+}
+
+/// Least-squares slope of log(y) vs log(x) — Fig 3d's "roughly linear".
+pub fn loglog_slope(points: &[(f64, f64)]) -> f64 {
+    let pts: Vec<(f64, f64)> = points
+        .iter()
+        .filter(|&&(x, y)| x > 0.0 && y > 0.0)
+        .map(|&(x, y)| (x.ln(), y.ln()))
+        .collect();
+    let n = pts.len() as f64;
+    let sx: f64 = pts.iter().map(|p| p.0).sum();
+    let sy: f64 = pts.iter().map(|p| p.1).sum();
+    let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+    (n * sxy - sx * sy) / (n * sxx - sx * sx)
+}

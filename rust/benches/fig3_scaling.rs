@@ -1,0 +1,134 @@
+//! Fig 3 bench (DESIGN.md E-F3ab/c/d): scaling with machines and CPUs,
+//! and merge-time linearity in merges.
+//!
+//! Paper Fig 3: (a) runtime vs machines for SIFT200K, (b) for SIFT1B,
+//! (c) speedup vs CPUs/machine on SIFT1B at 200 machines, (d) log-log
+//! merge time vs merges per round (slope ~1).
+//!
+//! Here "machines" are simulated shards in one process (DESIGN.md §1), so
+//! two curves are reported per sweep: wall-clock (real threads, includes
+//! the simulator's messaging overhead) and **critical-path compute** —
+//! per-round max-across-shards compute time, the quantity a real fleet's
+//! wall clock would track once the network is pipelined (the paper
+//! overlaps communication with computation via batching).
+//!
+//! ```bash
+//! cargo bench --bench fig3_scaling
+//! ```
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Instant;
+
+use rac_hac::dist::{DistConfig, DistRacEngine};
+use rac_hac::graph::Graph;
+use rac_hac::linkage::Linkage;
+use rac_hac::rac::RacEngine;
+use rac_hac::util::bench::Table;
+
+fn run(g: &Graph, machines: usize, cpus: usize) -> (f64, rac_hac::rac::RacResult) {
+    let t = Instant::now();
+    let r = DistRacEngine::new(
+        g,
+        Linkage::Complete,
+        DistConfig::new(machines, cpus),
+    )
+    .run();
+    (t.elapsed().as_secs_f64(), r)
+}
+
+fn machine_sweep(label: &str, g: &Graph, sweeps: &[usize]) {
+    println!("\n-- {label}: runtime vs # machines (1 cpu each) --");
+    let t = Table::new(
+        &["machines", "sim(s)", "speedup", "net msgs", "net MiB", "wall(s)"],
+        &[9, 9, 8, 10, 9, 9],
+    );
+    let mut base = None;
+    let mut speedups = Vec::new();
+    for &m in sweeps {
+        let (wall, r) = run(g, m, 1);
+        let sim = r.metrics.total_sim_time().as_secs_f64();
+        let base_s = *base.get_or_insert(sim);
+        speedups.push(base_s / sim);
+        t.row(&[
+            &m.to_string(),
+            &format!("{sim:.3}"),
+            &format!("{:.2}x", base_s / sim),
+            &r.metrics.total_net_messages().to_string(),
+            &format!("{:.1}", r.metrics.total_net_bytes() as f64 / (1 << 20) as f64),
+            &format!("{wall:.3}"),
+        ]);
+    }
+    // Paper Fig 3a/3b shape: speedup grows with machines (sub-linearly).
+    // `sim` is the critical-path model (DESIGN.md §1: this testbed has one
+    // CPU, so in-process wall clock cannot scale).
+    assert!(
+        *speedups.last().unwrap() > 1.2,
+        "{label}: no simulated speedup at max machines ({speedups:?})"
+    );
+}
+
+fn main() {
+    eprintln!("[fig3] building workloads (cached across runs)...");
+    let small = common::sift_knn(8_000, 64, 16, 9); // SIFT200K-like (Fig 3a)
+    let big = common::sift_knn(30_000, 64, 20, 7); // SIFT1B-like (Fig 3b)
+
+    // ---- Fig 3a/3b: machines sweeps ------------------------------------
+    machine_sweep("Fig 3a (SIFT200K-like)", &small, &[1, 2, 4, 8]);
+    machine_sweep("Fig 3b (SIFT1B-like)", &big, &[1, 2, 4, 8, 16]);
+
+    // ---- Fig 3c: CPUs per machine at fixed machines --------------------
+    println!("\n-- Fig 3c (SIFT1B-like): speedup vs CPUs/machine (4 machines) --");
+    let t = Table::new(&["cpus/machine", "sim(s)", "speedup"], &[12, 9, 8]);
+    let mut base = None;
+    let mut last = 0.0;
+    for cpus in [1usize, 2, 4, 8] {
+        let (_, r) = run(&big, 4, cpus);
+        let sim = r.metrics.total_sim_time().as_secs_f64();
+        let base_s = *base.get_or_insert(sim);
+        last = base_s / sim;
+        t.row(&[
+            &cpus.to_string(),
+            &format!("{sim:.3}"),
+            &format!("{:.2}x", base_s / sim),
+        ]);
+    }
+    // Paper Fig 3c: diminishing but positive returns from more CPUs.
+    assert!(last > 1.2, "no CPU-scaling benefit (last speedup {last:.2})");
+
+    // ---- Fig 3d: merge time vs merges per round (log-log slope) --------
+    // Use the shared-memory engine so per-round merge-phase timings are
+    // clean of messaging noise; the paper's claim is near-linearity.
+    println!("\n-- Fig 3d: per-round merge time vs merges (log-log) --");
+    let mut points: Vec<(f64, f64)> = Vec::new();
+    for g in [&small, &big] {
+        let r = RacEngine::new(g, Linkage::Complete).with_threads(1).run();
+        points.extend(
+            r.metrics
+                .merge_time_series()
+                .into_iter()
+                .filter(|&(m, t)| m >= 4 && t > 0.0)
+                .map(|(m, t)| (m as f64, t)),
+        );
+    }
+    let slope = common::loglog_slope(&points);
+    // Print a decimated scatter for eyeballing.
+    let t = Table::new(&["merges", "merge time (us)"], &[9, 16]);
+    let mut sorted = points.clone();
+    sorted.sort_by(|a, b| a.0.total_cmp(&b.0));
+    for p in sorted.iter().step_by((sorted.len() / 15).max(1)) {
+        t.row(&[&format!("{:.0}", p.0), &format!("{:.0}", p.1 * 1e6)]);
+    }
+    println!(
+        "log-log slope: {slope:.2} over {} rounds (paper Fig 3d: ~1 — merge time is\n\
+         nearly linear in merges per round)",
+        points.len()
+    );
+    assert!(
+        (0.5..1.6).contains(&slope),
+        "merge time should scale near-linearly in merges (slope {slope:.2})"
+    );
+
+    println!("\nfig3 bench OK");
+}

@@ -1,0 +1,114 @@
+//! Hot-path microbenches (DESIGN.md E-Perf): the quantities tracked by the
+//! performance pass in EXPERIMENTS.md §Perf.
+//!
+//! ```bash
+//! cargo bench --bench hot_paths
+//! ```
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Duration;
+
+use rac_hac::dist::{DistConfig, DistRacEngine};
+use rac_hac::hac::{naive_hac, nn_chain};
+use rac_hac::linkage::Linkage;
+use rac_hac::rac::RacEngine;
+use rac_hac::util::bench::{time_budget, Table};
+use rac_hac::util::parallel::default_threads;
+use rac_hac::util::pool::Pool;
+
+fn main() {
+    let budget = Duration::from_secs(2);
+    let g = common::sift_knn(8_000, 64, 16, 9);
+    println!(
+        "workload: SIFT-like n=8000 kNN graph ({} edges, max degree {})\n",
+        g.m(),
+        g.max_degree()
+    );
+
+    // ---- end-to-end engines on the same graph ---------------------------
+    println!("-- engines, end-to-end (complete linkage) --");
+    let t = Table::new(&["engine", "median", "mean", "samples"], &[26, 12, 12, 8]);
+    let mut line = |name: &str, timing: rac_hac::util::bench::Timing| {
+        t.row(&[
+            name,
+            &format!("{:.3?}", timing.median),
+            &format!("{:.3?}", timing.mean),
+            &timing.samples.to_string(),
+        ]);
+    };
+    line(
+        "naive_hac (heap)",
+        time_budget(budget, 3, || naive_hac(&g, Linkage::Complete)),
+    );
+    line(
+        "nn_chain",
+        time_budget(budget, 3, || nn_chain(&g, Linkage::Complete)),
+    );
+    line(
+        "rac (1 thread)",
+        time_budget(budget, 3, || {
+            RacEngine::new(&g, Linkage::Complete).with_threads(1).run()
+        }),
+    );
+    line(
+        &format!("rac ({} threads)", default_threads()),
+        time_budget(budget, 3, || {
+            RacEngine::new(&g, Linkage::Complete)
+                .with_threads(default_threads())
+                .run()
+        }),
+    );
+    line(
+        "dist_rac (4x2)",
+        time_budget(budget, 3, || {
+            DistRacEngine::new(
+                &g,
+                Linkage::Complete,
+                DistConfig::new(4, 2),
+            )
+            .run()
+        }),
+    );
+
+    // ---- pool dispatch overhead ----------------------------------------
+    println!("\n-- pool dispatch overhead (per par_map_indexed call) --");
+    let t = Table::new(&["threads", "n=64", "n=4096"], &[8, 12, 12]);
+    for threads in [2usize, 4, 8] {
+        let pool = Pool::new(threads);
+        let t64 = time_budget(Duration::from_millis(300), 50, || {
+            pool.par_map_indexed(64, |i| i * 2)
+        });
+        let t4k = time_budget(Duration::from_millis(300), 50, || {
+            pool.par_map_indexed(4096, |i| i * 2)
+        });
+        t.row(&[
+            &threads.to_string(),
+            &format!("{:.1?}", t64.median),
+            &format!("{:.1?}", t4k.median),
+        ]);
+    }
+
+    // ---- phase split for the RAC engine ---------------------------------
+    println!("\n-- rac phase split (1 thread, complete linkage) --");
+    let r = RacEngine::new(&g, Linkage::Complete).with_threads(1).run();
+    let (mut tf, mut tm, mut tu) = (Duration::ZERO, Duration::ZERO, Duration::ZERO);
+    let mut scans = 0usize;
+    for rm in &r.metrics.rounds {
+        tf += rm.t_find;
+        tm += rm.t_merge;
+        tu += rm.t_update_nn;
+        scans += rm.nn_scan_entries;
+    }
+    println!(
+        "find {:?} | merge {:?} | update_nn {:?} | {} nn-scan entries | {} rounds",
+        tf,
+        tm,
+        tu,
+        scans,
+        r.metrics.merge_rounds()
+    );
+
+    println!("\nhot_paths bench OK");
+}

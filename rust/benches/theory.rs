@@ -1,0 +1,109 @@
+//! Theory-section benches (DESIGN.md E-T4, E-T5, E-G1, E-G2): regenerate
+//! the quantitative claims of paper §4.
+//!
+//! ```bash
+//! cargo bench --bench theory
+//! ```
+
+#[path = "common.rs"]
+mod common;
+
+use rac_hac::data::{adversarial_thm4, grid1d_graph, random_regular_graph, stable_hierarchy};
+use rac_hac::linkage::Linkage;
+use rac_hac::rac::RacEngine;
+use rac_hac::util::bench::Table;
+
+fn main() {
+    println!("\n=== E-T4: Theorem 4 — Ω(n) rounds at height log n (average linkage) ===");
+    let t = Table::new(&["n", "height", "rounds", "rounds/n"], &[8, 8, 8, 10]);
+    for levels in [4u32, 6, 8, 10] {
+        let g = adversarial_thm4(levels);
+        let r = RacEngine::new(&g, Linkage::Average).run();
+        let n = g.n();
+        let rounds = r.metrics.merge_rounds();
+        assert_eq!(r.dendrogram.height(), levels as usize);
+        assert!(rounds + 1 >= n / 2, "expected Ω(n) rounds, got {rounds}");
+        t.row(&[
+            &n.to_string(),
+            &r.dendrogram.height().to_string(),
+            &rounds.to_string(),
+            &format!("{:.3}", rounds as f64 / n as f64),
+        ]);
+    }
+    println!("paper: rounds grow linearly in n while the tree height is log n.");
+
+    println!("\n=== E-T5: Theorem 5 — stable trees finish in height rounds ===");
+    let t = Table::new(&["n", "height", "rounds", "status"], &[8, 8, 8, 8]);
+    for depth in [4u32, 6, 8, 10, 12] {
+        let g = stable_hierarchy(depth, 4.0, depth as u64);
+        let r = RacEngine::new(&g, Linkage::Average).run();
+        let rounds = r.metrics.merge_rounds();
+        assert_eq!(rounds, depth as usize);
+        t.row(&[
+            &g.n().to_string(),
+            &depth.to_string(),
+            &rounds.to_string(),
+            "OK",
+        ]);
+    }
+    println!("paper: on stable cluster trees RAC needs exactly height rounds.");
+
+    println!("\n=== E-G1: §4.2.2 1-d grid — round-1 alpha = 1/3, O(log n) rounds ===");
+    let t = Table::new(
+        &["n", "rounds", "3*log2(n)", "alpha_r1", "alpha_mean"],
+        &[8, 8, 10, 9, 10],
+    );
+    for n in [1_000usize, 10_000, 100_000] {
+        let g = grid1d_graph(n, 3);
+        let r = RacEngine::new(&g, Linkage::Single).run();
+        let a1 = r.metrics.rounds[0].alpha();
+        let alphas: Vec<f64> = r
+            .metrics
+            .rounds
+            .iter()
+            .filter(|rm| rm.clusters > 50 && rm.merges > 0)
+            .map(|rm| rm.alpha())
+            .collect();
+        let mean = alphas.iter().sum::<f64>() / alphas.len() as f64;
+        let bound = 3 * (n as f64).log2() as usize;
+        assert!((a1 - 1.0 / 3.0).abs() < 0.03, "round-1 alpha {a1}");
+        assert!(r.metrics.merge_rounds() <= bound);
+        t.row(&[
+            &n.to_string(),
+            &r.metrics.merge_rounds().to_string(),
+            &bound.to_string(),
+            &format!("{a1:.3}"),
+            &format!("{mean:.3}"),
+        ]);
+    }
+    println!("paper: fresh ranks give alpha = 1/3 (round 1); conditioning settles ~1/4 — still a constant, so rounds = O(log n).");
+
+    println!("\n=== E-G2: §4.2.2 bounded-degree graph — round-1 alpha >= 1/(4d) ===");
+    let t = Table::new(
+        &["n", "d", "alpha_r1", "1/(4d)", "rounds"],
+        &[8, 4, 9, 8, 8],
+    );
+    for (n, d) in [(10_000usize, 4usize), (10_000, 8), (10_000, 16)] {
+        let g = random_regular_graph(n, d, 5);
+        let r = RacEngine::new(&g, Linkage::Single).run();
+        let a1 = r.metrics.rounds[0].alpha();
+        let bound = 1.0 / (4.0 * d as f64);
+        assert!(a1 >= bound, "alpha {a1} below theory bound {bound}");
+        t.row(&[
+            &n.to_string(),
+            &d.to_string(),
+            &format!("{a1:.3}"),
+            &format!("{bound:.4}"),
+            &r.metrics.merge_rounds().to_string(),
+        ]);
+    }
+    println!(
+        "paper: Theorem 6 with alpha = 1/(4d). NOTE the large total round counts: as\n\
+         clusters grow their degree is no longer bounded by d, so the per-round bound\n\
+         decays — the paper's bounded-CLUSTER-degree assumption (\"supported by\n\
+         experiments\") holds on metric kNN graphs (cf. Table-4 bench) but not here.\n\
+         This is the negative diagnostic, kept deliberately."
+    );
+
+    println!("\ntheory bench OK");
+}

@@ -1,0 +1,244 @@
+//! Run configuration: a TOML-subset parser (offline `toml` substitute)
+//! and the typed [`RunConfig`] the launcher consumes.
+//!
+//! Supported TOML subset — everything the run configs need:
+//! `[section]` headers, `key = value` with string / integer / float /
+//! boolean / homogeneous scalar arrays, `#` comments. See
+//! `examples/configs/*.toml` for complete examples.
+
+mod toml;
+
+pub use toml::{TomlDoc, TomlValue};
+
+use std::path::Path;
+use std::str::FromStr;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::data::Metric;
+use crate::linkage::Linkage;
+
+/// Which dataset generator to run (DESIGN.md §1 substitutions).
+#[derive(Debug, Clone, PartialEq)]
+pub enum DatasetSpec {
+    /// SIFT-like Gaussian mixture: `n`, `d`, `clusters`, `spread`,
+    /// `noise_frac`.
+    SiftLike {
+        n: usize,
+        d: usize,
+        clusters: usize,
+        spread: f64,
+        noise_frac: f64,
+    },
+    /// Web/doc-like Zipfian topic mixture: `n`, `d`, `topics`.
+    DocsLike { n: usize, d: usize, topics: usize },
+    /// §4.2.2 1-d grid (path graph; skips graph construction).
+    Grid1d { n: usize },
+    /// Theorem-4 adversarial sequence (complete graph).
+    Adversarial { levels: u32 },
+    /// Theorem-5 stable hierarchy (complete graph).
+    Stable { depth: u32, base: f64 },
+    /// §4.2.2 bounded-degree random graph with random edge ranks.
+    RandomRegular { n: usize, degree: usize },
+}
+
+/// How to turn vectors into a dissimilarity graph.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum GraphSpec {
+    Knn { k: usize, xla: bool },
+    Epsilon { eps: f64 },
+    Complete,
+}
+
+/// Which engine executes the clustering.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EngineSpec {
+    /// Exact sequential baselines.
+    NaiveHac,
+    NnChain,
+    /// Shared-memory RAC with `threads` workers.
+    Rac { threads: usize },
+    /// Distributed RAC over `machines × cpus` (paper §5).
+    DistRac { machines: usize, cpus: usize },
+}
+
+/// A full clustering run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunConfig {
+    pub dataset: DatasetSpec,
+    pub seed: u64,
+    pub graph: GraphSpec,
+    pub linkage: Linkage,
+    pub engine: EngineSpec,
+}
+
+impl RunConfig {
+    pub fn from_file(path: &Path) -> Result<RunConfig> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+        Self::from_toml_str(&text)
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<RunConfig> {
+        let doc = TomlDoc::parse(text).map_err(|e| anyhow!("config parse: {e}"))?;
+
+        let dtype = doc.str_or("dataset", "type", "sift_like")?;
+        let dataset = match dtype.as_str() {
+            "sift_like" => DatasetSpec::SiftLike {
+                n: doc.usize_or("dataset", "n", 2000)?,
+                d: doc.usize_or("dataset", "d", 128)?,
+                clusters: doc.usize_or("dataset", "clusters", 50)?,
+                spread: doc.f64_or("dataset", "spread", 0.8)?,
+                noise_frac: doc.f64_or("dataset", "noise_frac", 0.02)?,
+            },
+            "docs_like" => DatasetSpec::DocsLike {
+                n: doc.usize_or("dataset", "n", 2000)?,
+                d: doc.usize_or("dataset", "d", 64)?,
+                topics: doc.usize_or("dataset", "topics", 20)?,
+            },
+            "grid1d" => DatasetSpec::Grid1d {
+                n: doc.usize_or("dataset", "n", 10000)?,
+            },
+            "adversarial" => DatasetSpec::Adversarial {
+                levels: doc.usize_or("dataset", "levels", 8)? as u32,
+            },
+            "stable" => DatasetSpec::Stable {
+                depth: doc.usize_or("dataset", "depth", 8)? as u32,
+                base: doc.f64_or("dataset", "base", 4.0)?,
+            },
+            "random_regular" => DatasetSpec::RandomRegular {
+                n: doc.usize_or("dataset", "n", 10000)?,
+                degree: doc.usize_or("dataset", "degree", 8)?,
+            },
+            other => bail!("unknown dataset.type {other:?}"),
+        };
+
+        let gtype = doc.str_or("graph", "type", "knn")?;
+        let graph = match gtype.as_str() {
+            "knn" => GraphSpec::Knn {
+                k: doc.usize_or("graph", "k", 20)?,
+                xla: doc.bool_or("graph", "xla", false)?,
+            },
+            "epsilon" => GraphSpec::Epsilon {
+                eps: doc.f64_or("graph", "eps", 1.0)?,
+            },
+            "complete" => GraphSpec::Complete,
+            other => bail!("unknown graph.type {other:?}"),
+        };
+
+        let linkage = Linkage::from_str(&doc.str_or("cluster", "linkage", "average")?)
+            .map_err(|e| anyhow!(e))?;
+
+        let etype = doc.str_or("engine", "type", "rac")?;
+        let engine = match etype.as_str() {
+            "naive_hac" => EngineSpec::NaiveHac,
+            "nn_chain" => EngineSpec::NnChain,
+            "rac" => EngineSpec::Rac {
+                threads: doc.usize_or("engine", "threads", 0)?,
+            },
+            "dist_rac" => EngineSpec::DistRac {
+                machines: doc.usize_or("engine", "machines", 4)?,
+                cpus: doc.usize_or("engine", "cpus", 2)?,
+            },
+            other => bail!("unknown engine.type {other:?}"),
+        };
+
+        Ok(RunConfig {
+            dataset,
+            seed: doc.usize_or("dataset", "seed", 42)? as u64,
+            graph,
+            linkage,
+            engine,
+        })
+    }
+
+    /// The dataset's natural metric (for graph construction).
+    pub fn metric(&self) -> Option<Metric> {
+        match self.dataset {
+            DatasetSpec::SiftLike { .. } => Some(Metric::L2),
+            DatasetSpec::DocsLike { .. } => Some(Metric::Cosine),
+            _ => None, // graph-native datasets
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const EXAMPLE: &str = r#"
+# SIFT200K-scale run (DESIGN.md E-Tab4 row 4)
+[dataset]
+type = "sift_like"
+n = 20000
+d = 128
+clusters = 200
+spread = 0.8
+noise_frac = 0.02
+seed = 7
+
+[graph]
+type = "knn"
+k = 50
+xla = true
+
+[cluster]
+linkage = "complete"
+
+[engine]
+type = "dist_rac"
+machines = 8
+cpus = 4
+"#;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = RunConfig::from_toml_str(EXAMPLE).unwrap();
+        assert_eq!(
+            cfg.dataset,
+            DatasetSpec::SiftLike {
+                n: 20000,
+                d: 128,
+                clusters: 200,
+                spread: 0.8,
+                noise_frac: 0.02
+            }
+        );
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.graph, GraphSpec::Knn { k: 50, xla: true });
+        assert_eq!(cfg.linkage, Linkage::Complete);
+        assert_eq!(
+            cfg.engine,
+            EngineSpec::DistRac {
+                machines: 8,
+                cpus: 4
+            }
+        );
+        assert_eq!(cfg.metric(), Some(Metric::L2));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let cfg = RunConfig::from_toml_str("").unwrap();
+        assert!(matches!(cfg.dataset, DatasetSpec::SiftLike { n: 2000, .. }));
+        assert_eq!(cfg.linkage, Linkage::Average);
+        assert!(matches!(cfg.engine, EngineSpec::Rac { threads: 0 }));
+    }
+
+    #[test]
+    fn rejects_unknown_types() {
+        assert!(RunConfig::from_toml_str("[dataset]\ntype = \"mnist\"\n").is_err());
+        assert!(RunConfig::from_toml_str("[engine]\ntype = \"spark\"\n").is_err());
+        assert!(RunConfig::from_toml_str("[cluster]\nlinkage = \"magic\"\n").is_err());
+    }
+
+    #[test]
+    fn theory_datasets() {
+        let cfg = RunConfig::from_toml_str(
+            "[dataset]\ntype = \"adversarial\"\nlevels = 6\n[graph]\ntype = \"complete\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.dataset, DatasetSpec::Adversarial { levels: 6 });
+        assert_eq!(cfg.metric(), None);
+    }
+}

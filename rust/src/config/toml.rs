@@ -1,0 +1,266 @@
+//! A TOML-subset parser: `[section]`, `key = value`, `#` comments.
+//! Values: basic strings, integers, floats, booleans, homogeneous scalar
+//! arrays. Exactly the shape our run configs use — nothing more.
+
+use std::collections::BTreeMap;
+
+/// A scalar or array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(x) => Some(*x),
+            TomlValue::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: `sections[section][key] = value`. Keys outside any
+/// `[section]` live under the empty-string section.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, String> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let value = parse_value(value.trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> Result<String, anyhow::Error> {
+        match self.get(section, key) {
+            None => Ok(default.to_string()),
+            Some(v) => v
+                .as_str()
+                .map(str::to_string)
+                .ok_or_else(|| anyhow::anyhow!("{section}.{key}: expected string")),
+        }
+    }
+
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> Result<usize, anyhow::Error> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_i64()
+                .filter(|&x| x >= 0)
+                .map(|x| x as usize)
+                .ok_or_else(|| anyhow::anyhow!("{section}.{key}: expected non-negative integer")),
+        }
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> Result<f64, anyhow::Error> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("{section}.{key}: expected number")),
+        }
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> Result<bool, anyhow::Error> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_bool()
+                .ok_or_else(|| anyhow::anyhow!("{section}.{key}: expected boolean")),
+        }
+    }
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| format!("unterminated string: {s}"))?;
+        // Basic-string escapes sufficient for config values.
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    other => return Err(format!("bad escape \\{other:?}")),
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(TomlValue::Str(out));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| format!("unterminated array: {s}"))?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in split_top_level(trimmed) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.replace('_', "").parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value: {s}"))
+}
+
+/// Split a flat array body on commas (no nested arrays in our subset, but
+/// strings may contain commas).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = TomlDoc::parse(
+            "top = 1\n[a]\nx = \"hi\" # comment\ny = 2.5\nz = true\nn = 1_000\n[b]\nempty = []\narr = [1, 2, 3]\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top"), Some(&TomlValue::Int(1)));
+        assert_eq!(doc.get("a", "x").unwrap().as_str(), Some("hi"));
+        assert_eq!(doc.get("a", "y").unwrap().as_f64(), Some(2.5));
+        assert_eq!(doc.get("a", "z").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.get("a", "n").unwrap().as_i64(), Some(1000));
+        assert_eq!(doc.get("b", "empty"), Some(&TomlValue::Arr(vec![])));
+        assert_eq!(
+            doc.get("b", "arr"),
+            Some(&TomlValue::Arr(vec![
+                TomlValue::Int(1),
+                TomlValue::Int(2),
+                TomlValue::Int(3)
+            ]))
+        );
+    }
+
+    #[test]
+    fn comments_respect_strings() {
+        let doc = TomlDoc::parse("[s]\nv = \"a # b\"\n").unwrap();
+        assert_eq!(doc.get("s", "v").unwrap().as_str(), Some("a # b"));
+    }
+
+    #[test]
+    fn escapes_in_strings() {
+        let doc = TomlDoc::parse("[s]\nv = \"a\\nb\\\"c\"\n").unwrap();
+        assert_eq!(doc.get("s", "v").unwrap().as_str(), Some("a\nb\"c"));
+    }
+
+    #[test]
+    fn error_reporting() {
+        assert!(TomlDoc::parse("[oops\n").unwrap_err().contains("line 1"));
+        assert!(TomlDoc::parse("[a]\nbad line\n").unwrap_err().contains("line 2"));
+        assert!(TomlDoc::parse("[a]\nx = @@\n").is_err());
+    }
+
+    #[test]
+    fn typed_accessors_with_defaults() {
+        let doc = TomlDoc::parse("[e]\nthreads = 8\n").unwrap();
+        assert_eq!(doc.usize_or("e", "threads", 1).unwrap(), 8);
+        assert_eq!(doc.usize_or("e", "missing", 3).unwrap(), 3);
+        assert!(doc.str_or("e", "threads", "x").is_err());
+        assert_eq!(doc.f64_or("e", "threads", 0.0).unwrap(), 8.0);
+    }
+}

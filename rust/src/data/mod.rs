@@ -1,0 +1,20 @@
+//! Synthetic dataset and graph generators.
+//!
+//! The paper's datasets (SIFT1B/1M/200K, WEB88M, News20, RCV1) are either
+//! proprietary or hardware-gated at their published scale; per DESIGN.md §1
+//! each is substituted with a generator that preserves the properties RAC's
+//! behaviour depends on: metric space, bounded-degree kNN structure, and
+//! hierarchical clusterability.
+//!
+//! * [`vectors`] — Gaussian-mixture "SIFT-like" dense vectors and Zipfian
+//!   topic-model "web/doc-like" vectors.
+//! * [`theory`] — the constructions from §4: the 1-d grid (α ≥ 1/3), the
+//!   Theorem-4 adversarial sequence (Ω(n) rounds at height log n), stable
+//!   cluster hierarchies (Theorem 5), and bounded-degree random graphs with
+//!   randomly-ranked edges (§4.2.2).
+
+pub mod theory;
+pub mod vectors;
+
+pub use theory::{adversarial_thm4, grid1d_graph, random_regular_graph, stable_hierarchy};
+pub use vectors::{gaussian_mixture, gaussian_mixture_labeled, topic_docs, Dataset, Metric};

@@ -1,0 +1,197 @@
+//! Constructions from the paper's theory section (§4).
+
+use crate::graph::Graph;
+use crate::linkage::Weight;
+use crate::util::rng::Rng;
+
+/// §4.2.2 "Single Linkage, 1-dimensional grid": `n` iid-uniform points on
+/// [0,1], relabelled in increasing order, connected as a path graph with
+/// consecutive-gap weights. Under single linkage each round merges ≥ 1/3 of
+/// clusters in expectation (α = 1/3 in Theorem 6).
+pub fn grid1d_graph(n: usize, seed: u64) -> Graph {
+    assert!(n >= 2);
+    let mut rng = Rng::seed_from(seed);
+    let mut xs: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+    xs.sort_by(|a, b| a.total_cmp(b));
+    Graph::from_edges(
+        n,
+        (0..n - 1).map(|i| (i as u32, (i + 1) as u32, xs[i + 1] - xs[i])),
+    )
+}
+
+/// Theorem 4 adversarial instance: `P_k = (k+1) + ε(k+1)²` for
+/// `k = 0..2^levels - 1` with `ε = 2^{-4·levels}`, as a complete graph of
+/// 1-d distances.
+///
+/// Under **average** linkage HAC builds the natural complete binary tree
+/// (height = `levels`), yet RAC needs Ω(2^levels) rounds because only one
+/// reciprocal pair exists among the remaining singletons in any round.
+///
+/// Weight arithmetic needs ≈ 4·levels bits of relative precision; with f64
+/// this is exact for `levels <= 12` (asserted).
+pub fn adversarial_thm4(levels: u32) -> Graph {
+    assert!(levels >= 1 && levels <= 12, "f64 precision bound");
+    let n = 1usize << levels;
+    let eps = (2.0f64).powi(-(4 * levels as i32));
+    let pts: Vec<f64> = (0..n)
+        .map(|k| {
+            let k1 = (k + 1) as f64;
+            k1 + eps * k1 * k1
+        })
+        .collect();
+    let mut m = vec![0.0 as Weight; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            m[i * n + j] = (pts[i] - pts[j]).abs();
+        }
+    }
+    Graph::from_dense(n, &m)
+}
+
+/// Theorem 5 stable cluster tree: a perfect binary hierarchy over
+/// `2^depth` leaves whose pairwise dissimilarity is `base^(level of the
+/// LCA)` plus a tiny tie-breaking jitter.
+///
+/// With `base >= 4` the tree satisfies Definition 1 (stability) for
+/// average linkage by a wide margin, so RAC must finish in exactly
+/// `depth` rounds. Returned as a complete graph.
+pub fn stable_hierarchy(depth: u32, base: f64, seed: u64) -> Graph {
+    assert!(depth >= 1 && depth <= 14);
+    assert!(base >= 2.5, "need separation for stability");
+    let n = 1usize << depth;
+    let mut rng = Rng::seed_from(seed);
+    let mut m = vec![0.0 as Weight; n * n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            // Level of the lowest common ancestor of leaves i, j in the
+            // perfect binary tree = position of highest differing bit + 1.
+            let lca = 64 - ((i ^ j) as u64).leading_zeros();
+            let w = base.powi(lca as i32) * (1.0 + rng.range_f64(-0.01, 0.01));
+            m[i * n + j] = w;
+            m[j * n + i] = w;
+        }
+    }
+    Graph::from_dense(n, &m)
+}
+
+/// §4.2.2 bounded-degree probabilistic graph: a random (near-)`k`-regular
+/// graph whose edge weights are a random permutation of `1..=m` (random
+/// ranks). Theorem 6 applies with α = 1/(4k) under single linkage.
+///
+/// Built by the pairing/configuration heuristic with rejection of
+/// duplicates and self-loops; the result has max degree ≤ `k` (some
+/// vertices may fall short by a few edges — degree *bounded*, as the
+/// theorem requires).
+pub fn random_regular_graph(n: usize, k: usize, seed: u64) -> Graph {
+    assert!(n >= 4 && k >= 2 && k < n);
+    let mut rng = Rng::seed_from(seed);
+    let mut degree = vec![0usize; n];
+    let mut edges: std::collections::HashSet<(u32, u32)> = Default::default();
+    // Randomised sweep: propose edges between under-full vertices.
+    let mut attempts = 0usize;
+    let target = n * k / 2;
+    while edges.len() < target && attempts < 50 * target {
+        attempts += 1;
+        let u = rng.below(n);
+        let v = rng.below(n);
+        if u == v || degree[u] >= k || degree[v] >= k {
+            continue;
+        }
+        let key = (u.min(v) as u32, u.max(v) as u32);
+        if edges.insert(key) {
+            degree[u] += 1;
+            degree[v] += 1;
+        }
+    }
+    // Random ranks as weights (sorted uniformly at random, per the model).
+    let mut ranks: Vec<u64> = (1..=edges.len() as u64).collect();
+    rng.shuffle(&mut ranks);
+    let mut list: Vec<(u32, u32)> = edges.into_iter().collect();
+    list.sort_unstable();
+    Graph::from_edges(
+        n,
+        list.into_iter()
+            .zip(ranks)
+            .map(|((u, v), r)| (u, v, r as Weight)),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid1d_is_path() {
+        let g = grid1d_graph(100, 3);
+        assert_eq!(g.n(), 100);
+        assert_eq!(g.m(), 99);
+        assert_eq!(g.degree(0), 1);
+        assert_eq!(g.degree(50), 2);
+        g.validate().unwrap();
+        // Gaps are positive.
+        for u in 0..100u32 {
+            for (_, w) in g.neighbors(u) {
+                assert!(w > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn adversarial_structure() {
+        let g = adversarial_thm4(4);
+        assert_eq!(g.n(), 16);
+        assert_eq!(g.m(), 16 * 15 / 2);
+        g.validate().unwrap();
+        // Consecutive gaps strictly increase (the ε(k+1)² term).
+        let mut prev = 0.0;
+        for k in 0..15u32 {
+            let w = g.weight(k, k + 1).unwrap();
+            assert!(w > prev, "gap {k} not increasing");
+            prev = w;
+        }
+    }
+
+    #[test]
+    fn adversarial_eps_resolves_in_f64() {
+        let g = adversarial_thm4(12);
+        // Smallest ε-difference between adjacent gaps must be nonzero.
+        let w0 = g.weight(0, 1).unwrap();
+        let w1 = g.weight(1, 2).unwrap();
+        assert!(w1 - w0 > 0.0);
+    }
+
+    #[test]
+    fn stable_hierarchy_levels() {
+        let g = stable_hierarchy(3, 4.0, 5);
+        assert_eq!(g.n(), 8);
+        g.validate().unwrap();
+        // Sibling leaves (LCA level 1) much closer than cousins (level 2+).
+        let sib = g.weight(0, 1).unwrap();
+        let cousin = g.weight(0, 2).unwrap();
+        let far = g.weight(0, 7).unwrap();
+        assert!(sib < cousin && cousin < far);
+        assert!(cousin / sib > 3.0);
+    }
+
+    #[test]
+    fn regular_graph_degree_bounded() {
+        let g = random_regular_graph(200, 8, 11);
+        g.validate().unwrap();
+        assert!(g.max_degree() <= 8);
+        // Near-regular: mean degree close to k.
+        assert!(g.mean_degree() > 6.0, "mean degree {}", g.mean_degree());
+    }
+
+    #[test]
+    fn regular_graph_weights_are_distinct_ranks() {
+        let g = random_regular_graph(50, 4, 2);
+        let mut seen = std::collections::HashSet::new();
+        for u in 0..50u32 {
+            for (v, w) in g.neighbors(u) {
+                if u < v {
+                    assert!(seen.insert(w as u64), "duplicate rank {w}");
+                }
+            }
+        }
+    }
+}

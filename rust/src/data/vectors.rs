@@ -1,0 +1,272 @@
+//! Vector dataset generators: the SIFT-like and web/doc-like substitutes.
+
+use crate::util::rng::Rng;
+
+/// Dissimilarity metric attached to a dataset (paper Table 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Metric {
+    /// Squared euclidean distance (SIFT datasets).
+    L2,
+    /// Cosine dissimilarity `1 - cos` (WEB88M, News20, RCV1).
+    Cosine,
+}
+
+impl Metric {
+    pub fn name(self) -> &'static str {
+        match self {
+            Metric::L2 => "l2",
+            Metric::Cosine => "cosine",
+        }
+    }
+}
+
+impl std::str::FromStr for Metric {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "l2" => Ok(Metric::L2),
+            "cosine" => Ok(Metric::Cosine),
+            other => Err(format!("unknown metric {other:?} (expected l2|cosine)")),
+        }
+    }
+}
+
+/// A dense row-major vector dataset.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub n: usize,
+    pub d: usize,
+    pub metric: Metric,
+    /// Row-major `n × d`, f32 to match the AOT kernel interface.
+    pub rows: Vec<f32>,
+}
+
+impl Dataset {
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.rows[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Exact dissimilarity between two rows (pure-Rust oracle used by the
+    /// kNN fallback path and by tests of the XLA path).
+    pub fn dissimilarity(&self, i: usize, j: usize) -> f64 {
+        let (a, b) = (self.row(i), self.row(j));
+        match self.metric {
+            Metric::L2 => a
+                .iter()
+                .zip(b)
+                .map(|(&x, &y)| {
+                    let d = x as f64 - y as f64;
+                    d * d
+                })
+                .sum(),
+            Metric::Cosine => {
+                let (mut dot, mut na, mut nb) = (0f64, 0f64, 0f64);
+                for (&x, &y) in a.iter().zip(b) {
+                    dot += x as f64 * y as f64;
+                    na += x as f64 * x as f64;
+                    nb += y as f64 * y as f64;
+                }
+                1.0 - dot / (na.sqrt().max(1e-12) * nb.sqrt().max(1e-12))
+            }
+        }
+    }
+}
+
+/// SIFT-like dataset: a Gaussian mixture in `d` dimensions.
+///
+/// `n_clusters` centers drawn around `sqrt(n_clusters)` super-centers (so
+/// the hierarchy has coarse and fine structure, mirroring SIFT's merge
+/// profile in paper Fig 2c/d); each point is a center plus isotropic noise
+/// with per-cluster `spread`; a `noise_frac` fraction of points is
+/// background uniform noise (SIFT's outlier tail).
+pub fn gaussian_mixture(
+    n: usize,
+    d: usize,
+    n_clusters: usize,
+    spread: f64,
+    noise_frac: f64,
+    seed: u64,
+) -> Dataset {
+    gaussian_mixture_labeled(n, d, n_clusters, spread, noise_frac, seed).0
+}
+
+/// [`gaussian_mixture`] plus ground-truth labels: the generating component
+/// per point, with `n_clusters` reserved for background-noise points. Used
+/// by the end-to-end example to score flat cuts (purity) against truth.
+pub fn gaussian_mixture_labeled(
+    n: usize,
+    d: usize,
+    n_clusters: usize,
+    spread: f64,
+    noise_frac: f64,
+    seed: u64,
+) -> (Dataset, Vec<u32>) {
+    assert!(n_clusters >= 1);
+    let mut rng = Rng::seed_from(seed);
+    let n_super = (n_clusters as f64).sqrt().ceil() as usize;
+    let sup: Vec<Vec<f32>> = (0..n_super)
+        .map(|_| (0..d).map(|_| rng.range_f64(-10.0, 10.0) as f32).collect())
+        .collect();
+    let centers: Vec<Vec<f32>> = (0..n_clusters)
+        .map(|_| {
+            let s = &sup[rng.below(n_super)];
+            s.iter()
+                .map(|&v| v + rng.normal_with(0.0, 2.0) as f32)
+                .collect()
+        })
+        .collect();
+    let mut rows = Vec::with_capacity(n * d);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        if rng.bool_with(noise_frac) {
+            labels.push(n_clusters as u32);
+            for _ in 0..d {
+                rows.push(rng.range_f64(-12.0, 12.0) as f32);
+            }
+        } else {
+            let ci = rng.below(n_clusters);
+            labels.push(ci as u32);
+            let c = &centers[ci];
+            for &v in c {
+                rows.push(v + rng.normal_with(0.0, spread) as f32);
+            }
+        }
+    }
+    (
+        Dataset {
+            n,
+            d,
+            metric: Metric::L2,
+            rows,
+        },
+        labels,
+    )
+}
+
+/// Web/doc-like dataset: Zipfian topic mixtures (substitute for WEB88M /
+/// News20 / RCV1 bag-of-words features, clustered under cosine).
+///
+/// Each document draws a dominant topic from a Zipf distribution over
+/// `n_topics`, blends it with two Dirichlet-weighted secondary topics, and
+/// adds sparse positive noise — producing the high-dimensional,
+/// non-negative, cluster-structured geometry of tf-idf features.
+pub fn topic_docs(n: usize, d: usize, n_topics: usize, seed: u64) -> Dataset {
+    assert!(n_topics >= 2);
+    let mut rng = Rng::seed_from(seed);
+    // Topic base vectors: sparse non-negative profiles.
+    let topics: Vec<Vec<f32>> = (0..n_topics)
+        .map(|_| {
+            (0..d)
+                .map(|_| {
+                    if rng.bool_with(0.15) {
+                        rng.range_f64(0.5, 2.0) as f32
+                    } else {
+                        0.0
+                    }
+                })
+                .collect()
+        })
+        .collect();
+    let mut rows = Vec::with_capacity(n * d);
+    for _ in 0..n {
+        let main = (rng.zipf(n_topics as u64, 1.1) as usize - 1).min(n_topics - 1);
+        let others = [rng.below(n_topics), rng.below(n_topics)];
+        let mix = rng.dirichlet(&[1.0, 0.3, 0.1]);
+        for j in 0..d {
+            let mut v = mix[0] as f32 * topics[main][j]
+                + mix[1] as f32 * topics[others[0]][j]
+                + mix[2] as f32 * topics[others[1]][j];
+            // Dense ZERO-MEAN per-document noise (LSA/embedding-like).
+            // Two generator artifacts to avoid, neither of which real
+            // corpora exhibit: (a) near-duplicate head-topic documents,
+            // whose tied distances serialise RAC merges through the id
+            // tie-break; (b) a shared positive noise direction, which
+            // creates a cosine "hub" document that is everyone's nearest
+            // neighbor — reciprocal pairs then collapse to one per round.
+            v += rng.normal_with(0.0, 0.15) as f32;
+            if rng.bool_with(0.02) {
+                v += rng.range_f64(0.0, 0.5) as f32;
+            }
+            rows.push(v);
+        }
+    }
+    Dataset {
+        n,
+        d,
+        metric: Metric::Cosine,
+        rows,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mixture_shape_and_determinism() {
+        let a = gaussian_mixture(100, 16, 5, 0.5, 0.05, 42);
+        let b = gaussian_mixture(100, 16, 5, 0.5, 0.05, 42);
+        assert_eq!(a.rows.len(), 100 * 16);
+        assert_eq!(a.rows, b.rows);
+        let c = gaussian_mixture(100, 16, 5, 0.5, 0.05, 43);
+        assert_ne!(a.rows, c.rows);
+    }
+
+    #[test]
+    fn mixture_is_clustered() {
+        // There must exist tight pairs (same center) at spread 0.1.
+        let ds = gaussian_mixture(200, 8, 4, 0.1, 0.0, 7);
+        let mut near = 0usize;
+        for i in 0..50 {
+            for j in (i + 1)..50 {
+                if ds.dissimilarity(i, j) < 1.0 {
+                    near += 1;
+                }
+            }
+        }
+        assert!(near > 0, "no tight pairs at all — not clustered");
+    }
+
+    #[test]
+    fn docs_shape_and_metric() {
+        let ds = topic_docs(50, 64, 10, 1);
+        assert_eq!(ds.metric, Metric::Cosine);
+        assert_eq!(ds.rows.len(), 50 * 64);
+        // Mostly-positive tf-idf-like profile with zero-mean jitter (the
+        // jitter is what keeps documents distinct; see generator docs).
+        let positive = ds.rows.iter().filter(|&&v| v > 0.0).count();
+        assert!(positive * 2 > ds.rows.len(), "{positive}");
+    }
+
+    #[test]
+    fn l2_dissimilarity_exact() {
+        let ds = Dataset {
+            n: 2,
+            d: 2,
+            metric: Metric::L2,
+            rows: vec![0.0, 0.0, 3.0, 4.0],
+        };
+        assert!((ds.dissimilarity(0, 1) - 25.0).abs() < 1e-9);
+        assert_eq!(ds.dissimilarity(0, 0), 0.0);
+    }
+
+    #[test]
+    fn cosine_dissimilarity_exact() {
+        let ds = Dataset {
+            n: 3,
+            d: 2,
+            metric: Metric::Cosine,
+            rows: vec![1.0, 0.0, 0.0, 1.0, 2.0, 0.0],
+        };
+        assert!((ds.dissimilarity(0, 1) - 1.0).abs() < 1e-6); // orthogonal
+        assert!(ds.dissimilarity(0, 2).abs() < 1e-6); // parallel
+    }
+
+    #[test]
+    fn metric_fromstr() {
+        assert_eq!("l2".parse::<Metric>().unwrap(), Metric::L2);
+        assert_eq!("cosine".parse::<Metric>().unwrap(), Metric::Cosine);
+        assert!("manhattan".parse::<Metric>().is_err());
+    }
+}

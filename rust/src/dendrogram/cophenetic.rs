@@ -1,0 +1,156 @@
+//! Cophenetic analysis: the dissimilarity level at which two points first
+//! share a cluster, and the cophenetic correlation — the standard quality
+//! check that a dendrogram faithfully represents its input dissimilarities
+//! (Sokal 1958, the UPGMA paper the RAC paper builds on).
+
+use std::collections::HashMap;
+
+use crate::graph::Graph;
+use crate::linkage::Weight;
+
+use super::Dendrogram;
+
+impl Dendrogram {
+    /// Cophenetic distance matrix (condensed, row-major upper triangle):
+    /// `out[idx(i, j)]` = merge weight at which `i` and `j` first joined,
+    /// or `+inf` if they never did (disconnected input). O(n²) memory —
+    /// intended for validation at small n.
+    pub fn cophenetic(&self) -> Vec<Weight> {
+        let n = self.n();
+        let idx = |i: usize, j: usize| {
+            debug_assert!(i < j);
+            i * n - i * (i + 1) / 2 + (j - i - 1)
+        };
+        let mut out = vec![Weight::INFINITY; n * (n - 1) / 2];
+        // members[rep] = points of the live cluster represented by rep.
+        let mut members: HashMap<u32, Vec<u32>> = HashMap::new();
+        for m in self.merges() {
+            let la = members.remove(&m.a).unwrap_or_else(|| vec![m.a]);
+            let lb = members.remove(&m.b).unwrap_or_else(|| vec![m.b]);
+            for &x in &la {
+                for &y in &lb {
+                    let (i, j) = (x.min(y) as usize, x.max(y) as usize);
+                    out[idx(i, j)] = m.weight;
+                }
+            }
+            let mut merged = la;
+            merged.extend(lb);
+            members.insert(m.a, merged);
+        }
+        out
+    }
+
+    /// Cophenetic correlation coefficient against the input graph's edge
+    /// dissimilarities (Pearson over the edges present in `g`).
+    ///
+    /// Values near 1 mean the hierarchy preserves the pairwise structure;
+    /// classic rule of thumb: > 0.75 is a faithful dendrogram.
+    pub fn cophenetic_correlation(&self, g: &Graph) -> f64 {
+        assert_eq!(g.n(), self.n());
+        let n = g.n();
+        let idx = |i: usize, j: usize| i * n - i * (i + 1) / 2 + (j - i - 1);
+        let coph = self.cophenetic();
+        let mut xs: Vec<f64> = Vec::with_capacity(g.m());
+        let mut ys: Vec<f64> = Vec::with_capacity(g.m());
+        for u in 0..n as u32 {
+            for (v, w) in g.neighbors(u) {
+                if u < v {
+                    let c = coph[idx(u as usize, v as usize)];
+                    if c.is_finite() {
+                        xs.push(w);
+                        ys.push(c);
+                    }
+                }
+            }
+        }
+        pearson(&xs, &ys)
+    }
+}
+
+fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    let n = xs.len() as f64;
+    if n < 2.0 {
+        return f64::NAN;
+    }
+    let (mx, my) = (
+        xs.iter().sum::<f64>() / n,
+        ys.iter().sum::<f64>() / n,
+    );
+    let (mut sxy, mut sxx, mut syy) = (0.0, 0.0, 0.0);
+    for (&x, &y) in xs.iter().zip(ys) {
+        let (dx, dy) = (x - mx, y - my);
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    sxy / (sxx.sqrt() * syy.sqrt()).max(f64::MIN_POSITIVE)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{gaussian_mixture, grid1d_graph};
+    use crate::hac::naive_hac;
+    use crate::knn::complete_graph;
+    use crate::linkage::Linkage;
+    use crate::rac::RacEngine;
+
+    #[test]
+    fn cophenetic_of_simple_tree() {
+        use crate::dendrogram::Merge;
+        // ((0,1)@1, (2,3)@2, (01,23)@5
+        let d = Dendrogram::new(
+            4,
+            vec![
+                Merge { a: 0, b: 1, weight: 1.0 },
+                Merge { a: 2, b: 3, weight: 2.0 },
+                Merge { a: 0, b: 2, weight: 5.0 },
+            ],
+        );
+        let c = d.cophenetic();
+        let n = 4;
+        let idx = |i: usize, j: usize| i * n - i * (i + 1) / 2 + (j - i - 1);
+        assert_eq!(c[idx(0, 1)], 1.0);
+        assert_eq!(c[idx(2, 3)], 2.0);
+        for (i, j) in [(0, 2), (0, 3), (1, 2), (1, 3)] {
+            assert_eq!(c[idx(i, j)], 5.0);
+        }
+    }
+
+    #[test]
+    fn single_linkage_cophenetic_is_ultrametric_floor() {
+        // For single linkage, cophenetic distance <= edge weight on every
+        // edge (the path minimax is never above the direct edge).
+        let g = grid1d_graph(100, 8);
+        let d = naive_hac(&g, Linkage::Single);
+        let coph = d.cophenetic();
+        let n = 100;
+        let idx = |i: usize, j: usize| i * n - i * (i + 1) / 2 + (j - i - 1);
+        for u in 0..100u32 {
+            for (v, w) in g.neighbors(u) {
+                if u < v {
+                    assert!(coph[idx(u as usize, v as usize)] <= w + 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn correlation_high_on_clustered_data() {
+        let ds = gaussian_mixture(120, 8, 4, 0.3, 0.0, 6);
+        let g = complete_graph(&ds);
+        let r = RacEngine::new(&g, Linkage::Average).run();
+        let ccc = r.dendrogram.cophenetic_correlation(&g);
+        assert!(ccc > 0.8, "cophenetic correlation {ccc:.3} too low");
+    }
+
+    #[test]
+    fn disconnected_pairs_are_infinite() {
+        let g = crate::graph::Graph::from_edges(4, [(0, 1, 1.0), (2, 3, 1.0)]);
+        let d = naive_hac(&g, Linkage::Single);
+        let coph = d.cophenetic();
+        let idx = |i: usize, j: usize| i * 4 - i * (i + 1) / 2 + (j - i - 1);
+        assert_eq!(coph[idx(0, 1)], 1.0);
+        assert!(coph[idx(0, 2)].is_infinite());
+    }
+}

@@ -1,0 +1,363 @@
+//! Dendrograms: merge lists, the cluster tree, flat cuts, and the
+//! order-independent comparison used to verify Theorem 1 (RAC = HAC).
+//!
+//! HAC/RAC output an unordered list of merges (paper Algorithm 1 returns
+//! `M`). We record each merge as `(a, b, weight)` where `a < b` are the
+//! *representative* ids of the merged clusters (the lower id survives, per
+//! the paper's §5 ownership rule), and derive everything else — the tree,
+//! its height, flat clusterings — from that list.
+
+mod cophenetic;
+
+use std::collections::HashMap;
+
+use crate::linkage::Weight;
+
+/// A single cluster merge: representatives `a < b` merged at `weight`.
+/// After the merge the combined cluster is represented by `a`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Merge {
+    pub a: u32,
+    pub b: u32,
+    pub weight: Weight,
+}
+
+/// The full output of a clustering run over `n` points.
+#[derive(Debug, Clone, Default)]
+pub struct Dendrogram {
+    n: usize,
+    merges: Vec<Merge>,
+}
+
+impl Dendrogram {
+    /// Create from a merge list. Representatives are normalised to `a < b`.
+    pub fn new(n: usize, merges: Vec<Merge>) -> Self {
+        let merges = merges
+            .into_iter()
+            .map(|m| {
+                if m.a < m.b {
+                    m
+                } else {
+                    Merge {
+                        a: m.b,
+                        b: m.a,
+                        weight: m.weight,
+                    }
+                }
+            })
+            .collect();
+        Dendrogram { n, merges }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn merges(&self) -> &[Merge] {
+        &self.merges
+    }
+
+    /// Structural validation: each representative merged away (appearing as
+    /// `b`) never reappears; ids in range; merge count consistent with a
+    /// forest over `n` leaves.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.merges.len() >= self.n && self.n > 0 {
+            return Err(format!(
+                "{} merges for {} points (max {})",
+                self.merges.len(),
+                self.n,
+                self.n - 1
+            ));
+        }
+        let mut dead = vec![false; self.n];
+        for (i, m) in self.merges.iter().enumerate() {
+            if m.a >= m.b {
+                return Err(format!("merge {i}: a >= b ({} >= {})", m.a, m.b));
+            }
+            if m.b as usize >= self.n {
+                return Err(format!("merge {i}: id {} out of range", m.b));
+            }
+            if dead[m.a as usize] || dead[m.b as usize] {
+                return Err(format!("merge {i}: uses a dead representative"));
+            }
+            dead[m.b as usize] = true;
+            if !m.weight.is_finite() {
+                return Err(format!("merge {i}: non-finite weight"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of clusters remaining after all merges (1 for a connected
+    /// input graph; one per component otherwise).
+    pub fn remaining_clusters(&self) -> usize {
+        self.n - self.merges.len()
+    }
+
+    /// Height of the cluster tree: longest root-to-leaf path in merges.
+    pub fn height(&self) -> usize {
+        // height[rep] = height of the current cluster represented by rep.
+        let mut height: HashMap<u32, usize> = HashMap::new();
+        let mut max_h = 0;
+        for m in &self.merges {
+            let ha = height.get(&m.a).copied().unwrap_or(0);
+            let hb = height.get(&m.b).copied().unwrap_or(0);
+            let h = ha.max(hb) + 1;
+            height.insert(m.a, h);
+            height.remove(&m.b);
+            max_h = max_h.max(h);
+        }
+        max_h
+    }
+
+    /// Flat clustering: stop merging at dissimilarity `threshold`
+    /// (exclusive). Returns a label per point in `[0, n_clusters)`.
+    ///
+    /// Note: RAC/HAC merge weights are non-decreasing only for reducible
+    /// linkages applied in HAC order; for RAC output we apply every merge
+    /// with `weight < threshold`, which matches HAC's cut because the
+    /// merge *set* is identical (Theorem 1) — see `cut_k` for count-based
+    /// cuts.
+    pub fn cut_threshold(&self, threshold: Weight) -> Vec<u32> {
+        let mut uf = UnionFind::new(self.n);
+        for m in &self.merges {
+            if m.weight < threshold {
+                uf.union(m.a, m.b);
+            }
+        }
+        uf.labels()
+    }
+
+    /// Flat clustering with exactly `k` clusters (applies the `n - k`
+    /// smallest-weight merges; assumes a connected input).
+    pub fn cut_k(&self, k: usize) -> Vec<u32> {
+        assert!(k >= 1 && k <= self.n);
+        let mut order: Vec<&Merge> = self.merges.iter().collect();
+        order.sort_by(|x, y| x.weight.total_cmp(&y.weight));
+        let mut uf = UnionFind::new(self.n);
+        for m in order.into_iter().take(self.n.saturating_sub(k)) {
+            uf.union(m.a, m.b);
+        }
+        uf.labels()
+    }
+
+    /// Canonical fingerprint for order-independent equality: the multiset
+    /// of (sorted leaf set, quantised weight) over all internal nodes.
+    ///
+    /// Two dendrograms over the same points are the same clustering iff
+    /// they produce the same set of internal-node leaf sets — the order in
+    /// which independent merges are recorded is irrelevant (Lemma 3).
+    /// Weights are quantised to `tol` to absorb floating-point noise
+    /// between differently-ordered but algebraically identical updates.
+    pub fn canonical(&self, tol: Weight) -> Vec<(Vec<u32>, i64)> {
+        let mut members: HashMap<u32, Vec<u32>> = HashMap::new();
+        let mut out = Vec::with_capacity(self.merges.len());
+        for m in &self.merges {
+            let mut la = members.remove(&m.a).unwrap_or_else(|| vec![m.a]);
+            let lb = members.remove(&m.b).unwrap_or_else(|| vec![m.b]);
+            la.extend(lb);
+            la.sort_unstable();
+            out.push((la.clone(), (m.weight / tol).round() as i64));
+            members.insert(m.a, la);
+        }
+        out.sort();
+        out
+    }
+
+    /// Order-independent equality against another dendrogram.
+    pub fn same_clustering(&self, other: &Dendrogram, tol: Weight) -> bool {
+        self.n == other.n && self.canonical(tol) == other.canonical(tol)
+    }
+
+    /// Monotonicity violations ("inversions"): internal nodes whose merge
+    /// weight is lower than a child's merge weight. Zero for reducible
+    /// linkages; typically positive for centroid linkage.
+    pub fn inversions(&self) -> usize {
+        let mut last: HashMap<u32, Weight> = HashMap::new();
+        let mut inv = 0;
+        for m in &self.merges {
+            let wa = last.get(&m.a).copied().unwrap_or(Weight::NEG_INFINITY);
+            let wb = last.get(&m.b).copied().unwrap_or(Weight::NEG_INFINITY);
+            if m.weight < wa.max(wb) - 1e-12 {
+                inv += 1;
+            }
+            last.insert(m.a, m.weight);
+            last.remove(&m.b);
+        }
+        inv
+    }
+}
+
+/// Small path-compressing union-find used for flat cuts.
+struct UnionFind {
+    parent: Vec<u32>,
+}
+
+impl UnionFind {
+    fn new(n: usize) -> Self {
+        UnionFind {
+            parent: (0..n as u32).collect(),
+        }
+    }
+
+    fn find(&mut self, mut x: u32) -> u32 {
+        while self.parent[x as usize] != x {
+            self.parent[x as usize] = self.parent[self.parent[x as usize] as usize];
+            x = self.parent[x as usize];
+        }
+        x
+    }
+
+    fn union(&mut self, a: u32, b: u32) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra != rb {
+            // Lower root wins, matching the merge-representative rule.
+            let (lo, hi) = if ra < rb { (ra, rb) } else { (rb, ra) };
+            self.parent[hi as usize] = lo;
+        }
+    }
+
+    /// Dense labels in `[0, n_clusters)`, stable by root id.
+    fn labels(&mut self) -> Vec<u32> {
+        let n = self.parent.len();
+        let mut label: HashMap<u32, u32> = HashMap::new();
+        let mut out = Vec::with_capacity(n);
+        for x in 0..n as u32 {
+            let r = self.find(x);
+            let next = label.len() as u32;
+            out.push(*label.entry(r).or_insert(next));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain4() -> Dendrogram {
+        // ((0,1)@1, (2,3)@2, (0,2)@3)
+        Dendrogram::new(
+            4,
+            vec![
+                Merge { a: 0, b: 1, weight: 1.0 },
+                Merge { a: 2, b: 3, weight: 2.0 },
+                Merge { a: 0, b: 2, weight: 3.0 },
+            ],
+        )
+    }
+
+    #[test]
+    fn validates_ok() {
+        chain4().validate().unwrap();
+    }
+
+    #[test]
+    fn normalises_representatives() {
+        let d = Dendrogram::new(2, vec![Merge { a: 1, b: 0, weight: 1.0 }]);
+        assert_eq!(d.merges()[0].a, 0);
+        assert_eq!(d.merges()[0].b, 1);
+    }
+
+    #[test]
+    fn catches_dead_representative() {
+        let d = Dendrogram::new(
+            3,
+            vec![
+                Merge { a: 0, b: 1, weight: 1.0 },
+                Merge { a: 1, b: 2, weight: 2.0 }, // 1 is dead
+            ],
+        );
+        assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn height_balanced_vs_chain() {
+        assert_eq!(chain4().height(), 2);
+        let caterpillar = Dendrogram::new(
+            4,
+            vec![
+                Merge { a: 0, b: 1, weight: 1.0 },
+                Merge { a: 0, b: 2, weight: 2.0 },
+                Merge { a: 0, b: 3, weight: 3.0 },
+            ],
+        );
+        assert_eq!(caterpillar.height(), 3);
+    }
+
+    #[test]
+    fn cut_threshold_labels() {
+        let d = chain4();
+        assert_eq!(d.cut_threshold(0.5), vec![0, 1, 2, 3]);
+        let two = d.cut_threshold(2.5);
+        assert_eq!(two[0], two[1]);
+        assert_eq!(two[2], two[3]);
+        assert_ne!(two[0], two[2]);
+        let one = d.cut_threshold(10.0);
+        assert!(one.iter().all(|&l| l == 0));
+    }
+
+    #[test]
+    fn cut_k_counts() {
+        let d = chain4();
+        for k in 1..=4 {
+            let labels = d.cut_k(k);
+            let distinct: std::collections::HashSet<_> = labels.iter().collect();
+            assert_eq!(distinct.len(), k);
+        }
+    }
+
+    #[test]
+    fn canonical_ignores_order() {
+        let d1 = chain4();
+        let d2 = Dendrogram::new(
+            4,
+            vec![
+                Merge { a: 2, b: 3, weight: 2.0 },
+                Merge { a: 0, b: 1, weight: 1.0 },
+                Merge { a: 0, b: 2, weight: 3.0 },
+            ],
+        );
+        assert!(d1.same_clustering(&d2, 1e-9));
+    }
+
+    #[test]
+    fn canonical_detects_different_trees() {
+        let d1 = chain4();
+        let d2 = Dendrogram::new(
+            4,
+            vec![
+                Merge { a: 0, b: 1, weight: 1.0 },
+                Merge { a: 0, b: 2, weight: 2.0 },
+                Merge { a: 0, b: 3, weight: 3.0 },
+            ],
+        );
+        assert!(!d1.same_clustering(&d2, 1e-9));
+    }
+
+    #[test]
+    fn inversions_detected() {
+        let inv = Dendrogram::new(
+            3,
+            vec![
+                Merge { a: 0, b: 1, weight: 2.0 },
+                Merge { a: 0, b: 2, weight: 1.0 }, // parent below child
+            ],
+        );
+        assert_eq!(inv.inversions(), 1);
+        assert_eq!(chain4().inversions(), 0);
+    }
+
+    #[test]
+    fn remaining_clusters_disconnected() {
+        let d = Dendrogram::new(4, vec![Merge { a: 0, b: 1, weight: 1.0 }]);
+        assert_eq!(d.remaining_clusters(), 3);
+    }
+
+    #[test]
+    fn empty_dendrogram() {
+        let d = Dendrogram::new(0, vec![]);
+        d.validate().unwrap();
+        assert_eq!(d.height(), 0);
+    }
+}

@@ -1,0 +1,308 @@
+//! Sparse weighted dissimilarity graphs — the input substrate for RAC/HAC.
+//!
+//! The paper clusters graphs built over vector datasets (complete graphs,
+//! kNN graphs, ε-ball graphs). This module provides an immutable CSR
+//! representation with builders, validation, statistics, and a compact
+//! binary on-disk format so the CLI pipeline (`rac generate` →
+//! `rac build-graph` → `rac cluster`) can stage multi-step runs.
+//!
+//! Graphs are undirected: every edge is stored in both adjacency rows, and
+//! [`Graph::validate`] checks symmetry. Weights are dissimilarities
+//! (lower = more similar).
+
+mod io;
+
+pub use io::{read_graph, write_graph};
+
+use crate::linkage::Weight;
+
+/// Immutable undirected weighted graph in CSR form.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Graph {
+    n: usize,
+    offsets: Vec<usize>,
+    targets: Vec<u32>,
+    weights: Vec<Weight>,
+}
+
+impl Graph {
+    /// Build from an edge iterator `(u, v, w)`. Edges are symmetrised and
+    /// deduplicated (last weight wins for duplicates); self-loops are
+    /// rejected.
+    ///
+    /// # Panics
+    /// If any endpoint is `>= n` or `u == v`.
+    pub fn from_edges(n: usize, edges: impl IntoIterator<Item = (u32, u32, Weight)>) -> Self {
+        let mut adj: Vec<Vec<(u32, Weight)>> = vec![Vec::new(); n];
+        for (u, v, w) in edges {
+            assert!(u != v, "self-loop {u}");
+            assert!((u as usize) < n && (v as usize) < n, "endpoint out of range");
+            adj[u as usize].push((v, w));
+            adj[v as usize].push((u, w));
+        }
+        for row in &mut adj {
+            row.sort_unstable_by_key(|&(v, _)| v);
+            row.dedup_by_key(|&mut (v, _)| v);
+        }
+        Self::from_adjacency(adj)
+    }
+
+    /// Build from per-node adjacency rows (must already be symmetric and
+    /// sorted; use [`Graph::from_edges`] otherwise).
+    pub fn from_adjacency(adj: Vec<Vec<(u32, Weight)>>) -> Self {
+        let n = adj.len();
+        let mut offsets = Vec::with_capacity(n + 1);
+        offsets.push(0);
+        let total: usize = adj.iter().map(|r| r.len()).sum();
+        let mut targets = Vec::with_capacity(total);
+        let mut weights = Vec::with_capacity(total);
+        for row in &adj {
+            for &(v, w) in row {
+                targets.push(v);
+                weights.push(w);
+            }
+            offsets.push(targets.len());
+        }
+        Graph {
+            n,
+            offsets,
+            targets,
+            weights,
+        }
+    }
+
+    /// Complete graph from a dense dissimilarity matrix (row-major, n×n).
+    /// The diagonal is ignored.
+    pub fn from_dense(n: usize, matrix: &[Weight]) -> Self {
+        assert_eq!(matrix.len(), n * n);
+        let mut adj: Vec<Vec<(u32, Weight)>> = vec![Vec::with_capacity(n - 1); n];
+        for u in 0..n {
+            for v in 0..n {
+                if u != v {
+                    adj[u].push((v as u32, matrix[u * n + v]));
+                }
+            }
+        }
+        Self::from_adjacency(adj)
+    }
+
+    /// Number of nodes.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of undirected edges.
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.targets.len() / 2
+    }
+
+    /// Neighbors of `u` as `(target, weight)` pairs, sorted by target id.
+    #[inline]
+    pub fn neighbors(&self, u: u32) -> impl Iterator<Item = (u32, Weight)> + '_ {
+        let (lo, hi) = (self.offsets[u as usize], self.offsets[u as usize + 1]);
+        self.targets[lo..hi]
+            .iter()
+            .copied()
+            .zip(self.weights[lo..hi].iter().copied())
+    }
+
+    /// Degree of `u`.
+    #[inline]
+    pub fn degree(&self, u: u32) -> usize {
+        self.offsets[u as usize + 1] - self.offsets[u as usize]
+    }
+
+    /// Weight of edge `(u, v)` if present (binary search).
+    pub fn weight(&self, u: u32, v: u32) -> Option<Weight> {
+        let (lo, hi) = (self.offsets[u as usize], self.offsets[u as usize + 1]);
+        self.targets[lo..hi]
+            .binary_search(&v)
+            .ok()
+            .map(|i| self.weights[lo + i])
+    }
+
+    /// Maximum degree (the paper's `k`/`d` bound, Theorem 9).
+    pub fn max_degree(&self) -> usize {
+        (0..self.n as u32).map(|u| self.degree(u)).max().unwrap_or(0)
+    }
+
+    /// Mean degree.
+    pub fn mean_degree(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.targets.len() as f64 / self.n as f64
+    }
+
+    /// Number of connected components (union-find).
+    pub fn components(&self) -> usize {
+        let mut parent: Vec<u32> = (0..self.n as u32).collect();
+        fn find(p: &mut [u32], mut x: u32) -> u32 {
+            while p[x as usize] != x {
+                p[x as usize] = p[p[x as usize] as usize];
+                x = p[x as usize];
+            }
+            x
+        }
+        let mut comps = self.n;
+        for u in 0..self.n as u32 {
+            for (v, _) in self.neighbors(u) {
+                let (ru, rv) = (find(&mut parent, u), find(&mut parent, v));
+                if ru != rv {
+                    parent[ru as usize] = rv;
+                    comps -= 1;
+                }
+            }
+        }
+        comps
+    }
+
+    /// Structural validation: symmetric, sorted rows, no self-loops, finite
+    /// non-negative weights. Returns a description of the first violation.
+    pub fn validate(&self) -> Result<(), String> {
+        for u in 0..self.n as u32 {
+            let mut prev: Option<u32> = None;
+            for (v, w) in self.neighbors(u) {
+                if v == u {
+                    return Err(format!("self-loop at {u}"));
+                }
+                if let Some(p) = prev {
+                    if v <= p {
+                        return Err(format!("row {u} not strictly sorted at {v}"));
+                    }
+                }
+                prev = Some(v);
+                if !w.is_finite() || w < 0.0 {
+                    return Err(format!("bad weight {w} on ({u},{v})"));
+                }
+                match self.weight(v, u) {
+                    Some(wr) if wr == w => {}
+                    Some(wr) => return Err(format!("asymmetric weight ({u},{v}): {w} vs {wr}")),
+                    None => return Err(format!("missing reverse edge ({v},{u})")),
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Degree histogram up to `buckets` (last bucket is overflow), for the
+    /// bounded-degree diagnostics in the bench harness.
+    pub fn degree_histogram(&self, buckets: usize) -> Vec<usize> {
+        let mut h = vec![0usize; buckets + 1];
+        for u in 0..self.n as u32 {
+            let d = self.degree(u);
+            h[d.min(buckets)] += 1;
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> Graph {
+        // 0-1, 1-2, 2-3, 3-0, 0-2
+        Graph::from_edges(
+            4,
+            [
+                (0, 1, 1.0),
+                (1, 2, 2.0),
+                (2, 3, 3.0),
+                (3, 0, 4.0),
+                (0, 2, 5.0),
+            ],
+        )
+    }
+
+    #[test]
+    fn csr_basics() {
+        let g = diamond();
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.m(), 5);
+        assert_eq!(g.degree(0), 3);
+        assert_eq!(g.degree(1), 2);
+        let n0: Vec<_> = g.neighbors(0).collect();
+        assert_eq!(n0, vec![(1, 1.0), (2, 5.0), (3, 4.0)]);
+    }
+
+    #[test]
+    fn weight_lookup() {
+        let g = diamond();
+        assert_eq!(g.weight(2, 3), Some(3.0));
+        assert_eq!(g.weight(3, 2), Some(3.0));
+        assert_eq!(g.weight(1, 3), None);
+    }
+
+    #[test]
+    fn duplicate_edges_dedup() {
+        let g = Graph::from_edges(3, [(0, 1, 1.0), (1, 0, 1.0), (1, 2, 2.0)]);
+        assert_eq!(g.m(), 2);
+        assert_eq!(g.degree(1), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "self-loop")]
+    fn rejects_self_loop() {
+        Graph::from_edges(2, [(0, 0, 1.0)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rejects_out_of_range() {
+        Graph::from_edges(2, [(0, 5, 1.0)]);
+    }
+
+    #[test]
+    fn from_dense_complete() {
+        let m = vec![
+            0.0, 1.0, 2.0, //
+            1.0, 0.0, 3.0, //
+            2.0, 3.0, 0.0,
+        ];
+        let g = Graph::from_dense(3, &m);
+        assert_eq!(g.m(), 3);
+        assert_eq!(g.weight(0, 2), Some(2.0));
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_catches_asymmetry() {
+        let g = Graph::from_adjacency(vec![vec![(1, 1.0)], vec![(0, 2.0)]]);
+        assert!(g.validate().unwrap_err().contains("asymmetric"));
+    }
+
+    #[test]
+    fn validate_catches_missing_reverse() {
+        let g = Graph::from_adjacency(vec![vec![(1, 1.0)], vec![]]);
+        assert!(g.validate().unwrap_err().contains("missing reverse"));
+    }
+
+    #[test]
+    fn components_counts() {
+        let g = Graph::from_edges(5, [(0, 1, 1.0), (1, 2, 1.0), (3, 4, 1.0)]);
+        assert_eq!(g.components(), 2);
+        assert_eq!(diamond().components(), 1);
+    }
+
+    #[test]
+    fn degree_stats() {
+        let g = diamond();
+        assert_eq!(g.max_degree(), 3);
+        assert!((g.mean_degree() - 2.5).abs() < 1e-12);
+        let h = g.degree_histogram(4);
+        assert_eq!(h[2], 2);
+        assert_eq!(h[3], 2);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Graph::from_edges(0, []);
+        assert_eq!(g.n(), 0);
+        assert_eq!(g.m(), 0);
+        assert_eq!(g.components(), 0);
+        g.validate().unwrap();
+    }
+}

@@ -1,0 +1,24 @@
+//! Exact sequential HAC baselines (paper Algorithm 1 and the
+//! nearest-neighbor-chain algorithm).
+//!
+//! These are the correctness oracles for the RAC engine (Theorem 1 says
+//! their output must be identical for reducible linkages) and the
+//! sequential baselines in the benchmark harness.
+//!
+//! * [`naive_hac`] — Algorithm 1 with a lazy global min-heap over candidate
+//!   edges: always merges the globally closest pair, `O(m log m)`-ish.
+//! * [`nn_chain`] — Murtagh's nearest-neighbor-chain algorithm: follows NN
+//!   pointers until a reciprocal pair is found; merges are locally optimal
+//!   only, but the resulting dendrogram is identical for reducible
+//!   linkages. This is the algorithm RAC parallelises.
+//! * [`mst_single_linkage`] — single linkage via Kruskal's MST (the
+//!   paper's §1 "unique connection to the minimum spanning tree").
+
+mod mst;
+mod naive;
+mod nnchain;
+pub mod state;
+
+pub use mst::mst_single_linkage;
+pub use naive::naive_hac;
+pub use nnchain::nn_chain;

@@ -1,0 +1,152 @@
+//! Single-linkage HAC via the minimum spanning tree (Kruskal + union-find).
+//!
+//! The paper (§1) notes single linkage is the historical exception to
+//! HAC's scaling woes "because of its unique connection to the minimum
+//! spanning tree problem" (Rammal et al. 1985). This module implements
+//! that connection directly: sort edges, union components in weight
+//! order — every union IS a single-linkage merge. `O(m log m)`, no
+//! cluster-graph maintenance at all.
+//!
+//! Serves as a third independent oracle for single linkage (vs the heap
+//! baseline and NN-chain) and as the fast path a practitioner would
+//! actually use for single linkage.
+
+use crate::dendrogram::{Dendrogram, Merge};
+use crate::graph::Graph;
+use crate::linkage::Weight;
+
+/// Exact single-linkage HAC via Kruskal's MST.
+///
+/// Ties are broken by `(weight, min id, max id)` — consistent with the
+/// crate-wide `(weight, id)` convention, so the output matches the other
+/// engines even on tied inputs.
+pub fn mst_single_linkage(g: &Graph) -> Dendrogram {
+    let n = g.n();
+    let mut edges: Vec<(Weight, u32, u32)> = Vec::with_capacity(g.m());
+    for u in 0..n as u32 {
+        for (v, w) in g.neighbors(u) {
+            if u < v {
+                edges.push((w, u, v));
+            }
+        }
+    }
+    edges.sort_unstable_by(|a, b| {
+        a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
+    });
+
+    // Union-find tracking the REPRESENTATIVE (lowest member id) of each
+    // component, matching the merge-record convention of the engines.
+    let mut parent: Vec<u32> = (0..n as u32).collect();
+    let mut rep: Vec<u32> = (0..n as u32).collect();
+    fn find(parent: &mut [u32], mut x: u32) -> u32 {
+        while parent[x as usize] != x {
+            parent[x as usize] = parent[parent[x as usize] as usize];
+            x = parent[x as usize];
+        }
+        x
+    }
+
+    let mut merges = Vec::with_capacity(n.saturating_sub(1));
+    for (w, u, v) in edges {
+        let (ru, rv) = (find(&mut parent, u), find(&mut parent, v));
+        if ru == rv {
+            continue;
+        }
+        let (ra, rb) = (rep[ru as usize], rep[rv as usize]);
+        merges.push(Merge {
+            a: ra.min(rb),
+            b: ra.max(rb),
+            weight: w,
+        });
+        // Union: attach higher root under lower root, keep the lower rep.
+        let (lo, hi) = if ru < rv { (ru, rv) } else { (rv, ru) };
+        parent[hi as usize] = lo;
+        rep[lo as usize] = ra.min(rb);
+        if merges.len() == n - 1 {
+            break;
+        }
+    }
+    Dendrogram::new(n, merges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{gaussian_mixture, grid1d_graph, random_regular_graph};
+    use crate::hac::naive_hac;
+    use crate::knn::{knn_graph, Backend};
+    use crate::linkage::Linkage;
+    use crate::rac::RacEngine;
+
+    #[test]
+    fn matches_heap_hac_on_grid() {
+        let g = grid1d_graph(500, 11);
+        let a = naive_hac(&g, Linkage::Single);
+        let b = mst_single_linkage(&g);
+        assert!(a.same_clustering(&b, 1e-12));
+    }
+
+    #[test]
+    fn matches_rac_on_knn_graph() {
+        let ds = gaussian_mixture(300, 8, 6, 0.5, 0.05, 2);
+        let g = knn_graph(&ds, 6, Backend::Native, None).unwrap();
+        let a = RacEngine::new(&g, Linkage::Single).run();
+        let b = mst_single_linkage(&g);
+        assert!(a.dendrogram.same_clustering(&b, 1e-12));
+    }
+
+    #[test]
+    fn matches_on_random_ranked_graph_with_ties_impossible() {
+        let g = random_regular_graph(400, 6, 7);
+        let a = naive_hac(&g, Linkage::Single);
+        let b = mst_single_linkage(&g);
+        assert!(a.same_clustering(&b, 1e-12));
+    }
+
+    #[test]
+    fn disconnected_components() {
+        let g = crate::graph::Graph::from_edges(6, [(0, 1, 1.0), (2, 3, 2.0), (3, 4, 3.0)]);
+        let d = mst_single_linkage(&g);
+        assert_eq!(d.merges().len(), 3);
+        assert_eq!(d.remaining_clusters(), 3);
+        d.validate().unwrap();
+    }
+
+    #[test]
+    fn merge_weights_are_sorted() {
+        // Kruskal order implies a monotone dendrogram.
+        let g = grid1d_graph(200, 4);
+        let d = mst_single_linkage(&g);
+        let ws: Vec<f64> = d.merges().iter().map(|m| m.weight).collect();
+        assert!(ws.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(d.inversions(), 0);
+    }
+
+    #[test]
+    fn exact_ties_agree_on_components_per_level() {
+        // Under exact ties the single-linkage DENDROGRAM is not unique
+        // (different tie orders give different intermediate trees), but
+        // the flat components below any threshold are — compare those.
+        let g = crate::graph::Graph::from_edges(
+            6,
+            [
+                (0, 1, 1.0),
+                (1, 2, 1.0),
+                (2, 3, 1.0),
+                (3, 4, 2.0),
+                (4, 5, 2.0),
+                (0, 5, 3.0),
+            ],
+        );
+        let a = naive_hac(&g, Linkage::Single);
+        let b = mst_single_linkage(&g);
+        for thr in [0.5, 1.5, 2.5, 3.5] {
+            let (ca, cb) = (a.cut_threshold(thr), b.cut_threshold(thr));
+            for i in 0..6 {
+                for j in (i + 1)..6 {
+                    assert_eq!(ca[i] == ca[j], cb[i] == cb[j], "thr={thr} ({i},{j})");
+                }
+            }
+        }
+    }
+}

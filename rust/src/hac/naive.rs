@@ -1,0 +1,152 @@
+//! Algorithm 1: exact HAC via a lazy global min-heap.
+//!
+//! Every candidate edge `(w, a, b)` is pushed to a binary heap; stale
+//! entries (dead endpoints or superseded weights) are discarded on pop.
+//! This is the textbook `O(m log m)` generic-linkage HAC and the ground
+//! truth for every correctness test in the crate.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::dendrogram::{Dendrogram, Merge};
+use crate::graph::Graph;
+use crate::linkage::{Linkage, Weight};
+
+use super::state::ClusterStore;
+
+/// Heap key ordered by `(weight, a, b)` — the same deterministic tie-break
+/// as [`ClusterStore::nearest_neighbor`], so all algorithms agree even on
+/// tied inputs.
+#[derive(PartialEq)]
+struct Key(Weight, u32, u32);
+
+impl Eq for Key {}
+
+impl PartialOrd for Key {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Key {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0
+            .total_cmp(&other.0)
+            .then(self.1.cmp(&other.1))
+            .then(self.2.cmp(&other.2))
+    }
+}
+
+/// Run exact sequential HAC (paper Algorithm 1) over a dissimilarity graph.
+///
+/// Works on connected and disconnected graphs (each component is clustered
+/// to a single root). Supports every [`Linkage`]; note that for
+/// non-reducible linkages (Centroid) the merge sequence is still "globally
+/// closest pair first" but the dendrogram may contain inversions.
+pub fn naive_hac(g: &Graph, linkage: Linkage) -> Dendrogram {
+    let mut store = ClusterStore::from_graph(g, linkage);
+    let mut heap: BinaryHeap<Reverse<Key>> = BinaryHeap::new();
+    for u in 0..g.n() as u32 {
+        for (v, w) in g.neighbors(u) {
+            if u < v {
+                heap.push(Reverse(Key(w, u, v)));
+            }
+        }
+    }
+
+    let mut merges = Vec::with_capacity(g.n().saturating_sub(1));
+    while let Some(Reverse(Key(w, a, b))) = heap.pop() {
+        if !store.active[a as usize] || !store.active[b as usize] {
+            continue;
+        }
+        // Superseded entry? The live weight is authoritative.
+        match store.weight(a, b) {
+            Some(cur) if cur == w => {}
+            _ => continue,
+        }
+        let (rep, weight) = store.merge(a, b);
+        merges.push(Merge { a, b, weight });
+        for (&c, e) in &store.neighbors[rep as usize] {
+            let (x, y) = if rep < c { (rep, c) } else { (c, rep) };
+            heap.push(Reverse(Key(e.weight, x, y)));
+        }
+    }
+    Dendrogram::new(g.n(), merges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+
+    #[test]
+    fn merges_closest_first() {
+        let g = Graph::from_edges(
+            4,
+            [
+                (0, 1, 1.0),
+                (2, 3, 0.5),
+                (1, 2, 5.0),
+                (0, 3, 6.0),
+            ],
+        );
+        let d = naive_hac(&g, Linkage::Average);
+        assert_eq!(d.merges().len(), 3);
+        assert_eq!((d.merges()[0].a, d.merges()[0].b), (2, 3));
+        assert_eq!((d.merges()[1].a, d.merges()[1].b), (0, 1));
+        d.validate().unwrap();
+    }
+
+    #[test]
+    fn single_linkage_is_mst_order() {
+        // Single-linkage merge weights = MST edges in increasing order.
+        let g = Graph::from_edges(
+            5,
+            [
+                (0, 1, 1.0),
+                (1, 2, 4.0),
+                (2, 3, 2.0),
+                (3, 4, 3.0),
+                (0, 4, 10.0),
+            ],
+        );
+        let d = naive_hac(&g, Linkage::Single);
+        let ws: Vec<f64> = d.merges().iter().map(|m| m.weight).collect();
+        assert_eq!(ws, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn disconnected_graph_stops_per_component() {
+        let g = Graph::from_edges(4, [(0, 1, 1.0), (2, 3, 2.0)]);
+        let d = naive_hac(&g, Linkage::Complete);
+        assert_eq!(d.merges().len(), 2);
+        assert_eq!(d.remaining_clusters(), 2);
+    }
+
+    #[test]
+    fn monotone_for_reducible() {
+        let g = crate::data::grid1d_graph(64, 9);
+        for l in Linkage::SPARSE_REDUCIBLE {
+            let d = naive_hac(&g, l);
+            assert_eq!(d.inversions(), 0, "{l:?}");
+            assert_eq!(d.merges().len(), 63);
+        }
+    }
+
+    #[test]
+    fn complete_graph_all_linkages_terminate() {
+        let g = crate::data::stable_hierarchy(3, 4.0, 1);
+        for l in Linkage::ALL {
+            let d = naive_hac(&g, l);
+            assert_eq!(d.merges().len(), 7, "{l:?}");
+            d.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn singleton_input() {
+        let g = Graph::from_edges(1, []);
+        let d = naive_hac(&g, Linkage::Average);
+        assert!(d.merges().is_empty());
+    }
+}

@@ -1,0 +1,130 @@
+//! The nearest-neighbor-chain algorithm (Murtagh 1983/84) — the sequential
+//! reciprocal-NN merge strategy that RAC parallelises (paper §3).
+//!
+//! Follow nearest-neighbor pointers from an arbitrary cluster; because
+//! chain dissimilarities are non-increasing, the walk must reach a
+//! *reciprocal* nearest-neighbor pair, which (for reducible linkages) is
+//! safe to merge immediately even if it is not the global minimum.
+
+use crate::dendrogram::{Dendrogram, Merge};
+use crate::graph::Graph;
+use crate::linkage::Linkage;
+
+use super::state::ClusterStore;
+
+/// Run NN-chain HAC over a dissimilarity graph.
+///
+/// Exact for reducible linkages (identical clustering to [`super::naive_hac`],
+/// possibly in a different merge order — compare with
+/// [`Dendrogram::same_clustering`]). Ties are broken by `(weight, id)`,
+/// which provably prevents chain cycles longer than 2.
+pub fn nn_chain(g: &Graph, linkage: Linkage) -> Dendrogram {
+    assert!(
+        linkage.is_reducible(),
+        "NN-chain requires a reducible linkage"
+    );
+    let n = g.n();
+    let mut store = ClusterStore::from_graph(g, linkage);
+    let mut merges = Vec::with_capacity(n.saturating_sub(1));
+    let mut chain: Vec<u32> = Vec::with_capacity(64);
+    // `cursor` scans for unvisited starts; merged-away or exhausted
+    // (isolated) clusters are skipped.
+    let mut done = vec![false; n];
+
+    for start in 0..n as u32 {
+        if done[start as usize] || !store.active[start as usize] {
+            continue;
+        }
+        chain.clear();
+        chain.push(start);
+        while let Some(&top) = chain.last() {
+            match store.nearest_neighbor(top) {
+                None => {
+                    // Isolated cluster: its component is fully merged.
+                    done[top as usize] = true;
+                    chain.pop();
+                }
+                Some((nn, _)) => {
+                    if chain.len() >= 2 && chain[chain.len() - 2] == nn {
+                        // Reciprocal pair found: merge top two.
+                        let a = chain.pop().unwrap();
+                        let b = chain.pop().unwrap();
+                        let (rep, weight) = store.merge(a, b);
+                        merges.push(Merge { a, b, weight });
+                        let dead = if rep == a { b } else { a };
+                        done[dead as usize] = true;
+                        // Continue the chain from the survivor's position:
+                        // the suffix below the pair is still a valid chain.
+                        if chain.is_empty() {
+                            chain.push(rep);
+                        }
+                    } else {
+                        chain.push(nn);
+                    }
+                }
+            }
+        }
+    }
+    Dendrogram::new(n, merges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hac::naive_hac;
+
+    #[test]
+    fn matches_naive_on_path() {
+        let g = crate::data::grid1d_graph(128, 4);
+        for l in Linkage::SPARSE_REDUCIBLE {
+            let a = naive_hac(&g, l);
+            let b = nn_chain(&g, l);
+            assert!(a.same_clustering(&b, 1e-9), "{l:?} diverged");
+        }
+    }
+
+    #[test]
+    fn matches_naive_on_complete_graph() {
+        let g = crate::data::stable_hierarchy(4, 4.0, 7);
+        for l in [
+            Linkage::Single,
+            Linkage::Complete,
+            Linkage::Average,
+            Linkage::WeightedAverage,
+            Linkage::Ward,
+        ] {
+            let a = naive_hac(&g, l);
+            let b = nn_chain(&g, l);
+            assert!(a.same_clustering(&b, 1e-6), "{l:?} diverged");
+        }
+    }
+
+    #[test]
+    fn handles_disconnected() {
+        let g = crate::graph::Graph::from_edges(5, [(0, 1, 1.0), (2, 3, 1.0), (3, 4, 2.0)]);
+        let d = nn_chain(&g, Linkage::Average);
+        assert_eq!(d.merges().len(), 3);
+        assert_eq!(d.remaining_clusters(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "reducible")]
+    fn rejects_centroid() {
+        let g = crate::data::stable_hierarchy(2, 4.0, 0);
+        nn_chain(&g, Linkage::Centroid);
+    }
+
+    #[test]
+    fn exact_ties_still_terminate() {
+        // Complete graph with all-equal weights: worst case for chains.
+        let m = vec![
+            0.0, 1.0, 1.0, 1.0, //
+            1.0, 0.0, 1.0, 1.0, //
+            1.0, 1.0, 0.0, 1.0, //
+            1.0, 1.0, 1.0, 0.0,
+        ];
+        let g = crate::graph::Graph::from_dense(4, &m);
+        let d = nn_chain(&g, Linkage::Average);
+        assert_eq!(d.merges().len(), 3);
+    }
+}

@@ -1,0 +1,205 @@
+//! Mutable cluster-graph state shared by the sequential HAC baselines.
+//!
+//! Clusters are identified by their *representative* id: the lowest point
+//! id they contain (the same lower-id-wins rule the paper's distributed
+//! implementation uses for merge ownership, §5). Each active cluster keeps
+//! a hash map of neighbor representative → [`EdgeState`].
+
+use rustc_hash::FxHashMap;
+
+use crate::graph::Graph;
+use crate::linkage::{EdgeState, Linkage, MergeCtx, Weight};
+
+/// Mutable clustering state over a dissimilarity graph.
+pub struct ClusterStore {
+    pub linkage: Linkage,
+    /// `sizes[rep]` = point count; meaningful only while `active[rep]`.
+    pub sizes: Vec<u64>,
+    pub active: Vec<bool>,
+    /// Neighbor maps keyed by representative id.
+    pub neighbors: Vec<FxHashMap<u32, EdgeState>>,
+    n_active: usize,
+}
+
+impl ClusterStore {
+    /// Singleton clusters over the graph's nodes.
+    pub fn from_graph(g: &Graph, linkage: Linkage) -> Self {
+        if !linkage.supports_sparse() {
+            // Ward/Centroid require every cluster pair to stay connected;
+            // a complete input graph guarantees that invariant.
+            let n = g.n();
+            assert!(
+                g.m() == n * (n - 1) / 2,
+                "{linkage:?} linkage requires a complete graph"
+            );
+        }
+        let n = g.n();
+        let mut neighbors = Vec::with_capacity(n);
+        for u in 0..n as u32 {
+            neighbors.push(
+                g.neighbors(u)
+                    .map(|(v, w)| (v, EdgeState::point(w)))
+                    .collect::<FxHashMap<_, _>>(),
+            );
+        }
+        ClusterStore {
+            linkage,
+            sizes: vec![1; n],
+            active: vec![true; n],
+            neighbors,
+            n_active: n,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.sizes.len()
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.n_active
+    }
+
+    /// Current dissimilarity between two active clusters, if connected.
+    pub fn weight(&self, a: u32, b: u32) -> Option<Weight> {
+        self.neighbors[a as usize].get(&b).map(|e| e.weight)
+    }
+
+    /// Nearest neighbor of `c` by `(weight, id)` — the deterministic
+    /// tie-break every algorithm in this crate shares, so that outputs are
+    /// comparable even in the presence of exact ties.
+    pub fn nearest_neighbor(&self, c: u32) -> Option<(u32, Weight)> {
+        self.neighbors[c as usize]
+            .iter()
+            .map(|(&v, e)| (e.weight, v))
+            .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)))
+            .map(|(w, v)| (v, w))
+    }
+
+    /// Merge clusters `a` and `b` (both active, connected or not): the
+    /// lower representative survives. Returns `(survivor, merge_weight)`.
+    ///
+    /// All affected neighbor maps are updated symmetrically; the dead
+    /// representative disappears from every map.
+    pub fn merge(&mut self, a: u32, b: u32) -> (u32, Weight) {
+        assert!(a != b);
+        assert!(self.active[a as usize] && self.active[b as usize]);
+        let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+        let pair_weight = self
+            .weight(lo, hi)
+            .expect("merging disconnected clusters");
+        let ctx_sizes = (self.sizes[lo as usize], self.sizes[hi as usize]);
+
+        // Take both maps to appease the borrow checker; they are disjoint
+        // from every map we touch below (no self-edges).
+        let lo_map = std::mem::take(&mut self.neighbors[lo as usize]);
+        let hi_map = std::mem::take(&mut self.neighbors[hi as usize]);
+
+        let mut merged: FxHashMap<u32, EdgeState> =
+            FxHashMap::with_capacity_and_hasher(lo_map.len() + hi_map.len(), Default::default());
+        for (&c, &e_lo) in &lo_map {
+            if c == hi {
+                continue;
+            }
+            let e_hi = hi_map.get(&c).copied();
+            let ctx = MergeCtx {
+                size_a: ctx_sizes.0,
+                size_b: ctx_sizes.1,
+                size_c: self.sizes[c as usize],
+                pair_weight,
+            };
+            let e = self.linkage.merge(Some(e_lo), e_hi, ctx).unwrap();
+            merged.insert(c, e);
+        }
+        for (&c, &e_hi) in &hi_map {
+            if c == lo || lo_map.contains_key(&c) {
+                continue;
+            }
+            let ctx = MergeCtx {
+                size_a: ctx_sizes.0,
+                size_b: ctx_sizes.1,
+                size_c: self.sizes[c as usize],
+                pair_weight,
+            };
+            let e = self.linkage.merge(None, Some(e_hi), ctx).unwrap();
+            merged.insert(c, e);
+        }
+
+        // Symmetric updates on the neighbors.
+        for (&c, &e) in &merged {
+            let map = &mut self.neighbors[c as usize];
+            map.remove(&hi);
+            map.insert(lo, e);
+        }
+        // Neighbors of hi not in merged (i.e. `lo` itself) already handled.
+
+        self.neighbors[lo as usize] = merged;
+        self.sizes[lo as usize] += self.sizes[hi as usize];
+        self.active[hi as usize] = false;
+        self.n_active -= 1;
+        (lo, pair_weight)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+
+    fn triangle() -> Graph {
+        Graph::from_edges(3, [(0, 1, 1.0), (1, 2, 2.0), (0, 2, 3.0)])
+    }
+
+    #[test]
+    fn init_from_graph() {
+        let s = ClusterStore::from_graph(&triangle(), Linkage::Average);
+        assert_eq!(s.n_active(), 3);
+        assert_eq!(s.weight(0, 1), Some(1.0));
+        assert_eq!(s.nearest_neighbor(2), Some((1, 2.0)));
+    }
+
+    #[test]
+    fn merge_updates_all_maps() {
+        let mut s = ClusterStore::from_graph(&triangle(), Linkage::Average);
+        let (rep, w) = s.merge(0, 1);
+        assert_eq!(rep, 0);
+        assert_eq!(w, 1.0);
+        assert!(!s.active[1]);
+        assert_eq!(s.sizes[0], 2);
+        // Average of (1-2)=2.0 and (0-2)=3.0 → 2.5 with count 2.
+        assert_eq!(s.weight(0, 2), Some(2.5));
+        assert_eq!(s.weight(2, 0), Some(2.5));
+        assert!(s.neighbors[2].get(&1).is_none());
+    }
+
+    #[test]
+    fn merge_without_common_neighbor() {
+        // Path 0-1-2-3: merge (0,1); 0 inherits edge to 2 untouched.
+        let g = Graph::from_edges(4, [(0, 1, 1.0), (1, 2, 2.0), (2, 3, 3.0)]);
+        let mut s = ClusterStore::from_graph(&g, Linkage::Single);
+        s.merge(0, 1);
+        assert_eq!(s.weight(0, 2), Some(2.0));
+        assert_eq!(s.weight(0, 3), None);
+    }
+
+    #[test]
+    fn higher_into_lower() {
+        let mut s = ClusterStore::from_graph(&triangle(), Linkage::Single);
+        let (rep, _) = s.merge(2, 1); // arguments in either order
+        assert_eq!(rep, 1);
+        assert!(s.active[1] && !s.active[2]);
+    }
+
+    #[test]
+    fn nn_tie_break_by_id() {
+        let g = Graph::from_edges(3, [(0, 1, 1.0), (0, 2, 1.0)]);
+        let s = ClusterStore::from_graph(&g, Linkage::Single);
+        assert_eq!(s.nearest_neighbor(0), Some((1, 1.0)));
+    }
+
+    #[test]
+    #[should_panic(expected = "requires a complete graph")]
+    fn ward_rejects_sparse() {
+        let g = Graph::from_edges(3, [(0, 1, 1.0), (1, 2, 2.0)]);
+        ClusterStore::from_graph(&g, Linkage::Ward);
+    }
+}

@@ -1,0 +1,52 @@
+//! # rac-hac
+//!
+//! A distributed implementation of **Reciprocal Agglomerative Clustering
+//! (RAC)** — exact Hierarchical Agglomerative Clustering that merges all
+//! reciprocal-nearest-neighbor cluster pairs in parallel rounds — as
+//! described in *"Scaling Hierarchical Agglomerative Clustering to
+//! Billion-sized Datasets"* (Sumengen et al., 2021).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * [`runtime`] loads AOT-compiled XLA artifacts (JAX + Pallas pairwise
+//!   dissimilarity kernels, lowered to HLO text at build time) and executes
+//!   them on the PJRT CPU client; Python never runs at clustering time.
+//! * [`knn`] streams dataset tiles through those kernels to build the
+//!   kNN / ε-ball dissimilarity graphs the paper clusters.
+//! * [`rac`] is the paper's contribution: the round-based
+//!   reciprocal-nearest-neighbor merge engine; [`dist`] runs the same
+//!   phases sharded across simulated machines with batched cross-shard
+//!   messaging; [`hac`] holds the exact sequential baselines the engine is
+//!   verified against.
+//!
+//! Quick start (see `examples/quickstart.rs` for the runnable version):
+//!
+//! ```no_run
+//! // (no_run: cargo does not apply the workspace rpath flags to doctest
+//! // binaries, so they cannot locate the xla_extension shared libraries
+//! // in this offline image; the example compiles and runs as
+//! // `cargo run --example quickstart`.)
+//! use rac_hac::graph::Graph;
+//! use rac_hac::linkage::Linkage;
+//! use rac_hac::rac::RacEngine;
+//!
+//! // A tiny weighted dissimilarity graph: 0-1 close, 2-3 close, far apart.
+//! let edges = [(0, 1, 1.0), (2, 3, 1.5), (1, 2, 10.0), (0, 3, 12.0)];
+//! let g = Graph::from_edges(4, edges.iter().copied());
+//! let result = RacEngine::new(&g, Linkage::Average).run();
+//! assert_eq!(result.dendrogram.merges().len(), 3);
+//! ```
+
+pub mod config;
+pub mod data;
+pub mod dendrogram;
+pub mod dist;
+pub mod graph;
+pub mod hac;
+pub mod knn;
+pub mod linkage;
+pub mod metrics;
+pub mod pipeline;
+pub mod rac;
+pub mod runtime;
+pub mod util;

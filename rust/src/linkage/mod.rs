@@ -1,0 +1,472 @@
+//! Linkage functions (paper §2, Table 1) as associative Lance–Williams
+//! updates over sparse dissimilarity graphs.
+//!
+//! A linkage defines the dissimilarity between two *clusters* from the
+//! dissimilarities of their constituents, and — crucially for both HAC and
+//! RAC — an O(1) *update formula*: given `W(A,C)` and `W(B,C)`, compute
+//! `W(A∪B, C)` without touching the underlying points.
+//!
+//! ## Sparse-graph semantics
+//!
+//! The paper clusters kNN graphs, so an edge may exist between `A, C` but
+//! not `B, C`. We adopt the observed-pairs convention used by graph-based
+//! HAC systems: update formulas combine only the *present* edges:
+//!
+//! * **Single**: `min` over present edges (exact: missing = +∞).
+//! * **Complete**: `max` over present edges (missing edges are *skipped*,
+//!   not treated as +∞ — treating them as +∞ would forbid every merge on a
+//!   non-complete graph).
+//! * **Average**: mean over *observed* point pairs. Each cluster edge
+//!   carries the number of underlying point pairs it aggregates
+//!   ([`EdgeState::count`]), so the merge `(w1·c1 + w2·c2)/(c1+c2)` is
+//!   exact and associative. On complete graphs this equals the paper's
+//!   `Σ W_ab / (|A||B|)` definition exactly.
+//! * **WeightedAverage** (McQuitty/WPGMA): unweighted mean of the two
+//!   parent dissimilarities.
+//! * **Ward**: the Lance–Williams Ward update; requires the pair
+//!   dissimilarity `W(A,B)` and all edges present, so it is restricted to
+//!   complete graphs (validated by [`Linkage::supports_sparse`]).
+//! * **Centroid**: intentionally included although **not reducible** —
+//!   used by tests/benches to demonstrate where RAC's exactness guarantee
+//!   (Theorem 1) breaks down.
+//!
+//! All merge paths are associative in the sense RAC needs: combining
+//! `(A,B)→U` against `C` and `D` separately and then `(C,D)→V` against `U`
+//! yields the same value as HAC's sequential order (property-tested in
+//! `rust/tests/`).
+
+/// Weight type used throughout the coordinator. `f64` so that theory
+/// workloads (e.g. the Theorem-4 adversarial instance, which needs ~`3n`
+/// bits of mantissa) resolve exactly at the sizes we test.
+pub type Weight = f64;
+
+/// A cluster-to-cluster dissimilarity together with the number of
+/// underlying point pairs it aggregates (needed only by average linkage;
+/// 1 for point-point edges).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EdgeState {
+    /// Current linkage value between the two clusters.
+    pub weight: Weight,
+    /// Number of observed underlying point pairs contributing to `weight`.
+    pub count: u64,
+}
+
+impl EdgeState {
+    /// A fresh point-to-point edge.
+    #[inline]
+    pub fn point(weight: Weight) -> Self {
+        EdgeState { weight, count: 1 }
+    }
+
+    /// An aggregated edge.
+    #[inline]
+    pub fn new(weight: Weight, count: u64) -> Self {
+        EdgeState { weight, count }
+    }
+}
+
+/// Context for a Lance–Williams update `W(A∪B, C)`.
+///
+/// `size_*` are cluster cardinalities (numbers of points). `pair_weight`
+/// is `W(A,B)` — the dissimilarity at which A and B merge — required by
+/// Ward and Centroid.
+#[derive(Debug, Clone, Copy)]
+pub struct MergeCtx {
+    pub size_a: u64,
+    pub size_b: u64,
+    pub size_c: u64,
+    pub pair_weight: Weight,
+}
+
+/// The linkage functions of paper Table 1 (plus Ward/McQuitty/Centroid).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Linkage {
+    /// `min` over point pairs (SLINK).
+    Single,
+    /// `max` over point pairs (CLINK).
+    Complete,
+    /// Mean over observed point pairs (UPGMA).
+    Average,
+    /// Unweighted pair-group mean (WPGMA / McQuitty).
+    WeightedAverage,
+    /// Ward's minimum-variance criterion on squared euclidean distances.
+    Ward,
+    /// Centroid linkage (UPGMC) — **not reducible**; kept to demonstrate
+    /// RAC's failure mode outside Theorem 1's hypothesis.
+    Centroid,
+}
+
+impl Linkage {
+    /// Reducibility (paper §2): `W(A∪B, C) >= min(W(A,C), W(B,C))` for all
+    /// disjoint A, B, C. Theorem 1 (RAC = HAC) holds exactly for reducible
+    /// linkages.
+    pub fn is_reducible(self) -> bool {
+        !matches!(self, Linkage::Centroid)
+    }
+
+    /// Whether the update formula is well-defined when one of the two
+    /// parent edges is absent (sparse graphs).
+    ///
+    /// * Ward and Centroid need both edges plus the pair weight.
+    /// * WeightedAverage (WPGMA) is subtler: with an observed-edges
+    ///   passthrough its value depends on the ORDER independent merges are
+    ///   applied (e.g. edges AC, BC, BD: merging (A,B) before (C,D) yields
+    ///   `AC/4 + BC/4 + BD/2` for `W(A∪B, C∪D)`, the other order
+    ///   `AC/2 + BC/4 + BD/4`), so "exact HAC" is ill-defined on sparse
+    ///   graphs and we restrict it to complete graphs, where the value
+    ///   depends only on the merge tree.
+    ///
+    /// Single (min), Complete (max over observed) and Average
+    /// (count-weighted mean) are grouping-invariant over the observed
+    /// pair multiset, hence well-defined for any merge order.
+    pub fn supports_sparse(self) -> bool {
+        matches!(self, Linkage::Single | Linkage::Complete | Linkage::Average)
+    }
+
+    /// All linkages, for sweeps and property tests.
+    pub const ALL: [Linkage; 6] = [
+        Linkage::Single,
+        Linkage::Complete,
+        Linkage::Average,
+        Linkage::WeightedAverage,
+        Linkage::Ward,
+        Linkage::Centroid,
+    ];
+
+    /// Reducible linkages usable on sparse graphs.
+    pub const SPARSE_REDUCIBLE: [Linkage; 3] =
+        [Linkage::Single, Linkage::Complete, Linkage::Average];
+
+    /// Canonical lowercase name (used by configs and CLI flags).
+    pub fn name(self) -> &'static str {
+        match self {
+            Linkage::Single => "single",
+            Linkage::Complete => "complete",
+            Linkage::Average => "average",
+            Linkage::WeightedAverage => "weighted_average",
+            Linkage::Ward => "ward",
+            Linkage::Centroid => "centroid",
+        }
+    }
+
+    /// Lance–Williams update: dissimilarity between `A ∪ B` and `C`, given
+    /// the (possibly absent) parent edges `W(A,C)` and `W(B,C)`.
+    ///
+    /// At least one parent edge must be present; returns `None` when both
+    /// are absent (no relation between the union and C — the edge simply
+    /// does not exist in the output graph).
+    ///
+    /// # Panics
+    /// Ward/Centroid panic if either parent edge is missing (they are
+    /// complete-graph-only; [`supports_sparse`](Self::supports_sparse)
+    /// gates this at configuration time).
+    pub fn merge(
+        self,
+        ac: Option<EdgeState>,
+        bc: Option<EdgeState>,
+        ctx: MergeCtx,
+    ) -> Option<EdgeState> {
+        match (ac, bc) {
+            (None, None) => None,
+            (Some(e), None) | (None, Some(e)) => {
+                assert!(
+                    self.supports_sparse(),
+                    "{self:?} linkage requires complete graphs (missing edge)"
+                );
+                // Union inherits the single observed relation unchanged:
+                // min/max/mean over the same observed set.
+                Some(e)
+            }
+            (Some(ac), Some(bc)) => Some(self.merge_both(ac, bc, ctx)),
+        }
+    }
+
+    #[inline]
+    fn merge_both(self, ac: EdgeState, bc: EdgeState, ctx: MergeCtx) -> EdgeState {
+        let count = ac.count + bc.count;
+        let w = match self {
+            Linkage::Single => ac.weight.min(bc.weight),
+            Linkage::Complete => ac.weight.max(bc.weight),
+            Linkage::Average => {
+                // Exact mean over observed pairs; associative by counts.
+                (ac.weight * ac.count as Weight + bc.weight * bc.count as Weight)
+                    / count as Weight
+            }
+            Linkage::WeightedAverage => 0.5 * (ac.weight + bc.weight),
+            Linkage::Ward => {
+                let (sa, sb, sc) = (
+                    ctx.size_a as Weight,
+                    ctx.size_b as Weight,
+                    ctx.size_c as Weight,
+                );
+                let denom = sa + sb + sc;
+                ((sa + sc) * ac.weight + (sb + sc) * bc.weight - sc * ctx.pair_weight)
+                    / denom
+            }
+            Linkage::Centroid => {
+                let (sa, sb) = (ctx.size_a as Weight, ctx.size_b as Weight);
+                let s = sa + sb;
+                (sa * ac.weight + sb * bc.weight) / s
+                    - (sa * sb * ctx.pair_weight) / (s * s)
+            }
+        };
+        EdgeState::new(w, count)
+    }
+
+    /// Cluster dissimilarity computed from scratch over point-pair
+    /// dissimilarities (the Table-1 *definition* column). Used by tests as
+    /// the from-first-principles oracle for the update formulas.
+    ///
+    /// `pairs` iterates the observed point-pair dissimilarities between the
+    /// two clusters. Returns `None` on an empty iterator.
+    pub fn from_pairs(self, pairs: impl IntoIterator<Item = Weight>) -> Option<EdgeState> {
+        let mut it = pairs.into_iter();
+        let first = it.next()?;
+        let (mut acc, mut count) = (first, 1u64);
+        for w in it {
+            count += 1;
+            acc = match self {
+                Linkage::Single => acc.min(w),
+                Linkage::Complete => acc.max(w),
+                Linkage::Average => acc + w, // normalised below
+                _ => panic!("from_pairs: only defined for single/complete/average"),
+            };
+        }
+        let weight = match self {
+            Linkage::Average => acc / count as Weight,
+            _ => acc,
+        };
+        Some(EdgeState::new(weight, count))
+    }
+}
+
+impl std::str::FromStr for Linkage {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "single" => Ok(Linkage::Single),
+            "complete" => Ok(Linkage::Complete),
+            "average" => Ok(Linkage::Average),
+            "weighted_average" | "mcquitty" | "wpgma" => Ok(Linkage::WeightedAverage),
+            "ward" => Ok(Linkage::Ward),
+            "centroid" => Ok(Linkage::Centroid),
+            other => Err(format!(
+                "unknown linkage {other:?} (expected one of \
+                 single|complete|average|weighted_average|ward|centroid)"
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn name_roundtrips_through_fromstr() {
+        for l in Linkage::ALL {
+            assert_eq!(l.name().parse::<Linkage>().unwrap(), l);
+        }
+        assert!("nope".parse::<Linkage>().is_err());
+    }
+
+    fn ctx(a: u64, b: u64, c: u64, pw: Weight) -> MergeCtx {
+        MergeCtx {
+            size_a: a,
+            size_b: b,
+            size_c: c,
+            pair_weight: pw,
+        }
+    }
+
+    #[test]
+    fn single_is_min() {
+        let e = Linkage::Single
+            .merge(
+                Some(EdgeState::point(3.0)),
+                Some(EdgeState::point(1.5)),
+                ctx(1, 1, 1, 0.5),
+            )
+            .unwrap();
+        assert_eq!(e.weight, 1.5);
+        assert_eq!(e.count, 2);
+    }
+
+    #[test]
+    fn complete_is_max() {
+        let e = Linkage::Complete
+            .merge(
+                Some(EdgeState::point(3.0)),
+                Some(EdgeState::point(1.5)),
+                ctx(1, 1, 1, 0.5),
+            )
+            .unwrap();
+        assert_eq!(e.weight, 3.0);
+    }
+
+    #[test]
+    fn average_weights_by_counts() {
+        // A has 3 observed pairs at mean 2.0; B has 1 at 6.0.
+        let e = Linkage::Average
+            .merge(
+                Some(EdgeState::new(2.0, 3)),
+                Some(EdgeState::new(6.0, 1)),
+                ctx(3, 1, 1, 1.0),
+            )
+            .unwrap();
+        assert!((e.weight - 3.0).abs() < 1e-12);
+        assert_eq!(e.count, 4);
+    }
+
+    #[test]
+    fn weighted_average_ignores_counts() {
+        let e = Linkage::WeightedAverage
+            .merge(
+                Some(EdgeState::new(2.0, 3)),
+                Some(EdgeState::new(6.0, 1)),
+                ctx(3, 1, 1, 1.0),
+            )
+            .unwrap();
+        assert_eq!(e.weight, 4.0);
+    }
+
+    #[test]
+    fn missing_edge_passthrough() {
+        for l in Linkage::SPARSE_REDUCIBLE {
+            let e = l
+                .merge(Some(EdgeState::new(2.5, 2)), None, ctx(2, 1, 1, 1.0))
+                .unwrap();
+            assert_eq!(e.weight, 2.5);
+            assert_eq!(e.count, 2);
+        }
+    }
+
+    #[test]
+    fn both_missing_is_none() {
+        assert!(Linkage::Average.merge(None, None, ctx(1, 1, 1, 0.0)).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "requires complete graphs")]
+    fn ward_requires_both_edges() {
+        Linkage::Ward.merge(Some(EdgeState::point(1.0)), None, ctx(1, 1, 1, 0.5));
+    }
+
+    #[test]
+    fn ward_matches_variance_identity() {
+        // Four 1-d points: A={0}, B={2}, C={10}. Squared distances.
+        // Ward distance between singletons is half... we use the LW update
+        // convention on squared euclidean: d(A∪B, C) from the formula.
+        let w_ac = 100.0; // (10-0)^2
+        let w_bc = 64.0; // (10-2)^2
+        let w_ab = 4.0; // (2-0)^2
+        let e = Linkage::Ward
+            .merge(
+                Some(EdgeState::point(w_ac)),
+                Some(EdgeState::point(w_bc)),
+                ctx(1, 1, 1, w_ab),
+            )
+            .unwrap();
+        // centroid of A∪B = 1; ward cost of merging {0,2} with {10}:
+        // (|AB|*|C|/(|AB|+|C|)) * ||mu_AB - mu_C||^2 * (|AB|+|C|)/(|AB|*|C|)
+        // With the LW convention the value is (2*100 + 2*64 - 1*4)/3.
+        assert!((e.weight - (2.0 * 100.0 + 2.0 * 64.0 - 4.0) / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn centroid_matches_geometry() {
+        // 1-d points A={0}, B={2}, C={5}; squared distances.
+        // Centroid of A∪B is 1 → squared distance to C = 16.
+        let e = Linkage::Centroid
+            .merge(
+                Some(EdgeState::point(25.0)),
+                Some(EdgeState::point(9.0)),
+                ctx(1, 1, 1, 4.0),
+            )
+            .unwrap();
+        assert!((e.weight - 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reducibility_flags() {
+        assert!(Linkage::Single.is_reducible());
+        assert!(Linkage::Ward.is_reducible());
+        assert!(!Linkage::Centroid.is_reducible());
+        assert!(!Linkage::Ward.supports_sparse());
+        assert!(Linkage::Average.supports_sparse());
+    }
+
+    #[test]
+    fn reducibility_inequality_random() {
+        // Sampled check of W(A∪B,C) >= min(W(A,C), W(B,C)) for reducible
+        // linkages with consistent inputs (pair weight <= both parents,
+        // which HAC/RAC guarantee when A,B are nearest neighbors).
+        let mut state = 0x9e3779b97f4a7c15u64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state >> 11) as f64 / (1u64 << 53) as f64
+        };
+        for _ in 0..1000 {
+            let w_ac = 1.0 + next() * 9.0;
+            let w_bc = 1.0 + next() * 9.0;
+            let pw = next() * w_ac.min(w_bc);
+            let (ca, cb) = (1 + (next() * 4.0) as u64, 1 + (next() * 4.0) as u64);
+            for l in [
+                Linkage::Single,
+                Linkage::Complete,
+                Linkage::Average,
+                Linkage::WeightedAverage,
+                Linkage::Ward,
+            ] {
+                let e = l
+                    .merge(
+                        Some(EdgeState::new(w_ac, ca)),
+                        Some(EdgeState::new(w_bc, cb)),
+                        ctx(ca, cb, 2, pw),
+                    )
+                    .unwrap();
+                assert!(
+                    e.weight >= w_ac.min(w_bc) - 1e-9,
+                    "{l:?}: {} < min({w_ac}, {w_bc})",
+                    e.weight
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn from_pairs_matches_definitions() {
+        let pairs = [3.0, 1.0, 2.0];
+        assert_eq!(
+            Linkage::Single.from_pairs(pairs).unwrap().weight,
+            1.0
+        );
+        assert_eq!(
+            Linkage::Complete.from_pairs(pairs).unwrap().weight,
+            3.0
+        );
+        assert!((Linkage::Average.from_pairs(pairs).unwrap().weight - 2.0).abs() < 1e-12);
+        assert!(Linkage::Single.from_pairs(std::iter::empty()).is_none());
+    }
+
+    #[test]
+    fn average_update_matches_definition_on_complete_graph() {
+        // Points a0,a1 in A; b0 in B; c0,c1,c2 in C with arbitrary pairwise
+        // dissimilarities. Update formula must equal the from-scratch mean.
+        let a_c = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2x3 pairs
+        let b_c = [10.0, 11.0, 12.0]; // 1x3 pairs
+        let ac = Linkage::Average.from_pairs(a_c).unwrap();
+        let bc = Linkage::Average.from_pairs(b_c).unwrap();
+        let merged = Linkage::Average
+            .merge(Some(ac), Some(bc), ctx(2, 1, 3, 0.0))
+            .unwrap();
+        let direct = Linkage::Average
+            .from_pairs(a_c.iter().chain(b_c.iter()).copied())
+            .unwrap();
+        assert!((merged.weight - direct.weight).abs() < 1e-12);
+        assert_eq!(merged.count, direct.count);
+    }
+}

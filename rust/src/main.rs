@@ -1,0 +1,302 @@
+//! `rac` — the coordinator CLI.
+//!
+//! Subcommands (hand-rolled arg parsing; `clap` is not in the offline
+//! vendored crate set):
+//!
+//! ```text
+//! rac run --config <file.toml> [--json]      full pipeline from a config
+//! rac cluster [overrides...] [--json]        pipeline from CLI flags
+//! rac verify [--n N] [--seeds S]             RAC vs HAC exactness sweep
+//! rac graph-info --config <file.toml>        build the graph, print stats
+//! rac kernels [--artifacts DIR]              list + smoke the AOT kernels
+//! ```
+//!
+//! `cluster` flags: `--dataset sift_like|docs_like|grid1d|adversarial|stable|random_regular`,
+//! `--n`, `--d`, `--k`, `--xla`, `--linkage L`, `--engine rac|dist_rac|naive_hac|nn_chain`,
+//! `--machines M`, `--cpus C`, `--seed S`.
+
+use std::process::ExitCode;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use rac_hac::config::RunConfig;
+use rac_hac::data::{gaussian_mixture, grid1d_graph};
+use rac_hac::hac::naive_hac;
+use rac_hac::knn::{knn_graph, Backend};
+use rac_hac::linkage::Linkage;
+use rac_hac::pipeline;
+use rac_hac::rac::RacEngine;
+use rac_hac::runtime::{default_artifacts_dir, KernelRuntime};
+use rac_hac::util::json::obj;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let result = match args.first().map(String::as_str) {
+        Some("run") => cmd_run(&args[1..]),
+        Some("cluster") => cmd_cluster(&args[1..]),
+        Some("verify") => cmd_verify(&args[1..]),
+        Some("graph-info") => cmd_graph_info(&args[1..]),
+        Some("kernels") => cmd_kernels(&args[1..]),
+        Some("help") | Some("--help") | Some("-h") | None => {
+            print!("{HELP}");
+            Ok(())
+        }
+        Some(other) => Err(anyhow!("unknown subcommand {other:?}; see `rac help`")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+const HELP: &str = "\
+rac — Reciprocal Agglomerative Clustering coordinator
+
+USAGE:
+  rac run --config <file.toml> [--json]
+  rac cluster [--dataset T] [--n N] [--d D] [--k K] [--xla] [--linkage L]
+              [--engine E] [--machines M] [--cpus C] [--seed S] [--json]
+  rac verify [--n N] [--seeds S]
+  rac graph-info --config <file.toml>
+  rac kernels [--artifacts DIR]
+";
+
+/// Tiny flag parser: `--key value` pairs plus boolean `--key` switches.
+struct Flags {
+    pairs: std::collections::BTreeMap<String, String>,
+    switches: std::collections::BTreeSet<String>,
+}
+
+impl Flags {
+    const BOOL_FLAGS: &'static [&'static str] = &["json", "xla"];
+
+    fn parse(args: &[String]) -> Result<Flags> {
+        let mut pairs = std::collections::BTreeMap::new();
+        let mut switches = std::collections::BTreeSet::new();
+        let mut i = 0;
+        while i < args.len() {
+            let key = args[i]
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, found {:?}", args[i]))?;
+            if Self::BOOL_FLAGS.contains(&key) {
+                switches.insert(key.to_string());
+                i += 1;
+            } else {
+                let val = args
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow!("--{key} needs a value"))?;
+                pairs.insert(key.to_string(), val.clone());
+                i += 2;
+            }
+        }
+        Ok(Flags { pairs, switches })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.pairs.get(key).map(String::as_str)
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.switches.contains(key)
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?}")),
+        }
+    }
+}
+
+fn report(out: &pipeline::RunOutput, json: bool) {
+    let m = &out.result.metrics;
+    if json {
+        let doc = obj([
+            ("graph_nodes", out.graph_nodes.into()),
+            ("graph_edges", out.graph_edges.into()),
+            ("graph_max_degree", out.graph_max_degree.into()),
+            ("t_graph_us", (out.t_graph.as_micros() as usize).into()),
+            ("merges", out.result.dendrogram.merges().len().into()),
+            ("tree_height", out.result.dendrogram.height().into()),
+            ("metrics", m.to_json()),
+        ]);
+        println!("{doc}");
+        return;
+    }
+    println!(
+        "graph: {} nodes, {} edges, max degree {}",
+        out.graph_nodes, out.graph_edges, out.graph_max_degree
+    );
+    println!(
+        "graph construction: {:.3?} ({}% of total; paper's edge-loading share was 15-50%)",
+        out.t_graph,
+        (100.0 * out.t_graph.as_secs_f64() / (out.t_graph + m.total_time).as_secs_f64()).round()
+    );
+    println!(
+        "clustering: {} merges in {} rounds, {:.3?} total",
+        m.total_merges(),
+        m.merge_rounds(),
+        m.total_time
+    );
+    println!(
+        "tree height {}; min alpha {:.3}; mean beta {:.2}; net: {} msgs / {} bytes",
+        out.result.dendrogram.height(),
+        m.min_alpha(),
+        m.mean_beta(),
+        m.total_net_messages(),
+        m.total_net_bytes()
+    );
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let flags = Flags::parse(args)?;
+    let path = flags
+        .get("config")
+        .ok_or_else(|| anyhow!("--config <file.toml> required"))?;
+    let cfg = RunConfig::from_file(std::path::Path::new(path))?;
+    let out = pipeline::run(&cfg)?;
+    report(&out, flags.has("json"));
+    Ok(())
+}
+
+fn cmd_cluster(args: &[String]) -> Result<()> {
+    let flags = Flags::parse(args)?;
+    // Assemble a TOML doc from flags, reusing the config defaults.
+    let mut text = String::new();
+    text.push_str("[dataset]\n");
+    if let Some(t) = flags.get("dataset") {
+        text.push_str(&format!("type = \"{t}\"\n"));
+    }
+    for key in [
+        "n", "d", "clusters", "topics", "levels", "depth", "degree", "seed",
+    ] {
+        if let Some(v) = flags.get(key) {
+            text.push_str(&format!("{key} = {v}\n"));
+        }
+    }
+    text.push_str("[graph]\n");
+    if let Some(t) = flags.get("graph") {
+        text.push_str(&format!("type = \"{t}\"\n"));
+    }
+    if let Some(k) = flags.get("k") {
+        text.push_str(&format!("k = {k}\n"));
+    }
+    if flags.has("xla") {
+        text.push_str("xla = true\n");
+    }
+    text.push_str("[cluster]\n");
+    if let Some(l) = flags.get("linkage") {
+        text.push_str(&format!("linkage = \"{l}\"\n"));
+    }
+    text.push_str("[engine]\n");
+    if let Some(e) = flags.get("engine") {
+        text.push_str(&format!("type = \"{e}\"\n"));
+    }
+    for key in ["machines", "cpus", "threads"] {
+        if let Some(v) = flags.get(key) {
+            text.push_str(&format!("{key} = {v}\n"));
+        }
+    }
+    let cfg = RunConfig::from_toml_str(&text)?;
+    let out = pipeline::run(&cfg)?;
+    report(&out, flags.has("json"));
+    Ok(())
+}
+
+/// Exactness sweep: RAC (shared and distributed) vs sequential HAC on
+/// random kNN graphs and 1-d grids, all sparse reducible linkages.
+fn cmd_verify(args: &[String]) -> Result<()> {
+    let flags = Flags::parse(args)?;
+    let n = flags.usize_or("n", 300)?;
+    let seeds = flags.usize_or("seeds", 5)?;
+    let mut checked = 0;
+    for seed in 0..seeds as u64 {
+        for linkage in Linkage::SPARSE_REDUCIBLE {
+            let knn = {
+                let ds = gaussian_mixture(n, 16, 8, 0.6, 0.05, seed);
+                knn_graph(&ds, 8, Backend::Native, None)?
+            };
+            let grid = grid1d_graph(n, seed);
+            for g in [&knn, &grid] {
+                let hac = naive_hac(g, linkage);
+                let rac = RacEngine::new(g, linkage).run();
+                if !hac.same_clustering(&rac.dendrogram, 1e-9) {
+                    bail!("RAC != HAC: linkage={linkage:?} seed={seed}");
+                }
+                let dist = rac_hac::dist::DistRacEngine::new(
+                    g,
+                    linkage,
+                    rac_hac::dist::DistConfig::new(4, 2),
+                )
+                .run();
+                if !hac.same_clustering(&dist.dendrogram, 1e-9) {
+                    bail!("DistRAC != HAC: linkage={linkage:?} seed={seed}");
+                }
+                checked += 2;
+            }
+        }
+    }
+    println!("verify OK: {checked} engine runs match sequential HAC exactly (Theorem 1)");
+    Ok(())
+}
+
+fn cmd_graph_info(args: &[String]) -> Result<()> {
+    let flags = Flags::parse(args)?;
+    let path = flags
+        .get("config")
+        .ok_or_else(|| anyhow!("--config <file.toml> required"))?;
+    let cfg = RunConfig::from_file(std::path::Path::new(path))?;
+    let g = pipeline::build_graph(&cfg)?;
+    g.validate().map_err(|e| anyhow!("invalid graph: {e}"))?;
+    println!(
+        "nodes {}  edges {}  mean degree {:.1}  max degree {}  components {}",
+        g.n(),
+        g.m(),
+        g.mean_degree(),
+        g.max_degree(),
+        g.components()
+    );
+    println!("degree histogram (<=64): {:?}", g.degree_histogram(64));
+    Ok(())
+}
+
+fn cmd_kernels(args: &[String]) -> Result<()> {
+    let flags = Flags::parse(args)?;
+    let dir = flags
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(default_artifacts_dir);
+    let rt = KernelRuntime::open(&dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    for v in &rt.manifest().variants {
+        print!(
+            "  {:<32} {:<8} {:<6} x[{},{}] y[{},{}]",
+            v.name,
+            v.kind,
+            v.metric.name(),
+            v.m,
+            v.d,
+            v.n,
+            v.d
+        );
+        if let Some(k) = v.k {
+            print!(" k={k}");
+        }
+        // Smoke: execute on zeros and report output size.
+        let x = vec![0f32; v.m * v.d];
+        let y = vec![0f32; v.n * v.d];
+        let status = if v.kind == "distance" {
+            rt.distance_block(v, &x, &y).map(|o| o.len())
+        } else {
+            rt.knn_block(v, &x, &y).map(|(vals, _)| vals.len())
+        };
+        match status {
+            Ok(len) => println!("  OK ({len} outputs)"),
+            Err(e) => println!("  FAILED: {e}"),
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,230 @@
+//! Run metrics: the quantities the paper's evaluation reports.
+//!
+//! Per round (paper Fig 2, Fig 3d, Table 4): number of clusters, merges
+//! (α = merges / clusters), nearest-neighbor updates (β = NN updates per
+//! merge, Theorem 9), phase wall-times, and — in the distributed engine —
+//! simulated network traffic (messages and bytes, Table 2's "network"
+//! resource).
+
+use std::time::Duration;
+
+use crate::util::json::{obj, Json};
+
+/// Metrics for one RAC round.
+#[derive(Debug, Clone, Default)]
+pub struct RoundMetrics {
+    pub round: usize,
+    /// Active clusters at the start of the round.
+    pub clusters: usize,
+    /// Reciprocal-NN pairs merged this round.
+    pub merges: usize,
+    /// Clusters whose cached nearest neighbor had to be recomputed.
+    pub nn_updates: usize,
+    /// Neighbor-map entries scanned during NN recomputation (compute cost
+    /// of the "update nearest neighbors" phase).
+    pub nn_scan_entries: usize,
+    /// Wall time of the find-reciprocal-NN phase.
+    pub t_find: Duration,
+    /// Wall time of the merge / update-dissimilarities phase.
+    pub t_merge: Duration,
+    /// Wall time of the update-nearest-neighbors phase.
+    pub t_update_nn: Duration,
+    /// Simulated cross-shard messages (distributed engine only).
+    pub net_messages: usize,
+    /// Simulated cross-shard payload bytes (distributed engine only).
+    pub net_bytes: usize,
+    /// Simulated critical-path round time (distributed engine only):
+    /// per-phase max-across-machines compute (divided by CPUs/machine for
+    /// cluster-parallel phases) plus the network model's exchange cost.
+    /// This is what a real fleet's wall clock would track; in-process
+    /// wall clock cannot show scaling on this 1-CPU testbed (DESIGN.md §1).
+    pub t_sim: Duration,
+}
+
+impl RoundMetrics {
+    /// Fraction of clusters merged away this round (each merge removes 1).
+    pub fn alpha(&self) -> f64 {
+        if self.clusters == 0 {
+            0.0
+        } else {
+            self.merges as f64 / self.clusters as f64
+        }
+    }
+
+    /// NN updates per merge (the paper's β numerator; Fig 2a).
+    pub fn beta(&self) -> f64 {
+        if self.merges == 0 {
+            0.0
+        } else {
+            self.nn_updates as f64 / self.merges as f64
+        }
+    }
+
+    pub fn total_time(&self) -> Duration {
+        self.t_find + self.t_merge + self.t_update_nn
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("round", self.round.into()),
+            ("clusters", self.clusters.into()),
+            ("merges", self.merges.into()),
+            ("nn_updates", self.nn_updates.into()),
+            ("nn_scan_entries", self.nn_scan_entries.into()),
+            ("t_find_us", (self.t_find.as_micros() as usize).into()),
+            ("t_merge_us", (self.t_merge.as_micros() as usize).into()),
+            (
+                "t_update_nn_us",
+                (self.t_update_nn.as_micros() as usize).into(),
+            ),
+            ("net_messages", self.net_messages.into()),
+            ("net_bytes", self.net_bytes.into()),
+            ("t_sim_us", (self.t_sim.as_micros() as usize).into()),
+        ])
+    }
+}
+
+/// Aggregated metrics for a full clustering run.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub rounds: Vec<RoundMetrics>,
+    /// Wall time of the whole run (excludes graph loading, matching the
+    /// paper's "merge time" convention for Table 4).
+    pub total_time: Duration,
+}
+
+impl RunMetrics {
+    pub fn total_merges(&self) -> usize {
+        self.rounds.iter().map(|r| r.merges).sum()
+    }
+
+    /// Rounds that performed at least one merge (paper's "merge rounds").
+    pub fn merge_rounds(&self) -> usize {
+        self.rounds.iter().filter(|r| r.merges > 0).count()
+    }
+
+    /// Minimum per-round α over rounds with ≥ 2 clusters (Theorem 6's
+    /// lower-bound diagnostic).
+    pub fn min_alpha(&self) -> f64 {
+        self.rounds
+            .iter()
+            .filter(|r| r.clusters > 1 && r.merges > 0)
+            .map(|r| r.alpha())
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Mean β across rounds with merges.
+    pub fn mean_beta(&self) -> f64 {
+        let rs: Vec<f64> = self
+            .rounds
+            .iter()
+            .filter(|r| r.merges > 0)
+            .map(|r| r.beta())
+            .collect();
+        if rs.is_empty() {
+            0.0
+        } else {
+            rs.iter().sum::<f64>() / rs.len() as f64
+        }
+    }
+
+    /// Maximum β across rounds with merges (Theorem 9's boundedness check).
+    pub fn max_beta(&self) -> f64 {
+        self.rounds
+            .iter()
+            .filter(|r| r.merges > 0)
+            .map(|r| r.beta())
+            .fold(0.0, f64::max)
+    }
+
+    pub fn total_net_bytes(&self) -> usize {
+        self.rounds.iter().map(|r| r.net_bytes).sum()
+    }
+
+    /// Total simulated critical-path time (see [`RoundMetrics::t_sim`]).
+    pub fn total_sim_time(&self) -> Duration {
+        self.rounds.iter().map(|r| r.t_sim).sum()
+    }
+
+    pub fn total_net_messages(&self) -> usize {
+        self.rounds.iter().map(|r| r.net_messages).sum()
+    }
+
+    /// (merges, merge-phase seconds) pairs — the Fig 3d scatter.
+    pub fn merge_time_series(&self) -> Vec<(usize, f64)> {
+        self.rounds
+            .iter()
+            .filter(|r| r.merges > 0)
+            .map(|r| (r.merges, r.t_merge.as_secs_f64()))
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj([
+            (
+                "rounds",
+                Json::Arr(self.rounds.iter().map(|r| r.to_json()).collect()),
+            ),
+            (
+                "total_time_us",
+                (self.total_time.as_micros() as usize).into(),
+            ),
+            ("total_merges", self.total_merges().into()),
+            ("merge_rounds", self.merge_rounds().into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round(clusters: usize, merges: usize, nn_updates: usize) -> RoundMetrics {
+        RoundMetrics {
+            clusters,
+            merges,
+            nn_updates,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn alpha_beta() {
+        let r = round(100, 25, 50);
+        assert!((r.alpha() - 0.25).abs() < 1e-12);
+        assert!((r.beta() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_round_is_safe() {
+        let r = round(0, 0, 0);
+        assert_eq!(r.alpha(), 0.0);
+        assert_eq!(r.beta(), 0.0);
+    }
+
+    #[test]
+    fn run_aggregates() {
+        let run = RunMetrics {
+            rounds: vec![round(100, 40, 40), round(60, 20, 10), round(40, 0, 0)],
+            total_time: Duration::from_millis(5),
+        };
+        assert_eq!(run.total_merges(), 60);
+        assert_eq!(run.merge_rounds(), 2);
+        assert!((run.min_alpha() - 1.0 / 3.0).abs() < 1e-9);
+        assert!((run.mean_beta() - 0.75).abs() < 1e-9);
+        assert!((run.max_beta() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn serializes_to_json() {
+        let run = RunMetrics {
+            rounds: vec![round(10, 5, 5)],
+            total_time: Duration::from_micros(123),
+        };
+        let js = run.to_json().to_string();
+        assert!(js.contains("\"merges\":5"), "{js}");
+        assert!(js.contains("\"total_time_us\":123"), "{js}");
+        // Parseable by our own reader.
+        crate::util::json::Json::parse(&js).unwrap();
+    }
+}

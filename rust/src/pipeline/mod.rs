@@ -1,0 +1,203 @@
+//! The launcher pipeline: execute a [`RunConfig`] end to end —
+//! dataset generation → graph construction → clustering engine — and
+//! report results. Shared by the CLI, the examples and the bench harness.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{DatasetSpec, EngineSpec, GraphSpec, RunConfig};
+use crate::data::{
+    adversarial_thm4, gaussian_mixture, grid1d_graph, random_regular_graph, stable_hierarchy,
+    topic_docs, Dataset,
+};
+use crate::dist::{DistConfig, DistRacEngine};
+use crate::graph::Graph;
+use crate::hac::{naive_hac, nn_chain};
+use crate::knn::{complete_graph, epsilon_graph, knn_graph, Backend};
+use crate::metrics::RunMetrics;
+use crate::rac::{RacEngine, RacResult};
+use crate::runtime::{default_artifacts_dir, KernelRuntime};
+use crate::util::parallel::default_threads;
+
+/// Everything a finished run reports.
+pub struct RunOutput {
+    pub result: RacResult,
+    /// Graph-construction wall time (the paper's "edge loading" analogue;
+    /// 15–50% of total in their runs).
+    pub t_graph: Duration,
+    pub graph_nodes: usize,
+    pub graph_edges: usize,
+    pub graph_max_degree: usize,
+}
+
+/// Generate the configured dataset (vector datasets only).
+pub fn build_dataset(cfg: &RunConfig) -> Option<Dataset> {
+    match cfg.dataset {
+        DatasetSpec::SiftLike {
+            n,
+            d,
+            clusters,
+            spread,
+            noise_frac,
+        } => Some(gaussian_mixture(n, d, clusters, spread, noise_frac, cfg.seed)),
+        DatasetSpec::DocsLike { n, d, topics } => Some(topic_docs(n, d, topics, cfg.seed)),
+        _ => None,
+    }
+}
+
+/// Build the dissimilarity graph for a config (generating the dataset if
+/// the spec is vector-based; theory specs construct graphs directly).
+pub fn build_graph(cfg: &RunConfig) -> Result<Graph> {
+    match cfg.dataset {
+        DatasetSpec::Grid1d { n } => return Ok(grid1d_graph(n, cfg.seed)),
+        DatasetSpec::Adversarial { levels } => return Ok(adversarial_thm4(levels)),
+        DatasetSpec::Stable { depth, base } => {
+            return Ok(stable_hierarchy(depth, base, cfg.seed))
+        }
+        DatasetSpec::RandomRegular { n, degree } => {
+            return Ok(random_regular_graph(n, degree, cfg.seed))
+        }
+        _ => {}
+    }
+    let ds = build_dataset(cfg).expect("vector dataset");
+    match cfg.graph {
+        GraphSpec::Knn { k, xla } => {
+            if xla {
+                let rt = KernelRuntime::open(default_artifacts_dir())
+                    .context("opening AOT artifacts (run `make artifacts`)")?;
+                knn_graph(&ds, k, Backend::Xla, Some(&rt))
+            } else {
+                knn_graph(&ds, k, Backend::Native, None)
+            }
+        }
+        GraphSpec::Epsilon { eps } => Ok(epsilon_graph(&ds, eps)),
+        GraphSpec::Complete => Ok(complete_graph(&ds)),
+    }
+}
+
+/// Run the configured engine over a graph.
+pub fn run_engine(cfg: &RunConfig, g: &Graph) -> Result<RacResult> {
+    match cfg.engine {
+        EngineSpec::NaiveHac => {
+            let t = Instant::now();
+            let dendrogram = naive_hac(g, cfg.linkage);
+            Ok(RacResult {
+                dendrogram,
+                metrics: RunMetrics {
+                    rounds: vec![],
+                    total_time: t.elapsed(),
+                },
+            })
+        }
+        EngineSpec::NnChain => {
+            if !cfg.linkage.is_reducible() {
+                bail!("nn_chain requires a reducible linkage");
+            }
+            let t = Instant::now();
+            let dendrogram = nn_chain(g, cfg.linkage);
+            Ok(RacResult {
+                dendrogram,
+                metrics: RunMetrics {
+                    rounds: vec![],
+                    total_time: t.elapsed(),
+                },
+            })
+        }
+        EngineSpec::Rac { threads } => {
+            let threads = if threads == 0 {
+                default_threads()
+            } else {
+                threads
+            };
+            Ok(RacEngine::new(g, cfg.linkage).with_threads(threads).run())
+        }
+        EngineSpec::DistRac { machines, cpus } => Ok(DistRacEngine::new(
+            g,
+            cfg.linkage,
+            DistConfig::new(machines, cpus),
+        )
+        .run()),
+    }
+}
+
+/// Full pipeline: graph then engine, with construction timing.
+pub fn run(cfg: &RunConfig) -> Result<RunOutput> {
+    let t = Instant::now();
+    let g = build_graph(cfg)?;
+    let t_graph = t.elapsed();
+    let result = run_engine(cfg, &g)?;
+    Ok(RunOutput {
+        result,
+        t_graph,
+        graph_nodes: g.n(),
+        graph_edges: g.m(),
+        graph_max_degree: g.max_degree(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+
+    fn cfg(text: &str) -> RunConfig {
+        RunConfig::from_toml_str(text).unwrap()
+    }
+
+    #[test]
+    fn grid1d_pipeline_end_to_end() {
+        let out = run(&cfg(
+            "[dataset]\ntype = \"grid1d\"\nn = 500\n[cluster]\nlinkage = \"single\"\n[engine]\ntype = \"rac\"\n",
+        ))
+        .unwrap();
+        assert_eq!(out.result.dendrogram.merges().len(), 499);
+        assert_eq!(out.graph_nodes, 500);
+        assert_eq!(out.graph_edges, 499);
+    }
+
+    #[test]
+    fn sift_like_native_knn_pipeline() {
+        let out = run(&cfg(
+            "[dataset]\ntype = \"sift_like\"\nn = 200\nd = 16\nclusters = 5\n\
+             [graph]\ntype = \"knn\"\nk = 8\n[engine]\ntype = \"dist_rac\"\nmachines = 3\ncpus = 2\n",
+        ))
+        .unwrap();
+        // kNN graphs can be disconnected; every component fully merges.
+        let d = &out.result.dendrogram;
+        d.validate().unwrap();
+        assert!(d.merges().len() >= 190, "{} merges", d.merges().len());
+        assert!(out.graph_max_degree >= 8);
+    }
+
+    #[test]
+    fn engines_agree_through_pipeline() {
+        let base = "[dataset]\ntype = \"docs_like\"\nn = 120\nd = 32\ntopics = 6\n\
+                    [graph]\ntype = \"knn\"\nk = 6\n";
+        let mk = |engine: &str| {
+            let text = format!("{base}[engine]\ntype = \"{engine}\"\n");
+            run(&cfg(&text)).unwrap().result.dendrogram
+        };
+        let hac = mk("naive_hac");
+        let chain = mk("nn_chain");
+        let rac = mk("rac");
+        let dist = mk("dist_rac");
+        assert!(hac.same_clustering(&chain, 1e-9));
+        assert!(hac.same_clustering(&rac, 1e-9));
+        assert!(hac.same_clustering(&dist, 1e-9));
+    }
+
+    #[test]
+    fn ward_requires_complete_graph_via_config() {
+        let bad = cfg(
+            "[dataset]\ntype = \"sift_like\"\nn = 50\nd = 8\n[graph]\ntype = \"knn\"\nk = 5\n\
+             [cluster]\nlinkage = \"ward\"\n[engine]\ntype = \"rac\"\n",
+        );
+        assert!(std::panic::catch_unwind(|| run(&bad)).is_err());
+        let good = cfg(
+            "[dataset]\ntype = \"sift_like\"\nn = 50\nd = 8\n[graph]\ntype = \"complete\"\n\
+             [cluster]\nlinkage = \"ward\"\n[engine]\ntype = \"rac\"\n",
+        );
+        assert_eq!(run(&good).unwrap().result.dendrogram.merges().len(), 49);
+    }
+}

@@ -1,0 +1,319 @@
+//! The union-map computation shared by the shared-memory engine
+//! ([`super::RacEngine`]) and the distributed engine ([`crate::dist`]).
+//!
+//! Given a merging pair `(L, P)` and the two parent neighbor maps, compute
+//! the neighbor map of `L ∪ P`. Targets that are themselves merging pairs
+//! are canonicalised to their pair leader and combined with a second
+//! Lance–Williams step (see the deviation note in [`super`]'s docs).
+
+use rustc_hash::FxHashMap;
+
+use crate::linkage::{EdgeState, Linkage, MergeCtx, Weight};
+
+/// What the computation needs to know about any cluster id it encounters
+/// as a neighbor: merge status, pair partner, size, and the pair's merge
+/// weight. In the shared-memory engine this is a direct state lookup; in
+/// the distributed engine it is answered from batched remote responses.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PairView {
+    pub merging: bool,
+    /// Partner id (valid only when `merging`).
+    pub partner: u32,
+    pub size: u64,
+    /// `W(C, partner)` (valid only when `merging`).
+    pub pair_weight: Weight,
+}
+
+/// Per-target accumulator: the up-to-four parent edges between `{L, P}`
+/// and a target pair `{C, D}` (`lc/pc` toward the target's leader `C`,
+/// `ld/pd` toward its partner `D`; non-merging targets only use `lc/pc`).
+#[derive(Default, Clone, Copy)]
+struct Gather {
+    lc: Option<EdgeState>,
+    pc: Option<EdgeState>,
+    ld: Option<EdgeState>,
+    pd: Option<EdgeState>,
+}
+
+/// Compute the neighbor map of the union `L ∪ P`.
+///
+/// * `l`, `p` — the merging pair (leader first), with pair weight `w_lp`
+///   and sizes `sl`, `sp`.
+/// * `l_neighbors`, `p_neighbors` — their current neighbor maps.
+/// * `view(x)` — cluster info for any neighbor id (see [`PairView`]).
+///
+/// The result is keyed by *canonical* target ids: non-merging neighbors
+/// keep their id; merging neighbor pairs appear once under
+/// `min(id, partner)`.
+///
+/// Dispatches to a single-pass fold for linkages whose pair–pair
+/// combination is a flat associative reduction over the up-to-four parent
+/// edges (min / max / count-weighted mean — §Perf item 5), and to the
+/// structured two-step Lance–Williams path for Ward/WPGMA, whose updates
+/// need sizes and pair weights per step.
+pub fn compute_union_map(
+    linkage: Linkage,
+    l: u32,
+    p: u32,
+    w_lp: Weight,
+    sl: u64,
+    sp: u64,
+    l_neighbors: &FxHashMap<u32, EdgeState>,
+    p_neighbors: &FxHashMap<u32, EdgeState>,
+    view: impl Fn(u32) -> PairView,
+) -> FxHashMap<u32, EdgeState> {
+    match linkage {
+        Linkage::Single | Linkage::Complete | Linkage::Average => {
+            compute_union_map_flat(linkage, l, p, l_neighbors, p_neighbors, view)
+        }
+        _ => compute_union_map_lw(
+            linkage,
+            l,
+            p,
+            w_lp,
+            sl,
+            sp,
+            l_neighbors,
+            p_neighbors,
+            view,
+        ),
+    }
+}
+
+/// Single-pass fold for fully-associative linkages: every parent edge
+/// toward the canonical target is reduced with [`flat_fold`] as
+/// encountered — no gather map, one output hashmap.
+fn compute_union_map_flat(
+    linkage: Linkage,
+    l: u32,
+    p: u32,
+    l_neighbors: &FxHashMap<u32, EdgeState>,
+    p_neighbors: &FxHashMap<u32, EdgeState>,
+    view: impl Fn(u32) -> PairView,
+) -> FxHashMap<u32, EdgeState> {
+    #[inline]
+    fn flat_fold(linkage: Linkage, acc: &mut EdgeState, e: EdgeState) {
+        match linkage {
+            Linkage::Single => {
+                acc.weight = acc.weight.min(e.weight);
+                acc.count += e.count;
+            }
+            Linkage::Complete => {
+                acc.weight = acc.weight.max(e.weight);
+                acc.count += e.count;
+            }
+            Linkage::Average => {
+                let total = acc.count + e.count;
+                acc.weight = (acc.weight * acc.count as Weight
+                    + e.weight * e.count as Weight)
+                    / total as Weight;
+                acc.count = total;
+            }
+            _ => unreachable!("flat path is only for single/complete/average"),
+        }
+    }
+
+    let mut out: FxHashMap<u32, EdgeState> = FxHashMap::with_capacity_and_hasher(
+        l_neighbors.len() + p_neighbors.len(),
+        Default::default(),
+    );
+    for map in [l_neighbors, p_neighbors] {
+        for (&x, &e) in map {
+            if x == l || x == p {
+                continue;
+            }
+            let vx = view(x);
+            let t_id = if vx.merging { x.min(vx.partner) } else { x };
+            out.entry(t_id)
+                .and_modify(|acc| flat_fold(linkage, acc, e))
+                .or_insert(e);
+        }
+    }
+    out
+}
+
+/// Structured two-step Lance–Williams path (Ward, WPGMA, and any future
+/// linkage whose update needs per-step sizes/pair weights).
+#[allow(clippy::too_many_arguments)]
+fn compute_union_map_lw(
+    linkage: Linkage,
+    l: u32,
+    p: u32,
+    w_lp: Weight,
+    sl: u64,
+    sp: u64,
+    l_neighbors: &FxHashMap<u32, EdgeState>,
+    p_neighbors: &FxHashMap<u32, EdgeState>,
+    view: impl Fn(u32) -> PairView,
+) -> FxHashMap<u32, EdgeState> {
+    let cap = l_neighbors.len() + p_neighbors.len();
+    let mut gather: FxHashMap<u32, (Gather, PairView)> =
+        FxHashMap::with_capacity_and_hasher(cap, Default::default());
+
+    for (from_p, map) in [(false, l_neighbors), (true, p_neighbors)] {
+        for (&x, &e) in map {
+            if x == l || x == p {
+                continue;
+            }
+            let vx = view(x);
+            // Canonicalise merging targets to their pair leader (paper
+            // pseudocode deviation — see module docs).
+            let (t_id, toward_leader, vt) = if vx.merging {
+                let t = x.min(vx.partner);
+                if t == x {
+                    (t, true, vx)
+                } else {
+                    (t, false, view(t))
+                }
+            } else {
+                (x, true, vx)
+            };
+            let slot = gather.entry(t_id).or_insert((Gather::default(), vt));
+            match (from_p, toward_leader) {
+                (false, true) => slot.0.lc = Some(e),
+                (true, true) => slot.0.pc = Some(e),
+                (false, false) => slot.0.ld = Some(e),
+                (true, false) => slot.0.pd = Some(e),
+            }
+        }
+    }
+
+    let mut out: FxHashMap<u32, EdgeState> =
+        FxHashMap::with_capacity_and_hasher(gather.len(), Default::default());
+    for (t_id, (g, vt)) in gather {
+        // Step 1: (L, P) → U against the target's leader C and partner D.
+        let uc = linkage.merge(
+            g.lc,
+            g.pc,
+            MergeCtx {
+                size_a: sl,
+                size_b: sp,
+                size_c: vt.size,
+                pair_weight: w_lp,
+            },
+        );
+        let e = if vt.merging {
+            // vt is the canonical leader's view; its partner is the
+            // higher-id member D of the target pair.
+            let vd = view(vt.partner);
+            debug_assert!(vt.partner > t_id);
+            let ud = linkage.merge(
+                g.ld,
+                g.pd,
+                MergeCtx {
+                    size_a: sl,
+                    size_b: sp,
+                    size_c: vd.size,
+                    pair_weight: w_lp,
+                },
+            );
+            // Step 2: W(U, C∪D) from W(U,C), W(U,D): roles A=C, B=D, C=U.
+            linkage.merge(
+                uc,
+                ud,
+                MergeCtx {
+                    size_a: vt.size,
+                    size_b: vd.size,
+                    size_c: sl + sp,
+                    pair_weight: vt.pair_weight,
+                },
+            )
+        } else {
+            uc
+        };
+        if let Some(e) = e {
+            out.insert(t_id, e);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn es(w: Weight) -> EdgeState {
+        EdgeState::point(w)
+    }
+
+    #[test]
+    fn union_of_disjoint_neighbor_sets() {
+        // L neighbors {2}, P neighbors {3}; neither 2 nor 3 merging.
+        let mut ln = FxHashMap::default();
+        ln.insert(1u32, es(1.0)); // edge to partner (skipped)
+        ln.insert(2u32, es(5.0));
+        let mut pn = FxHashMap::default();
+        pn.insert(0u32, es(1.0));
+        pn.insert(3u32, es(7.0));
+        let view = |x: u32| PairView {
+            merging: false,
+            partner: x,
+            size: 1,
+            pair_weight: 0.0,
+        };
+        let out = compute_union_map(Linkage::Average, 0, 1, 1.0, 1, 1, &ln, &pn, view);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[&2].weight, 5.0);
+        assert_eq!(out[&3].weight, 7.0);
+    }
+
+    #[test]
+    fn merging_target_combined_under_leader() {
+        // Pairs (0,1) and (2,3); all four cross edges exist.
+        let mut ln = FxHashMap::default();
+        ln.insert(1u32, es(1.0));
+        ln.insert(2u32, es(4.0));
+        ln.insert(3u32, es(6.0));
+        let mut pn = FxHashMap::default();
+        pn.insert(0u32, es(1.0));
+        pn.insert(2u32, es(8.0));
+        pn.insert(3u32, es(10.0));
+        let view = |x: u32| match x {
+            2 => PairView {
+                merging: true,
+                partner: 3,
+                size: 1,
+                pair_weight: 2.0,
+            },
+            3 => PairView {
+                merging: true,
+                partner: 2,
+                size: 1,
+                pair_weight: 2.0,
+            },
+            _ => unreachable!(),
+        };
+        let out = compute_union_map(Linkage::Average, 0, 1, 1.0, 1, 1, &ln, &pn, view);
+        assert_eq!(out.len(), 1);
+        // Average over all 4 point pairs: (4+8+6+10)/4 = 7.
+        assert!((out[&2].weight - 7.0).abs() < 1e-12);
+        assert_eq!(out[&2].count, 4);
+    }
+
+    #[test]
+    fn bridge_via_non_leaders_only() {
+        // Pairs (0,1), (2,3); only edge P(=1)–D(=3). Union edge must exist
+        // under canonical key 2.
+        let ln: FxHashMap<u32, EdgeState> = [(1u32, es(1.0))].into_iter().collect();
+        let pn: FxHashMap<u32, EdgeState> =
+            [(0u32, es(1.0)), (3u32, es(9.0))].into_iter().collect();
+        let view = |x: u32| match x {
+            2 => PairView {
+                merging: true,
+                partner: 3,
+                size: 1,
+                pair_weight: 2.0,
+            },
+            3 => PairView {
+                merging: true,
+                partner: 2,
+                size: 1,
+                pair_weight: 2.0,
+            },
+            _ => unreachable!("view({x})"),
+        };
+        let out = compute_union_map(Linkage::Single, 0, 1, 1.0, 1, 1, &ln, &pn, view);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[&2].weight, 9.0);
+    }
+}

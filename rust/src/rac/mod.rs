@@ -1,0 +1,420 @@
+//! Reciprocal Agglomerative Clustering — the paper's Algorithm 2 and the
+//! detailed implementation of §5, as a shared-memory round engine.
+//!
+//! Each round runs three phases, all parallelised across clusters:
+//!
+//! 1. **Find Reciprocal Nearest Neighbors** — `C.will_merge = (C.nn.nn == C)`;
+//!    the lower-id member of each pair is the *leader* and owns the merge.
+//! 2. **Update Cluster Dissimilarities** — every leader independently
+//!    computes the neighbor map of its union. When a neighbor is itself a
+//!    merging pair, the pair–pair dissimilarity `W(A∪B, C∪D)` is computed
+//!    *twice* (once by each leader) rather than coordinated — the paper's
+//!    contention-free choice. Results are then applied: unions installed,
+//!    higher-id partners deleted, and non-merging neighbors' maps patched.
+//! 3. **Update Nearest Neighbors** — any cluster that merged, or whose
+//!    cached nearest neighbor merged, rescans its neighbor map. For
+//!    reducible linkages no other cluster's NN can change (a merge never
+//!    moves the union closer than the closest parent), so the rescan set is
+//!    exactly the paper's `C.will_merge or C.nn.will_merge` condition.
+//!
+//! ## Deviation from the paper's pseudocode (documented)
+//!
+//! The §5 "Update Cluster Dissimilarities" pseudocode skips neighbors that
+//! are merging but are not the lower-id leader of their own pair. If the
+//! only edge between two merging pairs `(A,B)` and `(C,D)` connects the two
+//! *non-leaders* (`B–D`), a literal reading drops the edge between the two
+//! unions entirely, which breaks exactness on sparse graphs. We instead
+//! **canonicalise** every merging neighbor to its pair leader
+//! (`min(id, nn.id)`) and aggregate the up-to-four underlying parent edges
+//! per target pair. Theorem-1 property tests (`rust/tests/`) verify
+//! exactness against sequential HAC.
+//!
+//! The distributed version of the same phases (sharded state, batched
+//! cross-machine messages) lives in [`crate::dist`].
+
+pub mod logic;
+
+use std::time::Instant;
+
+use rustc_hash::FxHashMap;
+
+use crate::dendrogram::{Dendrogram, Merge};
+use crate::graph::Graph;
+use crate::linkage::{EdgeState, Linkage, Weight};
+use crate::metrics::{RoundMetrics, RunMetrics};
+use crate::util::parallel::default_threads;
+use crate::util::pool::Pool;
+
+use logic::{compute_union_map, PairView};
+
+/// Sentinel "no nearest neighbor" (isolated cluster).
+pub const NO_NN: u32 = u32::MAX;
+
+/// Result of a clustering run.
+#[derive(Debug)]
+pub struct RacResult {
+    pub dendrogram: Dendrogram,
+    pub metrics: RunMetrics,
+}
+
+/// Shared-memory RAC engine.
+pub struct RacEngine {
+    linkage: Linkage,
+    n: usize,
+    active: Vec<bool>,
+    /// Live cluster ids, ascending; compacted once per round so the
+    /// per-round phases cost O(active), not O(n) (§Perf item 4).
+    active_ids: Vec<u32>,
+    size: Vec<u64>,
+    nn: Vec<u32>,
+    nn_weight: Vec<Weight>,
+    will_merge: Vec<bool>,
+    neighbors: Vec<FxHashMap<u32, EdgeState>>,
+    threads: usize,
+    /// Hard cap on rounds (safety valve for non-reducible linkages).
+    max_rounds: usize,
+}
+
+impl RacEngine {
+    /// Build an engine over a dissimilarity graph.
+    ///
+    /// # Panics
+    /// If the linkage is not reducible (Theorem 1 does not apply — use
+    /// [`RacEngine::new_unchecked`] to observe the failure mode), or if a
+    /// complete-graph-only linkage is given a sparse graph.
+    pub fn new(g: &Graph, linkage: Linkage) -> Self {
+        assert!(
+            linkage.is_reducible(),
+            "RAC is exact only for reducible linkages (Theorem 1); \
+             use new_unchecked to experiment"
+        );
+        Self::new_unchecked(g, linkage)
+    }
+
+    /// Build without the reducibility guard (for demonstrating where
+    /// Theorem 1's hypothesis is necessary).
+    pub fn new_unchecked(g: &Graph, linkage: Linkage) -> Self {
+        if !linkage.supports_sparse() {
+            let n = g.n();
+            assert!(
+                g.m() == n * (n - 1) / 2,
+                "{linkage:?} linkage requires a complete graph"
+            );
+        }
+        let n = g.n();
+        let neighbors: Vec<FxHashMap<u32, EdgeState>> = (0..n as u32)
+            .map(|u| {
+                g.neighbors(u)
+                    .map(|(v, w)| (v, EdgeState::point(w)))
+                    .collect()
+            })
+            .collect();
+        RacEngine {
+            linkage,
+            n,
+            active: vec![true; n],
+            active_ids: (0..n as u32).collect(),
+            size: vec![1; n],
+            nn: vec![NO_NN; n],
+            nn_weight: vec![Weight::INFINITY; n],
+            will_merge: vec![false; n],
+            neighbors,
+            threads: default_threads(),
+            max_rounds: 4 * n + 64,
+        }
+    }
+
+    /// Limit the worker-thread count (the paper's CPUs knob, Fig 3c).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Override the round safety cap.
+    pub fn with_max_rounds(mut self, max_rounds: usize) -> Self {
+        self.max_rounds = max_rounds;
+        self
+    }
+
+    /// Run RAC to completion; returns the dendrogram and per-round metrics.
+    pub fn run(mut self) -> RacResult {
+        // One persistent worker pool for the whole run: phases are short
+        // and frequent, so per-phase thread spawning would dominate.
+        let pool = Pool::new(self.threads);
+        self.run_inner(&pool)
+    }
+
+    fn run_inner(&mut self, pool: &Pool) -> RacResult {
+        let t0 = Instant::now();
+        let mut merges: Vec<Merge> = Vec::with_capacity(self.n.saturating_sub(1));
+        let mut metrics = RunMetrics::default();
+
+        // Initial NN cache for every cluster.
+        let init: Vec<(u32, Weight)> =
+            pool.par_map_indexed(self.n, |c| Self::scan_nn(&self.neighbors[c]));
+        for (c, (nn, w)) in init.into_iter().enumerate() {
+            self.nn[c] = nn;
+            self.nn_weight[c] = w;
+        }
+
+        let mut n_active = self.n;
+        for round in 0..self.max_rounds {
+            let mut rm = RoundMetrics {
+                round,
+                clusters: n_active,
+                ..Default::default()
+            };
+
+            // ---- Phase 1: find reciprocal nearest neighbors -------------
+            let t = Instant::now();
+            let flags = pool.par_map(&self.active_ids, |&c| {
+                let c = c as usize;
+                self.nn[c] != NO_NN && self.nn[self.nn[c] as usize] == c as u32
+            });
+            for (&c, flag) in self.active_ids.iter().zip(flags) {
+                self.will_merge[c as usize] = flag;
+            }
+            let leaders: Vec<u32> = self
+                .active_ids
+                .iter()
+                .copied()
+                .filter(|&c| self.will_merge[c as usize] && c < self.nn[c as usize])
+                .collect();
+            rm.t_find = t.elapsed();
+            rm.merges = leaders.len();
+
+            if leaders.is_empty() {
+                metrics.rounds.push(rm);
+                break;
+            }
+
+            // ---- Phase 2: update cluster dissimilarities ----------------
+            let t = Instant::now();
+            let unions: Vec<(u32, FxHashMap<u32, EdgeState>)> =
+                pool.par_map(&leaders, |&l| (l, self.union_map(l)));
+
+            // Apply: record merges, install unions, deactivate partners.
+            for &l in &leaders {
+                let p = self.nn[l as usize];
+                merges.push(Merge {
+                    a: l,
+                    b: p,
+                    weight: self.nn_weight[l as usize],
+                });
+            }
+            for (l, map) in unions {
+                let p = self.nn[l as usize];
+                // Patch non-merging neighbors' maps: new edge to the union
+                // under the leader's id, stale partner entry removed.
+                for (&t_id, &e) in &map {
+                    if !self.will_merge[t_id as usize] {
+                        let tm = &mut self.neighbors[t_id as usize];
+                        tm.remove(&p);
+                        tm.insert(l, e);
+                    }
+                }
+                self.size[l as usize] += self.size[p as usize];
+                self.neighbors[l as usize] = map;
+                self.neighbors[p as usize] = FxHashMap::default();
+                self.active[p as usize] = false;
+            }
+            n_active -= rm.merges;
+            self.active_ids.retain(|&c| self.active[c as usize]);
+            rm.t_merge = t.elapsed();
+
+            // ---- Phase 3: update nearest neighbors ----------------------
+            let t = Instant::now();
+            let updates: Vec<(u32, u32, Weight, usize)> = {
+                let ids = &self.active_ids;
+                pool.par_filter_map_indexed(ids.len(), |idx| {
+                    let c = ids[idx] as usize;
+                    let needs_rescan = self.will_merge[c]
+                        || (self.nn[c] != NO_NN && self.will_merge[self.nn[c] as usize]);
+                    needs_rescan.then(|| {
+                        let (nn, w) = Self::scan_nn(&self.neighbors[c]);
+                        (c as u32, nn, w, self.neighbors[c].len())
+                    })
+                })
+            };
+            rm.nn_updates = updates.len();
+            for (c, nn, w, scanned) in updates {
+                self.nn[c as usize] = nn;
+                self.nn_weight[c as usize] = w;
+                rm.nn_scan_entries += scanned;
+            }
+            rm.t_update_nn = t.elapsed();
+            metrics.rounds.push(rm);
+
+            if n_active <= 1 {
+                break;
+            }
+        }
+
+        metrics.total_time = t0.elapsed();
+        RacResult {
+            dendrogram: Dendrogram::new(self.n, merges),
+            metrics,
+        }
+    }
+
+    /// Scan a neighbor map for the `(weight, id)`-minimal entry.
+    #[inline]
+    fn scan_nn(map: &FxHashMap<u32, EdgeState>) -> (u32, Weight) {
+        let mut best = (NO_NN, Weight::INFINITY);
+        for (&v, e) in map {
+            if e.weight < best.1 || (e.weight == best.1 && v < best.0) {
+                best = (v, e.weight);
+            }
+        }
+        (best.0, best.1)
+    }
+
+    /// Compute the neighbor map of the union `L ∪ P` (read-only on shared
+    /// state; each leader runs this independently in parallel). Delegates
+    /// to the engine-agnostic [`logic::compute_union_map`].
+    fn union_map(&self, l: u32) -> FxHashMap<u32, EdgeState> {
+        let p = self.nn[l as usize];
+        compute_union_map(
+            self.linkage,
+            l,
+            p,
+            self.nn_weight[l as usize],
+            self.size[l as usize],
+            self.size[p as usize],
+            &self.neighbors[l as usize],
+            &self.neighbors[p as usize],
+            |x| PairView {
+                merging: self.will_merge[x as usize],
+                partner: self.nn[x as usize],
+                size: self.size[x as usize],
+                pair_weight: self.nn_weight[x as usize],
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+    use crate::hac::naive_hac;
+
+    #[test]
+    fn two_points() {
+        let g = Graph::from_edges(2, [(0, 1, 3.5)]);
+        let r = RacEngine::new(&g, Linkage::Average).run();
+        assert_eq!(r.dendrogram.merges().len(), 1);
+        assert_eq!(r.dendrogram.merges()[0].weight, 3.5);
+        assert_eq!(r.metrics.merge_rounds(), 1);
+    }
+
+    #[test]
+    fn matches_hac_on_grid() {
+        let g = data::grid1d_graph(200, 17);
+        for l in Linkage::SPARSE_REDUCIBLE {
+            let hac = naive_hac(&g, l);
+            let rac = RacEngine::new(&g, l).run();
+            assert!(
+                hac.same_clustering(&rac.dendrogram, 1e-9),
+                "{l:?} diverged from HAC"
+            );
+        }
+    }
+
+    #[test]
+    fn matches_hac_on_complete_graph() {
+        let g = data::stable_hierarchy(4, 4.0, 23);
+        for l in [
+            Linkage::Single,
+            Linkage::Complete,
+            Linkage::Average,
+            Linkage::WeightedAverage,
+            Linkage::Ward,
+        ] {
+            let hac = naive_hac(&g, l);
+            let rac = RacEngine::new(&g, l).run();
+            assert!(
+                hac.same_clustering(&rac.dendrogram, 1e-6),
+                "{l:?} diverged from HAC"
+            );
+        }
+    }
+
+    #[test]
+    fn cross_pair_edge_between_non_leaders() {
+        // Two reciprocal pairs (0,1) and (2,3) whose ONLY connection is the
+        // edge 1–3 (both non-leaders): the canonicalisation fix must carry
+        // it to the union edge, or the graph falls apart (see module docs).
+        let g = Graph::from_edges(
+            4,
+            [
+                (0, 1, 1.0),
+                (2, 3, 1.5),
+                (1, 3, 10.0),
+            ],
+        );
+        let hac = naive_hac(&g, Linkage::Average);
+        let rac = RacEngine::new(&g, Linkage::Average).run();
+        assert_eq!(rac.dendrogram.merges().len(), 3, "lost the bridge edge");
+        assert!(hac.same_clustering(&rac.dendrogram, 1e-9));
+    }
+
+    #[test]
+    fn parallel_pairs_merge_in_one_round() {
+        // 4 well-separated tight pairs → round 1 merges all 4 at once.
+        let mut edges = vec![];
+        for i in 0..4u32 {
+            edges.push((2 * i, 2 * i + 1, 1.0 + i as f64 * 0.01));
+        }
+        for i in 0..3u32 {
+            edges.push((2 * i, 2 * (i + 1), 100.0 + i as f64));
+        }
+        let g = Graph::from_edges(8, edges);
+        let r = RacEngine::new(&g, Linkage::Average).run();
+        assert_eq!(r.metrics.rounds[0].merges, 4);
+        assert!((r.metrics.rounds[0].alpha() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disconnected_components() {
+        let g = Graph::from_edges(6, [(0, 1, 1.0), (2, 3, 1.0), (3, 4, 2.0)]);
+        let r = RacEngine::new(&g, Linkage::Single).run();
+        assert_eq!(r.dendrogram.merges().len(), 3);
+        assert_eq!(r.dendrogram.remaining_clusters(), 3); // {0,1}, {2,3,4}, {5}
+    }
+
+    #[test]
+    fn thread_count_does_not_change_result() {
+        let g = data::grid1d_graph(300, 5);
+        let base = RacEngine::new(&g, Linkage::Average).with_threads(1).run();
+        for t in [2, 4, 8] {
+            let r = RacEngine::new(&g, Linkage::Average).with_threads(t).run();
+            assert!(base.dendrogram.same_clustering(&r.dendrogram, 1e-12));
+        }
+    }
+
+    #[test]
+    fn metrics_account_every_merge() {
+        let g = data::grid1d_graph(128, 3);
+        let r = RacEngine::new(&g, Linkage::Average).run();
+        assert_eq!(r.metrics.total_merges(), 127);
+        assert_eq!(r.metrics.total_merges(), r.dendrogram.merges().len());
+        // Paper Fig 2: early rounds have lots of parallelism.
+        assert!(r.metrics.rounds[0].merges > 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "reducible")]
+    fn rejects_centroid_by_default() {
+        let g = data::stable_hierarchy(2, 4.0, 0);
+        RacEngine::new(&g, Linkage::Centroid);
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let r = RacEngine::new(&Graph::from_edges(0, []), Linkage::Average).run();
+        assert!(r.dendrogram.merges().is_empty());
+        let r = RacEngine::new(&Graph::from_edges(1, []), Linkage::Average).run();
+        assert!(r.dendrogram.merges().is_empty());
+    }
+}

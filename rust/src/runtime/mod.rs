@@ -1,0 +1,257 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas kernels.
+//!
+//! This is the only place the crate touches XLA. At build time,
+//! `python/compile/aot.py` lowers every kernel variant to **HLO text**
+//! (`artifacts/<name>.hlo.txt`; text because jax ≥ 0.5 emits 64-bit
+//! instruction ids that xla_extension 0.5.1's proto path rejects) plus
+//! `artifacts/manifest.json` describing the static shapes. At run time
+//! this module compiles each needed variant once on the PJRT CPU client
+//! and executes it from the graph-construction hot path — Python is never
+//! on the clustering path.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::data::Metric;
+use crate::util::json::Json;
+
+/// One AOT kernel variant as described by the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VariantMeta {
+    pub name: String,
+    /// "distance" (full m×n tile) or "knn" (fused per-row top-k).
+    pub kind: String,
+    pub metric: Metric,
+    /// Static tile shapes: x is `[m, d]`, y is `[n, d]`.
+    pub m: usize,
+    pub n: usize,
+    pub d: usize,
+    /// Top-k width (knn variants only).
+    pub k: Option<usize>,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: String,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub variants: Vec<VariantMeta>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Manifest> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = Json::parse(text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let obj = root.as_obj().ok_or_else(|| anyhow!("manifest not an object"))?;
+        let mut variants = Vec::new();
+        for (name, entry) in obj {
+            let get_usize = |k: &str| -> Result<usize> {
+                entry
+                    .get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("variant {name}: missing field {k}"))
+            };
+            let get_str = |k: &str| -> Result<String> {
+                entry
+                    .get(k)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow!("variant {name}: missing field {k}"))
+            };
+            variants.push(VariantMeta {
+                name: name.clone(),
+                kind: get_str("kind")?,
+                metric: get_str("metric")?
+                    .parse()
+                    .map_err(|e: String| anyhow!(e))?,
+                m: get_usize("m")?,
+                n: get_usize("n")?,
+                d: get_usize("d")?,
+                k: entry.get("k").and_then(Json::as_usize),
+                file: get_str("file")?,
+            });
+        }
+        Ok(Manifest { variants })
+    }
+
+    /// Pick the variant for a `(kind, metric, d)` request, if any.
+    pub fn find(&self, kind: &str, metric: Metric, d: usize) -> Option<&VariantMeta> {
+        self.variants
+            .iter()
+            .find(|v| v.kind == kind && v.metric == metric && v.d == d)
+    }
+
+    /// Feature dimensions the AOT set supports for a kind/metric.
+    pub fn supported_dims(&self, kind: &str, metric: Metric) -> Vec<usize> {
+        let mut dims: Vec<usize> = self
+            .variants
+            .iter()
+            .filter(|v| v.kind == kind && v.metric == metric)
+            .map(|v| v.d)
+            .collect();
+        dims.sort_unstable();
+        dims.dedup();
+        dims
+    }
+}
+
+/// A compiled-and-loaded kernel set on the PJRT CPU client.
+///
+/// Executables are compiled lazily (first use) and cached per variant.
+/// `execute` takes `&self`; the interior mutex only guards the compile
+/// cache, never execution.
+pub struct KernelRuntime {
+    artifacts_dir: PathBuf,
+    manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl KernelRuntime {
+    /// Open the artifacts directory and start a PJRT CPU client.
+    pub fn open(artifacts_dir: impl Into<PathBuf>) -> Result<KernelRuntime> {
+        let artifacts_dir = artifacts_dir.into();
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(KernelRuntime {
+            artifacts_dir,
+            manifest,
+            client,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn executable(&self, meta: &VariantMeta) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(&meta.name) {
+            return Ok(exe.clone());
+        }
+        let path = self.artifacts_dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("loading {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", meta.name))?,
+        );
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(meta.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    fn literal(rows: &[f32], n_rows: usize, d: usize) -> Result<xla::Literal> {
+        if rows.len() != n_rows * d {
+            bail!("literal shape mismatch: {} != {n_rows}x{d}", rows.len());
+        }
+        xla::Literal::vec1(rows)
+            .reshape(&[n_rows as i64, d as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+
+    /// Execute a `distance` variant on one `(x, y)` tile pair; returns the
+    /// row-major `m × n` dissimilarity tile.
+    pub fn distance_block(&self, meta: &VariantMeta, x: &[f32], y: &[f32]) -> Result<Vec<f32>> {
+        assert_eq!(meta.kind, "distance");
+        let exe = self.executable(meta)?;
+        let lx = Self::literal(x, meta.m, meta.d)?;
+        let ly = Self::literal(y, meta.n, meta.d)?;
+        let result = exe
+            .execute::<xla::Literal>(&[lx, ly])
+            .map_err(|e| anyhow!("execute {}: {e:?}", meta.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("to_tuple1: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Execute a `knn` variant on one `(x, y)` tile pair; returns per-row
+    /// `(distances [m×k], indices [m×k])`, ascending by distance, indices
+    /// local to the y tile.
+    pub fn knn_block(
+        &self,
+        meta: &VariantMeta,
+        x: &[f32],
+        y: &[f32],
+    ) -> Result<(Vec<f32>, Vec<i32>)> {
+        assert_eq!(meta.kind, "knn");
+        let exe = self.executable(meta)?;
+        let lx = Self::literal(x, meta.m, meta.d)?;
+        let ly = Self::literal(y, meta.n, meta.d)?;
+        let result = exe
+            .execute::<xla::Literal>(&[lx, ly])
+            .map_err(|e| anyhow!("execute {}: {e:?}", meta.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let (vals, idx) = result
+            .to_tuple2()
+            .map_err(|e| anyhow!("to_tuple2: {e:?}"))?;
+        Ok((
+            vals.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?,
+            idx.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}"))?,
+        ))
+    }
+}
+
+/// Default artifacts location: `$RAC_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("RAC_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let text = r#"{
+            "dist_l2_m256_n256_d64": {
+                "kind": "distance", "metric": "l2", "m": 256, "n": 256,
+                "d": 64, "file": "dist_l2_m256_n256_d64.hlo.txt",
+                "inputs": [[256, 64], [256, 64]]
+            },
+            "knn_cos_m256_n1024_d128_k32": {
+                "kind": "knn", "metric": "cosine", "m": 256, "n": 1024,
+                "d": 128, "k": 32, "file": "knn_cos_m256_n1024_d128_k32.hlo.txt",
+                "inputs": [[256, 128], [1024, 128]]
+            }
+        }"#;
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.variants.len(), 2);
+        let v = m.find("distance", Metric::L2, 64).unwrap();
+        assert_eq!(v.m, 256);
+        assert_eq!(v.k, None);
+        let v = m.find("knn", Metric::Cosine, 128).unwrap();
+        assert_eq!(v.k, Some(32));
+        assert!(m.find("knn", Metric::L2, 64).is_none());
+        assert_eq!(m.supported_dims("knn", Metric::Cosine), vec![128]);
+    }
+
+    #[test]
+    fn manifest_rejects_malformed() {
+        assert!(Manifest::parse("[]").is_err());
+        assert!(Manifest::parse(r#"{"x": {"kind": "distance"}}"#).is_err());
+    }
+}

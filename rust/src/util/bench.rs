@@ -1,0 +1,148 @@
+//! Timing-loop helpers for the `cargo bench` binaries (offline `criterion`
+//! substitute).
+//!
+//! Each bench target under `rust/benches/` is a plain binary
+//! (`harness = false`) that uses [`time_fn`] / [`Sampler`] to produce
+//! median/min/mean timings with warmup, and prints paper-style tables.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over repeated timed runs.
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    pub samples: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+    pub max: Duration,
+}
+
+impl Timing {
+    pub fn from_samples(mut xs: Vec<Duration>) -> Timing {
+        assert!(!xs.is_empty());
+        xs.sort();
+        let sum: Duration = xs.iter().sum();
+        Timing {
+            samples: xs.len(),
+            min: xs[0],
+            median: xs[xs.len() / 2],
+            mean: sum / xs.len() as u32,
+            max: *xs.last().unwrap(),
+        }
+    }
+}
+
+impl std::fmt::Display for Timing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "median {:>10.3?}  mean {:>10.3?}  min {:>10.3?}  (n={})",
+            self.median, self.mean, self.min, self.samples
+        )
+    }
+}
+
+/// Time `f` with `warmup` discarded runs followed by `samples` measured
+/// runs. The closure's return value is passed through a black box so the
+/// optimizer cannot elide the work.
+pub fn time_fn<R>(warmup: usize, samples: usize, mut f: impl FnMut() -> R) -> Timing {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut xs = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        black_box(f());
+        xs.push(t.elapsed());
+    }
+    Timing::from_samples(xs)
+}
+
+/// Adaptive sampler: keeps running `f` until `budget` wall time is spent
+/// (at least `min_samples` runs). Good default for benches whose cost
+/// varies by orders of magnitude across parameter sweeps.
+pub fn time_budget<R>(
+    budget: Duration,
+    min_samples: usize,
+    mut f: impl FnMut() -> R,
+) -> Timing {
+    black_box(f()); // warmup
+    let start = Instant::now();
+    let mut xs = Vec::new();
+    while xs.len() < min_samples || start.elapsed() < budget {
+        let t = Instant::now();
+        black_box(f());
+        xs.push(t.elapsed());
+        if xs.len() > 10_000 {
+            break;
+        }
+    }
+    Timing::from_samples(xs)
+}
+
+/// Prevent the optimizer from discarding a value (stable-Rust black box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Right-aligned fixed-width table printer for paper-style outputs.
+pub struct Table {
+    widths: Vec<usize>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str], widths: &[usize]) -> Table {
+        let t = Table {
+            widths: widths.to_vec(),
+        };
+        t.row(headers);
+        let rule: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        t.row(&rule.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+        t
+    }
+
+    pub fn row(&self, cells: &[&str]) {
+        let mut line = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            let w = self.widths.get(i).copied().unwrap_or(12);
+            line.push_str(&format!("{c:>w$} "));
+        }
+        println!("{}", line.trim_end());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_stats_ordering() {
+        let t = Timing::from_samples(vec![
+            Duration::from_micros(5),
+            Duration::from_micros(1),
+            Duration::from_micros(3),
+        ]);
+        assert_eq!(t.min, Duration::from_micros(1));
+        assert_eq!(t.median, Duration::from_micros(3));
+        assert_eq!(t.max, Duration::from_micros(5));
+        assert_eq!(t.mean, Duration::from_micros(3));
+    }
+
+    #[test]
+    fn time_fn_runs_expected_count() {
+        let mut calls = 0;
+        let t = time_fn(2, 5, || {
+            calls += 1;
+            calls
+        });
+        assert_eq!(calls, 7);
+        assert_eq!(t.samples, 5);
+    }
+
+    #[test]
+    fn time_budget_hits_min_samples() {
+        let t = time_budget(Duration::ZERO, 3, || 1 + 1);
+        assert!(t.samples >= 3);
+    }
+}

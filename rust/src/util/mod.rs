@@ -1,0 +1,24 @@
+//! From-scratch substrate utilities.
+//!
+//! This environment builds fully offline against a small vendored crate
+//! set (see `.cargo/config.toml`), so the usual ecosystem crates (rand,
+//! rayon, serde, clap, criterion, proptest) are unavailable. Everything
+//! they would have provided is implemented here from first principles:
+//!
+//! * [`rng`] — xoshiro256++ PRNG with normal / zipf / gamma / dirichlet
+//!   samplers (replaces `rand` + `rand_distr`).
+//! * [`parallel`] — deterministic scoped-thread fork/join helpers
+//!   (replaces `rayon` for the coordinator's data-parallel phases).
+//! * [`json`] — a minimal JSON value, parser and writer (replaces
+//!   `serde_json`; parses `artifacts/manifest.json`, emits metrics).
+//! * [`bench`] — timing-loop helpers for the `cargo bench` binaries
+//!   (replaces `criterion`).
+//! * [`prop`] — a tiny seeded property-testing harness (replaces
+//!   `proptest`; on failure it reports the reproducing seed).
+
+pub mod bench;
+pub mod json;
+pub mod parallel;
+pub mod pool;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,174 @@
+//! Deterministic fork/join data parallelism on scoped std threads
+//! (offline `rayon` substitute).
+//!
+//! The coordinator's phases are embarrassingly parallel over clusters or
+//! shards, so simple contiguous range splitting suffices. Results are
+//! returned in input order regardless of thread count, keeping every
+//! engine bit-for-bit reproducible across parallelism settings.
+
+/// Map `0..n` in parallel over at most `threads` workers; results are in
+/// index order. `f` must be `Sync` (read-only shared captures).
+pub fn par_map_indexed<R: Send>(
+    threads: usize,
+    n: usize,
+    f: impl Fn(usize) -> R + Sync,
+) -> Vec<R> {
+    let threads = effective_threads(threads, n);
+    if threads <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    let chunk = n.div_ceil(threads);
+    let slots = out.as_mut_slice();
+    std::thread::scope(|scope| {
+        // Hand each worker a disjoint &mut of the output.
+        let mut rest = slots;
+        let mut start = 0usize;
+        let mut handles = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            let take = chunk.min(rest.len());
+            if take == 0 {
+                break;
+            }
+            let (mine, tail) = rest.split_at_mut(take);
+            rest = tail;
+            let base = start;
+            start += take;
+            let f = &f;
+            handles.push(scope.spawn(move || {
+                for (i, slot) in mine.iter_mut().enumerate() {
+                    *slot = Some(f(base + i));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("worker panicked");
+        }
+    });
+    out.into_iter().map(|o| o.expect("slot filled")).collect()
+}
+
+/// Parallel map over a slice, preserving order.
+pub fn par_map<T: Sync, R: Send>(
+    threads: usize,
+    items: &[T],
+    f: impl Fn(&T) -> R + Sync,
+) -> Vec<R> {
+    par_map_indexed(threads, items.len(), |i| f(&items[i]))
+}
+
+/// Parallel filter-map over `0..n`, preserving index order of survivors.
+pub fn par_filter_map_indexed<R: Send>(
+    threads: usize,
+    n: usize,
+    f: impl Fn(usize) -> Option<R> + Sync,
+) -> Vec<R> {
+    par_map_indexed(threads, n, f).into_iter().flatten().collect()
+}
+
+/// Run one closure per item of `items`, each receiving `&mut` access to
+/// exactly its own element (disjoint mutation — the per-shard apply
+/// pattern).
+pub fn par_for_each_mut<T: Send>(
+    threads: usize,
+    items: &mut [T],
+    f: impl Fn(usize, &mut T) + Sync,
+) {
+    let n = items.len();
+    let threads = effective_threads(threads, n);
+    if threads <= 1 {
+        for (i, item) in items.iter_mut().enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|scope| {
+        let mut rest = items;
+        let mut base = 0usize;
+        for _ in 0..threads {
+            let take = chunk.min(rest.len());
+            if take == 0 {
+                break;
+            }
+            let (mine, tail) = rest.split_at_mut(take);
+            rest = tail;
+            let f = &f;
+            let start = base;
+            base += take;
+            scope.spawn(move || {
+                for (i, item) in mine.iter_mut().enumerate() {
+                    f(start + i, item);
+                }
+            });
+        }
+    });
+}
+
+/// Default worker count: the machine's logical cores.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+fn effective_threads(threads: usize, n: usize) -> usize {
+    threads.max(1).min(n.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn map_indexed_order_is_stable() {
+        for t in [1, 2, 3, 8, 64] {
+            let out = par_map_indexed(t, 1000, |i| i * i);
+            assert_eq!(out, (0..1000).map(|i| i * i).collect::<Vec<_>>(), "t={t}");
+        }
+    }
+
+    #[test]
+    fn map_over_slice() {
+        let xs = vec![1, 2, 3, 4, 5];
+        assert_eq!(par_map(4, &xs, |x| x * 10), vec![10, 20, 30, 40, 50]);
+    }
+
+    #[test]
+    fn filter_map_keeps_order() {
+        let out = par_filter_map_indexed(4, 100, |i| (i % 3 == 0).then_some(i));
+        assert_eq!(out, (0..100).filter(|i| i % 3 == 0).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn for_each_mut_touches_every_item_once() {
+        let mut xs = vec![0usize; 257];
+        let calls = AtomicUsize::new(0);
+        par_for_each_mut(8, &mut xs, |i, x| {
+            *x = i + 1;
+            calls.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 257);
+        assert!(xs.iter().enumerate().all(|(i, &x)| x == i + 1));
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        assert!(par_map_indexed(8, 0, |i| i).is_empty());
+        assert_eq!(par_map_indexed(8, 1, |i| i), vec![0]);
+    }
+
+    #[test]
+    fn actually_uses_threads() {
+        // With 4 workers on 4 chunks, max observed concurrency > 1 —
+        // verified indirectly via distinct thread ids.
+        let ids = par_map_indexed(4, 4, |_| {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            std::thread::current().id()
+        });
+        let distinct: std::collections::HashSet<_> = ids.into_iter().collect();
+        assert!(distinct.len() > 1);
+    }
+}

@@ -1,0 +1,318 @@
+//! A persistent scoped thread pool (offline `rayon`-core substitute).
+//!
+//! The BSP engines run many short parallel phases per round; spawning OS
+//! threads per phase (as `util::parallel` does) costs more than the phase
+//! itself at realistic shard counts. [`Pool`] keeps `threads` workers alive
+//! for the lifetime of an engine run and hands them borrowed closures.
+//!
+//! Safety model: [`Pool::par_map_indexed`] erases the closure's lifetime to
+//! send it to the workers, then **blocks until every chunk completes**
+//! before returning, so the borrowed environment strictly outlives all
+//! worker access (the classic scoped-pool argument). Worker panics are
+//! captured and re-raised on the caller thread.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<(VecDeque<Job>, bool /* shutdown */)>,
+    cv: Condvar,
+}
+
+/// Fixed-size persistent worker pool.
+pub struct Pool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl Pool {
+    /// Spawn `threads` workers (min 1).
+    pub fn new(threads: usize) -> Pool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new((VecDeque::new(), false)),
+            cv: Condvar::new(),
+        });
+        let workers = (0..threads)
+            .map(|_| {
+                let shared = shared.clone();
+                std::thread::spawn(move || loop {
+                    let job = {
+                        let mut guard = shared.queue.lock().unwrap();
+                        loop {
+                            if let Some(job) = guard.0.pop_front() {
+                                break Some(job);
+                            }
+                            if guard.1 {
+                                break None;
+                            }
+                            guard = shared.cv.wait(guard).unwrap();
+                        }
+                    };
+                    match job {
+                        Some(job) => job(),
+                        None => return,
+                    }
+                })
+            })
+            .collect();
+        Pool {
+            shared,
+            workers,
+            threads,
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Parallel indexed map: results in index order. The closure may borrow
+    /// from the caller's stack; see the module-level safety argument.
+    pub fn par_map_indexed<R: Send>(&self, n: usize, f: impl Fn(usize) -> R + Sync) -> Vec<R> {
+        if n == 0 {
+            return Vec::new();
+        }
+        // Small inputs: run inline, skip dispatch overhead entirely.
+        if n == 1 || self.threads == 1 {
+            return (0..n).map(f).collect();
+        }
+
+        let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+        out.resize_with(n, || None);
+
+        // Work-stealing over fixed-size chunks via a shared cursor.
+        let chunk = n.div_ceil(self.threads * 4).max(1);
+        let n_chunks = n.div_ceil(chunk);
+        let cursor = AtomicUsize::new(0);
+        let runners = self.threads.min(n_chunks);
+        // The latch counts RUNNERS (dispatched jobs + the caller), each
+        // signalling exactly once on exit: after `wait` returns no thread
+        // can still touch the borrowed context below.
+        let latch = Latch::new(runners + 1);
+
+        let ctx = Ctx {
+            out: out.as_mut_ptr(),
+            f: &f,
+            cursor: &cursor,
+            latch: &latch,
+            n,
+            chunk,
+            n_chunks,
+        };
+        // Type+lifetime erasure: the queued job captures only a raw
+        // pointer and a monomorphic thunk (both 'static types). Workers
+        // dereference `ctx` strictly before signalling the latch, and we
+        // block on the latch before `ctx`/`f`/`out` leave scope.
+        let ctx_erased = SendPtr(&ctx as *const Ctx<'_, R> as *mut ());
+        let thunk: fn(*const ()) = run_chunks_thunk::<R>;
+        {
+            let mut guard = self.shared.queue.lock().unwrap();
+            for _ in 0..runners {
+                guard.0.push_back(Box::new(move || {
+                    // Bind the wrapper whole so the Send impl applies
+                    // (field-precise capture would grab the raw pointer).
+                    let ptr = ctx_erased;
+                    thunk(ptr.0 as *const ())
+                }));
+            }
+        }
+        self.shared.cv.notify_all();
+
+        // The caller participates too (keeps 1-thread pools correct and
+        // cuts latency on small phases).
+        run_chunks(&ctx);
+        latch.wait();
+
+        out.into_iter().map(|o| o.expect("chunk filled")).collect()
+    }
+
+    /// Parallel map over a slice.
+    pub fn par_map<T: Sync, R: Send>(&self, items: &[T], f: impl Fn(&T) -> R + Sync) -> Vec<R> {
+        self.par_map_indexed(items.len(), |i| f(&items[i]))
+    }
+
+    /// Parallel filter-map over `0..n`, order preserved.
+    pub fn par_filter_map_indexed<R: Send>(
+        &self,
+        n: usize,
+        f: impl Fn(usize) -> Option<R> + Sync,
+    ) -> Vec<R> {
+        self.par_map_indexed(n, f).into_iter().flatten().collect()
+    }
+}
+
+/// Parallel-map context handed to workers through a type-erased pointer.
+/// Validity is enforced by the latch protocol in `par_map_indexed`.
+struct Ctx<'a, R> {
+    out: *mut Option<R>,
+    f: &'a (dyn Fn(usize) -> R + Sync + 'a),
+    cursor: &'a AtomicUsize,
+    latch: &'a Latch,
+    n: usize,
+    chunk: usize,
+    n_chunks: usize,
+}
+
+fn run_chunks_thunk<R: Send>(p: *const ()) {
+    // SAFETY: `p` was produced from a live `Ctx<R>` whose owner blocks on
+    // the latch until this call signals completion; the reference created
+    // here does not escape the call.
+    run_chunks(unsafe { &*(p as *const Ctx<'_, R>) })
+}
+
+/// The chunk loop shared by workers and the caller thread. Signals the
+/// latch exactly once, on exit.
+fn run_chunks<R: Send>(ctx: &Ctx<'_, R>) {
+    let (f, cursor, latch) = (ctx.f, ctx.cursor, ctx.latch);
+    let mut panicked = false;
+    loop {
+        let c = cursor.fetch_add(1, Ordering::Relaxed);
+        if c >= ctx.n_chunks {
+            break;
+        }
+        let lo = c * ctx.chunk;
+        let hi = (lo + ctx.chunk).min(ctx.n);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            for i in lo..hi {
+                // SAFETY: each index is written by exactly one chunk owner.
+                unsafe { ctx.out.add(i).write(Some(f(i))) };
+            }
+        }));
+        panicked |= result.is_err();
+    }
+    latch.done(panicked);
+}
+
+/// Countdown latch with panic flag.
+struct Latch {
+    state: Mutex<(usize, bool)>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(count: usize) -> Latch {
+        Latch {
+            state: Mutex::new((count, false)),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn done(&self, panicked: bool) {
+        let mut guard = self.state.lock().unwrap();
+        guard.0 -= 1;
+        guard.1 |= panicked;
+        if guard.0 == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut guard = self.state.lock().unwrap();
+        while guard.0 > 0 {
+            guard = self.cv.wait(guard).unwrap();
+        }
+        if guard.1 {
+            panic!("pool worker panicked");
+        }
+    }
+}
+
+/// Raw pointer wrapper that asserts cross-thread sendability for the
+/// disjoint-write pattern above.
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        SendPtr(self.0)
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.shared.queue.lock().unwrap().1 = true;
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_matches_sequential() {
+        let pool = Pool::new(4);
+        for n in [0usize, 1, 7, 100, 1000] {
+            let got = pool.par_map_indexed(n, |i| i * 3);
+            assert_eq!(got, (0..n).map(|i| i * 3).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn borrows_environment() {
+        let pool = Pool::new(3);
+        let data: Vec<u64> = (0..500).collect();
+        let sum: u64 = pool.par_map_indexed(500, |i| data[i] * 2).iter().sum();
+        assert_eq!(sum, 2 * (499 * 500 / 2));
+    }
+
+    #[test]
+    fn reusable_across_many_phases() {
+        let pool = Pool::new(4);
+        for phase in 0..200 {
+            let v = pool.par_map_indexed(37, |i| i + phase);
+            assert_eq!(v[0], phase);
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = Pool::new(1);
+        let v = pool.par_map_indexed(10, |i| i);
+        assert_eq!(v.len(), 10);
+    }
+
+    #[test]
+    fn filter_map_preserves_order() {
+        let pool = Pool::new(4);
+        let v = pool.par_filter_map_indexed(100, |i| (i % 7 == 0).then_some(i));
+        assert_eq!(v, (0..100).filter(|i| i % 7 == 0).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn propagates_panics() {
+        let pool = Pool::new(2);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.par_map_indexed(64, |i| {
+                if i == 33 {
+                    panic!("boom");
+                }
+                i
+            })
+        }));
+        assert!(result.is_err());
+        // Pool still usable afterwards.
+        assert_eq!(pool.par_map_indexed(3, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn uses_multiple_threads() {
+        let pool = Pool::new(4);
+        let ids = pool.par_map_indexed(16, |_| {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            std::thread::current().id()
+        });
+        let distinct: std::collections::HashSet<_> = ids.into_iter().collect();
+        assert!(distinct.len() > 1);
+    }
+}

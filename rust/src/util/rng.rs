@@ -1,0 +1,282 @@
+//! Deterministic PRNG and distribution samplers (offline `rand` substitute).
+//!
+//! Core generator: **xoshiro256++** seeded through SplitMix64 — fast,
+//! well-tested statistical quality, trivially reproducible across runs and
+//! thread counts (every generator site owns its own seeded instance).
+
+/// xoshiro256++ generator.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second output of the Box–Muller transform.
+    spare_normal: Option<f64>,
+}
+
+impl Rng {
+    /// Seed via SplitMix64 so that small/sequential seeds decorrelate.
+    pub fn seed_from(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = move || {
+            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        let s = [next(), next(), next(), next()];
+        Rng {
+            s,
+            spare_normal: None,
+        }
+    }
+
+    /// Derive an independent stream (for per-thread / per-shard use).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        Rng::seed_from(self.next_u64() ^ stream.wrapping_mul(0xA076_1D64_78BD_642F))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire's unbiased method).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        let n = n as u64;
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo >= n.wrapping_neg() % n {
+                return (m >> 64) as usize;
+            }
+        }
+    }
+
+    /// Uniform integer in `[lo, hi)`.
+    #[inline]
+    pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo)
+    }
+
+    /// Bernoulli trial.
+    #[inline]
+    pub fn bool_with(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller (with spare caching).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        loop {
+            let u = self.f64();
+            if u <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let v = self.f64();
+            let r = (-2.0 * u.ln()).sqrt();
+            let (s, c) = (std::f64::consts::TAU * v).sin_cos();
+            self.spare_normal = Some(r * s);
+            return r * c;
+        }
+    }
+
+    /// Normal with given mean / standard deviation.
+    #[inline]
+    pub fn normal_with(&mut self, mean: f64, sd: f64) -> f64 {
+        mean + sd * self.normal()
+    }
+
+    /// Zipf-distributed integer in `[1, n]` with exponent `s > 1`, via
+    /// rejection from the continuous envelope `x^{-s}` (Hörmann-style).
+    pub fn zipf(&mut self, n: u64, s: f64) -> u64 {
+        assert!(n >= 1 && s > 1.0);
+        // H(x) = (x^{1-s} - 1) / (1 - s) is the antiderivative of x^{-s}
+        // (shifted so H(1) = 0); H is increasing, so inversion sampling on
+        // [0.5, n + 0.5] plus a per-bucket rejection yields the exact pmf.
+        let h = |x: f64| ((1.0 - s) * x.ln()).exp_m1() / (1.0 - s);
+        let h_inv = |y: f64| (1.0 + (1.0 - s) * y).powf(1.0 / (1.0 - s));
+        let (lo, hi) = (h(0.5), h(n as f64 + 0.5));
+        loop {
+            let u = lo + self.f64() * (hi - lo);
+            let k = h_inv(u).round().clamp(1.0, n as f64) as u64;
+            // Bucket mass under the envelope vs the true pmf value; for the
+            // convex decreasing x^{-s} the envelope dominates (midpoint
+            // rule), so this is a valid rejection step.
+            let hk = h(k as f64 + 0.5) - h(k as f64 - 0.5);
+            let pk = (k as f64).powf(-s);
+            if self.f64() * hk <= pk {
+                return k;
+            }
+        }
+    }
+
+    /// Gamma(shape k, scale 1) via Marsaglia–Tsang (k >= 0.01).
+    pub fn gamma(&mut self, k: f64) -> f64 {
+        assert!(k > 0.0);
+        if k < 1.0 {
+            // Boost: Gamma(k) = Gamma(k+1) * U^{1/k}.
+            let g = self.gamma(k + 1.0);
+            return g * self.f64().max(f64::MIN_POSITIVE).powf(1.0 / k);
+        }
+        let d = k - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln())
+            {
+                return d * v;
+            }
+        }
+    }
+
+    /// Dirichlet sample over the given concentration parameters.
+    pub fn dirichlet(&mut self, alphas: &[f64]) -> Vec<f64> {
+        let gs: Vec<f64> = alphas.iter().map(|&a| self.gamma(a)).collect();
+        let sum: f64 = gs.iter().sum();
+        gs.into_iter().map(|g| g / sum.max(f64::MIN_POSITIVE)).collect()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let mut a = Rng::seed_from(1);
+        let mut b = Rng::seed_from(1);
+        let mut c = Rng::seed_from(2);
+        let (xa, xb, xc) = (a.next_u64(), b.next_u64(), c.next_u64());
+        assert_eq!(xa, xb);
+        assert_ne!(xa, xc);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::seed_from(3);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut r = Rng::seed_from(4);
+        let mut counts = [0usize; 5];
+        for _ in 0..50_000 {
+            counts[r.below(5)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 500.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::seed_from(5);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn zipf_is_heavy_headed() {
+        let mut r = Rng::seed_from(6);
+        let n = 20_000;
+        let mut ones = 0;
+        for _ in 0..n {
+            let k = r.zipf(100, 1.5);
+            assert!((1..=100).contains(&k));
+            if k == 1 {
+                ones += 1;
+            }
+        }
+        // P[k=1] ≈ 1/ζ(1.5 truncated) ≈ 0.38 for n=100.
+        assert!(ones as f64 / n as f64 > 0.25, "{ones}");
+    }
+
+    #[test]
+    fn gamma_mean_matches_shape() {
+        let mut r = Rng::seed_from(7);
+        for k in [0.5, 1.0, 3.0, 10.0] {
+            let n = 40_000;
+            let mean = (0..n).map(|_| r.gamma(k)).sum::<f64>() / n as f64;
+            assert!((mean - k).abs() < 0.1 * k.max(1.0), "k={k} mean={mean}");
+        }
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut r = Rng::seed_from(8);
+        let v = r.dirichlet(&[1.0, 0.3, 0.1]);
+        assert_eq!(v.len(), 3);
+        assert!((v.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(v.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::seed_from(9);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fork_streams_differ() {
+        let mut r = Rng::seed_from(10);
+        let mut a = r.fork(0);
+        let mut b = r.fork(1);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

@@ -1,0 +1,155 @@
+//! Distributed-engine invariants: determinism across topologies, network
+//! accounting sanity, metrics consistency, and robustness properties.
+
+use rac_hac::data::{gaussian_mixture, grid1d_graph, topic_docs};
+use rac_hac::dist::{DistConfig, DistRacEngine};
+use rac_hac::graph::Graph;
+use rac_hac::knn::{knn_graph, Backend};
+use rac_hac::linkage::Linkage;
+use rac_hac::rac::RacEngine;
+use rac_hac::util::prop::for_all_seeds;
+
+fn workload(seed: u64) -> Graph {
+    let ds = gaussian_mixture(400, 16, 10, 0.6, 0.05, seed);
+    knn_graph(&ds, 8, Backend::Native, None).unwrap()
+}
+
+#[test]
+fn identical_dendrogram_across_topologies() {
+    let g = workload(1);
+    let base = DistRacEngine::new(&g, Linkage::Average, DistConfig::new(1, 1)).run();
+    for (m, c) in [(2, 1), (3, 2), (7, 1), (16, 4)] {
+        let r = DistRacEngine::new(
+            &g,
+            Linkage::Average,
+            DistConfig::new(m, c),
+        )
+        .run();
+        assert!(
+            base.dendrogram.same_clustering(&r.dendrogram, 1e-12),
+            "topology ({m},{c}) changed the clustering"
+        );
+        // Merge ROUND structure must also be identical (the algorithm is
+        // deterministic; only wall-clock may differ).
+        let rounds_a: Vec<usize> = base.metrics.rounds.iter().map(|x| x.merges).collect();
+        let rounds_b: Vec<usize> = r.metrics.rounds.iter().map(|x| x.merges).collect();
+        assert_eq!(rounds_a, rounds_b, "topology ({m},{c}) changed round structure");
+    }
+}
+
+#[test]
+fn repeated_runs_are_bitwise_deterministic() {
+    let g = workload(2);
+    let cfg = DistConfig::new(4, 2);
+    let a = DistRacEngine::new(&g, Linkage::Complete, cfg).run();
+    let b = DistRacEngine::new(&g, Linkage::Complete, cfg).run();
+    let ma: Vec<_> = a.dendrogram.merges().iter().map(|m| (m.a, m.b, m.weight)).collect();
+    let mb: Vec<_> = b.dendrogram.merges().iter().map(|m| (m.a, m.b, m.weight)).collect();
+    assert_eq!(ma, mb, "same run must produce identical merge lists");
+}
+
+#[test]
+fn single_machine_has_zero_network() {
+    let g = workload(3);
+    let r = DistRacEngine::new(&g, Linkage::Average, DistConfig::new(1, 4)).run();
+    assert_eq!(r.metrics.total_net_messages(), 0);
+    assert_eq!(r.metrics.total_net_bytes(), 0);
+}
+
+#[test]
+fn network_grows_with_machines() {
+    let g = workload(4);
+    let mut prev = 0usize;
+    for m in [2usize, 4, 8] {
+        let r = DistRacEngine::new(
+            &g,
+            Linkage::Average,
+            DistConfig::new(m, 1),
+        )
+        .run();
+        let bytes = r.metrics.total_net_bytes();
+        assert!(bytes > prev, "bytes must grow with shard count");
+        prev = bytes;
+    }
+}
+
+#[test]
+fn metrics_account_merges_and_clusters() {
+    for_all_seeds(0xACC7, 8, |rng| {
+        let g = workload(rng.next_u64());
+        let r = DistRacEngine::new(
+            &g,
+            Linkage::Average,
+            DistConfig::new(3, 2),
+        )
+        .run();
+        // Merge conservation.
+        assert_eq!(r.metrics.total_merges(), r.dendrogram.merges().len());
+        // Cluster-count recurrence: clusters_{t+1} = clusters_t - merges_t.
+        for w in r.metrics.rounds.windows(2) {
+            assert_eq!(w[1].clusters, w[0].clusters - w[0].merges);
+        }
+        // Alpha/beta in sane ranges.
+        for rm in &r.metrics.rounds {
+            assert!(rm.alpha() <= 0.5 + 1e-9, "alpha can never exceed 1/2");
+            assert!(rm.nn_updates <= rm.clusters);
+        }
+    });
+}
+
+#[test]
+fn beta_stays_bounded_on_metric_graphs() {
+    // Theorem 9's beta assumption, on the workload class the paper says it
+    // holds for.
+    let g = workload(5);
+    let r = DistRacEngine::new(&g, Linkage::Complete, DistConfig::new(4, 1)).run();
+    assert!(
+        r.metrics.max_beta() <= g.max_degree() as f64,
+        "beta {} exceeded max degree {}",
+        r.metrics.max_beta(),
+        g.max_degree()
+    );
+}
+
+#[test]
+fn handles_disconnected_graphs() {
+    // Forest of components, one per island; engine must stop cleanly.
+    let mut edges = Vec::new();
+    for island in 0..10u32 {
+        let b = island * 10;
+        for i in 0..9 {
+            edges.push((b + i, b + i + 1, 1.0 + (i as f64) * 0.1 + island as f64 * 0.01));
+        }
+    }
+    let g = Graph::from_edges(100, edges);
+    let r = DistRacEngine::new(&g, Linkage::Average, DistConfig::new(4, 2)).run();
+    assert_eq!(r.dendrogram.merges().len(), 90);
+    assert_eq!(r.dendrogram.remaining_clusters(), 10);
+}
+
+#[test]
+fn more_machines_than_clusters() {
+    let g = grid1d_graph(5, 1);
+    let r = DistRacEngine::new(&g, Linkage::Single, DistConfig::new(16, 4)).run();
+    assert_eq!(r.dendrogram.merges().len(), 4);
+}
+
+#[test]
+fn max_rounds_cap_halts_cleanly() {
+    let g = workload(6);
+    let r = DistRacEngine::new(&g, Linkage::Average, DistConfig::default())
+        .with_max_rounds(3)
+        .run();
+    assert!(r.metrics.rounds.len() <= 3);
+    assert!(r.dendrogram.merges().len() < g.n());
+    r.dendrogram.validate().unwrap();
+}
+
+#[test]
+fn cosine_docs_workload_round_trip() {
+    let ds = topic_docs(300, 32, 8, 9);
+    let g = knn_graph(&ds, 6, Backend::Native, None).unwrap();
+    let shared = RacEngine::new(&g, Linkage::Average).run();
+    let dist = DistRacEngine::new(&g, Linkage::Average, DistConfig::new(5, 2)).run();
+    assert!(shared.dendrogram.same_clustering(&dist.dendrogram, 1e-12));
+}

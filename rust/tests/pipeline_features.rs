@@ -1,0 +1,134 @@
+//! Feature-level integration: flat cuts on engine output, ε-ball graphs
+//! through the pipeline, config round trips, and input-validation failure
+//! paths.
+
+use rac_hac::config::{EngineSpec, GraphSpec, RunConfig};
+use rac_hac::data::{gaussian_mixture, grid1d_graph};
+use rac_hac::graph::{read_graph, write_graph, Graph};
+use rac_hac::knn::epsilon_graph;
+use rac_hac::linkage::Linkage;
+use rac_hac::pipeline;
+use rac_hac::rac::RacEngine;
+
+#[test]
+fn epsilon_graph_pipeline() {
+    let cfg = RunConfig::from_toml_str(
+        "[dataset]\ntype = \"sift_like\"\nn = 150\nd = 8\nclusters = 3\nspread = 0.3\n\
+         noise_frac = 0.0\n[graph]\ntype = \"epsilon\"\neps = 30.0\n\
+         [cluster]\nlinkage = \"average\"\n[engine]\ntype = \"rac\"\n",
+    )
+    .unwrap();
+    assert_eq!(cfg.graph, GraphSpec::Epsilon { eps: 30.0 });
+    let out = pipeline::run(&cfg).unwrap();
+    out.result.dendrogram.validate().unwrap();
+    // Within-cluster distances << 30 at spread 0.3 => components merge.
+    assert!(out.result.dendrogram.merges().len() > 100);
+}
+
+#[test]
+fn threshold_cut_matches_k_cut_on_monotone_output() {
+    let g = grid1d_graph(200, 9);
+    let r = RacEngine::new(&g, Linkage::Single).run();
+    let d = &r.dendrogram;
+    // For a monotone dendrogram, cutting just above the (n-k)-th smallest
+    // merge weight equals the k-cut.
+    let mut ws: Vec<f64> = d.merges().iter().map(|m| m.weight).collect();
+    ws.sort_by(|a, b| a.total_cmp(b));
+    let k = 7;
+    let thr = (ws[200 - k - 1] + ws[200 - k]) / 2.0;
+    let by_thr = d.cut_threshold(thr);
+    let by_k = d.cut_k(k);
+    for i in 0..200 {
+        for j in (i + 1)..200 {
+            assert_eq!(
+                by_thr[i] == by_thr[j],
+                by_k[i] == by_k[j],
+                "co-membership mismatch at ({i},{j})"
+            );
+        }
+    }
+}
+
+#[test]
+fn epsilon_graph_respects_radius_on_mixture() {
+    let ds = gaussian_mixture(100, 8, 4, 0.2, 0.0, 3);
+    let g = epsilon_graph(&ds, 1.5);
+    g.validate().unwrap();
+    for u in 0..100u32 {
+        for (v, w) in g.neighbors(u) {
+            assert!(w < 1.5);
+            assert!((ds.dissimilarity(u as usize, v as usize) - w).abs() < 1e-12);
+        }
+    }
+}
+
+#[test]
+fn graph_io_large_roundtrip() {
+    let ds = gaussian_mixture(300, 8, 6, 0.5, 0.02, 4);
+    let g = rac_hac::knn::knn_graph(&ds, 7, rac_hac::knn::Backend::Native, None).unwrap();
+    let dir = std::env::temp_dir().join(format!("racio-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("knn.bin");
+    write_graph(&g, &path).unwrap();
+    let g2 = read_graph(&path).unwrap();
+    assert_eq!(g, g2);
+    // The reloaded graph clusters identically.
+    let a = RacEngine::new(&g, Linkage::Average).run();
+    let b = RacEngine::new(&g2, Linkage::Average).run();
+    assert!(a.dendrogram.same_clustering(&b.dendrogram, 1e-15));
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn truncated_graph_file_rejected() {
+    let ds = gaussian_mixture(50, 4, 2, 0.5, 0.0, 5);
+    let g = rac_hac::knn::knn_graph(&ds, 4, rac_hac::knn::Backend::Native, None).unwrap();
+    let dir = std::env::temp_dir().join(format!("ractrunc-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("g.bin");
+    write_graph(&g, &path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    // Truncate at several points: every prefix must fail cleanly.
+    for cut in [8usize, 24, bytes.len() / 2, bytes.len() - 4] {
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+        assert!(read_graph(&path).is_err(), "cut={cut} accepted");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn engine_spec_round_trip_through_pipeline() {
+    for engine in ["naive_hac", "nn_chain", "rac", "dist_rac"] {
+        let cfg = RunConfig::from_toml_str(&format!(
+            "[dataset]\ntype = \"grid1d\"\nn = 80\n[cluster]\nlinkage = \"single\"\n\
+             [engine]\ntype = \"{engine}\"\n"
+        ))
+        .unwrap();
+        let out = pipeline::run(&cfg).unwrap();
+        assert_eq!(out.result.dendrogram.merges().len(), 79, "{engine}");
+    }
+    let cfg = RunConfig::from_toml_str(
+        "[engine]\ntype = \"nn_chain\"\n[cluster]\nlinkage = \"centroid\"\n\
+         [dataset]\ntype = \"grid1d\"\nn = 10\n",
+    )
+    .unwrap();
+    assert!(matches!(cfg.engine, EngineSpec::NnChain));
+    assert!(pipeline::run(&cfg).is_err(), "centroid nn_chain must fail");
+}
+
+#[test]
+fn degenerate_graphs_all_engines() {
+    // Two nodes, one edge; star graph; path with equal weights.
+    let tiny = Graph::from_edges(2, [(0, 1, 1.0)]);
+    let star = Graph::from_edges(
+        5,
+        (1..5u32).map(|i| (0u32, i, 1.0 + i as f64 * 0.1)),
+    );
+    let equal = Graph::from_edges(4, [(0, 1, 1.0), (1, 2, 1.0), (2, 3, 1.0)]);
+    for g in [&tiny, &star, &equal] {
+        let hac = rac_hac::hac::naive_hac(g, Linkage::Average);
+        let rac = RacEngine::new(g, Linkage::Average).run();
+        assert!(hac.same_clustering(&rac.dendrogram, 1e-12));
+        assert_eq!(rac.dendrogram.merges().len(), g.n() - 1);
+    }
+}

@@ -1,0 +1,180 @@
+//! Theorem 1 property tests: for reducible linkages, every engine in the
+//! crate — naive heap HAC, NN-chain, shared-memory RAC, distributed RAC —
+//! produces the SAME clustering, on randomized graph families.
+//!
+//! These are the crate's core correctness guarantee; the generators are
+//! seeded and a failure message reports the reproducing seed
+//! (`util::prop`).
+
+use rac_hac::data::{gaussian_mixture, grid1d_graph, random_regular_graph, topic_docs};
+use rac_hac::dist::{DistConfig, DistRacEngine};
+use rac_hac::graph::Graph;
+use rac_hac::hac::{naive_hac, nn_chain};
+use rac_hac::knn::{complete_graph, knn_graph, Backend};
+use rac_hac::linkage::Linkage;
+use rac_hac::rac::RacEngine;
+use rac_hac::util::prop::for_all_seeds;
+use rac_hac::util::rng::Rng;
+
+/// Random sparse connected-ish graph with continuous weights (ties have
+/// probability zero) — the harshest generic case for merge ordering.
+fn random_sparse(rng: &mut Rng) -> Graph {
+    let n = rng.range_usize(8, 120);
+    let mut edges = Vec::new();
+    // Random spanning chain + random extra edges.
+    for i in 1..n {
+        edges.push(((i - 1) as u32, i as u32, rng.range_f64(0.1, 10.0)));
+    }
+    let extra = rng.range_usize(0, 3 * n);
+    for _ in 0..extra {
+        let u = rng.below(n);
+        let v = rng.below(n);
+        if u != v {
+            edges.push((u as u32, v as u32, rng.range_f64(0.1, 10.0)));
+        }
+    }
+    Graph::from_edges(n, edges)
+}
+
+fn assert_all_engines_agree(g: &Graph, linkage: Linkage, ctx: &str) {
+    let hac = naive_hac(g, linkage);
+    hac.validate().unwrap_or_else(|e| panic!("{ctx}: HAC invalid: {e}"));
+    let chain = nn_chain(g, linkage);
+    assert!(
+        hac.same_clustering(&chain, 1e-9),
+        "{ctx}: nn_chain != naive_hac"
+    );
+    let rac = RacEngine::new(g, linkage).run();
+    assert!(
+        hac.same_clustering(&rac.dendrogram, 1e-9),
+        "{ctx}: rac != naive_hac"
+    );
+    for machines in [2usize, 5] {
+        let dist = DistRacEngine::new(
+            g,
+            linkage,
+            DistConfig::new(machines, 2),
+        )
+        .run();
+        assert!(
+            hac.same_clustering(&dist.dendrogram, 1e-9),
+            "{ctx}: dist_rac(m={machines}) != naive_hac"
+        );
+    }
+}
+
+#[test]
+fn engines_agree_on_random_sparse_graphs() {
+    for_all_seeds(0xA11CE, 30, |rng| {
+        let g = random_sparse(rng);
+        for linkage in Linkage::SPARSE_REDUCIBLE {
+            assert_all_engines_agree(&g, linkage, &format!("sparse {linkage:?}"));
+        }
+    });
+}
+
+#[test]
+fn engines_agree_on_knn_graphs() {
+    for_all_seeds(0xB0B, 8, |rng| {
+        let n = rng.range_usize(60, 200);
+        let ds = gaussian_mixture(n, 8, 5, 0.5, 0.05, rng.next_u64());
+        let g = knn_graph(&ds, 6, Backend::Native, None).unwrap();
+        for linkage in Linkage::SPARSE_REDUCIBLE {
+            assert_all_engines_agree(&g, linkage, &format!("knn {linkage:?}"));
+        }
+    });
+}
+
+#[test]
+fn engines_agree_on_complete_graphs_with_ward() {
+    for_all_seeds(0xC0FFEE, 6, |rng| {
+        let n = rng.range_usize(16, 64);
+        let ds = topic_docs(n, 16, 4, rng.next_u64());
+        let g = complete_graph(&ds);
+        for linkage in [
+            Linkage::Single,
+            Linkage::Complete,
+            Linkage::Average,
+            Linkage::WeightedAverage,
+            Linkage::Ward,
+        ] {
+            // Ward on cosine "distances" is not geometrically meaningful
+            // but the Lance–Williams algebra must still agree exactly.
+            let hac = naive_hac(&g, linkage);
+            let rac = RacEngine::new(&g, linkage).run();
+            assert!(
+                hac.same_clustering(&rac.dendrogram, 1e-6),
+                "complete {linkage:?}"
+            );
+        }
+    });
+}
+
+#[test]
+fn engines_agree_on_grids_and_regular_graphs() {
+    for_all_seeds(0xD1CE, 10, |rng| {
+        let n = rng.range_usize(50, 400);
+        let g = grid1d_graph(n, rng.next_u64());
+        assert_all_engines_agree(&g, Linkage::Single, "grid single");
+        let g = random_regular_graph(n, 4, rng.next_u64());
+        assert_all_engines_agree(&g, Linkage::Average, "regular average");
+    });
+}
+
+#[test]
+fn duplicate_points_exact_ties() {
+    // Duplicated points create exact zero-distance ties; the shared
+    // (weight, id) tie-break must keep all engines in lockstep.
+    for_all_seeds(0x7135, 10, |rng| {
+        let n = rng.range_usize(20, 60);
+        let mut ds = gaussian_mixture(n, 4, 3, 0.5, 0.0, rng.next_u64());
+        // Duplicate a third of the rows onto earlier rows.
+        for i in 0..n / 3 {
+            let src = (2 * i).min(n - 1) * ds.d;
+            let dst = (2 * i + 1).min(n - 1) * ds.d;
+            let row: Vec<f32> = ds.rows[src..src + ds.d].to_vec();
+            ds.rows[dst..dst + ds.d].copy_from_slice(&row);
+        }
+        let g = complete_graph(&ds);
+        for linkage in [Linkage::Single, Linkage::Average] {
+            assert_all_engines_agree(&g, linkage, &format!("ties {linkage:?}"));
+        }
+    });
+}
+
+#[test]
+fn monotone_dendrograms_for_reducible_linkages() {
+    for_all_seeds(0x11AD, 20, |rng| {
+        let g = random_sparse(rng);
+        for linkage in Linkage::SPARSE_REDUCIBLE {
+            let r = RacEngine::new(&g, linkage).run();
+            assert_eq!(
+                r.dendrogram.inversions(),
+                0,
+                "reducible {linkage:?} produced an inversion"
+            );
+        }
+    });
+}
+
+#[test]
+fn flat_cuts_consistent_across_engines() {
+    // Same clustering => same flat cuts (up to label renaming): compare
+    // co-membership on sampled pairs.
+    for_all_seeds(0xF1A7, 10, |rng| {
+        let g = random_sparse(rng);
+        let a = naive_hac(&g, Linkage::Average);
+        let b = RacEngine::new(&g, Linkage::Average).run().dendrogram;
+        let k = rng.range_usize(1, g.n().min(8));
+        let (ca, cb) = (a.cut_k(k), b.cut_k(k));
+        for _ in 0..200 {
+            let i = rng.below(g.n());
+            let j = rng.below(g.n());
+            assert_eq!(
+                ca[i] == ca[j],
+                cb[i] == cb[j],
+                "cut co-membership differs for ({i},{j}) at k={k}"
+            );
+        }
+    });
+}

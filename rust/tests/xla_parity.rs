@@ -1,0 +1,154 @@
+//! XLA-path parity: the AOT Pallas kernels executed through PJRT must
+//! reproduce the pure-Rust oracle — distances, kNN graphs, and the full
+//! clustering pipeline.
+//!
+//! These tests need `artifacts/` (run `make artifacts` once); they skip
+//! with a notice when it is absent so `cargo test` stays runnable from a
+//! fresh checkout.
+
+use rac_hac::data::{gaussian_mixture, topic_docs, Metric};
+use rac_hac::hac::naive_hac;
+use rac_hac::knn::{knn_graph, Backend};
+use rac_hac::linkage::Linkage;
+use rac_hac::rac::RacEngine;
+use rac_hac::runtime::{default_artifacts_dir, KernelRuntime};
+
+fn runtime_or_skip() -> Option<KernelRuntime> {
+    match KernelRuntime::open(default_artifacts_dir()) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (no AOT artifacts: {e:#}) — run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn distance_blocks_match_oracle_l2() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let meta = rt.manifest().find("distance", Metric::L2, 64).unwrap().clone();
+    let ds = gaussian_mixture(meta.m + meta.n, 64, 8, 0.7, 0.0, 3);
+    let x = &ds.rows[..meta.m * 64];
+    let y = &ds.rows[meta.m * 64..(meta.m + meta.n) * 64];
+    let out = rt.distance_block(&meta, x, y).unwrap();
+    assert_eq!(out.len(), meta.m * meta.n);
+    for i in (0..meta.m).step_by(37) {
+        for j in (0..meta.n).step_by(41) {
+            let want = ds.dissimilarity(i, meta.m + j);
+            let got = out[i * meta.n + j] as f64;
+            assert!(
+                (got - want).abs() <= 1e-2 + 1e-4 * want.abs(),
+                "D[{i},{j}] = {got}, oracle {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn distance_blocks_match_oracle_cosine() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let meta = rt
+        .manifest()
+        .find("distance", Metric::Cosine, 64)
+        .unwrap()
+        .clone();
+    let ds = topic_docs(meta.m + meta.n, 64, 6, 5);
+    let x = &ds.rows[..meta.m * 64];
+    let y = &ds.rows[meta.m * 64..(meta.m + meta.n) * 64];
+    let out = rt.distance_block(&meta, x, y).unwrap();
+    for i in (0..meta.m).step_by(29) {
+        for j in (0..meta.n).step_by(31) {
+            let want = ds.dissimilarity(i, meta.m + j);
+            let got = out[i * meta.n + j] as f64;
+            assert!(
+                (got - want).abs() <= 1e-4 + 1e-4 * want.abs(),
+                "D[{i},{j}] = {got}, oracle {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn knn_blocks_sorted_and_consistent() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let meta = rt.manifest().find("knn", Metric::L2, 128).unwrap().clone();
+    let k = meta.k.unwrap();
+    let ds = gaussian_mixture(meta.m + meta.n, 128, 10, 0.7, 0.0, 7);
+    let x = &ds.rows[..meta.m * 128];
+    let y = &ds.rows[meta.m * 128..(meta.m + meta.n) * 128];
+    let (vals, idx) = rt.knn_block(&meta, x, y).unwrap();
+    assert_eq!(vals.len(), meta.m * k);
+    for r in 0..meta.m {
+        for c in 0..k {
+            let (v, j) = (vals[r * k + c], idx[r * k + c]);
+            assert!((0..meta.n as i32).contains(&j));
+            // Values ascending per row.
+            if c > 0 {
+                assert!(vals[r * k + c - 1] <= v + 1e-5);
+            }
+            // Value matches the claimed index's true distance.
+            let want = ds.dissimilarity(r, meta.m + j as usize);
+            assert!(
+                (v as f64 - want).abs() <= 1e-2 + 1e-4 * want.abs(),
+                "row {r} rank {c}: {v} vs oracle {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_knn_graph_matches_native() {
+    let Some(rt) = runtime_or_skip() else { return };
+    // Sizes straddling the 256/1024 tile boundaries, both metrics.
+    for (n, d, k, seed) in [(700usize, 64usize, 8usize, 1u64), (1300, 128, 12, 2)] {
+        let ds = gaussian_mixture(n, d, 12, 0.7, 0.02, seed);
+        let native = knn_graph(&ds, k, Backend::Native, None).unwrap();
+        let xla = knn_graph(&ds, k, Backend::Xla, Some(&rt)).unwrap();
+        assert_eq!(native.n(), xla.n());
+        // Edge sets must agree except for f32-rounding ties at the k-th
+        // boundary; demand >= 99.5% Jaccard overlap and identical graphs
+        // through the clustering.
+        let mut common = 0usize;
+        let mut total_native = 0usize;
+        for u in 0..n as u32 {
+            for (v, _) in native.neighbors(u) {
+                total_native += 1;
+                if xla.weight(u, v).is_some() {
+                    common += 1;
+                }
+            }
+        }
+        let overlap = common as f64 / total_native as f64;
+        assert!(
+            overlap >= 0.995,
+            "edge overlap only {overlap:.4} for n={n} d={d}"
+        );
+    }
+}
+
+#[test]
+fn xla_pipeline_clusters_correctly() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = topic_docs(600, 64, 10, 11);
+    let g = knn_graph(&ds, 8, Backend::Xla, Some(&rt)).unwrap();
+    g.validate().unwrap();
+    // Complete linkage: the paper's choice on sparse kNN graphs (average
+    // linkage over cosine kNN suffers hub-induced serialisation; Fig-2's
+    // News20/RCV1 average-linkage runs are complete graphs — see the
+    // fig2 bench).
+    let hac = naive_hac(&g, Linkage::Complete);
+    let rac = RacEngine::new(&g, Linkage::Complete).run();
+    assert!(hac.same_clustering(&rac.dendrogram, 1e-9));
+    // Clusterable data: far fewer rounds than merges.
+    assert!(rac.metrics.merge_rounds() * 3 < rac.metrics.total_merges());
+}
+
+#[test]
+fn unsupported_dim_reports_helpful_error() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = gaussian_mixture(300, 48, 5, 0.5, 0.0, 1); // d=48: no variant
+    let err = knn_graph(&ds, 4, Backend::Xla, Some(&rt)).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("no knn AOT variant"), "{msg}");
+    assert!(msg.contains("available dims"), "{msg}");
+}
