@@ -1,0 +1,17 @@
+# Convenience targets. `make artifacts` regenerates the AOT HLO kernel set
+# the (feature-gated) XLA runtime executes; the pure-Rust paths never need
+# it.
+
+.PHONY: artifacts build test clippy
+
+artifacts:
+	cd python && python -m compile.aot --out-dir ../artifacts
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+clippy:
+	cargo clippy -- -D warnings

@@ -1,0 +1,618 @@
+//! The distributed RAC engine (paper §5): the same three phases as
+//! [`crate::rac::RacEngine`], sharded across simulated machines with
+//! batched cross-shard messaging and first-class network accounting.
+//!
+//! ## Shard model
+//!
+//! Clusters are hash-partitioned over `machines` workers by id
+//! ([`shard::shard_of`]); a merged cluster keeps its leader's id, so
+//! ownership never migrates and every shard can locate any cluster's owner
+//! without coordination. Each round runs the paper's phases as bulk
+//! barriers, and every piece of state a shard needs from another shard is
+//! staged as a [`network::Message`] and batched per ordered machine pair —
+//! one RPC per non-empty pair per *communication step* (the merge phase
+//! has two steps: the fetch/lookup exchange before computing unions, and
+//! the patch push after applying them):
+//!
+//! 1. **Find reciprocal NNs** — NN-pointer queries/replies for clusters
+//!    whose cached nearest neighbor lives on another shard.
+//! 2. **Update dissimilarities** — leaders with a remote partner fetch the
+//!    partner's full neighbor map ([`network::Message::PartnerState`]);
+//!    pair views of remote neighbors are queried; patches to remote
+//!    non-merging neighbors ship as [`network::Message::EdgePatch`].
+//! 3. **Update nearest neighbors** — purely local rescans (the patches of
+//!    phase 2 already delivered everything a survivor needs).
+//!
+//! ## Accounting, not emulation
+//!
+//! This is a single-process *simulation*: the round computation reads the
+//! authoritative global state directly (bit-identical to the shared-memory
+//! engine, so Theorem 1 exactness transfers verbatim and the dendrogram is
+//! independent of the `(machines, cores)` topology), while every
+//! cross-shard batch is encoded through the real wire codec and accounted
+//! at its exact encoded length. Per round this produces `net_messages`
+//! (batched RPCs), `net_bytes` (wire bytes), and `t_sim` — a
+//! critical-path time model (max per-machine work per barrier phase,
+//! divided by cores for cluster-parallel phases, plus latency and
+//! bandwidth terms) corresponding to paper Table 2's resource columns.
+//! With `machines == 1` nothing ever crosses a shard boundary and all
+//! three counters are exactly zero.
+//!
+//! The former `coordinator` module stub was folded into this engine:
+//! [`DistRacEngine::run`] *is* the round orchestrator.
+
+pub mod network;
+pub mod shard;
+
+pub use network::{decode_batch, encode_batch, BatchRecord, Message, NetReport, Network};
+pub use shard::{partition, shard_of, ShardLoad};
+
+use std::time::{Duration, Instant};
+
+use rustc_hash::{FxHashMap, FxHashSet};
+
+use crate::dendrogram::{Dendrogram, Merge};
+use crate::graph::Graph;
+use crate::linkage::{EdgeState, Linkage, Weight};
+use crate::metrics::{RoundMetrics, RunMetrics};
+use crate::rac::logic::{compute_union_map, scan_nn, PairView};
+use crate::rac::{RacResult, NO_NN};
+
+/// Simulated cost of one work unit (one neighbor entry / flag op).
+const T_UNIT_NS: u128 = 200;
+/// Simulated per-RPC latency (one batched cross-shard message).
+const T_MSG_NS: u128 = 50_000;
+/// Simulated per-byte cost (~1 GB/s effective cross-machine bandwidth).
+const T_BYTE_NS: u128 = 1;
+
+/// Deployment topology for the distributed engine (paper Fig 3's knobs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DistConfig {
+    /// Number of shards / machines (≥ 1).
+    pub machines: usize,
+    /// Worker cores per machine; affects only the simulated critical-path
+    /// time `t_sim`, never the result (≥ 1).
+    pub cores_per_machine: usize,
+}
+
+impl DistConfig {
+    /// Build a topology; both knobs are clamped to at least 1.
+    pub fn new(machines: usize, cores_per_machine: usize) -> DistConfig {
+        DistConfig {
+            machines: machines.max(1),
+            cores_per_machine: cores_per_machine.max(1),
+        }
+    }
+}
+
+impl Default for DistConfig {
+    /// Matches the config-file defaults (`machines = 4`, `cpus = 2`).
+    fn default() -> DistConfig {
+        DistConfig::new(4, 2)
+    }
+}
+
+type UnionEntry = (u32, FxHashMap<u32, EdgeState>);
+
+/// Distributed RAC engine. Exact: for any topology the dendrogram is
+/// bitwise identical to [`crate::rac::RacEngine`]'s and therefore (for
+/// reducible linkages) to sequential HAC — Theorem 1.
+pub struct DistRacEngine {
+    linkage: Linkage,
+    cfg: DistConfig,
+    n: usize,
+    active: Vec<bool>,
+    /// Live cluster ids, ascending; compacted once per round.
+    active_ids: Vec<u32>,
+    size: Vec<u64>,
+    nn: Vec<u32>,
+    nn_weight: Vec<Weight>,
+    will_merge: Vec<bool>,
+    neighbors: Vec<FxHashMap<u32, EdgeState>>,
+    /// Hard cap on rounds (safety valve, as in the shared-memory engine).
+    max_rounds: usize,
+}
+
+impl DistRacEngine {
+    /// Build an engine over a dissimilarity graph.
+    ///
+    /// # Panics
+    /// If the linkage is not reducible (Theorem 1 does not apply), or if a
+    /// complete-graph-only linkage is given a sparse graph — the same
+    /// guards as the shared-memory engine.
+    ///
+    /// NOTE: the guards, state initialisation, and the per-phase loop
+    /// bodies below are deliberately kept in lockstep with
+    /// [`crate::rac::RacEngine`] — the exactness contract is *bitwise*
+    /// equality of the two engines' dendrograms (see the
+    /// `matches_shared_memory_engine_bitwise` test); change both or
+    /// neither.
+    pub fn new(g: &Graph, linkage: Linkage, cfg: DistConfig) -> DistRacEngine {
+        assert!(
+            linkage.is_reducible(),
+            "RAC is exact only for reducible linkages (Theorem 1)"
+        );
+        if !linkage.supports_sparse() {
+            let n = g.n();
+            assert!(
+                g.m() == n * (n - 1) / 2,
+                "{linkage:?} linkage requires a complete graph"
+            );
+        }
+        let n = g.n();
+        let neighbors: Vec<FxHashMap<u32, EdgeState>> = (0..n as u32)
+            .map(|u| {
+                g.neighbors(u)
+                    .map(|(v, w)| (v, EdgeState::point(w)))
+                    .collect()
+            })
+            .collect();
+        DistRacEngine {
+            linkage,
+            cfg,
+            n,
+            active: vec![true; n],
+            active_ids: (0..n as u32).collect(),
+            size: vec![1; n],
+            nn: vec![NO_NN; n],
+            nn_weight: vec![Weight::INFINITY; n],
+            will_merge: vec![false; n],
+            neighbors,
+            max_rounds: 4 * n + 64,
+        }
+    }
+
+    /// Override the round safety cap.
+    pub fn with_max_rounds(mut self, max_rounds: usize) -> DistRacEngine {
+        self.max_rounds = max_rounds;
+        self
+    }
+
+    /// Run to completion; returns the dendrogram and per-round metrics
+    /// (including the simulated network columns).
+    pub fn run(self) -> RacResult {
+        self.run_detailed().0
+    }
+
+    /// Like [`run`](Self::run), but also returns the full cross-shard
+    /// traffic log for accounting-invariant tests and topology studies.
+    pub fn run_detailed(mut self) -> (RacResult, NetReport) {
+        let t0 = Instant::now();
+        let m = self.cfg.machines;
+        let cores = self.cfg.cores_per_machine as u64;
+        let mut net = Network::new(m);
+        let mut merges: Vec<Merge> = Vec::with_capacity(self.n.saturating_sub(1));
+        let mut metrics = RunMetrics::default();
+
+        // Initial NN cache (local per shard: every shard scans only the
+        // neighbor maps it owns).
+        for c in 0..self.n {
+            let (nn, w) = scan_nn(&self.neighbors[c]);
+            self.nn[c] = nn;
+            self.nn_weight[c] = w;
+        }
+
+        let mut n_active = self.n;
+        for round in 0..self.max_rounds {
+            let mut rm = RoundMetrics {
+                round,
+                clusters: n_active,
+                ..Default::default()
+            };
+            let mut load = vec![ShardLoad::default(); m];
+
+            // ---- Phase 1: find reciprocal nearest neighbors -------------
+            let t = Instant::now();
+            self.exchange_nn_pointers(&mut net, &mut load);
+            let flags: Vec<bool> = self
+                .active_ids
+                .iter()
+                .map(|&c| {
+                    let c = c as usize;
+                    self.nn[c] != NO_NN && self.nn[self.nn[c] as usize] == c as u32
+                })
+                .collect();
+            for (&c, flag) in self.active_ids.iter().zip(flags) {
+                self.will_merge[c as usize] = flag;
+            }
+            let leaders: Vec<u32> = self
+                .active_ids
+                .iter()
+                .copied()
+                .filter(|&c| self.will_merge[c as usize] && c < self.nn[c as usize])
+                .collect();
+            rm.t_find = t.elapsed();
+            rm.merges = leaders.len();
+
+            if leaders.is_empty() {
+                finish_round(&mut rm, &mut net, &load, cores);
+                metrics.rounds.push(rm);
+                break;
+            }
+
+            // ---- Phase 2: update cluster dissimilarities ----------------
+            let t = Instant::now();
+            let unions = self.compute_unions(&leaders, &mut net, &mut load);
+            for &l in &leaders {
+                let p = self.nn[l as usize];
+                merges.push(Merge {
+                    a: l,
+                    b: p,
+                    weight: self.nn_weight[l as usize],
+                });
+            }
+            self.apply_unions(unions, &mut net);
+            n_active -= rm.merges;
+            self.active_ids.retain(|&c| self.active[c as usize]);
+            rm.t_merge = t.elapsed();
+
+            // ---- Phase 3: update nearest neighbors (local) --------------
+            let t = Instant::now();
+            let updates: Vec<(u32, u32, Weight, usize)> = self
+                .active_ids
+                .iter()
+                .filter_map(|&c| {
+                    let c = c as usize;
+                    let needs_rescan = self.will_merge[c]
+                        || (self.nn[c] != NO_NN && self.will_merge[self.nn[c] as usize]);
+                    needs_rescan.then(|| {
+                        let (nn, w) = scan_nn(&self.neighbors[c]);
+                        (c as u32, nn, w, self.neighbors[c].len())
+                    })
+                })
+                .collect();
+            rm.nn_updates = updates.len();
+            for (c, nn, w, scanned) in updates {
+                self.nn[c as usize] = nn;
+                self.nn_weight[c as usize] = w;
+                rm.nn_scan_entries += scanned;
+                load[shard_of(c, m)].nn_scan_work += scanned as u64;
+            }
+            rm.t_update_nn = t.elapsed();
+
+            finish_round(&mut rm, &mut net, &load, cores);
+            metrics.rounds.push(rm);
+
+            if n_active <= 1 {
+                break;
+            }
+        }
+
+        metrics.total_time = t0.elapsed();
+        (
+            RacResult {
+                dendrogram: Dendrogram::new(self.n, merges),
+                metrics,
+            },
+            net.into_report(),
+        )
+    }
+
+    /// Phase-1 traffic: every shard must evaluate `nn(nn(c)) == c` for its
+    /// clusters, which needs the NN pointer of each *remote* `nn(c)`.
+    /// Queries are deduplicated per (asking shard, target cluster) and
+    /// batched per machine pair, replies likewise.
+    fn exchange_nn_pointers(&self, net: &mut Network, load: &mut [ShardLoad]) {
+        let m = net.machines();
+        for &c in &self.active_ids {
+            load[shard_of(c, m)].find_work += 1;
+        }
+        if m == 1 {
+            return;
+        }
+        let mut queries: Vec<Vec<Message>> = vec![Vec::new(); m * m];
+        let mut seen: FxHashSet<(usize, u32)> = FxHashSet::default();
+        for &c in &self.active_ids {
+            let v = self.nn[c as usize];
+            if v == NO_NN {
+                continue;
+            }
+            let (src, dst) = (shard_of(c, m), shard_of(v, m));
+            if src != dst && seen.insert((src, v)) {
+                queries[src * m + dst].push(Message::NnQuery { cluster: v });
+            }
+        }
+        for src in 0..m {
+            for dst in 0..m {
+                if src == dst {
+                    continue;
+                }
+                let batch = std::mem::take(&mut queries[src * m + dst]);
+                if batch.is_empty() {
+                    continue;
+                }
+                let replies: Vec<Message> = batch
+                    .iter()
+                    .map(|q| match q {
+                        Message::NnQuery { cluster } => Message::NnReply {
+                            cluster: *cluster,
+                            nn: self.nn[*cluster as usize],
+                        },
+                        _ => unreachable!("phase-1 batches hold only NN queries"),
+                    })
+                    .collect();
+                net.send(src, dst, &batch);
+                net.send(dst, src, &replies);
+            }
+        }
+    }
+
+    /// Phase-2 compute: every leader builds the union map of `L ∪ P`
+    /// exactly as the shared-memory engine does (same fold, same order),
+    /// while the traffic a real deployment would need — partner-state
+    /// fetches, remote pair-view lookups — is staged and delivered as
+    /// per-pair batches.
+    fn compute_unions(
+        &self,
+        leaders: &[u32],
+        net: &mut Network,
+        load: &mut [ShardLoad],
+    ) -> Vec<UnionEntry> {
+        let m = net.machines();
+        let mut stage: Vec<Vec<Message>> = vec![Vec::new(); m * m];
+        let mut viewed: FxHashSet<(usize, u32)> = FxHashSet::default();
+        let mut out = Vec::with_capacity(leaders.len());
+        for &l in leaders {
+            let p = self.nn[l as usize];
+            let (sl, sp) = (shard_of(l, m), shard_of(p, m));
+            load[sl].merge_work +=
+                (self.neighbors[l as usize].len() + self.neighbors[p as usize].len()) as u64;
+            if sl != sp {
+                stage[sl * m + sp].push(Message::PartnerFetch { partner: p });
+                stage[sp * m + sl].push(Message::PartnerState {
+                    partner: p,
+                    size: self.size[p as usize],
+                    entries: self.neighbors[p as usize]
+                        .iter()
+                        .map(|(&t, e)| (t, e.weight, e.count))
+                        .collect(),
+                });
+            }
+            // Pair views the union computation will request: every
+            // neighbor of L or P, plus the partner of any merging
+            // neighbor (the canonicalisation step views both members).
+            for x in self.neighbors[l as usize]
+                .keys()
+                .chain(self.neighbors[p as usize].keys())
+            {
+                let x = *x;
+                if x == l || x == p {
+                    continue;
+                }
+                self.stage_view(x, sl, m, &mut viewed, &mut stage);
+                if self.will_merge[x as usize] {
+                    self.stage_view(self.nn[x as usize], sl, m, &mut viewed, &mut stage);
+                }
+            }
+            out.push((l, self.union_map(l, p)));
+        }
+        for src in 0..m {
+            for dst in 0..m {
+                if src != dst {
+                    net.send(src, dst, &stage[src * m + dst]);
+                }
+            }
+        }
+        out
+    }
+
+    /// Stage a pair-view query/reply pair for `x` if its owner is not the
+    /// asking shard `sl` (deduplicated per shard per round).
+    fn stage_view(
+        &self,
+        x: u32,
+        sl: usize,
+        m: usize,
+        viewed: &mut FxHashSet<(usize, u32)>,
+        stage: &mut [Vec<Message>],
+    ) {
+        let sx = shard_of(x, m);
+        if sx == sl || !viewed.insert((sl, x)) {
+            return;
+        }
+        stage[sl * m + sx].push(Message::PairViewQuery { cluster: x });
+        stage[sx * m + sl].push(Message::PairViewReply {
+            cluster: x,
+            merging: self.will_merge[x as usize],
+            partner: self.nn[x as usize],
+            size: self.size[x as usize],
+            pair_weight: self.nn_weight[x as usize],
+        });
+    }
+
+    /// Phase-2 apply, in ascending leader order (identical to the
+    /// shared-memory engine): install unions, retire partners, patch
+    /// non-merging neighbors — shipping each patch whose target lives on
+    /// another shard.
+    fn apply_unions(&mut self, unions: Vec<UnionEntry>, net: &mut Network) {
+        let m = net.machines();
+        let mut patches: Vec<Vec<Message>> = vec![Vec::new(); m * m];
+        for (l, map) in unions {
+            let p = self.nn[l as usize];
+            let sl = shard_of(l, m);
+            for (&t_id, &e) in &map {
+                if !self.will_merge[t_id as usize] {
+                    let tm = &mut self.neighbors[t_id as usize];
+                    tm.remove(&p);
+                    tm.insert(l, e);
+                    let st = shard_of(t_id, m);
+                    if st != sl {
+                        patches[sl * m + st].push(Message::EdgePatch {
+                            target: t_id,
+                            leader: l,
+                            retired: p,
+                            weight: e.weight,
+                            count: e.count,
+                        });
+                    }
+                }
+            }
+            self.size[l as usize] += self.size[p as usize];
+            self.neighbors[l as usize] = map;
+            self.neighbors[p as usize] = FxHashMap::default();
+            self.active[p as usize] = false;
+        }
+        for src in 0..m {
+            for dst in 0..m {
+                if src != dst {
+                    net.send(src, dst, &patches[src * m + dst]);
+                }
+            }
+        }
+    }
+
+    /// Neighbor map of the union `L ∪ P` — delegates to the engine-shared
+    /// [`compute_union_map`] with the same arguments as the shared-memory
+    /// engine, so the arithmetic (and its floating-point rounding) is
+    /// bitwise identical.
+    fn union_map(&self, l: u32, p: u32) -> FxHashMap<u32, EdgeState> {
+        compute_union_map(
+            self.linkage,
+            l,
+            p,
+            self.nn_weight[l as usize],
+            self.size[l as usize],
+            self.size[p as usize],
+            &self.neighbors[l as usize],
+            &self.neighbors[p as usize],
+            |x| PairView {
+                merging: self.will_merge[x as usize],
+                partner: self.nn[x as usize],
+                size: self.size[x as usize],
+                pair_weight: self.nn_weight[x as usize],
+            },
+        )
+    }
+}
+
+/// Close a round: pull the network counters into the metrics and evaluate
+/// the critical-path time model. Each phase is a barrier, so its simulated
+/// duration is the maximum per-machine work, divided by the cores each
+/// machine parallelises cluster-level work across; the network contributes
+/// a latency term per batched RPC and a bandwidth term per wire byte.
+fn finish_round(rm: &mut RoundMetrics, net: &mut Network, load: &[ShardLoad], cores: u64) {
+    let (msgs, bytes) = net.end_round();
+    rm.net_messages = msgs;
+    rm.net_bytes = bytes;
+    let phase_max = |f: fn(&ShardLoad) -> u64| load.iter().map(f).max().unwrap_or(0);
+    let compute = phase_max(|s| s.find_work).div_ceil(cores)
+        + phase_max(|s| s.merge_work).div_ceil(cores)
+        + phase_max(|s| s.nn_scan_work).div_ceil(cores);
+    let ns = compute as u128 * T_UNIT_NS + msgs as u128 * T_MSG_NS + bytes as u128 * T_BYTE_NS;
+    rm.t_sim = Duration::from_nanos(ns.min(u64::MAX as u128) as u64);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+    use crate::hac::naive_hac;
+
+    #[test]
+    fn default_config_is_clamped_and_copy() {
+        let cfg = DistConfig::new(0, 0);
+        assert_eq!(cfg, DistConfig::new(1, 1));
+        let d = DistConfig::default();
+        assert_eq!((d.machines, d.cores_per_machine), (4, 2));
+        let copy = d; // Copy, not move
+        assert_eq!(copy, d);
+    }
+
+    #[test]
+    fn two_points_across_two_shards() {
+        let g = Graph::from_edges(2, [(0, 1, 3.5)]);
+        let (r, report) = DistRacEngine::new(&g, Linkage::Average, DistConfig::new(2, 1))
+            .run_detailed();
+        assert_eq!(r.dendrogram.merges().len(), 1);
+        assert_eq!(r.dendrogram.merges()[0].weight, 3.5);
+        // Node 1's NN pointer lives on shard 0 and vice versa: the find
+        // phase must have exchanged pointers.
+        assert!(r.metrics.total_net_messages() > 0);
+        assert!(report.batches.iter().all(|b| b.src != b.dst));
+    }
+
+    #[test]
+    fn more_machines_than_clusters() {
+        // Shards 5..15 own nothing; the engine must not stumble on them.
+        let g = data::grid1d_graph(5, 1);
+        let r = DistRacEngine::new(&g, Linkage::Single, DistConfig::new(16, 4)).run();
+        assert_eq!(r.dendrogram.merges().len(), 4);
+        let hac = naive_hac(&g, Linkage::Single);
+        assert!(hac.same_clustering(&r.dendrogram, 1e-12));
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let r = DistRacEngine::new(&Graph::from_edges(0, []), Linkage::Average, DistConfig::new(3, 1))
+            .run();
+        assert!(r.dendrogram.merges().is_empty());
+        assert_eq!(r.metrics.total_net_bytes(), 0);
+        let r = DistRacEngine::new(&Graph::from_edges(1, []), Linkage::Average, DistConfig::new(3, 1))
+            .run();
+        assert!(r.dendrogram.merges().is_empty());
+    }
+
+    #[test]
+    fn single_machine_is_silent_and_exact() {
+        let g = data::grid1d_graph(64, 7);
+        let (r, report) =
+            DistRacEngine::new(&g, Linkage::Average, DistConfig::new(1, 8)).run_detailed();
+        assert_eq!(r.metrics.total_net_messages(), 0);
+        assert_eq!(r.metrics.total_net_bytes(), 0);
+        assert!(report.batches.is_empty());
+        assert!(r.metrics.total_sim_time().as_nanos() > 0);
+        let hac = naive_hac(&g, Linkage::Average);
+        assert!(hac.same_clustering(&r.dendrogram, 1e-12));
+    }
+
+    #[test]
+    fn matches_shared_memory_engine_bitwise() {
+        let g = data::grid1d_graph(200, 17);
+        for l in Linkage::SPARSE_REDUCIBLE {
+            let shared = crate::rac::RacEngine::new(&g, l).run();
+            let dist = DistRacEngine::new(&g, l, DistConfig::new(5, 3)).run();
+            let a: Vec<_> = shared
+                .dendrogram
+                .merges()
+                .iter()
+                .map(|m| (m.a, m.b, m.weight.to_bits()))
+                .collect();
+            let b: Vec<_> = dist
+                .dendrogram
+                .merges()
+                .iter()
+                .map(|m| (m.a, m.b, m.weight.to_bits()))
+                .collect();
+            assert_eq!(a, b, "{l:?}: dist must mirror the shared engine bitwise");
+        }
+    }
+
+    #[test]
+    fn max_rounds_zero_produces_empty_run() {
+        let g = data::grid1d_graph(10, 1);
+        let r = DistRacEngine::new(&g, Linkage::Single, DistConfig::default())
+            .with_max_rounds(0)
+            .run();
+        assert!(r.dendrogram.merges().is_empty());
+        assert!(r.metrics.rounds.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "reducible")]
+    fn rejects_centroid() {
+        let g = data::stable_hierarchy(2, 4.0, 0);
+        DistRacEngine::new(&g, Linkage::Centroid, DistConfig::default());
+    }
+
+    #[test]
+    fn sim_time_scales_down_with_cores() {
+        let g = data::grid1d_graph(400, 3);
+        let slow = DistRacEngine::new(&g, Linkage::Average, DistConfig::new(4, 1)).run();
+        let fast = DistRacEngine::new(&g, Linkage::Average, DistConfig::new(4, 8)).run();
+        assert!(slow.dendrogram.same_clustering(&fast.dendrogram, 1e-15));
+        assert!(
+            fast.metrics.total_sim_time() < slow.metrics.total_sim_time(),
+            "more cores per machine must shorten the simulated critical path"
+        );
+    }
+}

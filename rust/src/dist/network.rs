@@ -1,0 +1,437 @@
+//! Batched cross-shard messaging: the wire codec and the per-round
+//! traffic accounting that backs `RoundMetrics::{net_messages, net_bytes}`
+//! (paper Table 2's "network" resource).
+//!
+//! All cross-shard communication in a round is staged per ordered machine
+//! pair and delivered as one batched RPC per non-empty pair — the paper's
+//! batching discipline, which makes message count scale with the topology
+//! (`O(machines²)` per phase) while byte count scales with the data. A
+//! batch is accounted at exactly its encoded wire length; the codec is a
+//! plain little-endian tag + fields layout, round-trip-tested below and
+//! `debug_assert`-verified on every live send.
+
+use crate::linkage::Weight;
+
+/// One logical message between shards. Payload sizes mirror what a real
+/// deployment would ship: ids are `u32`, sizes/counts `u64`, weights `f64`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// Find phase: ask `cluster`'s owner for its nearest-neighbor pointer
+    /// (needed to evaluate `nn(nn(c)) == c` when `nn(c)` is remote).
+    NnQuery { cluster: u32 },
+    /// Find phase: the owner's answer.
+    NnReply { cluster: u32, nn: u32 },
+    /// Merge phase: a leader requests its remote partner's state.
+    PartnerFetch { partner: u32 },
+    /// Merge phase: the partner's full neighbor map and size, shipped to
+    /// the leader's shard so it can compute the union map.
+    PartnerState {
+        partner: u32,
+        size: u64,
+        /// `(target, weight, count)` neighbor entries.
+        entries: Vec<(u32, Weight, u64)>,
+    },
+    /// Merge phase: ask a remote neighbor's owner for its pair view
+    /// (merge flag, partner, size, pair weight).
+    PairViewQuery { cluster: u32 },
+    /// Merge phase: the owner's answer.
+    PairViewReply {
+        cluster: u32,
+        merging: bool,
+        partner: u32,
+        size: u64,
+        pair_weight: Weight,
+    },
+    /// Merge phase: patch a remote non-merging neighbor's map — drop the
+    /// edge to the retired partner, install the edge to the new union.
+    EdgePatch {
+        target: u32,
+        leader: u32,
+        retired: u32,
+        weight: Weight,
+        count: u64,
+    },
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Little-endian cursor over an encoded batch.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.buf.len() {
+            return Err(format!(
+                "truncated batch: wanted {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len()
+            ));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+fn encode_message(msg: &Message, buf: &mut Vec<u8>) {
+    match msg {
+        Message::NnQuery { cluster } => {
+            buf.push(0);
+            put_u32(buf, *cluster);
+        }
+        Message::NnReply { cluster, nn } => {
+            buf.push(1);
+            put_u32(buf, *cluster);
+            put_u32(buf, *nn);
+        }
+        Message::PartnerFetch { partner } => {
+            buf.push(2);
+            put_u32(buf, *partner);
+        }
+        Message::PartnerState {
+            partner,
+            size,
+            entries,
+        } => {
+            buf.push(3);
+            put_u32(buf, *partner);
+            put_u64(buf, *size);
+            put_u32(buf, entries.len() as u32);
+            for &(t, w, c) in entries {
+                put_u32(buf, t);
+                put_f64(buf, w);
+                put_u64(buf, c);
+            }
+        }
+        Message::PairViewQuery { cluster } => {
+            buf.push(4);
+            put_u32(buf, *cluster);
+        }
+        Message::PairViewReply {
+            cluster,
+            merging,
+            partner,
+            size,
+            pair_weight,
+        } => {
+            buf.push(5);
+            put_u32(buf, *cluster);
+            buf.push(u8::from(*merging));
+            put_u32(buf, *partner);
+            put_u64(buf, *size);
+            put_f64(buf, *pair_weight);
+        }
+        Message::EdgePatch {
+            target,
+            leader,
+            retired,
+            weight,
+            count,
+        } => {
+            buf.push(6);
+            put_u32(buf, *target);
+            put_u32(buf, *leader);
+            put_u32(buf, *retired);
+            put_f64(buf, *weight);
+            put_u64(buf, *count);
+        }
+    }
+}
+
+fn decode_message(r: &mut Reader<'_>) -> Result<Message, String> {
+    let tag = r.u8()?;
+    Ok(match tag {
+        0 => Message::NnQuery { cluster: r.u32()? },
+        1 => Message::NnReply {
+            cluster: r.u32()?,
+            nn: r.u32()?,
+        },
+        2 => Message::PartnerFetch { partner: r.u32()? },
+        3 => {
+            let partner = r.u32()?;
+            let size = r.u64()?;
+            let len = r.u32()? as usize;
+            let mut entries = Vec::with_capacity(len.min(1 << 20));
+            for _ in 0..len {
+                entries.push((r.u32()?, r.f64()?, r.u64()?));
+            }
+            Message::PartnerState {
+                partner,
+                size,
+                entries,
+            }
+        }
+        4 => Message::PairViewQuery { cluster: r.u32()? },
+        5 => Message::PairViewReply {
+            cluster: r.u32()?,
+            merging: r.u8()? != 0,
+            partner: r.u32()?,
+            size: r.u64()?,
+            pair_weight: r.f64()?,
+        },
+        6 => Message::EdgePatch {
+            target: r.u32()?,
+            leader: r.u32()?,
+            retired: r.u32()?,
+            weight: r.f64()?,
+            count: r.u64()?,
+        },
+        other => return Err(format!("unknown message tag {other}")),
+    })
+}
+
+/// Encode a batch: `u32` message count, then each message.
+pub fn encode_batch(msgs: &[Message]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(4 + 16 * msgs.len());
+    put_u32(&mut buf, msgs.len() as u32);
+    for m in msgs {
+        encode_message(m, &mut buf);
+    }
+    buf
+}
+
+/// Decode a batch; rejects truncation, unknown tags, and trailing bytes.
+pub fn decode_batch(bytes: &[u8]) -> Result<Vec<Message>, String> {
+    let mut r = Reader { buf: bytes, pos: 0 };
+    let len = r.u32()? as usize;
+    let mut out = Vec::with_capacity(len.min(1 << 20));
+    for _ in 0..len {
+        out.push(decode_message(&mut r)?);
+    }
+    if r.pos != bytes.len() {
+        return Err(format!(
+            "{} trailing bytes after {len} messages",
+            bytes.len() - r.pos
+        ));
+    }
+    Ok(out)
+}
+
+/// One accounted cross-shard batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchRecord {
+    pub src: usize,
+    pub dst: usize,
+    /// Logical messages inside the batch (always ≥ 1).
+    pub messages: usize,
+    /// Encoded wire length (always ≥ the message count: every message
+    /// encodes to at least one byte — the per-round `net_bytes >=
+    /// net_messages` invariant follows).
+    pub bytes: usize,
+}
+
+/// The simulated interconnect: counts batched RPCs and payload bytes per
+/// round. Intra-machine delivery is free and never recorded — batches are
+/// cross-shard by construction (asserted).
+#[derive(Debug)]
+pub struct Network {
+    machines: usize,
+    round_messages: usize,
+    round_bytes: usize,
+    batches: Vec<BatchRecord>,
+}
+
+/// Full-run traffic log, returned by `DistRacEngine::run_detailed` for
+/// accounting-invariant tests and topology studies.
+#[derive(Debug, Clone, Default)]
+pub struct NetReport {
+    pub batches: Vec<BatchRecord>,
+}
+
+impl NetReport {
+    pub fn total_bytes(&self) -> usize {
+        self.batches.iter().map(|b| b.bytes).sum()
+    }
+
+    pub fn total_batches(&self) -> usize {
+        self.batches.len()
+    }
+}
+
+impl Network {
+    pub fn new(machines: usize) -> Network {
+        Network {
+            machines: machines.max(1),
+            round_messages: 0,
+            round_bytes: 0,
+            batches: Vec::new(),
+        }
+    }
+
+    pub fn machines(&self) -> usize {
+        self.machines
+    }
+
+    /// Account one batched cross-shard RPC. Empty batches are skipped;
+    /// `src == dst` is a caller bug (local work must not touch the
+    /// network).
+    pub fn send(&mut self, src: usize, dst: usize, msgs: &[Message]) {
+        if msgs.is_empty() {
+            return;
+        }
+        assert_ne!(src, dst, "network batches must be cross-shard");
+        assert!(src < self.machines && dst < self.machines);
+        let wire = encode_batch(msgs);
+        debug_assert_eq!(
+            decode_batch(&wire).as_deref(),
+            Ok(msgs),
+            "codec round-trip violated"
+        );
+        self.round_messages += 1;
+        self.round_bytes += wire.len();
+        self.batches.push(BatchRecord {
+            src,
+            dst,
+            messages: msgs.len(),
+            bytes: wire.len(),
+        });
+    }
+
+    /// Close the round: return and reset `(net_messages, net_bytes)`.
+    pub fn end_round(&mut self) -> (usize, usize) {
+        let out = (self.round_messages, self.round_bytes);
+        self.round_messages = 0;
+        self.round_bytes = 0;
+        out
+    }
+
+    /// Consume the network into its full-run traffic log.
+    pub fn into_report(self) -> NetReport {
+        NetReport {
+            batches: self.batches,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_batch() -> Vec<Message> {
+        vec![
+            Message::NnQuery { cluster: 7 },
+            Message::NnReply {
+                cluster: 7,
+                nn: u32::MAX,
+            },
+            Message::PartnerFetch { partner: 19 },
+            Message::PartnerState {
+                partner: 19,
+                size: 1 << 40,
+                entries: vec![(3, 1.25, 4), (9, f64::INFINITY, 1)],
+            },
+            Message::PairViewQuery { cluster: 2 },
+            Message::PairViewReply {
+                cluster: 2,
+                merging: true,
+                partner: 5,
+                size: 12,
+                pair_weight: 0.125,
+            },
+            Message::EdgePatch {
+                target: 11,
+                leader: 2,
+                retired: 5,
+                weight: 3.5,
+                count: 8,
+            },
+        ]
+    }
+
+    #[test]
+    fn batch_round_trips_exactly() {
+        let msgs = sample_batch();
+        let wire = encode_batch(&msgs);
+        assert_eq!(decode_batch(&wire).unwrap(), msgs);
+        // Empty batch round-trips too.
+        assert_eq!(decode_batch(&encode_batch(&[])).unwrap(), Vec::new());
+    }
+
+    #[test]
+    fn byte_accounting_matches_encoded_length() {
+        let msgs = sample_batch();
+        let wire = encode_batch(&msgs);
+        let mut net = Network::new(3);
+        net.send(0, 2, &msgs);
+        let (m, b) = net.end_round();
+        assert_eq!(m, 1, "one batch = one accounted message");
+        assert_eq!(b, wire.len(), "bytes must equal the wire length");
+        let report = net.into_report();
+        assert_eq!(report.total_bytes(), wire.len());
+        assert_eq!(report.batches[0].messages, msgs.len());
+    }
+
+    #[test]
+    fn truncated_batches_are_rejected() {
+        let wire = encode_batch(&sample_batch());
+        for cut in [0usize, 3, 5, wire.len() / 2, wire.len() - 1] {
+            assert!(decode_batch(&wire[..cut]).is_err(), "cut={cut} accepted");
+        }
+        // Trailing garbage is rejected as well.
+        let mut extended = wire.clone();
+        extended.push(0xFF);
+        assert!(decode_batch(&extended).is_err());
+        // Unknown tag.
+        assert!(decode_batch(&[1, 0, 0, 0, 99]).is_err());
+    }
+
+    #[test]
+    fn empty_sends_are_free_and_rounds_reset() {
+        let mut net = Network::new(4);
+        net.send(1, 3, &[]);
+        assert_eq!(net.end_round(), (0, 0));
+        net.send(1, 3, &[Message::NnQuery { cluster: 0 }]);
+        let (m, b) = net.end_round();
+        assert_eq!(m, 1);
+        assert!(b >= m, "net_bytes >= net_messages");
+        assert_eq!(net.end_round(), (0, 0), "counters reset per round");
+    }
+
+    #[test]
+    #[should_panic(expected = "cross-shard")]
+    fn local_sends_are_a_bug() {
+        let mut net = Network::new(2);
+        net.send(1, 1, &[Message::NnQuery { cluster: 0 }]);
+    }
+
+    #[test]
+    fn non_finite_weights_round_trip_bitwise() {
+        let msgs = vec![Message::PairViewReply {
+            cluster: 0,
+            merging: false,
+            partner: u32::MAX,
+            size: 1,
+            pair_weight: f64::INFINITY,
+        }];
+        assert_eq!(decode_batch(&encode_batch(&msgs)).unwrap(), msgs);
+    }
+}

@@ -1,0 +1,97 @@
+//! Cluster→machine placement and per-shard bookkeeping.
+//!
+//! Placement is a pure function of the cluster id ([`shard_of`]), so it is
+//! stable across the whole run: a merged cluster keeps its leader's id and
+//! therefore its leader's shard, and every machine can compute any
+//! cluster's owner locally without a directory service (the paper's
+//! hash-partitioned ownership). The id-mod-machines choice also keeps
+//! shards balanced as clusters die, because merge survivors are spread
+//! uniformly over residues.
+
+/// The machine that owns `cluster` in an `machines`-shard deployment.
+#[inline]
+pub fn shard_of(cluster: u32, machines: usize) -> usize {
+    (cluster as usize) % machines.max(1)
+}
+
+/// Partition `ids` into per-shard owned lists (order within a shard
+/// follows the input order). Every id lands on exactly one shard — the
+/// placement is a total partition, property-tested in
+/// `rust/tests/dist_sharding.rs`.
+pub fn partition(ids: &[u32], machines: usize) -> Vec<Vec<u32>> {
+    let m = machines.max(1);
+    let mut shards: Vec<Vec<u32>> = vec![Vec::new(); m];
+    for &id in ids {
+        shards[shard_of(id, m)].push(id);
+    }
+    shards
+}
+
+/// Per-machine work counters for one simulated round, in abstract "work
+/// units" (one neighbor-map entry processed, or one per-cluster flag op).
+/// Feeds the critical-path time model (`RoundMetrics::t_sim`): each phase
+/// is a barrier, so its simulated duration is the *maximum* unit count
+/// across machines, divided by the cores available per machine.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShardLoad {
+    /// Find-reciprocal-NN phase: per-cluster flag evaluations.
+    pub find_work: u64,
+    /// Merge phase: union-map entries gathered and folded.
+    pub merge_work: u64,
+    /// Update-NN phase: neighbor entries scanned during rescans.
+    pub nn_scan_work: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_is_stable_and_in_range() {
+        for machines in [1usize, 2, 3, 7, 16] {
+            for c in 0..200u32 {
+                let s = shard_of(c, machines);
+                assert!(s < machines);
+                assert_eq!(s, shard_of(c, machines), "placement must be pure");
+            }
+        }
+    }
+
+    #[test]
+    fn partition_is_total_and_disjoint() {
+        let ids: Vec<u32> = (0..57).map(|i| i * 3 + 1).collect();
+        let parts = partition(&ids, 5);
+        assert_eq!(parts.len(), 5);
+        let total: usize = parts.iter().map(Vec::len).sum();
+        assert_eq!(total, ids.len());
+        for (s, part) in parts.iter().enumerate() {
+            for &id in part {
+                assert_eq!(shard_of(id, 5), s);
+            }
+        }
+    }
+
+    #[test]
+    fn more_machines_than_clusters_leaves_empty_shards() {
+        let parts = partition(&[0, 1, 2], 16);
+        assert_eq!(parts.len(), 16);
+        assert_eq!(parts[0], vec![0]);
+        assert_eq!(parts[1], vec![1]);
+        assert_eq!(parts[2], vec![2]);
+        assert!(parts[3..].iter().all(Vec::is_empty));
+    }
+
+    #[test]
+    fn empty_input_and_degenerate_machine_count() {
+        assert!(partition(&[], 4).iter().all(Vec::is_empty));
+        // machines is clamped to 1, never panics.
+        assert_eq!(shard_of(9, 0), 0);
+        assert_eq!(partition(&[7], 0).len(), 1);
+    }
+
+    #[test]
+    fn single_machine_owns_everything() {
+        let parts = partition(&[5, 9, 100], 1);
+        assert_eq!(parts, vec![vec![5, 9, 100]]);
+    }
+}

@@ -149,6 +149,13 @@ fn report(out: &pipeline::RunOutput, json: bool) {
         m.total_net_messages(),
         m.total_net_bytes()
     );
+    // Distributed runs also carry the critical-path time model (Table 2).
+    if m.total_sim_time() > std::time::Duration::ZERO {
+        println!(
+            "simulated fleet time (critical path): {:.3?}",
+            m.total_sim_time()
+        );
+    }
 }
 
 fn cmd_run(args: &[String]) -> Result<()> {

@@ -10,6 +10,21 @@ use rustc_hash::FxHashMap;
 
 use crate::linkage::{EdgeState, Linkage, MergeCtx, Weight};
 
+/// Scan a neighbor map for the `(weight, id)`-minimal entry, returning
+/// [`super::NO_NN`] for an empty map. Shared by the shared-memory and
+/// distributed engines so nearest-neighbor tie-breaking is bitwise
+/// identical everywhere (Theorem 1 needs a single total order).
+#[inline]
+pub fn scan_nn(map: &FxHashMap<u32, EdgeState>) -> (u32, Weight) {
+    let mut best = (super::NO_NN, Weight::INFINITY);
+    for (&v, e) in map {
+        if e.weight < best.1 || (e.weight == best.1 && v < best.0) {
+            best = (v, e.weight);
+        }
+    }
+    best
+}
+
 /// What the computation needs to know about any cluster id it encounters
 /// as a neighbor: merge status, pair partner, size, and the pair's merge
 /// weight. In the shared-memory engine this is a direct state lookup; in

@@ -45,7 +45,7 @@ use crate::metrics::{RoundMetrics, RunMetrics};
 use crate::util::parallel::default_threads;
 use crate::util::pool::Pool;
 
-use logic::{compute_union_map, PairView};
+use logic::{compute_union_map, scan_nn, PairView};
 
 /// Sentinel "no nearest neighbor" (isolated cluster).
 pub const NO_NN: u32 = u32::MAX;
@@ -151,7 +151,7 @@ impl RacEngine {
 
         // Initial NN cache for every cluster.
         let init: Vec<(u32, Weight)> =
-            pool.par_map_indexed(self.n, |c| Self::scan_nn(&self.neighbors[c]));
+            pool.par_map_indexed(self.n, |c| scan_nn(&self.neighbors[c]));
         for (c, (nn, w)) in init.into_iter().enumerate() {
             self.nn[c] = nn;
             self.nn_weight[c] = w;
@@ -231,7 +231,7 @@ impl RacEngine {
                     let needs_rescan = self.will_merge[c]
                         || (self.nn[c] != NO_NN && self.will_merge[self.nn[c] as usize]);
                     needs_rescan.then(|| {
-                        let (nn, w) = Self::scan_nn(&self.neighbors[c]);
+                        let (nn, w) = scan_nn(&self.neighbors[c]);
                         (c as u32, nn, w, self.neighbors[c].len())
                     })
                 })
@@ -255,18 +255,6 @@ impl RacEngine {
             dendrogram: Dendrogram::new(self.n, merges),
             metrics,
         }
-    }
-
-    /// Scan a neighbor map for the `(weight, id)`-minimal entry.
-    #[inline]
-    fn scan_nn(map: &FxHashMap<u32, EdgeState>) -> (u32, Weight) {
-        let mut best = (NO_NN, Weight::INFINITY);
-        for (&v, e) in map {
-            if e.weight < best.1 || (e.weight == best.1 && v < best.0) {
-                best = (v, e.weight);
-            }
-        }
-        (best.0, best.1)
     }
 
     /// Compute the neighbor map of the union `L ∪ P` (read-only on shared

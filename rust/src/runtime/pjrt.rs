@@ -1,0 +1,119 @@
+//! PJRT-backed [`KernelRuntime`] (built with the `xla` feature): compiles
+//! the AOT HLO artifacts on the PJRT CPU client and executes them.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::{Manifest, VariantMeta};
+
+/// A compiled-and-loaded kernel set on the PJRT CPU client.
+///
+/// Executables are compiled lazily (first use) and cached per variant.
+/// `execute` takes `&self`; the interior mutex only guards the compile
+/// cache, never execution.
+pub struct KernelRuntime {
+    artifacts_dir: PathBuf,
+    manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl KernelRuntime {
+    /// Open the artifacts directory and start a PJRT CPU client.
+    pub fn open(artifacts_dir: impl Into<PathBuf>) -> Result<KernelRuntime> {
+        let artifacts_dir = artifacts_dir.into();
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(KernelRuntime {
+            artifacts_dir,
+            manifest,
+            client,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn executable(&self, meta: &VariantMeta) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(&meta.name) {
+            return Ok(exe.clone());
+        }
+        let path = self.artifacts_dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("loading {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", meta.name))?,
+        );
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(meta.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    fn literal(rows: &[f32], n_rows: usize, d: usize) -> Result<xla::Literal> {
+        if rows.len() != n_rows * d {
+            bail!("literal shape mismatch: {} != {n_rows}x{d}", rows.len());
+        }
+        xla::Literal::vec1(rows)
+            .reshape(&[n_rows as i64, d as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+
+    /// Execute a `distance` variant on one `(x, y)` tile pair; returns the
+    /// row-major `m × n` dissimilarity tile.
+    pub fn distance_block(&self, meta: &VariantMeta, x: &[f32], y: &[f32]) -> Result<Vec<f32>> {
+        assert_eq!(meta.kind, "distance");
+        let exe = self.executable(meta)?;
+        let lx = Self::literal(x, meta.m, meta.d)?;
+        let ly = Self::literal(y, meta.n, meta.d)?;
+        let result = exe
+            .execute::<xla::Literal>(&[lx, ly])
+            .map_err(|e| anyhow!("execute {}: {e:?}", meta.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("to_tuple1: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Execute a `knn` variant on one `(x, y)` tile pair; returns per-row
+    /// `(distances [m×k], indices [m×k])`, ascending by distance, indices
+    /// local to the y tile.
+    pub fn knn_block(
+        &self,
+        meta: &VariantMeta,
+        x: &[f32],
+        y: &[f32],
+    ) -> Result<(Vec<f32>, Vec<i32>)> {
+        assert_eq!(meta.kind, "knn");
+        let exe = self.executable(meta)?;
+        let lx = Self::literal(x, meta.m, meta.d)?;
+        let ly = Self::literal(y, meta.n, meta.d)?;
+        let result = exe
+            .execute::<xla::Literal>(&[lx, ly])
+            .map_err(|e| anyhow!("execute {}: {e:?}", meta.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let (vals, idx) = result
+            .to_tuple2()
+            .map_err(|e| anyhow!("to_tuple2: {e:?}"))?;
+        Ok((
+            vals.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?,
+            idx.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}"))?,
+        ))
+    }
+}

@@ -1,0 +1,51 @@
+//! Offline stub for the PJRT kernel runtime (default build, no `xla`
+//! feature). Keeps the full [`KernelRuntime`] API available so the XLA
+//! consumers compile unchanged; `open` always fails with an explanatory
+//! error, which the parity tests and `Backend::Xla` callers treat as
+//! "artifacts unavailable — skip or fall back to native".
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use super::{Manifest, VariantMeta};
+
+/// API-compatible stand-in for the PJRT runtime.
+pub struct KernelRuntime {
+    manifest: Manifest,
+}
+
+impl KernelRuntime {
+    /// Always fails: the offline build carries no PJRT client.
+    pub fn open(artifacts_dir: impl Into<PathBuf>) -> Result<KernelRuntime> {
+        let artifacts_dir: PathBuf = artifacts_dir.into();
+        bail!(
+            "rac-hac was built without the `xla` feature; AOT artifacts at \
+             {artifacts_dir:?} cannot be executed (rebuild with `--features xla` \
+             and the xla-rs crate available, or use Backend::Native)"
+        );
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (built without the `xla` feature)".to_string()
+    }
+
+    /// Unreachable in practice (`open` never succeeds); kept for API parity.
+    pub fn distance_block(&self, _meta: &VariantMeta, _x: &[f32], _y: &[f32]) -> Result<Vec<f32>> {
+        bail!("distance kernels require the `xla` feature")
+    }
+
+    /// Unreachable in practice (`open` never succeeds); kept for API parity.
+    pub fn knn_block(
+        &self,
+        _meta: &VariantMeta,
+        _x: &[f32],
+        _y: &[f32],
+    ) -> Result<(Vec<f32>, Vec<i32>)> {
+        bail!("knn kernels require the `xla` feature")
+    }
+}

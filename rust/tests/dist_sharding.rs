@@ -1,0 +1,131 @@
+//! Sharding-layer properties of the distributed engine, across random
+//! graphs, topologies, and linkages (via `util::prop::for_all_seeds`):
+//!
+//! * cluster→machine placement is a total partition of the live clusters;
+//! * every accounted network batch is strictly cross-shard (a single
+//!   machine is perfectly silent);
+//! * the per-round accounting invariants hold: `net_bytes >=
+//!   net_messages`, and the run-level totals equal the batch log.
+
+use rac_hac::dist::{partition, shard_of, DistConfig, DistRacEngine};
+use rac_hac::graph::Graph;
+use rac_hac::linkage::Linkage;
+use rac_hac::util::prop::for_all_seeds;
+use rac_hac::util::rng::Rng;
+
+/// Random connected-ish sparse graph with continuous weights.
+fn random_graph(rng: &mut Rng) -> Graph {
+    let n = rng.range_usize(4, 120);
+    let mut edges = Vec::new();
+    for i in 1..n {
+        edges.push(((i - 1) as u32, i as u32, rng.range_f64(0.1, 10.0)));
+    }
+    for _ in 0..rng.range_usize(0, 2 * n) {
+        let u = rng.below(n);
+        let v = rng.below(n);
+        if u != v {
+            edges.push((u as u32, v as u32, rng.range_f64(0.1, 10.0)));
+        }
+    }
+    Graph::from_edges(n, edges)
+}
+
+fn random_linkage(rng: &mut Rng) -> Linkage {
+    Linkage::SPARSE_REDUCIBLE[rng.below(Linkage::SPARSE_REDUCIBLE.len())]
+}
+
+#[test]
+fn placement_is_a_total_partition() {
+    for_all_seeds(0x5AAD, 25, |rng| {
+        let machines = rng.range_usize(1, 24);
+        let n = rng.range_usize(0, 300);
+        // A random sparse id set (not necessarily contiguous), like the
+        // live-cluster set mid-run.
+        let ids: Vec<u32> = (0..n as u32).filter(|_| rng.f64() < 0.6).collect();
+        let parts = partition(&ids, machines);
+        assert_eq!(parts.len(), machines.max(1), "one list per machine");
+        // Total: every id appears exactly once, on its own shard.
+        let total: usize = parts.iter().map(Vec::len).sum();
+        assert_eq!(total, ids.len(), "partition must be total");
+        for (s, part) in parts.iter().enumerate() {
+            for &id in part {
+                assert_eq!(shard_of(id, machines), s, "id {id} on wrong shard");
+            }
+        }
+    });
+}
+
+#[test]
+fn batches_are_strictly_cross_shard() {
+    for_all_seeds(0xC205, 12, |rng| {
+        let g = random_graph(rng);
+        let machines = rng.range_usize(1, 9);
+        let cores = rng.range_usize(1, 5);
+        let linkage = random_linkage(rng);
+        let (r, report) =
+            DistRacEngine::new(&g, linkage, DistConfig::new(machines, cores)).run_detailed();
+        // Every connected component merges completely.
+        assert_eq!(r.dendrogram.merges().len(), g.n() - g.components());
+        for b in &report.batches {
+            assert_ne!(b.src, b.dst, "{linkage:?}: local traffic accounted");
+            assert!(b.src < machines.max(1) && b.dst < machines.max(1));
+            assert!(b.messages >= 1, "empty batch accounted");
+            assert!(b.bytes >= b.messages, "batch smaller than its messages");
+        }
+        if machines == 1 {
+            assert!(report.batches.is_empty(), "single machine must be silent");
+        }
+    });
+}
+
+#[test]
+fn round_accounting_invariants() {
+    for_all_seeds(0xACC2, 12, |rng| {
+        let g = random_graph(rng);
+        let machines = rng.range_usize(1, 9);
+        let cores = rng.range_usize(1, 5);
+        let linkage = random_linkage(rng);
+        let (r, report) =
+            DistRacEngine::new(&g, linkage, DistConfig::new(machines, cores)).run_detailed();
+        for rm in &r.metrics.rounds {
+            assert!(
+                rm.net_bytes >= rm.net_messages,
+                "{linkage:?} round {}: bytes {} < messages {}",
+                rm.round,
+                rm.net_bytes,
+                rm.net_messages
+            );
+        }
+        // The batch log and the per-round counters describe the same run.
+        assert_eq!(r.metrics.total_net_messages(), report.total_batches());
+        assert_eq!(r.metrics.total_net_bytes(), report.total_bytes());
+    });
+}
+
+#[test]
+fn topology_never_changes_the_clustering() {
+    // The sharding layer is accounting-only: sweep machines × cores on one
+    // graph and demand bitwise-identical merge lists.
+    let mut rng = Rng::seed_from(0xD15C);
+    let g = random_graph(&mut rng);
+    let base = DistRacEngine::new(&g, Linkage::Average, DistConfig::new(1, 1)).run();
+    for machines in [2usize, 3, 5, 8, 13] {
+        for cores in [1usize, 4] {
+            let r = DistRacEngine::new(&g, Linkage::Average, DistConfig::new(machines, cores))
+                .run();
+            let a: Vec<_> = base
+                .dendrogram
+                .merges()
+                .iter()
+                .map(|m| (m.a, m.b, m.weight.to_bits()))
+                .collect();
+            let b: Vec<_> = r
+                .dendrogram
+                .merges()
+                .iter()
+                .map(|m| (m.a, m.b, m.weight.to_bits()))
+                .collect();
+            assert_eq!(a, b, "topology ({machines},{cores}) changed the merges");
+        }
+    }
+}
