@@ -1,8 +1,9 @@
 # Convenience targets. `make artifacts` regenerates the AOT HLO kernel set
 # the (feature-gated) XLA runtime executes; the pure-Rust paths never need
-# it.
+# it. `make bench` runs the perf-trajectory smoke bench and writes
+# BENCH_hot_paths.json (the per-PR datapoint CI uploads as an artifact).
 
-.PHONY: artifacts build test clippy
+.PHONY: artifacts build test clippy bench
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -15,3 +16,6 @@ test:
 
 clippy:
 	cargo clippy -- -D warnings
+
+bench:
+	cargo bench --bench hot_paths -- --json --smoke

@@ -1,9 +1,20 @@
-//! Hot-path microbenches (DESIGN.md E-Perf): the quantities tracked by the
-//! performance pass in EXPERIMENTS.md §Perf.
+//! Hot-path benches and the repo's perf-trajectory harness.
 //!
 //! ```bash
-//! cargo bench --bench hot_paths
+//! cargo bench --bench hot_paths                  # human-readable tables
+//! cargo bench --bench hot_paths -- --json        # + write BENCH_hot_paths.json
+//! cargo bench --bench hot_paths -- --json --smoke  # CI short-budget mode
+//! cargo bench --bench hot_paths -- --json --out target/perf.json
 //! ```
+//!
+//! The JSON report is the unit of the perf trajectory: one
+//! `engine × linkage × threads` matrix of medians over the SIFT-like kNN
+//! workload, each cell carrying the per-phase split
+//! (`t_find`/`t_merge`/`t_update_nn`) summed from [`RunMetrics`], plus a
+//! headline comparing the flat-store engine against the retained PR-1
+//! hashmap baseline ([`HashRacEngine`]) at default threads. CI runs the
+//! smoke mode on every push and uploads `BENCH_hot_paths.json` as an
+//! artifact, so regressions and wins are visible PR over PR.
 
 #[path = "common.rs"]
 mod common;
@@ -11,104 +22,234 @@ mod common;
 use std::time::Duration;
 
 use rac_hac::dist::{DistConfig, DistRacEngine};
+use rac_hac::graph::Graph;
 use rac_hac::hac::{naive_hac, nn_chain};
 use rac_hac::linkage::Linkage;
-use rac_hac::rac::RacEngine;
-use rac_hac::util::bench::{time_budget, Table};
+use rac_hac::metrics::RunMetrics;
+use rac_hac::rac::baseline::HashRacEngine;
+use rac_hac::rac::{RacEngine, RacResult};
+use rac_hac::util::bench::{time_budget, Table, Timing};
+use rac_hac::util::json::{obj, Json};
 use rac_hac::util::parallel::default_threads;
 use rac_hac::util::pool::Pool;
 
+/// One measured configuration of the engine matrix.
+struct Cell {
+    engine: &'static str,
+    linkage: Linkage,
+    threads: usize,
+    timing: Timing,
+    metrics: RunMetrics,
+}
+
+impl Cell {
+    fn to_json(&self) -> Json {
+        let mut find = Duration::ZERO;
+        let mut merge = Duration::ZERO;
+        let mut update = Duration::ZERO;
+        for r in &self.metrics.rounds {
+            find += r.t_find;
+            merge += r.t_merge;
+            update += r.t_update_nn;
+        }
+        obj([
+            ("engine", self.engine.into()),
+            ("linkage", self.linkage.name().into()),
+            ("threads", self.threads.into()),
+            ("median_us", us(self.timing.median).into()),
+            ("mean_us", us(self.timing.mean).into()),
+            ("min_us", us(self.timing.min).into()),
+            ("samples", self.timing.samples.into()),
+            ("t_find_us", us(find).into()),
+            ("t_merge_us", us(merge).into()),
+            ("t_update_nn_us", us(update).into()),
+            ("rounds", self.metrics.merge_rounds().into()),
+        ])
+    }
+}
+
+fn us(d: Duration) -> usize {
+    d.as_micros() as usize
+}
+
+/// Time `build().run()` under `budget`, keeping the metrics of the last
+/// sample for the phase split.
+fn measure(
+    budget: Duration,
+    min_samples: usize,
+    mut run: impl FnMut() -> RacResult,
+) -> (Timing, RunMetrics) {
+    let mut last: Option<RunMetrics> = None;
+    let timing = time_budget(budget, min_samples, || {
+        let r = run();
+        last = Some(r.metrics);
+    });
+    (timing, last.expect("at least one sample ran"))
+}
+
+fn engine_matrix(g: &Graph, budget: Duration, min_samples: usize) -> Vec<Cell> {
+    let dt = default_threads();
+    let thread_counts: Vec<usize> = if dt == 1 { vec![1] } else { vec![1, dt] };
+    let mut cells = Vec::new();
+    for linkage in Linkage::SPARSE_REDUCIBLE {
+        for &threads in &thread_counts {
+            let (timing, metrics) = measure(budget, min_samples, || {
+                RacEngine::new(g, linkage).with_threads(threads).run()
+            });
+            cells.push(Cell {
+                engine: "rac_flat",
+                linkage,
+                threads,
+                timing,
+                metrics,
+            });
+            let (timing, metrics) = measure(budget, min_samples, || {
+                HashRacEngine::new(g, linkage).with_threads(threads).run()
+            });
+            cells.push(Cell {
+                engine: "rac_hash",
+                linkage,
+                threads,
+                timing,
+                metrics,
+            });
+        }
+        let (timing, metrics) = measure(budget, min_samples, || {
+            DistRacEngine::new(g, linkage, DistConfig::new(4, 2)).run()
+        });
+        cells.push(Cell {
+            engine: "dist_rac_4x2",
+            linkage,
+            threads: 1,
+            timing,
+            metrics,
+        });
+    }
+    cells
+}
+
 fn main() {
-    let budget = Duration::from_secs(2);
-    let g = common::sift_knn(8_000, 64, 16, 9);
-    println!(
-        "workload: SIFT-like n=8000 kNN graph ({} edges, max degree {})\n",
-        g.m(),
-        g.max_degree()
-    );
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let write_json = args.iter().any(|a| a == "--json");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_hot_paths.json".to_string());
 
-    // ---- end-to-end engines on the same graph ---------------------------
-    println!("-- engines, end-to-end (complete linkage) --");
-    let t = Table::new(&["engine", "median", "mean", "samples"], &[26, 12, 12, 8]);
-    let mut line = |name: &str, timing: rac_hac::util::bench::Timing| {
-        t.row(&[
-            name,
-            &format!("{:.3?}", timing.median),
-            &format!("{:.3?}", timing.mean),
-            &timing.samples.to_string(),
-        ]);
+    let (g, workload_name, budget, min_samples) = if smoke {
+        (common::sift_knn(2_000, 32, 12, 9), "sift_knn_smoke", Duration::from_millis(150), 2)
+    } else {
+        (common::sift_knn(8_000, 64, 16, 9), "sift_knn", Duration::from_secs(1), 3)
     };
-    line(
-        "naive_hac (heap)",
-        time_budget(budget, 3, || naive_hac(&g, Linkage::Complete)),
-    );
-    line(
-        "nn_chain",
-        time_budget(budget, 3, || nn_chain(&g, Linkage::Complete)),
-    );
-    line(
-        "rac (1 thread)",
-        time_budget(budget, 3, || {
-            RacEngine::new(&g, Linkage::Complete).with_threads(1).run()
-        }),
-    );
-    line(
-        &format!("rac ({} threads)", default_threads()),
-        time_budget(budget, 3, || {
-            RacEngine::new(&g, Linkage::Complete)
-                .with_threads(default_threads())
-                .run()
-        }),
-    );
-    line(
-        "dist_rac (4x2)",
-        time_budget(budget, 3, || {
-            DistRacEngine::new(
-                &g,
-                Linkage::Complete,
-                DistConfig::new(4, 2),
-            )
-            .run()
-        }),
+    println!(
+        "workload: SIFT-like kNN graph n={} ({} edges, max degree {}){}\n",
+        g.n(),
+        g.m(),
+        g.max_degree(),
+        if smoke { " [smoke]" } else { "" }
     );
 
-    // ---- pool dispatch overhead ----------------------------------------
-    println!("\n-- pool dispatch overhead (per par_map_indexed call) --");
-    let t = Table::new(&["threads", "n=64", "n=4096"], &[8, 12, 12]);
-    for threads in [2usize, 4, 8] {
-        let pool = Pool::new(threads);
-        let t64 = time_budget(Duration::from_millis(300), 50, || {
-            pool.par_map_indexed(64, |i| i * 2)
-        });
-        let t4k = time_budget(Duration::from_millis(300), 50, || {
-            pool.par_map_indexed(4096, |i| i * 2)
-        });
+    // ---- engine × linkage × threads matrix ------------------------------
+    println!("-- engines (flat store vs hashmap baseline vs dist) --");
+    let cells = engine_matrix(&g, budget, min_samples);
+    let t = Table::new(
+        &["engine", "linkage", "threads", "median", "mean", "samples"],
+        &[14, 10, 8, 12, 12, 8],
+    );
+    for c in &cells {
         t.row(&[
-            &threads.to_string(),
-            &format!("{:.1?}", t64.median),
-            &format!("{:.1?}", t4k.median),
+            c.engine,
+            c.linkage.name(),
+            &c.threads.to_string(),
+            &format!("{:.3?}", c.timing.median),
+            &format!("{:.3?}", c.timing.mean),
+            &c.timing.samples.to_string(),
         ]);
     }
 
-    // ---- phase split for the RAC engine ---------------------------------
-    println!("\n-- rac phase split (1 thread, complete linkage) --");
-    let r = RacEngine::new(&g, Linkage::Complete).with_threads(1).run();
-    let (mut tf, mut tm, mut tu) = (Duration::ZERO, Duration::ZERO, Duration::ZERO);
-    let mut scans = 0usize;
-    for rm in &r.metrics.rounds {
-        tf += rm.t_find;
-        tm += rm.t_merge;
-        tu += rm.t_update_nn;
-        scans += rm.nn_scan_entries;
-    }
+    // ---- headline: flat vs hashmap at default threads -------------------
+    let headline_threads = default_threads();
+    let pick = |engine: &str| {
+        cells
+            .iter()
+            .find(|c| {
+                c.engine == engine
+                    && c.linkage == Linkage::Complete
+                    && c.threads == headline_threads
+            })
+            .expect("headline cell measured")
+    };
+    let flat = pick("rac_flat");
+    let hash = pick("rac_hash");
+    let speedup = hash.timing.median.as_secs_f64() / flat.timing.median.as_secs_f64().max(1e-12);
     println!(
-        "find {:?} | merge {:?} | update_nn {:?} | {} nn-scan entries | {} rounds",
-        tf,
-        tm,
-        tu,
-        scans,
-        r.metrics.merge_rounds()
+        "\nheadline (complete linkage, {headline_threads} threads): \
+         flat {:.3?} vs hashmap {:.3?} → {speedup:.2}x",
+        flat.timing.median, hash.timing.median
     );
+
+    // ---- slower context rows + dispatch overhead (full mode only) -------
+    if !smoke {
+        println!("\n-- sequential baselines (complete linkage) --");
+        let t = Table::new(&["engine", "median", "samples"], &[18, 12, 8]);
+        let naive = time_budget(budget, min_samples, || naive_hac(&g, Linkage::Complete));
+        t.row(&["naive_hac (heap)", &format!("{:.3?}", naive.median), &naive.samples.to_string()]);
+        let chain = time_budget(budget, min_samples, || nn_chain(&g, Linkage::Complete));
+        t.row(&["nn_chain", &format!("{:.3?}", chain.median), &chain.samples.to_string()]);
+
+        println!("\n-- pool dispatch overhead (per par_map_indexed call) --");
+        let t = Table::new(&["threads", "n=64", "n=4096"], &[8, 12, 12]);
+        for threads in [2usize, 4, 8] {
+            let pool = Pool::new(threads);
+            let t64 = time_budget(Duration::from_millis(300), 50, || {
+                pool.par_map_indexed(64, |i| i * 2)
+            });
+            let t4k = time_budget(Duration::from_millis(300), 50, || {
+                pool.par_map_indexed(4096, |i| i * 2)
+            });
+            t.row(&[
+                &threads.to_string(),
+                &format!("{:.1?}", t64.median),
+                &format!("{:.1?}", t4k.median),
+            ]);
+        }
+    }
+
+    // ---- JSON trajectory datapoint --------------------------------------
+    if write_json {
+        let report = obj([
+            ("schema", "bench_hot_paths/v1".into()),
+            ("mode", (if smoke { "smoke" } else { "full" }).into()),
+            (
+                "workload",
+                obj([
+                    ("name", workload_name.into()),
+                    ("n", g.n().into()),
+                    ("edges", g.m().into()),
+                    ("max_degree", g.max_degree().into()),
+                ]),
+            ),
+            (
+                "headline",
+                obj([
+                    ("linkage", Linkage::Complete.name().into()),
+                    ("threads", headline_threads.into()),
+                    ("flat_median_us", us(flat.timing.median).into()),
+                    ("hashmap_median_us", us(hash.timing.median).into()),
+                    ("speedup", speedup.into()),
+                ]),
+            ),
+            (
+                "cells",
+                Json::Arr(cells.iter().map(Cell::to_json).collect()),
+            ),
+        ]);
+        std::fs::write(&out_path, format!("{report}\n")).expect("write bench report");
+        println!("\nwrote {out_path}");
+    }
 
     println!("\nhot_paths bench OK");
 }

@@ -169,6 +169,17 @@ impl Dendrogram {
         self.n == other.n && self.canonical(tol) == other.canonical(tol)
     }
 
+    /// The merge list as `(a, b, weight bits)` triples — the *bit-exact*
+    /// fingerprint used by the engine-equivalence suites
+    /// (`rust/tests/store_equivalence.rs` and the dist topology tests),
+    /// where `same_clustering`'s tolerance would be too forgiving.
+    pub fn bitwise_merges(&self) -> Vec<(u32, u32, u64)> {
+        self.merges
+            .iter()
+            .map(|m| (m.a, m.b, m.weight.to_bits()))
+            .collect()
+    }
+
     /// Monotonicity violations ("inversions"): internal nodes whose merge
     /// weight is lower than a child's merge weight. Zero for reducible
     /// linkages; typically positive for centroid linkage.

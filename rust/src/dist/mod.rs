@@ -49,7 +49,7 @@ pub use shard::{partition, shard_of, ShardLoad};
 
 use std::time::{Duration, Instant};
 
-use rustc_hash::{FxHashMap, FxHashSet};
+use rustc_hash::FxHashSet;
 
 use crate::dendrogram::{Dendrogram, Merge};
 use crate::graph::Graph;
@@ -57,6 +57,7 @@ use crate::linkage::{EdgeState, Linkage, Weight};
 use crate::metrics::{RoundMetrics, RunMetrics};
 use crate::rac::logic::{compute_union_map, scan_nn, PairView};
 use crate::rac::{RacResult, NO_NN};
+use crate::store::NeighborStore;
 
 /// Simulated cost of one work unit (one neighbor entry / flag op).
 const T_UNIT_NS: u128 = 200;
@@ -92,7 +93,7 @@ impl Default for DistConfig {
     }
 }
 
-type UnionEntry = (u32, FxHashMap<u32, EdgeState>);
+type UnionEntry = crate::store::UnionRow;
 
 /// Distributed RAC engine. Exact: for any topology the dendrogram is
 /// bitwise identical to [`crate::rac::RacEngine`]'s and therefore (for
@@ -108,7 +109,9 @@ pub struct DistRacEngine {
     nn: Vec<u32>,
     nn_weight: Vec<Weight>,
     will_merge: Vec<bool>,
-    neighbors: Vec<FxHashMap<u32, EdgeState>>,
+    /// Flat arena-backed adjacency, shared representation with the
+    /// shared-memory engine ([`crate::store`]).
+    store: NeighborStore,
     /// Hard cap on rounds (safety valve, as in the shared-memory engine).
     max_rounds: usize,
 }
@@ -140,13 +143,6 @@ impl DistRacEngine {
             );
         }
         let n = g.n();
-        let neighbors: Vec<FxHashMap<u32, EdgeState>> = (0..n as u32)
-            .map(|u| {
-                g.neighbors(u)
-                    .map(|(v, w)| (v, EdgeState::point(w)))
-                    .collect()
-            })
-            .collect();
         DistRacEngine {
             linkage,
             cfg,
@@ -157,7 +153,9 @@ impl DistRacEngine {
             nn: vec![NO_NN; n],
             nn_weight: vec![Weight::INFINITY; n],
             will_merge: vec![false; n],
-            neighbors,
+            // Rows pre-sized exactly from the CSR degrees — one arena
+            // allocation, no per-insert growth.
+            store: NeighborStore::from_graph(g),
             max_rounds: 4 * n + 64,
         }
     }
@@ -185,9 +183,9 @@ impl DistRacEngine {
         let mut metrics = RunMetrics::default();
 
         // Initial NN cache (local per shard: every shard scans only the
-        // neighbor maps it owns).
+        // neighbor rows it owns).
         for c in 0..self.n {
-            let (nn, w) = scan_nn(&self.neighbors[c]);
+            let (nn, w) = scan_nn(self.store.row(c as u32));
             self.nn[c] = nn;
             self.nn_weight[c] = w;
         }
@@ -256,8 +254,9 @@ impl DistRacEngine {
                     let needs_rescan = self.will_merge[c]
                         || (self.nn[c] != NO_NN && self.will_merge[self.nn[c] as usize]);
                     needs_rescan.then(|| {
-                        let (nn, w) = scan_nn(&self.neighbors[c]);
-                        (c as u32, nn, w, self.neighbors[c].len())
+                        let row = self.store.row(c as u32);
+                        let (nn, w) = scan_nn(row);
+                        (c as u32, nn, w, row.live_len())
                     })
                 })
                 .collect();
@@ -356,26 +355,24 @@ impl DistRacEngine {
             let p = self.nn[l as usize];
             let (sl, sp) = (shard_of(l, m), shard_of(p, m));
             load[sl].merge_work +=
-                (self.neighbors[l as usize].len() + self.neighbors[p as usize].len()) as u64;
+                (self.store.row(l).live_len() + self.store.row(p).live_len()) as u64;
             if sl != sp {
                 stage[sl * m + sp].push(Message::PartnerFetch { partner: p });
                 stage[sp * m + sl].push(Message::PartnerState {
                     partner: p,
                     size: self.size[p as usize],
-                    entries: self.neighbors[p as usize]
+                    entries: self
+                        .store
+                        .row(p)
                         .iter()
-                        .map(|(&t, e)| (t, e.weight, e.count))
+                        .map(|(t, e)| (t, e.weight, e.count))
                         .collect(),
                 });
             }
             // Pair views the union computation will request: every
             // neighbor of L or P, plus the partner of any merging
             // neighbor (the canonicalisation step views both members).
-            for x in self.neighbors[l as usize]
-                .keys()
-                .chain(self.neighbors[p as usize].keys())
-            {
-                let x = *x;
+            for (x, _) in self.store.row(l).iter().chain(self.store.row(p).iter()) {
                 if x == l || x == p {
                     continue;
                 }
@@ -430,11 +427,9 @@ impl DistRacEngine {
         for (l, map) in unions {
             let p = self.nn[l as usize];
             let sl = shard_of(l, m);
-            for (&t_id, &e) in &map {
+            for &(t_id, e) in &map {
                 if !self.will_merge[t_id as usize] {
-                    let tm = &mut self.neighbors[t_id as usize];
-                    tm.remove(&p);
-                    tm.insert(l, e);
+                    self.store.patch(t_id, l, p, e);
                     let st = shard_of(t_id, m);
                     if st != sl {
                         patches[sl * m + st].push(Message::EdgePatch {
@@ -448,10 +443,13 @@ impl DistRacEngine {
                 }
             }
             self.size[l as usize] += self.size[p as usize];
-            self.neighbors[l as usize] = map;
-            self.neighbors[p as usize] = FxHashMap::default();
+            self.store.install_row(l, &map);
+            self.store.clear_row(p);
             self.active[p as usize] = false;
         }
+        // Same per-round compaction point as the shared-memory engine, so
+        // the two stores' live/dead trajectories stay in lockstep.
+        self.store.maybe_compact();
         for src in 0..m {
             for dst in 0..m {
                 if src != dst {
@@ -465,7 +463,7 @@ impl DistRacEngine {
     /// [`compute_union_map`] with the same arguments as the shared-memory
     /// engine, so the arithmetic (and its floating-point rounding) is
     /// bitwise identical.
-    fn union_map(&self, l: u32, p: u32) -> FxHashMap<u32, EdgeState> {
+    fn union_map(&self, l: u32, p: u32) -> Vec<(u32, EdgeState)> {
         compute_union_map(
             self.linkage,
             l,
@@ -473,8 +471,8 @@ impl DistRacEngine {
             self.nn_weight[l as usize],
             self.size[l as usize],
             self.size[p as usize],
-            &self.neighbors[l as usize],
-            &self.neighbors[p as usize],
+            self.store.row(l),
+            self.store.row(p),
             |x| PairView {
                 merging: self.will_merge[x as usize],
                 partner: self.nn[x as usize],

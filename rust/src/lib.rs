@@ -17,7 +17,9 @@
 //!   reciprocal-nearest-neighbor merge engine; [`dist`] runs the same
 //!   phases sharded across simulated machines with batched cross-shard
 //!   messaging; [`hac`] holds the exact sequential baselines the engine is
-//!   verified against.
+//!   verified against. Both engines keep cluster adjacency in [`store`],
+//!   a flat arena-backed neighbor store with tombstone deletion,
+//!   owner-sharded lock-free merge application, and periodic compaction.
 //!
 //! Quick start (see `examples/quickstart.rs` for the larger runnable
 //! version):
@@ -71,4 +73,5 @@ pub mod metrics;
 pub mod pipeline;
 pub mod rac;
 pub mod runtime;
+pub mod store;
 pub mod util;

@@ -1,27 +1,53 @@
-//! The union-map computation shared by the shared-memory engine
-//! ([`super::RacEngine`]) and the distributed engine ([`crate::dist`]).
+//! The NN-scan and union-map computation shared by the shared-memory
+//! engine ([`super::RacEngine`]), the distributed engine
+//! ([`crate::dist`]), and the hashmap reference engine
+//! ([`super::baseline`]).
 //!
-//! Given a merging pair `(L, P)` and the two parent neighbor maps, compute
-//! the neighbor map of `L ∪ P`. Targets that are themselves merging pairs
-//! are canonicalised to their pair leader and combined with a second
-//! Lance–Williams step (see the deviation note in [`super`]'s docs).
+//! Given a merging pair `(L, P)` and the two parent neighbor views,
+//! compute the neighbor map of `L ∪ P`. Targets that are themselves
+//! merging pairs are canonicalised to their pair leader and combined with
+//! a second Lance–Williams step (see the deviation note in [`super`]'s
+//! docs).
+//!
+//! ## Backend independence (bitwise)
+//!
+//! All functions here take neighbor state through the
+//! [`NeighborsRef`](crate::store::NeighborsRef) abstraction, whose visit
+//! *order* is unspecified — the flat arena store yields row-storage
+//! order, the hashmap oracle yields hash order. Every floating-point
+//! reduction is therefore arranged so its result is a function of the
+//! edge *set* only:
+//!
+//! * [`scan_nn`] minimises under the total order `(weight, id)`, which is
+//!   order-insensitive by construction (Theorem 1 needs this single
+//!   total order everywhere).
+//! * min/max folds (single/complete linkage) are commutative and
+//!   associative, so the single-pass fold may run in any visit order.
+//! * Everything else — including **average** linkage — goes through the
+//!   gather path, which files each of the up-to-four parent edges toward
+//!   a target pair into a *named slot* (`lc/pc/ld/pd`) and reduces the
+//!   slots in one fixed expression order. A running-mean fold in visit
+//!   order would round differently per backend; the slot reduction makes
+//!   the result (and hence the dendrogram) bitwise identical across
+//!   stores and thread counts, which `rust/tests/store_equivalence.rs`
+//!   asserts.
 
 use rustc_hash::FxHashMap;
 
 use crate::linkage::{EdgeState, Linkage, MergeCtx, Weight};
+use crate::store::NeighborsRef;
 
-/// Scan a neighbor map for the `(weight, id)`-minimal entry, returning
-/// [`super::NO_NN`] for an empty map. Shared by the shared-memory and
-/// distributed engines so nearest-neighbor tie-breaking is bitwise
-/// identical everywhere (Theorem 1 needs a single total order).
+/// Scan a neighbor view for the `(weight, id)`-minimal entry, returning
+/// [`super::NO_NN`] for an empty view. Shared by every engine so
+/// nearest-neighbor tie-breaking is bitwise identical everywhere.
 #[inline]
-pub fn scan_nn(map: &FxHashMap<u32, EdgeState>) -> (u32, Weight) {
+pub fn scan_nn<N: NeighborsRef>(neighbors: N) -> (u32, Weight) {
     let mut best = (super::NO_NN, Weight::INFINITY);
-    for (&v, e) in map {
+    neighbors.for_each_edge(|v, e| {
         if e.weight < best.1 || (e.weight == best.1 && v < best.0) {
             best = (v, e.weight);
         }
-    }
+    });
     best
 }
 
@@ -54,31 +80,35 @@ struct Gather {
 ///
 /// * `l`, `p` — the merging pair (leader first), with pair weight `w_lp`
 ///   and sizes `sl`, `sp`.
-/// * `l_neighbors`, `p_neighbors` — their current neighbor maps.
+/// * `l_neighbors`, `p_neighbors` — their current neighbor views.
 /// * `view(x)` — cluster info for any neighbor id (see [`PairView`]).
 ///
 /// The result is keyed by *canonical* target ids: non-merging neighbors
 /// keep their id; merging neighbor pairs appear once under
-/// `min(id, partner)`.
+/// `min(id, partner)`. Entry order is first-encounter order over
+/// `l_neighbors` then `p_neighbors`; the entry *values* are independent
+/// of visit order (module docs).
 ///
 /// Dispatches to a single-pass fold for linkages whose pair–pair
-/// combination is a flat associative reduction over the up-to-four parent
-/// edges (min / max / count-weighted mean — §Perf item 5), and to the
-/// structured two-step Lance–Williams path for Ward/WPGMA, whose updates
-/// need sizes and pair weights per step.
-pub fn compute_union_map(
+/// combination is a commutative flat reduction over the up-to-four parent
+/// edges (min / max — §Perf item 5), and to the structured two-step
+/// Lance–Williams gather path for everything else: Ward/WPGMA need sizes
+/// and pair weights per step, and average needs the gather slots' fixed
+/// reduction order for backend-independent rounding (module docs).
+#[allow(clippy::too_many_arguments)]
+pub fn compute_union_map<N: NeighborsRef>(
     linkage: Linkage,
     l: u32,
     p: u32,
     w_lp: Weight,
     sl: u64,
     sp: u64,
-    l_neighbors: &FxHashMap<u32, EdgeState>,
-    p_neighbors: &FxHashMap<u32, EdgeState>,
+    l_neighbors: N,
+    p_neighbors: N,
     view: impl Fn(u32) -> PairView,
-) -> FxHashMap<u32, EdgeState> {
+) -> Vec<(u32, EdgeState)> {
     match linkage {
-        Linkage::Single | Linkage::Complete | Linkage::Average => {
+        Linkage::Single | Linkage::Complete => {
             compute_union_map_flat(linkage, l, p, l_neighbors, p_neighbors, view)
         }
         _ => compute_union_map_lw(
@@ -95,17 +125,17 @@ pub fn compute_union_map(
     }
 }
 
-/// Single-pass fold for fully-associative linkages: every parent edge
-/// toward the canonical target is reduced with [`flat_fold`] as
-/// encountered — no gather map, one output hashmap.
-fn compute_union_map_flat(
+/// Single-pass fold for commutative-associative linkages (min/max):
+/// every parent edge toward the canonical target is reduced with
+/// [`flat_fold`] as encountered — no gather slots, one output vector.
+fn compute_union_map_flat<N: NeighborsRef>(
     linkage: Linkage,
     l: u32,
     p: u32,
-    l_neighbors: &FxHashMap<u32, EdgeState>,
-    p_neighbors: &FxHashMap<u32, EdgeState>,
+    l_neighbors: N,
+    p_neighbors: N,
     view: impl Fn(u32) -> PairView,
-) -> FxHashMap<u32, EdgeState> {
+) -> Vec<(u32, EdgeState)> {
     #[inline]
     fn flat_fold(linkage: Linkage, acc: &mut EdgeState, e: EdgeState) {
         match linkage {
@@ -117,62 +147,63 @@ fn compute_union_map_flat(
                 acc.weight = acc.weight.max(e.weight);
                 acc.count += e.count;
             }
-            Linkage::Average => {
-                let total = acc.count + e.count;
-                acc.weight = (acc.weight * acc.count as Weight
-                    + e.weight * e.count as Weight)
-                    / total as Weight;
-                acc.count = total;
-            }
-            _ => unreachable!("flat path is only for single/complete/average"),
+            _ => unreachable!("flat path is only for single/complete"),
         }
     }
 
-    let mut out: FxHashMap<u32, EdgeState> = FxHashMap::with_capacity_and_hasher(
-        l_neighbors.len() + p_neighbors.len(),
-        Default::default(),
-    );
+    let cap = l_neighbors.live_len() + p_neighbors.live_len();
+    let mut out: Vec<(u32, EdgeState)> = Vec::with_capacity(cap);
+    let mut index: FxHashMap<u32, u32> =
+        FxHashMap::with_capacity_and_hasher(cap, Default::default());
     for map in [l_neighbors, p_neighbors] {
-        for (&x, &e) in map {
+        map.for_each_edge(|x, e| {
             if x == l || x == p {
-                continue;
+                return;
             }
             let vx = view(x);
             let t_id = if vx.merging { x.min(vx.partner) } else { x };
-            out.entry(t_id)
-                .and_modify(|acc| flat_fold(linkage, acc, e))
-                .or_insert(e);
-        }
+            match index.entry(t_id) {
+                std::collections::hash_map::Entry::Occupied(slot) => {
+                    flat_fold(linkage, &mut out[*slot.get() as usize].1, e);
+                }
+                std::collections::hash_map::Entry::Vacant(slot) => {
+                    slot.insert(out.len() as u32);
+                    out.push((t_id, e));
+                }
+            }
+        });
     }
     out
 }
 
-/// Structured two-step Lance–Williams path (Ward, WPGMA, and any future
-/// linkage whose update needs per-step sizes/pair weights).
+/// Structured two-step Lance–Williams gather path (average, Ward, WPGMA,
+/// and any future linkage whose update needs per-step sizes/pair weights
+/// or a canonical reduction order).
 #[allow(clippy::too_many_arguments)]
-fn compute_union_map_lw(
+fn compute_union_map_lw<N: NeighborsRef>(
     linkage: Linkage,
     l: u32,
     p: u32,
     w_lp: Weight,
     sl: u64,
     sp: u64,
-    l_neighbors: &FxHashMap<u32, EdgeState>,
-    p_neighbors: &FxHashMap<u32, EdgeState>,
+    l_neighbors: N,
+    p_neighbors: N,
     view: impl Fn(u32) -> PairView,
-) -> FxHashMap<u32, EdgeState> {
-    let cap = l_neighbors.len() + p_neighbors.len();
-    let mut gather: FxHashMap<u32, (Gather, PairView)> =
+) -> Vec<(u32, EdgeState)> {
+    let cap = l_neighbors.live_len() + p_neighbors.live_len();
+    let mut index: FxHashMap<u32, u32> =
         FxHashMap::with_capacity_and_hasher(cap, Default::default());
+    let mut slots: Vec<(u32, Gather, PairView)> = Vec::with_capacity(cap);
 
     for (from_p, map) in [(false, l_neighbors), (true, p_neighbors)] {
-        for (&x, &e) in map {
+        map.for_each_edge(|x, e| {
             if x == l || x == p {
-                continue;
+                return;
             }
             let vx = view(x);
             // Canonicalise merging targets to their pair leader (paper
-            // pseudocode deviation — see module docs).
+            // pseudocode deviation — see module docs in `super`).
             let (t_id, toward_leader, vt) = if vx.merging {
                 let t = x.min(vx.partner);
                 if t == x {
@@ -183,19 +214,22 @@ fn compute_union_map_lw(
             } else {
                 (x, true, vx)
             };
-            let slot = gather.entry(t_id).or_insert((Gather::default(), vt));
+            let i = *index.entry(t_id).or_insert_with(|| {
+                slots.push((t_id, Gather::default(), vt));
+                slots.len() as u32 - 1
+            });
+            let g = &mut slots[i as usize].1;
             match (from_p, toward_leader) {
-                (false, true) => slot.0.lc = Some(e),
-                (true, true) => slot.0.pc = Some(e),
-                (false, false) => slot.0.ld = Some(e),
-                (true, false) => slot.0.pd = Some(e),
+                (false, true) => g.lc = Some(e),
+                (true, true) => g.pc = Some(e),
+                (false, false) => g.ld = Some(e),
+                (true, false) => g.pd = Some(e),
             }
-        }
+        });
     }
 
-    let mut out: FxHashMap<u32, EdgeState> =
-        FxHashMap::with_capacity_and_hasher(gather.len(), Default::default());
-    for (t_id, (g, vt)) in gather {
+    let mut out: Vec<(u32, EdgeState)> = Vec::with_capacity(slots.len());
+    for (t_id, g, vt) in slots {
         // Step 1: (L, P) → U against the target's leader C and partner D.
         let uc = linkage.merge(
             g.lc,
@@ -237,7 +271,7 @@ fn compute_union_map_lw(
             uc
         };
         if let Some(e) = e {
-            out.insert(t_id, e);
+            out.push((t_id, e));
         }
     }
     out
@@ -249,6 +283,24 @@ mod tests {
 
     fn es(w: Weight) -> EdgeState {
         EdgeState::point(w)
+    }
+
+    fn get(out: &[(u32, EdgeState)], id: u32) -> EdgeState {
+        out.iter()
+            .find(|&&(t, _)| t == id)
+            .map(|&(_, e)| e)
+            .unwrap_or_else(|| panic!("no entry for {id}"))
+    }
+
+    #[test]
+    fn scan_nn_breaks_ties_by_id() {
+        let map: FxHashMap<u32, EdgeState> =
+            [(7u32, es(2.0)), (3u32, es(2.0)), (9u32, es(5.0))]
+                .into_iter()
+                .collect();
+        assert_eq!(scan_nn(&map), (3, 2.0));
+        let empty = FxHashMap::default();
+        assert_eq!(scan_nn(&empty), (crate::rac::NO_NN, Weight::INFINITY));
     }
 
     #[test]
@@ -268,8 +320,8 @@ mod tests {
         };
         let out = compute_union_map(Linkage::Average, 0, 1, 1.0, 1, 1, &ln, &pn, view);
         assert_eq!(out.len(), 2);
-        assert_eq!(out[&2].weight, 5.0);
-        assert_eq!(out[&3].weight, 7.0);
+        assert_eq!(get(&out, 2).weight, 5.0);
+        assert_eq!(get(&out, 3).weight, 7.0);
     }
 
     #[test]
@@ -301,8 +353,8 @@ mod tests {
         let out = compute_union_map(Linkage::Average, 0, 1, 1.0, 1, 1, &ln, &pn, view);
         assert_eq!(out.len(), 1);
         // Average over all 4 point pairs: (4+8+6+10)/4 = 7.
-        assert!((out[&2].weight - 7.0).abs() < 1e-12);
-        assert_eq!(out[&2].count, 4);
+        assert!((get(&out, 2).weight - 7.0).abs() < 1e-12);
+        assert_eq!(get(&out, 2).count, 4);
     }
 
     #[test]
@@ -329,6 +381,73 @@ mod tests {
         };
         let out = compute_union_map(Linkage::Single, 0, 1, 1.0, 1, 1, &ln, &pn, view);
         assert_eq!(out.len(), 1);
-        assert_eq!(out[&2].weight, 9.0);
+        assert_eq!(get(&out, 2).weight, 9.0);
+    }
+
+    /// The same edge set presented through the flat store and through a
+    /// hashmap must produce bitwise-identical union values — the backend
+    /// independence contract of the module docs.
+    #[test]
+    fn backends_agree_bitwise() {
+        use crate::graph::Graph;
+        use crate::store::NeighborStore;
+
+        // Pair (0,1) merging with a merging neighbor pair (2,3) plus two
+        // plain neighbors 4, 5 — exercises every gather slot.
+        let g = Graph::from_edges(
+            6,
+            [
+                (0, 1, 1.0),
+                (0, 2, 4.0),
+                (0, 3, 6.0),
+                (1, 2, 8.0),
+                (1, 3, 10.0),
+                (0, 4, 3.0),
+                (1, 5, 2.0),
+                (2, 3, 1.5),
+            ],
+        );
+        let store = NeighborStore::from_graph(&g);
+        let ln: FxHashMap<u32, EdgeState> =
+            g.neighbors(0).map(|(v, w)| (v, es(w))).collect();
+        let pn: FxHashMap<u32, EdgeState> =
+            g.neighbors(1).map(|(v, w)| (v, es(w))).collect();
+        let view = |x: u32| match x {
+            2 | 3 => PairView {
+                merging: true,
+                partner: 5 - x,
+                size: 1,
+                pair_weight: 1.5,
+            },
+            _ => PairView {
+                merging: false,
+                partner: x,
+                size: 1,
+                pair_weight: 0.0,
+            },
+        };
+        for linkage in [Linkage::Single, Linkage::Complete, Linkage::Average] {
+            let flat = compute_union_map(
+                linkage,
+                0,
+                1,
+                1.0,
+                1,
+                1,
+                store.row(0),
+                store.row(1),
+                view,
+            );
+            let hash = compute_union_map(linkage, 0, 1, 1.0, 1, 1, &ln, &pn, view);
+            let key = |out: &[(u32, EdgeState)]| {
+                let mut v: Vec<(u32, u64, u64)> = out
+                    .iter()
+                    .map(|&(t, e)| (t, e.weight.to_bits(), e.count))
+                    .collect();
+                v.sort_unstable();
+                v
+            };
+            assert_eq!(key(&flat), key(&hash), "{linkage:?}");
+        }
     }
 }

@@ -1,21 +1,34 @@
 //! Reciprocal Agglomerative Clustering — the paper's Algorithm 2 and the
-//! detailed implementation of §5, as a shared-memory round engine.
+//! detailed implementation of §5, as a shared-memory round engine over
+//! the flat arena-backed neighbor store ([`crate::store`]).
 //!
 //! Each round runs three phases, all parallelised across clusters:
 //!
 //! 1. **Find Reciprocal Nearest Neighbors** — `C.will_merge = (C.nn.nn == C)`;
 //!    the lower-id member of each pair is the *leader* and owns the merge.
-//! 2. **Update Cluster Dissimilarities** — every leader independently
-//!    computes the neighbor map of its union. When a neighbor is itself a
-//!    merging pair, the pair–pair dissimilarity `W(A∪B, C∪D)` is computed
-//!    *twice* (once by each leader) rather than coordinated — the paper's
-//!    contention-free choice. Results are then applied: unions installed,
-//!    higher-id partners deleted, and non-merging neighbors' maps patched.
+//! 2. **Update Cluster Dissimilarities** — two sub-steps:
+//!    * *Compute*: every leader independently computes the neighbor map
+//!      of its union (read-only over shared state). When a neighbor is
+//!      itself a merging pair, the pair–pair dissimilarity `W(A∪B, C∪D)`
+//!      is computed *twice* (once by each leader) rather than
+//!      coordinated — the paper's contention-free choice.
+//!    * *Apply*: the computed unions are applied by an **owner-sharded
+//!      parallel pass** ([`crate::store::NeighborStore::par_apply_round`])
+//!      with no locks: worker `w` of `S` shards exclusively owns every
+//!      cluster id with `id % S == w`, and handles exactly the union-row
+//!      installs, partner retirements, and neighbor patches that land on
+//!      its rows. Because adjacency is symmetric, a patch never grows a
+//!      row (it overwrites the leader's slot or reuses the retired
+//!      partner's), so workers write strictly disjoint memory and the
+//!      result is bit-for-bit identical for every thread count.
 //! 3. **Update Nearest Neighbors** — any cluster that merged, or whose
-//!    cached nearest neighbor merged, rescans its neighbor map. For
+//!    cached nearest neighbor merged, rescans its neighbor row. For
 //!    reducible linkages no other cluster's NN can change (a merge never
 //!    moves the union closer than the closest parent), so the rescan set is
 //!    exactly the paper's `C.will_merge or C.nn.will_merge` condition.
+//!
+//! After the apply pass the store compacts itself when dead arena space
+//! outgrows live entries (policy in [`crate::store`]'s docs).
 //!
 //! ## Deviation from the paper's pseudocode (documented)
 //!
@@ -30,18 +43,21 @@
 //! exactness against sequential HAC.
 //!
 //! The distributed version of the same phases (sharded state, batched
-//! cross-machine messages) lives in [`crate::dist`].
+//! cross-machine messages) lives in [`crate::dist`]. The PR-1
+//! hashmap-backed engine survives as [`baseline::HashRacEngine`] — the
+//! differential oracle and perf baseline for the flat store
+//! (`rust/tests/store_equivalence.rs`, `benches/hot_paths.rs`).
 
+pub mod baseline;
 pub mod logic;
 
 use std::time::Instant;
-
-use rustc_hash::FxHashMap;
 
 use crate::dendrogram::{Dendrogram, Merge};
 use crate::graph::Graph;
 use crate::linkage::{EdgeState, Linkage, Weight};
 use crate::metrics::{RoundMetrics, RunMetrics};
+use crate::store::{NeighborStore, UnionRow};
 use crate::util::parallel::default_threads;
 use crate::util::pool::Pool;
 
@@ -57,7 +73,7 @@ pub struct RacResult {
     pub metrics: RunMetrics,
 }
 
-/// Shared-memory RAC engine.
+/// Shared-memory RAC engine over the flat neighbor store.
 pub struct RacEngine {
     linkage: Linkage,
     n: usize,
@@ -69,7 +85,7 @@ pub struct RacEngine {
     nn: Vec<u32>,
     nn_weight: Vec<Weight>,
     will_merge: Vec<bool>,
-    neighbors: Vec<FxHashMap<u32, EdgeState>>,
+    store: NeighborStore,
     threads: usize,
     /// Hard cap on rounds (safety valve for non-reducible linkages).
     max_rounds: usize,
@@ -93,6 +109,10 @@ impl RacEngine {
 
     /// Build without the reducibility guard (for demonstrating where
     /// Theorem 1's hypothesis is necessary).
+    ///
+    /// Neighbor rows are pre-sized exactly from the graph's CSR degrees
+    /// ([`NeighborStore::from_graph`]) — one arena allocation, no
+    /// per-insert growth.
     pub fn new_unchecked(g: &Graph, linkage: Linkage) -> Self {
         if !linkage.supports_sparse() {
             let n = g.n();
@@ -102,13 +122,6 @@ impl RacEngine {
             );
         }
         let n = g.n();
-        let neighbors: Vec<FxHashMap<u32, EdgeState>> = (0..n as u32)
-            .map(|u| {
-                g.neighbors(u)
-                    .map(|(v, w)| (v, EdgeState::point(w)))
-                    .collect()
-            })
-            .collect();
         RacEngine {
             linkage,
             n,
@@ -118,7 +131,7 @@ impl RacEngine {
             nn: vec![NO_NN; n],
             nn_weight: vec![Weight::INFINITY; n],
             will_merge: vec![false; n],
-            neighbors,
+            store: NeighborStore::from_graph(g),
             threads: default_threads(),
             max_rounds: 4 * n + 64,
         }
@@ -151,7 +164,7 @@ impl RacEngine {
 
         // Initial NN cache for every cluster.
         let init: Vec<(u32, Weight)> =
-            pool.par_map_indexed(self.n, |c| scan_nn(&self.neighbors[c]));
+            pool.par_map_indexed(self.n, |c| scan_nn(self.store.row(c as u32)));
         for (c, (nn, w)) in init.into_iter().enumerate() {
             self.nn[c] = nn;
             self.nn_weight[c] = w;
@@ -189,11 +202,11 @@ impl RacEngine {
             }
 
             // ---- Phase 2: update cluster dissimilarities ----------------
+            // Compute every leader's union map in parallel (read-only)...
             let t = Instant::now();
-            let unions: Vec<(u32, FxHashMap<u32, EdgeState>)> =
+            let unions: Vec<UnionRow> =
                 pool.par_map(&leaders, |&l| (l, self.union_map(l)));
 
-            // Apply: record merges, install unions, deactivate partners.
             for &l in &leaders {
                 let p = self.nn[l as usize];
                 merges.push(Merge {
@@ -202,22 +215,26 @@ impl RacEngine {
                     weight: self.nn_weight[l as usize],
                 });
             }
-            for (l, map) in unions {
+            // ...then apply with the lock-free owner-sharded parallel
+            // pass: install unions, retire partners, patch non-merging
+            // neighbors (module docs).
+            {
+                let store = &mut self.store;
+                let nn = &self.nn;
+                let will_merge = &self.will_merge;
+                store.par_apply_round(
+                    pool,
+                    &unions,
+                    |l| nn[l as usize],
+                    |t| !will_merge[t as usize],
+                );
+            }
+            for &l in &leaders {
                 let p = self.nn[l as usize];
-                // Patch non-merging neighbors' maps: new edge to the union
-                // under the leader's id, stale partner entry removed.
-                for (&t_id, &e) in &map {
-                    if !self.will_merge[t_id as usize] {
-                        let tm = &mut self.neighbors[t_id as usize];
-                        tm.remove(&p);
-                        tm.insert(l, e);
-                    }
-                }
                 self.size[l as usize] += self.size[p as usize];
-                self.neighbors[l as usize] = map;
-                self.neighbors[p as usize] = FxHashMap::default();
                 self.active[p as usize] = false;
             }
+            self.store.maybe_compact();
             n_active -= rm.merges;
             self.active_ids.retain(|&c| self.active[c as usize]);
             rm.t_merge = t.elapsed();
@@ -227,12 +244,14 @@ impl RacEngine {
             let updates: Vec<(u32, u32, Weight, usize)> = {
                 let ids = &self.active_ids;
                 pool.par_filter_map_indexed(ids.len(), |idx| {
-                    let c = ids[idx] as usize;
-                    let needs_rescan = self.will_merge[c]
-                        || (self.nn[c] != NO_NN && self.will_merge[self.nn[c] as usize]);
+                    let c = ids[idx];
+                    let needs_rescan = self.will_merge[c as usize]
+                        || (self.nn[c as usize] != NO_NN
+                            && self.will_merge[self.nn[c as usize] as usize]);
                     needs_rescan.then(|| {
-                        let (nn, w) = scan_nn(&self.neighbors[c]);
-                        (c as u32, nn, w, self.neighbors[c].len())
+                        let row = self.store.row(c);
+                        let (nn, w) = scan_nn(row);
+                        (c, nn, w, row.live_len())
                     })
                 })
             };
@@ -260,7 +279,7 @@ impl RacEngine {
     /// Compute the neighbor map of the union `L ∪ P` (read-only on shared
     /// state; each leader runs this independently in parallel). Delegates
     /// to the engine-agnostic [`logic::compute_union_map`].
-    fn union_map(&self, l: u32) -> FxHashMap<u32, EdgeState> {
+    fn union_map(&self, l: u32) -> Vec<(u32, EdgeState)> {
         let p = self.nn[l as usize];
         compute_union_map(
             self.linkage,
@@ -269,8 +288,8 @@ impl RacEngine {
             self.nn_weight[l as usize],
             self.size[l as usize],
             self.size[p as usize],
-            &self.neighbors[l as usize],
-            &self.neighbors[p as usize],
+            self.store.row(l),
+            self.store.row(p),
             |x| PairView {
                 merging: self.will_merge[x as usize],
                 partner: self.nn[x as usize],
@@ -404,5 +423,22 @@ mod tests {
         assert!(r.dendrogram.merges().is_empty());
         let r = RacEngine::new(&Graph::from_edges(1, []), Linkage::Average).run();
         assert!(r.dendrogram.merges().is_empty());
+    }
+
+    /// A workload big enough to push the arena past the compaction
+    /// threshold and churn most of it dead: the flat engine must still
+    /// track the hashmap oracle bitwise.
+    #[test]
+    fn compaction_does_not_change_result() {
+        let g = data::grid1d_graph(1200, 3);
+        for l in [Linkage::Single, Linkage::Average] {
+            let flat = RacEngine::new(&g, l).with_threads(4).run();
+            let hash = baseline::HashRacEngine::new(&g, l).with_threads(4).run();
+            assert_eq!(
+                flat.dendrogram.bitwise_merges(),
+                hash.dendrogram.bitwise_merges(),
+                "{l:?}"
+            );
+        }
     }
 }

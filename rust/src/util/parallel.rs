@@ -106,11 +106,17 @@ pub fn par_for_each_mut<T: Send>(
     });
 }
 
-/// Default worker count: the machine's logical cores.
+/// Default worker count: the machine's logical cores. Cached in a
+/// `OnceLock` — every engine construction queries this, and
+/// `available_parallelism` is a syscall on most platforms, so the first
+/// call pays it once and the rest are a load.
 pub fn default_threads() -> usize {
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
+    static DEFAULT: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *DEFAULT.get_or_init(|| {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    })
 }
 
 fn effective_threads(threads: usize, n: usize) -> usize {

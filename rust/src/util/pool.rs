@@ -223,9 +223,12 @@ impl Latch {
     }
 }
 
-/// Raw pointer wrapper that asserts cross-thread sendability for the
-/// disjoint-write pattern above.
-struct SendPtr<T>(*mut T);
+/// Raw pointer wrapper that asserts cross-thread sendability for
+/// disjoint-write patterns: the holder must guarantee that concurrent
+/// users never touch the same element (as `par_map_indexed` does with
+/// per-chunk output slots, and `store::NeighborStore::par_apply_round`
+/// does with owner-sharded rows).
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
 impl<T> Clone for SendPtr<T> {

@@ -1,0 +1,137 @@
+//! Differential property suite for the flat neighbor store: on random
+//! sparse graphs, the arena-backed [`RacEngine`] must produce dendrograms
+//! **bitwise identical** to the PR-1 hashmap oracle
+//! ([`HashRacEngine`]) — for every `SPARSE_REDUCIBLE` linkage — and
+//! identical to itself across thread counts 1/2/8. The distributed
+//! engine is held to the same bit-level standard, so all three neighbor
+//! representations (arena, hashmap, sharded arena) are pinned together.
+//!
+//! This is the contract that lets the perf work proceed safely: any
+//! divergence isolates a bug in the store layer or the owner-sharded
+//! apply, because every engine shares `rac::logic` for the arithmetic.
+
+use rac_hac::dist::{DistConfig, DistRacEngine};
+use rac_hac::graph::Graph;
+use rac_hac::linkage::{Linkage, Weight};
+use rac_hac::rac::baseline::HashRacEngine;
+use rac_hac::rac::RacEngine;
+use rac_hac::util::prop::for_all_seeds;
+use rac_hac::util::rng::Rng;
+
+/// Random sparse graph: a random tree (keeps most of the graph connected
+/// so runs produce long merge sequences) plus random extra edges, with
+/// occasional isolated tail nodes.
+fn random_sparse_graph(rng: &mut Rng) -> Graph {
+    let n = rng.range_usize(2, 140);
+    let mut edges: Vec<(u32, u32, Weight)> = Vec::new();
+    for v in 1..n {
+        // ~1 node in 12 stays detached from the tree.
+        if rng.bool_with(1.0 / 12.0) {
+            continue;
+        }
+        let u = rng.below(v) as u32;
+        edges.push((u, v as u32, rng.range_f64(0.1, 100.0)));
+    }
+    let extra = rng.range_usize(0, 3 * n);
+    for _ in 0..extra {
+        let u = rng.below(n) as u32;
+        let v = rng.below(n) as u32;
+        if u != v {
+            edges.push((u.min(v), u.max(v), rng.range_f64(0.1, 100.0)));
+        }
+    }
+    Graph::from_edges(n, edges)
+}
+
+#[test]
+fn flat_store_matches_hashmap_oracle() {
+    for_all_seeds(0x5708E, 35, |rng| {
+        let g = random_sparse_graph(rng);
+        for l in Linkage::SPARSE_REDUCIBLE {
+            let oracle = HashRacEngine::new(&g, l).with_threads(1).run();
+            let flat = RacEngine::new(&g, l).with_threads(1).run();
+            assert_eq!(
+                oracle.dendrogram.bitwise_merges(),
+                flat.dendrogram.bitwise_merges(),
+                "{l:?}: flat store diverged from hashmap oracle (n={})",
+                g.n()
+            );
+        }
+    });
+}
+
+#[test]
+fn flat_store_identical_across_thread_counts() {
+    for_all_seeds(0x7EAD5, 20, |rng| {
+        let g = random_sparse_graph(rng);
+        for l in Linkage::SPARSE_REDUCIBLE {
+            let base = RacEngine::new(&g, l).with_threads(1).run();
+            for threads in [2usize, 8] {
+                let r = RacEngine::new(&g, l).with_threads(threads).run();
+                assert_eq!(
+                    base.dendrogram.bitwise_merges(),
+                    r.dendrogram.bitwise_merges(),
+                    "{l:?}: {threads} threads changed the dendrogram (n={})",
+                    g.n()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn parallel_oracle_agrees_too() {
+    // The oracle's own parallelism (phases 1/2-compute/3) must not change
+    // anything either — pins the shared logic layer, not just the store.
+    for_all_seeds(0x0AC1E, 12, |rng| {
+        let g = random_sparse_graph(rng);
+        for l in Linkage::SPARSE_REDUCIBLE {
+            let oracle = HashRacEngine::new(&g, l).with_threads(4).run();
+            let flat = RacEngine::new(&g, l).with_threads(4).run();
+            assert_eq!(oracle.dendrogram.bitwise_merges(), flat.dendrogram.bitwise_merges(), "{l:?}");
+        }
+    });
+}
+
+#[test]
+fn dist_engine_matches_flat_store() {
+    for_all_seeds(0xD157, 12, |rng| {
+        let g = random_sparse_graph(rng);
+        for l in Linkage::SPARSE_REDUCIBLE {
+            let flat = RacEngine::new(&g, l).with_threads(3).run();
+            let dist = DistRacEngine::new(&g, l, DistConfig::new(5, 2)).run();
+            assert_eq!(
+                flat.dendrogram.bitwise_merges(),
+                dist.dendrogram.bitwise_merges(),
+                "{l:?}: dist engine diverged (n={})",
+                g.n()
+            );
+        }
+    });
+}
+
+/// Force heavy arena churn (large graph, many rounds) so compaction
+/// triggers, and demand the oracle equivalence survives it.
+#[test]
+fn equivalence_survives_compaction() {
+    let mut rng = Rng::seed_from(0xC0517AC7);
+    let n = 2500;
+    let mut edges: Vec<(u32, u32, Weight)> = Vec::new();
+    for v in 1..n {
+        let u = rng.below(v) as u32;
+        edges.push((u, v as u32, rng.range_f64(0.1, 100.0)));
+    }
+    for _ in 0..4 * n {
+        let u = rng.below(n) as u32;
+        let v = rng.below(n) as u32;
+        if u != v {
+            edges.push((u.min(v), u.max(v), rng.range_f64(0.1, 100.0)));
+        }
+    }
+    let g = Graph::from_edges(n, edges);
+    for l in Linkage::SPARSE_REDUCIBLE {
+        let oracle = HashRacEngine::new(&g, l).with_threads(4).run();
+        let flat = RacEngine::new(&g, l).with_threads(4).run();
+        assert_eq!(oracle.dendrogram.bitwise_merges(), flat.dendrogram.bitwise_merges(), "{l:?}");
+    }
+}
