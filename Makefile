@@ -3,7 +3,7 @@
 # it. `make bench` runs the perf-trajectory smoke bench and writes
 # BENCH_hot_paths.json (the per-PR datapoint CI uploads as an artifact).
 
-.PHONY: artifacts build test clippy bench
+.PHONY: artifacts build test clippy bench bench-approx
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -14,8 +14,13 @@ build:
 test:
 	cargo test -q
 
+# --all-targets lints benches, tests and examples too (the library alone
+# leaves most of the harness code unlinted).
 clippy:
-	cargo clippy -- -D warnings
+	cargo clippy --all-targets -- -D warnings
 
 bench:
 	cargo bench --bench hot_paths -- --json --smoke
+
+bench-approx:
+	cargo bench --bench approx_tradeoff -- --json --smoke

@@ -1,0 +1,57 @@
+//! Quickstart for the (1+ε)-approximate engine: when exact RAC's rounds
+//! collapse, a small ε restores parallelism at a provably bounded cost.
+//!
+//! ```bash
+//! cargo run --offline --release --example approx_tradeoff
+//! ```
+
+use rac_hac::approx::{quality, ApproxEngine};
+use rac_hac::data::adversarial_thm4;
+use rac_hac::linkage::Linkage;
+use rac_hac::rac::RacEngine;
+
+fn main() {
+    // The paper's Theorem-4 adversarial instance: sequential HAC builds a
+    // balanced tree, but only ONE reciprocal-nearest-neighbor pair exists
+    // per round, so exact RAC degenerates to one merge per round.
+    let g = adversarial_thm4(8); // n = 256, complete graph
+    let exact = RacEngine::new(&g, Linkage::Average).run();
+    println!(
+        "exact RAC:   {} merges in {:>3} rounds",
+        exact.metrics.total_merges(),
+        exact.metrics.merge_rounds()
+    );
+
+    // Relax the merge rule: a cluster may merge with any neighbor whose
+    // linkage is within (1+ε) of the best merge visible to either
+    // endpoint (TeraHAC's good-merge criterion). ε = 0 is bitwise-exact
+    // RAC; tiny ε already collapses the round count here.
+    for epsilon in [0.0, 0.01, 0.1, 1.0] {
+        let approx = ApproxEngine::new(&g, Linkage::Average, epsilon).run();
+
+        // Quality instruments: the worst per-merge goodness ratio (the
+        // engine's contract keeps it ≤ 1+ε) and the adjusted Rand index
+        // of an 8-cluster flat cut against the exact dendrogram.
+        let ratio = quality::merge_quality_ratio(&approx.bounds);
+        assert!(ratio <= 1.0 + epsilon + 1e-12);
+        let ari = quality::adjusted_rand_index(
+            &exact.dendrogram.cut_k(8),
+            &approx.dendrogram.cut_k(8),
+        );
+        println!(
+            "eps = {epsilon:<4}: {} merges in {:>3} rounds  (worst ratio {ratio:.6}, ARI@8 {ari:.3})",
+            approx.metrics.total_merges(),
+            approx.metrics.merge_rounds(),
+        );
+
+        if epsilon == 0.0 {
+            // The correctness anchor: ε = 0 is not "close" — it is the
+            // exact engine, bit for bit.
+            assert_eq!(
+                exact.dendrogram.bitwise_merges(),
+                approx.dendrogram.bitwise_merges()
+            );
+        }
+    }
+    println!("\napprox_tradeoff example OK");
+}

@@ -1,0 +1,260 @@
+//! Quality-vs-speed harness for the (1+ε)-approximate engine.
+//!
+//! ```bash
+//! cargo bench --bench approx_tradeoff                    # human tables
+//! cargo bench --bench approx_tradeoff -- --json          # + BENCH_approx_tradeoff.json
+//! cargo bench --bench approx_tradeoff -- --json --smoke  # CI short-budget mode
+//! cargo bench --bench approx_tradeoff -- --json --out target/approx.json
+//! ```
+//!
+//! For each workload × linkage × threads, sweeps ε ∈ {0, 0.01, 0.1, 1.0}
+//! and reports merge rounds, wall time, total edge scans, the worst
+//! per-merge goodness ratio (must stay ≤ 1+ε), and the adjusted Rand
+//! index of a k-cluster flat cut against the exact engine's dendrogram.
+//! The ε = 0 row doubles as a live check of the exactness anchor: its
+//! dendrogram is asserted bitwise-equal to the exact engine's.
+//!
+//! Workloads cover the regimes that motivate the knob: the Theorem-4
+//! adversarial instance (exact RAC degenerates to one merge per round —
+//! rounds collapse dramatically with any ε > 0), a SIFT-like kNN graph
+//! (the paper's main workload shape), and the Theorem-5 stable hierarchy
+//! (already optimal at ε = 0 — rounds stay flat, showing the knob costs
+//! nothing when exactness is already parallel).
+//!
+//! CI uploads the JSON as the second perf-trajectory artifact next to
+//! `BENCH_hot_paths.json`.
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Duration;
+
+use rac_hac::approx::{quality, ApproxEngine, ApproxResult};
+use rac_hac::data;
+use rac_hac::dendrogram::Dendrogram;
+use rac_hac::graph::Graph;
+use rac_hac::linkage::Linkage;
+use rac_hac::rac::RacEngine;
+use rac_hac::util::bench::{time_budget, Table, Timing};
+use rac_hac::util::json::{obj, Json};
+use rac_hac::util::parallel::default_threads;
+
+const EPSILONS: [f64; 4] = [0.0, 0.01, 0.1, 1.0];
+
+struct Workload {
+    name: &'static str,
+    graph: Graph,
+    /// Flat-cut size for the ARI comparison.
+    cut_k: usize,
+}
+
+struct Cell {
+    workload: &'static str,
+    linkage: Linkage,
+    threads: usize,
+    epsilon: f64,
+    timing: Timing,
+    rounds: usize,
+    edge_scans: usize,
+    quality_ratio: f64,
+    ari_vs_exact: f64,
+}
+
+impl Cell {
+    fn to_json(&self) -> Json {
+        obj([
+            ("workload", self.workload.into()),
+            ("linkage", self.linkage.name().into()),
+            ("threads", self.threads.into()),
+            ("epsilon", self.epsilon.into()),
+            ("median_us", (self.timing.median.as_micros() as usize).into()),
+            ("min_us", (self.timing.min.as_micros() as usize).into()),
+            ("samples", self.timing.samples.into()),
+            ("rounds", self.rounds.into()),
+            ("edge_scans", self.edge_scans.into()),
+            ("quality_ratio", self.quality_ratio.into()),
+            ("ari_vs_exact", self.ari_vs_exact.into()),
+        ])
+    }
+}
+
+fn workloads(smoke: bool) -> Vec<Workload> {
+    if smoke {
+        vec![
+            Workload {
+                name: "adversarial",
+                graph: data::adversarial_thm4(7), // n = 128
+                cut_k: 8,
+            },
+            Workload {
+                name: "sift_knn",
+                graph: common::sift_knn(2_000, 32, 12, 9),
+                cut_k: 16,
+            },
+            Workload {
+                name: "stable_hierarchy",
+                graph: data::stable_hierarchy(7, 4.0, 23), // n = 128
+                cut_k: 16,
+            },
+        ]
+    } else {
+        vec![
+            Workload {
+                name: "adversarial",
+                graph: data::adversarial_thm4(9), // n = 512
+                cut_k: 8,
+            },
+            Workload {
+                name: "sift_knn",
+                graph: common::sift_knn(8_000, 64, 16, 9),
+                cut_k: 16,
+            },
+            Workload {
+                name: "stable_hierarchy",
+                graph: data::stable_hierarchy(10, 4.0, 23), // n = 1024
+                cut_k: 16,
+            },
+        ]
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let write_json = args.iter().any(|a| a == "--json");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_approx_tradeoff.json".to_string());
+
+    let (budget, min_samples) = if smoke {
+        (Duration::from_millis(100), 2)
+    } else {
+        (Duration::from_millis(600), 3)
+    };
+    let dt = default_threads();
+    let thread_counts: Vec<usize> = if smoke || dt == 1 { vec![dt] } else { vec![1, dt] };
+
+    let mut cells: Vec<Cell> = Vec::new();
+    let mut workload_meta: Vec<Json> = Vec::new();
+    for w in workloads(smoke) {
+        println!(
+            "== workload {}: n={} edges={} (cut k={}) ==",
+            w.name,
+            w.graph.n(),
+            w.graph.m(),
+            w.cut_k
+        );
+        workload_meta.push(obj([
+            ("name", w.name.into()),
+            ("n", w.graph.n().into()),
+            ("edges", w.graph.m().into()),
+            ("cut_k", w.cut_k.into()),
+        ]));
+        let t = Table::new(
+            &["linkage", "threads", "epsilon", "rounds", "median", "ARI", "ratio"],
+            &[10, 8, 8, 8, 12, 8, 8],
+        );
+        for linkage in Linkage::SPARSE_REDUCIBLE {
+            // Exact reference: dendrogram for the ARI column and the ε=0
+            // bitwise check. It is bitwise thread-invariant, so one run
+            // serves every thread count.
+            let exact = RacEngine::new(&w.graph, linkage).run();
+            let exact_d: &Dendrogram = &exact.dendrogram;
+            let exact_cut = exact_d.cut_k(w.cut_k.min(w.graph.n()));
+            for &threads in &thread_counts {
+                for epsilon in EPSILONS {
+                    let mut last: Option<ApproxResult> = None;
+                    let timing = time_budget(budget, min_samples, || {
+                        last = Some(
+                            ApproxEngine::new(&w.graph, linkage, epsilon)
+                                .with_threads(threads)
+                                .run(),
+                        );
+                    });
+                    let r = last.expect("at least one sample ran");
+                    if epsilon == 0.0 {
+                        assert_eq!(
+                            exact_d.bitwise_merges(),
+                            r.dendrogram.bitwise_merges(),
+                            "{}/{linkage:?}: eps=0 must be bitwise-exact",
+                            w.name
+                        );
+                    }
+                    let ari = quality::adjusted_rand_index(
+                        &exact_cut,
+                        &r.dendrogram.cut_k(w.cut_k.min(w.graph.n())),
+                    );
+                    let cell = Cell {
+                        workload: w.name,
+                        linkage,
+                        threads,
+                        epsilon,
+                        timing,
+                        rounds: r.metrics.merge_rounds(),
+                        edge_scans: quality::edge_scans(&r.metrics),
+                        quality_ratio: quality::merge_quality_ratio(&r.bounds),
+                        ari_vs_exact: ari,
+                    };
+                    t.row(&[
+                        linkage.name(),
+                        &threads.to_string(),
+                        &format!("{epsilon}"),
+                        &cell.rounds.to_string(),
+                        &format!("{:.3?}", cell.timing.median),
+                        &format!("{:.3}", cell.ari_vs_exact),
+                        &format!("{:.3}", cell.quality_ratio),
+                    ]);
+                    cells.push(cell);
+                }
+            }
+        }
+        println!();
+    }
+
+    // Headline: the round collapse on the adversarial instance at the
+    // default thread count, average linkage.
+    let pick = |eps: f64| {
+        cells
+            .iter()
+            .find(|c| {
+                c.workload == "adversarial"
+                    && c.linkage == Linkage::Average
+                    && c.threads == dt
+                    && c.epsilon == eps
+            })
+            .expect("headline cell measured")
+    };
+    let (tight, loose) = (pick(0.0), pick(1.0));
+    println!(
+        "headline (adversarial, average, {dt} threads): \
+         eps=0 {} rounds / {:.3?} vs eps=1 {} rounds / {:.3?} (ARI {:.3})",
+        tight.rounds, tight.timing.median, loose.rounds, loose.timing.median, loose.ari_vs_exact
+    );
+
+    if write_json {
+        let report = obj([
+            ("schema", "bench_approx_tradeoff/v1".into()),
+            ("mode", (if smoke { "smoke" } else { "full" }).into()),
+            ("workloads", Json::Arr(workload_meta)),
+            (
+                "headline",
+                obj([
+                    ("workload", "adversarial".into()),
+                    ("linkage", Linkage::Average.name().into()),
+                    ("threads", dt.into()),
+                    ("rounds_eps0", tight.rounds.into()),
+                    ("rounds_eps1", loose.rounds.into()),
+                    ("ari_eps1", loose.ari_vs_exact.into()),
+                ]),
+            ),
+            ("cells", Json::Arr(cells.iter().map(Cell::to_json).collect())),
+        ]);
+        std::fs::write(&out_path, format!("{report}\n")).expect("write bench report");
+        println!("\nwrote {out_path}");
+    }
+
+    println!("\napprox_tradeoff bench OK");
+}

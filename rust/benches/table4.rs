@@ -81,7 +81,7 @@ fn main() {
         &[24, 10, 10, 10, 10],
     );
     let fmt_row = |label: &str, f: &dyn Fn(&Row) -> String| {
-        let cells: Vec<String> = rows.iter().map(|r| f(r)).collect();
+        let cells: Vec<String> = rows.iter().map(f).collect();
         t.row(&[
             label,
             &cells[0],

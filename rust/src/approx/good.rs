@@ -1,0 +1,208 @@
+//! Merge eligibility for the (1+ε)-approximate engine: TeraHAC's
+//! good-merge criterion lowered onto this repo's deterministic
+//! `(weight, id)` total order, plus the conflict-free merge selection.
+//!
+//! ## The ε-good criterion
+//!
+//! Let `(nn_weight[C], nn[C])` be cluster `C`'s cached nearest-neighbor
+//! edge (the same value the exact engine keeps — the weight is always the
+//! true row minimum, the *id* may be a stale tie, see below). Cluster `C`
+//! **accepts** a merge with neighbor `X` at weight `w` iff
+//!
+//! ```text
+//! w < (1+ε) · nn_weight[C],   or
+//! w == (1+ε) · nn_weight[C]  and  X == nn[C]
+//! ```
+//!
+//! and the edge `(A, B)` is **ε-good** iff both endpoints accept it.
+//! This is TeraHAC's criterion — the merge weight is within a `(1+ε)`
+//! factor of the minimum linkage visible to either endpoint — made
+//! deterministic at the exact band boundary by accepting only the cached
+//! NN pointer there.
+//!
+//! At `ε = 0` every edge satisfies `w >= nn_weight[C]`, so acceptance
+//! forces `w == nn_weight[C]` and `X == nn[C]`: both endpoints accepting
+//! is *pointer reciprocity* (`nn[A] == B && nn[B] == A`) — exactly the
+//! exact engine's phase-1 test — which is what makes
+//! [`super::ApproxEngine`] bitwise-identical to it at `ε = 0`
+//! (property-tested in `rust/tests/approx_quality.rs`, including
+//! tie-heavy quantised weights).
+//!
+//! Two weaker boundary rules both break that anchor on weight ties:
+//! a weight-only band (`w <= (1+ε)·nn_weight[C]`) accepts any tied
+//! partner, and even an id tie-break (`X <= nn[C]`) diverges because the
+//! engines' NN caches are deliberately *stale on tie ids* — a round that
+//! patches `C`'s row can create an equal-weight edge toward a lower id
+//! without triggering a rescan, and the exact engine still merges along
+//! its cached pointer. Requiring `X == nn[C]` at the boundary mirrors the
+//! pointer semantics regardless of staleness — see
+//! `stale_tie_cache_boundary_follows_the_pointer` below.
+//!
+//! ## Selection
+//!
+//! Good edges form a candidate graph; we take a **maximal conflict-free
+//! set** (a maximal matching — each cluster merges at most once per
+//! round, so the result flows through the exact engine's owner-sharded
+//! apply unchanged) greedily in ascending `(weight, a, b)` order.
+//! Progress: for `ε > 0` the globally minimal positive-weight edge sits
+//! strictly inside both endpoints' bands, so it is always good and sorts
+//! first; at `ε = 0` (or on an all-zero-weight plateau) the candidate set
+//! is exactly the exact engine's reciprocal-pointer pairs, which exist
+//! whenever it would make progress. Either way a round with mergeable
+//! edges merges at least one pair.
+
+use crate::linkage::Weight;
+
+/// A candidate or selected merge edge `(weight, a, b)` with `a < b`.
+pub type Candidate = (Weight, u32, u32);
+
+/// One selected merge: `leader < partner`, merging at `weight`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MergePair {
+    pub leader: u32,
+    pub partner: u32,
+    pub weight: Weight,
+}
+
+/// Does cluster `c` accept a merge with `partner` at weight `w`, given
+/// `c`'s cached nearest-neighbor edge `(nn_weight, nn_id)`? Strictly
+/// inside the `(1+ε)` band: yes; on the exact boundary: only the cached
+/// pointer itself (module docs — this is what collapses to the exact
+/// engine's pointer reciprocity at ε = 0, stale tie ids included).
+/// `epsilon` must be finite and `>= 0`.
+#[inline]
+pub fn accepts(w: Weight, partner: u32, epsilon: f64, nn_weight: Weight, nn_id: u32) -> bool {
+    let thr = (1.0 + epsilon) * nn_weight;
+    w < thr || (w == thr && partner == nn_id)
+}
+
+/// Select a maximal conflict-free merge set from `candidates`: greedy
+/// maximal matching in ascending `(weight, a, b)` order (ties broken by
+/// the id pair, so the result is a pure function of the candidate *set*).
+/// Marks both endpoints of every selected pair in `matched` (which the
+/// caller must have cleared for all active clusters) and returns the
+/// pairs sorted by ascending leader id — the order the owner-sharded
+/// apply pass and the dendrogram recording require.
+pub fn select_matching(mut candidates: Vec<Candidate>, matched: &mut [bool]) -> Vec<MergePair> {
+    candidates.sort_unstable_by(|x, y| {
+        x.0.total_cmp(&y.0).then(x.1.cmp(&y.1)).then(x.2.cmp(&y.2))
+    });
+    let mut pairs = Vec::new();
+    for (w, a, b) in candidates {
+        debug_assert!(a < b, "candidates must be oriented a < b");
+        if !matched[a as usize] && !matched[b as usize] {
+            matched[a as usize] = true;
+            matched[b as usize] = true;
+            pairs.push(MergePair {
+                leader: a,
+                partner: b,
+                weight: w,
+            });
+        }
+    }
+    // Greedy emits in (weight, a, b) order; the engine consumes merges in
+    // ascending-leader order (matching the exact engine's recording).
+    pairs.sort_unstable_by_key(|p| p.leader);
+    pairs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_epsilon_is_the_pointer_condition() {
+        // c's cached NN edge is (1.0, id 4). Only that exact pointer is
+        // accepted at the minimum weight.
+        assert!(accepts(1.0, 4, 0.0, 1.0, 4));
+        assert!(!accepts(1.0, 7, 0.0, 1.0, 4)); // weight tie, other id
+        assert!(!accepts(1.0, 2, 0.0, 1.0, 4)); // weight tie, lower id too
+        assert!(!accepts(1.5, 4, 0.0, 1.0, 4)); // above the minimum
+    }
+
+    #[test]
+    fn zero_epsilon_rejects_non_argmin_ties() {
+        // The weight-tie trap that breaks a weight-only criterion:
+        // cluster 0 sees 1 and 2 both at weight 1.0, so nn[0] = 1. Edge
+        // (0, 2) is weight-minimal at both endpoints yet is NOT a
+        // reciprocal-NN pair; the pointer rule must reject it.
+        assert!(!accepts(1.0, 2, 0.0, 1.0, 1)); // 0 does not accept 2
+        assert!(accepts(1.0, 0, 0.0, 1.0, 0)); // 2 would accept 0
+    }
+
+    #[test]
+    fn stale_tie_cache_boundary_follows_the_pointer() {
+        // After a patch, cluster 4's row holds an equal-weight edge to
+        // the new union leader 2 while its cache still points at the old
+        // tie (5, 1.0) — no rescan happened (neither 4 nor 5 merged).
+        // The exact engine would still merge 4 along its pointer to 5,
+        // so at ε = 0 the boundary must accept ONLY the pointer: an
+        // `X <= nn` tie-break would merge (2, 4) here and break the
+        // bitwise anchor.
+        assert!(!accepts(1.0, 2, 0.0, 1.0, 5)); // lower-id tie: rejected
+        assert!(accepts(1.0, 5, 0.0, 1.0, 5)); // the pointer: accepted
+    }
+
+    #[test]
+    fn relaxed_epsilon_admits_near_minimal_edges() {
+        // Strictly within the (1+ε) band: any partner id.
+        assert!(accepts(1.05, 9, 0.1, 1.0, 4));
+        // On the exact boundary only the cached pointer is accepted.
+        let thr = (1.0 + 0.1) * 1.0;
+        assert!(accepts(thr, 4, 0.1, 1.0, 4));
+        assert!(!accepts(thr, 3, 0.1, 1.0, 4));
+        assert!(!accepts(thr, 5, 0.1, 1.0, 4));
+        // Beyond the band: rejected.
+        assert!(!accepts(1.2, 1, 0.1, 1.0, 4));
+    }
+
+    #[test]
+    fn isolated_cluster_threshold_is_infinite() {
+        // No edges → nn_weight = ∞; the threshold stays ∞ and any finite
+        // weight would be accepted (vacuous — isolated rows yield no
+        // candidates), without NaN poisoning.
+        assert!(accepts(5.0, 1, 0.5, Weight::INFINITY, u32::MAX));
+    }
+
+    #[test]
+    fn greedy_matching_is_maximal_and_deterministic() {
+        // Path 0-1-2-3 with ascending weights: (0,1) and (2,3) survive.
+        let cands = vec![(1.0, 0, 1), (2.0, 1, 2), (3.0, 2, 3)];
+        let mut matched = vec![false; 4];
+        let pairs = select_matching(cands.clone(), &mut matched);
+        assert_eq!(
+            pairs,
+            vec![
+                MergePair { leader: 0, partner: 1, weight: 1.0 },
+                MergePair { leader: 2, partner: 3, weight: 3.0 },
+            ]
+        );
+        assert!(matched.iter().all(|&m| m));
+
+        // Input order must not matter (selection sorts internally).
+        let mut matched = vec![false; 4];
+        let shuffled = vec![(3.0, 2, 3), (1.0, 0, 1), (2.0, 1, 2)];
+        assert_eq!(select_matching(shuffled, &mut matched), pairs);
+    }
+
+    #[test]
+    fn weight_ties_break_by_id_pair() {
+        // Star around 1: both edges weigh the same; (0,1) wins by ids.
+        let cands = vec![(1.0, 1, 2), (1.0, 0, 1)];
+        let mut matched = vec![false; 3];
+        let pairs = select_matching(cands, &mut matched);
+        assert_eq!(pairs.len(), 1);
+        assert_eq!((pairs[0].leader, pairs[0].partner), (0, 1));
+        assert!(!matched[2]);
+    }
+
+    #[test]
+    fn output_is_sorted_by_leader() {
+        // Selection order by weight is (4,5) then (0,1); output re-sorts.
+        let cands = vec![(9.0, 0, 1), (1.0, 4, 5)];
+        let mut matched = vec![false; 6];
+        let pairs = select_matching(cands, &mut matched);
+        assert_eq!(pairs[0].leader, 0);
+        assert_eq!(pairs[1].leader, 4);
+    }
+}

@@ -1,0 +1,482 @@
+//! `approx` — the (1+ε)-approximate merge engine (TeraHAC-style), a third
+//! engine alongside the exact shared-memory [`crate::rac`] and distributed
+//! [`crate::dist`] engines.
+//!
+//! ## Why relax exactness
+//!
+//! The exact engine merges only reciprocal-nearest-neighbor pairs, so its
+//! round count is governed by how many RNN pairs each round exposes. On
+//! graphs with few reciprocal pairs — the Theorem-4 adversarial instance
+//! is the extreme: one pair per round, Ω(n) rounds — the rounds collapse
+//! and so does all parallelism. *TeraHAC* (arXiv:2308.03578) shows that
+//! relaxing to (1+ε)-"good" merges cuts the round count by orders of
+//! magnitude while provably bounding dendrogram distortion; *It's Hard to
+//! HAC with Average Linkage!* (arXiv:2404.14730) shows this kind of
+//! approximation knob is the only road past exact HAC's inherent
+//! sequentiality.
+//!
+//! ## The round structure
+//!
+//! Same three phases as the exact engine, over the same flat
+//! [`crate::store::NeighborStore`]; only phase 1 differs:
+//!
+//! 1. **Find ε-good merges** — every active cluster scans its neighbor
+//!    row for edges within the `(1+ε)` band of the minimum linkage
+//!    visible to *either* endpoint ([`good::accepts`] — TeraHAC's
+//!    good-merge criterion, with band-boundary ties resolved by the
+//!    cached NN pointer), and a maximal conflict-free merge set is
+//!    selected deterministically ([`good::select_matching`]).
+//! 2. **Update cluster dissimilarities** — unchanged: union maps from the
+//!    engine-shared [`crate::rac::logic`], applied by the lock-free
+//!    owner-sharded [`crate::store::NeighborStore::par_apply_round`].
+//! 3. **Update nearest neighbors** — unchanged rescan rule (`C` merged or
+//!    `C`'s cached NN merged), including the exact engine's documented
+//!    stale-tie-id caching behavior, which the ε=0 anchor depends on.
+//!
+//! ## Guarantees
+//!
+//! * **ε = 0 is exact, bitwise** — acceptance degenerates to the
+//!   reciprocal-NN condition (see [`good`]'s docs), RNN pairs are always
+//!   conflict-free so selection keeps all of them, and phases 2/3 share
+//!   the exact engine's arithmetic and ordering — so the dendrogram is
+//!   bit-for-bit [`crate::rac::RacEngine`]'s, across linkages and thread
+//!   counts (`rust/tests/approx_quality.rs`).
+//! * **Every merge is (1+ε)-good** — `W(A,B) <= (1+ε) ·
+//!   min(best(A), best(B))` at merge time, recorded per merge in
+//!   [`ApproxResult::bounds`] and audited independently by
+//!   [`quality::merge_quality_ratio`]. TeraHAC shows this local invariant
+//!   bounds global dendrogram distortion to the same `(1+ε)` factor.
+//! * **Progress** — the globally `(weight, id)`-minimal active edge is
+//!   always good and always selected, so the engine terminates without
+//!   leaning on the round cap.
+//!
+//! The trade: phase 1 scans whole neighbor rows (O(edges) per round, vs
+//! the exact engine's O(active) pointer checks) to buy strictly more
+//! merges per round. [`quality::edge_scans`] and
+//! `benches/approx_tradeoff.rs` quantify both sides.
+
+pub mod good;
+pub mod quality;
+
+use std::time::Instant;
+
+use crate::dendrogram::{Dendrogram, Merge};
+use crate::graph::Graph;
+use crate::linkage::{EdgeState, Linkage, Weight};
+use crate::metrics::{RoundMetrics, RunMetrics};
+use crate::rac::logic::{compute_union_map, scan_nn, PairView};
+use crate::rac::NO_NN;
+use crate::store::{NeighborStore, UnionRow};
+use crate::util::parallel::default_threads;
+use crate::util::pool::Pool;
+
+use good::MergePair;
+use quality::MergeBound;
+
+/// Result of an approximate clustering run: the dendrogram, the usual
+/// round metrics, and the per-merge quality trace.
+#[derive(Debug)]
+pub struct ApproxResult {
+    pub dendrogram: Dendrogram,
+    pub metrics: RunMetrics,
+    /// Per merge, in recording order: `(weight, visible minimum)` at
+    /// merge time. `quality::merge_quality_ratio(&bounds) <= 1 + ε` is
+    /// the engine's quality contract.
+    pub bounds: Vec<MergeBound>,
+}
+
+/// Shared-memory (1+ε)-approximate merge engine over the flat store.
+pub struct ApproxEngine {
+    linkage: Linkage,
+    epsilon: f64,
+    n: usize,
+    active: Vec<bool>,
+    active_ids: Vec<u32>,
+    size: Vec<u64>,
+    nn: Vec<u32>,
+    nn_weight: Vec<Weight>,
+    /// Selected for a merge this round (the exact engine's `will_merge`).
+    matched: Vec<bool>,
+    /// This round's merge partner (valid only while `matched`).
+    partner: Vec<u32>,
+    /// This round's merge weight (valid only while `matched`).
+    pair_weight: Vec<Weight>,
+    store: NeighborStore,
+    threads: usize,
+    max_rounds: usize,
+}
+
+impl ApproxEngine {
+    /// Build an engine over a dissimilarity graph.
+    ///
+    /// # Panics
+    /// If `epsilon` is negative or non-finite, if the linkage is not
+    /// reducible (the goodness band is anchored on cached minima, which
+    /// reducibility keeps valid between rescans), or if a
+    /// complete-graph-only linkage is given a sparse graph — the same
+    /// guards as [`crate::rac::RacEngine::new`].
+    pub fn new(g: &Graph, linkage: Linkage, epsilon: f64) -> Self {
+        assert!(
+            epsilon >= 0.0 && epsilon.is_finite(),
+            "epsilon must be finite and >= 0, got {epsilon}"
+        );
+        assert!(
+            linkage.is_reducible(),
+            "the approximate engine requires a reducible linkage \
+             (cached visible minima must stay valid between rescans)"
+        );
+        if !linkage.supports_sparse() {
+            let n = g.n();
+            assert!(
+                g.m() == n * (n - 1) / 2,
+                "{linkage:?} linkage requires a complete graph"
+            );
+        }
+        let n = g.n();
+        ApproxEngine {
+            linkage,
+            epsilon,
+            n,
+            active: vec![true; n],
+            active_ids: (0..n as u32).collect(),
+            size: vec![1; n],
+            nn: vec![NO_NN; n],
+            nn_weight: vec![Weight::INFINITY; n],
+            matched: vec![false; n],
+            partner: vec![NO_NN; n],
+            pair_weight: vec![0.0; n],
+            store: NeighborStore::from_graph(g),
+            threads: default_threads(),
+            max_rounds: 4 * n + 64,
+        }
+    }
+
+    /// Limit the worker-thread count.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Override the round safety cap.
+    pub fn with_max_rounds(mut self, max_rounds: usize) -> Self {
+        self.max_rounds = max_rounds;
+        self
+    }
+
+    /// Run to completion; returns the dendrogram, metrics, and the
+    /// per-merge quality trace.
+    pub fn run(mut self) -> ApproxResult {
+        let pool = Pool::new(self.threads);
+        self.run_inner(&pool)
+    }
+
+    fn run_inner(&mut self, pool: &Pool) -> ApproxResult {
+        let t0 = Instant::now();
+        let mut merges: Vec<Merge> = Vec::with_capacity(self.n.saturating_sub(1));
+        let mut bounds: Vec<MergeBound> = Vec::with_capacity(self.n.saturating_sub(1));
+        let mut metrics = RunMetrics::default();
+
+        let init: Vec<(u32, Weight)> =
+            pool.par_map_indexed(self.n, |c| scan_nn(self.store.row(c as u32)));
+        for (c, (nn, w)) in init.into_iter().enumerate() {
+            self.nn[c] = nn;
+            self.nn_weight[c] = w;
+        }
+
+        let mut n_active = self.n;
+        for round in 0..self.max_rounds {
+            let mut rm = RoundMetrics {
+                round,
+                clusters: n_active,
+                ..Default::default()
+            };
+
+            // ---- Phase 1: find ε-good merges ----------------------------
+            // Each active cluster scans its row once for edges both
+            // endpoints accept (candidates are oriented a < b so every
+            // edge is tested exactly once, from its lower endpoint).
+            let t = Instant::now();
+            let scans: Vec<(Vec<(Weight, u32)>, usize)> =
+                pool.par_map(&self.active_ids, |&a| {
+                    let row = self.store.row(a);
+                    let mut out = Vec::new();
+                    for (b, e) in row.iter() {
+                        if b > a
+                            && good::accepts(
+                                e.weight,
+                                b,
+                                self.epsilon,
+                                self.nn_weight[a as usize],
+                                self.nn[a as usize],
+                            )
+                            && good::accepts(
+                                e.weight,
+                                a,
+                                self.epsilon,
+                                self.nn_weight[b as usize],
+                                self.nn[b as usize],
+                            )
+                        {
+                            out.push((e.weight, b));
+                        }
+                    }
+                    (out, row.live_len())
+                });
+            let mut candidates: Vec<good::Candidate> = Vec::new();
+            for (&a, (row_cands, scanned)) in self.active_ids.iter().zip(scans) {
+                rm.eligibility_scan_entries += scanned;
+                candidates.extend(row_cands.into_iter().map(|(w, b)| (w, a, b)));
+            }
+            let pairs: Vec<MergePair> = good::select_matching(candidates, &mut self.matched);
+            for p in &pairs {
+                self.partner[p.leader as usize] = p.partner;
+                self.partner[p.partner as usize] = p.leader;
+                self.pair_weight[p.leader as usize] = p.weight;
+                self.pair_weight[p.partner as usize] = p.weight;
+            }
+            rm.t_find = t.elapsed();
+            rm.merges = pairs.len();
+
+            if pairs.is_empty() {
+                metrics.rounds.push(rm);
+                break;
+            }
+
+            // ---- Phase 2: update cluster dissimilarities ----------------
+            let t = Instant::now();
+            let unions: Vec<UnionRow> =
+                pool.par_map(&pairs, |p| (p.leader, self.union_map(p.leader)));
+
+            for p in &pairs {
+                merges.push(Merge {
+                    a: p.leader,
+                    b: p.partner,
+                    weight: p.weight,
+                });
+                bounds.push(MergeBound {
+                    weight: p.weight,
+                    visible_min: self.nn_weight[p.leader as usize]
+                        .min(self.nn_weight[p.partner as usize]),
+                });
+            }
+            {
+                let store = &mut self.store;
+                let partner = &self.partner;
+                let matched = &self.matched;
+                store.par_apply_round(
+                    pool,
+                    &unions,
+                    |l| partner[l as usize],
+                    |t| !matched[t as usize],
+                );
+            }
+            for p in &pairs {
+                self.size[p.leader as usize] += self.size[p.partner as usize];
+                self.active[p.partner as usize] = false;
+            }
+            self.store.maybe_compact();
+            n_active -= rm.merges;
+            self.active_ids.retain(|&c| self.active[c as usize]);
+            rm.t_merge = t.elapsed();
+
+            // ---- Phase 3: update nearest neighbors ----------------------
+            // Same rescan rule as the exact engine: only a cluster that
+            // merged, or whose cached NN merged, can see its row minimum
+            // change (reducibility: patches never lower a row's minimum).
+            let t = Instant::now();
+            let updates: Vec<(u32, u32, Weight, usize)> = {
+                let ids = &self.active_ids;
+                pool.par_filter_map_indexed(ids.len(), |idx| {
+                    let c = ids[idx];
+                    let needs_rescan = self.matched[c as usize]
+                        || (self.nn[c as usize] != NO_NN
+                            && self.matched[self.nn[c as usize] as usize]);
+                    needs_rescan.then(|| {
+                        let row = self.store.row(c);
+                        let (nn, w) = scan_nn(row);
+                        (c, nn, w, row.live_len())
+                    })
+                })
+            };
+            rm.nn_updates = updates.len();
+            for (c, nn, w, scanned) in updates {
+                self.nn[c as usize] = nn;
+                self.nn_weight[c as usize] = w;
+                rm.nn_scan_entries += scanned;
+            }
+            // Clear this round's selection (cheaper than the exact
+            // engine's full recompute; equivalent — retired partners'
+            // stale flags are unreachable, no live `nn` points at them).
+            for p in &pairs {
+                self.matched[p.leader as usize] = false;
+                self.matched[p.partner as usize] = false;
+            }
+            rm.t_update_nn = t.elapsed();
+            metrics.rounds.push(rm);
+
+            if n_active <= 1 {
+                break;
+            }
+        }
+
+        metrics.total_time = t0.elapsed();
+        ApproxResult {
+            dendrogram: Dendrogram::new(self.n, merges),
+            metrics,
+            bounds,
+        }
+    }
+
+    /// Union map of `L ∪ partner(L)` — the exact engine's computation,
+    /// with pair identity taken from this round's matching instead of the
+    /// NN cache (at ε = 0 the two coincide, bitwise).
+    fn union_map(&self, l: u32) -> Vec<(u32, EdgeState)> {
+        let p = self.partner[l as usize];
+        compute_union_map(
+            self.linkage,
+            l,
+            p,
+            self.pair_weight[l as usize],
+            self.size[l as usize],
+            self.size[p as usize],
+            self.store.row(l),
+            self.store.row(p),
+            |x| PairView {
+                merging: self.matched[x as usize],
+                partner: self.partner[x as usize],
+                size: self.size[x as usize],
+                pair_weight: self.pair_weight[x as usize],
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+    use crate::hac::naive_hac;
+    use crate::rac::RacEngine;
+
+    #[test]
+    fn zero_epsilon_matches_exact_engine() {
+        let g = data::grid1d_graph(200, 17);
+        for l in Linkage::SPARSE_REDUCIBLE {
+            let exact = RacEngine::new(&g, l).run();
+            let approx = ApproxEngine::new(&g, l, 0.0).run();
+            assert_eq!(
+                exact.dendrogram.bitwise_merges(),
+                approx.dendrogram.bitwise_merges(),
+                "{l:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_epsilon_bounds_are_all_exact() {
+        let g = data::grid1d_graph(100, 3);
+        let r = ApproxEngine::new(&g, Linkage::Average, 0.0).run();
+        assert_eq!(r.bounds.len(), r.dendrogram.merges().len());
+        assert_eq!(quality::merge_quality_ratio(&r.bounds), 1.0);
+    }
+
+    #[test]
+    fn relaxed_run_is_valid_and_within_band() {
+        let g = data::grid1d_graph(300, 11);
+        for eps in [0.01, 0.1, 1.0] {
+            let r = ApproxEngine::new(&g, Linkage::Average, eps).run();
+            r.dendrogram.validate().unwrap();
+            assert_eq!(r.dendrogram.merges().len(), 299);
+            let ratio = quality::merge_quality_ratio(&r.bounds);
+            assert!(
+                ratio <= 1.0 + eps + 1e-12,
+                "eps={eps}: ratio {ratio} breaks the band"
+            );
+        }
+    }
+
+    #[test]
+    fn adversarial_rounds_collapse_with_epsilon() {
+        // The Theorem-4 instance: the exact engine needs Ω(n) rounds (one
+        // reciprocal pair at a time); a relaxed band restores parallelism.
+        let g = data::adversarial_thm4(6); // n = 64
+        let exact = RacEngine::new(&g, Linkage::Average).run();
+        let approx = ApproxEngine::new(&g, Linkage::Average, 1.0).run();
+        assert_eq!(approx.dendrogram.merges().len(), 63);
+        assert!(
+            approx.metrics.merge_rounds() < exact.metrics.merge_rounds() / 2,
+            "approx {} rounds vs exact {}",
+            approx.metrics.merge_rounds(),
+            exact.metrics.merge_rounds()
+        );
+    }
+
+    #[test]
+    fn relaxed_merges_stay_close_to_hac() {
+        // Well-separated stable hierarchy: even ε = 1 cannot cross the
+        // base^level separation bands, so flat cuts agree with exact HAC.
+        let g = data::stable_hierarchy(5, 4.0, 23); // n = 32
+        let hac = naive_hac(&g, Linkage::Average);
+        let approx = ApproxEngine::new(&g, Linkage::Average, 1.0).run();
+        let ari = quality::adjusted_rand_index(&hac.cut_k(4), &approx.dendrogram.cut_k(4));
+        assert_eq!(ari, 1.0);
+    }
+
+    #[test]
+    fn thread_count_does_not_change_result() {
+        let g = data::grid1d_graph(300, 5);
+        for eps in [0.0, 0.1] {
+            let base = ApproxEngine::new(&g, Linkage::Average, eps)
+                .with_threads(1)
+                .run();
+            for t in [2, 4, 8] {
+                let r = ApproxEngine::new(&g, Linkage::Average, eps)
+                    .with_threads(t)
+                    .run();
+                assert_eq!(
+                    base.dendrogram.bitwise_merges(),
+                    r.dendrogram.bitwise_merges(),
+                    "eps={eps} t={t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn disconnected_components() {
+        let g = Graph::from_edges(6, [(0, 1, 1.0), (2, 3, 1.0), (3, 4, 2.0)]);
+        let r = ApproxEngine::new(&g, Linkage::Single, 0.5).run();
+        assert_eq!(r.dendrogram.merges().len(), 3);
+        assert_eq!(r.dendrogram.remaining_clusters(), 3);
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let r = ApproxEngine::new(&Graph::from_edges(0, []), Linkage::Average, 0.1).run();
+        assert!(r.dendrogram.merges().is_empty());
+        let r = ApproxEngine::new(&Graph::from_edges(1, []), Linkage::Average, 0.1).run();
+        assert!(r.dendrogram.merges().is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "reducible")]
+    fn rejects_centroid() {
+        let g = data::stable_hierarchy(2, 4.0, 0);
+        ApproxEngine::new(&g, Linkage::Centroid, 0.1);
+    }
+
+    #[test]
+    #[should_panic(expected = "epsilon")]
+    fn rejects_negative_epsilon() {
+        let g = data::grid1d_graph(4, 0);
+        ApproxEngine::new(&g, Linkage::Average, -0.5);
+    }
+
+    #[test]
+    fn eligibility_scans_are_accounted() {
+        let g = data::grid1d_graph(64, 1);
+        let r = ApproxEngine::new(&g, Linkage::Average, 0.1).run();
+        assert!(quality::edge_scans(&r.metrics) > 0);
+        assert!(r.metrics.rounds[0].eligibility_scan_entries > 0);
+    }
+}

@@ -1,0 +1,202 @@
+//! Quality instruments for the approximate engine: the per-merge
+//! (1+ε)-bound audit, adjusted-Rand-index agreement between flat cuts,
+//! and the exact-vs-approx cost comparison (rounds / edge scans) the
+//! trade-off bench reports.
+//!
+//! These are *measurement* tools, deliberately independent of the engine
+//! that produced the data: [`merge_quality_ratio`] recomputes the bound
+//! from the raw `(weight, visible minimum)` pairs the engine recorded, so
+//! a selection bug shows up as a ratio above `1+ε` instead of silently
+//! passing its own criterion.
+
+use crate::dendrogram::Dendrogram;
+use crate::linkage::Weight;
+use crate::metrics::RunMetrics;
+
+/// One merge's quality evidence: the weight it merged at, and the
+/// `(weight, id)`-minimal linkage visible to either endpoint at merge
+/// time (the denominator of TeraHAC's goodness ratio).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MergeBound {
+    pub weight: Weight,
+    pub visible_min: Weight,
+}
+
+impl MergeBound {
+    /// Goodness ratio `weight / visible_min`. A merge at exactly the
+    /// visible minimum (every exact-engine merge) is 1.0; `0 / 0`
+    /// (duplicate points) is also a perfect merge.
+    pub fn ratio(self) -> f64 {
+        if self.weight == self.visible_min {
+            1.0
+        } else {
+            self.weight / self.visible_min
+        }
+    }
+}
+
+/// Maximum goodness ratio over a run's merges (1.0 for an empty run).
+/// Every merge the ε-engine performs must keep this `<= 1 + ε`; the
+/// `approx_quality` suite asserts it against the recorded trace.
+pub fn merge_quality_ratio(bounds: &[MergeBound]) -> f64 {
+    bounds.iter().map(|b| b.ratio()).fold(1.0, f64::max)
+}
+
+/// Total neighbor-row entries scanned across a run: NN rescans plus (for
+/// the approximate engine) the per-round eligibility sweeps. The honest
+/// compute-cost axis of the rounds-vs-work trade-off — the ε-engine buys
+/// fewer rounds by scanning whole rows for good edges every round.
+pub fn edge_scans(m: &RunMetrics) -> usize {
+    m.rounds
+        .iter()
+        .map(|r| r.nn_scan_entries + r.eligibility_scan_entries)
+        .sum()
+}
+
+/// Adjusted Rand index between two flat clusterings (label vectors of
+/// equal length). 1.0 for identical partitions; ~0 for independent ones;
+/// can be negative for adversarial disagreement. Pairs that cannot
+/// disagree (both partitions all-singletons or all-one-cluster) score
+/// 1.0 by the usual convention (expected index equals the index).
+pub fn adjusted_rand_index(a: &[u32], b: &[u32]) -> f64 {
+    assert_eq!(a.len(), b.len(), "label vectors must align");
+    let n = a.len();
+    if n == 0 {
+        return 1.0;
+    }
+    let ka = 1 + *a.iter().max().unwrap() as usize;
+    let kb = 1 + *b.iter().max().unwrap() as usize;
+    // Contingency table; flat cuts produce dense labels so ka·kb is fine
+    // at the scales the harness compares.
+    let mut table = vec![0u64; ka * kb];
+    let mut rows = vec![0u64; ka];
+    let mut cols = vec![0u64; kb];
+    for (&la, &lb) in a.iter().zip(b) {
+        table[la as usize * kb + lb as usize] += 1;
+        rows[la as usize] += 1;
+        cols[lb as usize] += 1;
+    }
+    let comb2 = |x: u64| (x * x.saturating_sub(1) / 2) as f64;
+    let sum_ij: f64 = table.iter().map(|&x| comb2(x)).sum();
+    let sum_a: f64 = rows.iter().map(|&x| comb2(x)).sum();
+    let sum_b: f64 = cols.iter().map(|&x| comb2(x)).sum();
+    let total = comb2(n as u64);
+    if total == 0.0 {
+        return 1.0;
+    }
+    let expected = sum_a * sum_b / total;
+    let max_index = 0.5 * (sum_a + sum_b);
+    if max_index == expected {
+        return 1.0;
+    }
+    (sum_ij - expected) / (max_index - expected)
+}
+
+/// Side-by-side cost/quality summary of an exact run and an approximate
+/// run over the same graph — the row shape of `BENCH_approx_tradeoff`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Comparison {
+    pub rounds_exact: usize,
+    pub rounds_approx: usize,
+    pub edge_scans_exact: usize,
+    pub edge_scans_approx: usize,
+    /// Adjusted Rand index between the two dendrograms' `cut_k(k)` flat
+    /// clusterings.
+    pub ari: f64,
+}
+
+/// Compare an exact and an approximate run at a `k`-cluster flat cut.
+pub fn compare_runs(
+    exact: (&Dendrogram, &RunMetrics),
+    approx: (&Dendrogram, &RunMetrics),
+    k: usize,
+) -> Comparison {
+    Comparison {
+        rounds_exact: exact.1.merge_rounds(),
+        rounds_approx: approx.1.merge_rounds(),
+        edge_scans_exact: edge_scans(exact.1),
+        edge_scans_approx: edge_scans(approx.1),
+        ari: adjusted_rand_index(&exact.0.cut_k(k), &approx.0.cut_k(k)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::RoundMetrics;
+
+    #[test]
+    fn ratio_of_exact_merges_is_one() {
+        let b = MergeBound { weight: 2.5, visible_min: 2.5 };
+        assert_eq!(b.ratio(), 1.0);
+        let zero = MergeBound { weight: 0.0, visible_min: 0.0 };
+        assert_eq!(zero.ratio(), 1.0);
+    }
+
+    #[test]
+    fn quality_ratio_takes_the_worst_merge() {
+        let bounds = [
+            MergeBound { weight: 1.0, visible_min: 1.0 },
+            MergeBound { weight: 1.08, visible_min: 1.0 },
+            MergeBound { weight: 2.0, visible_min: 1.9 },
+        ];
+        let r = merge_quality_ratio(&bounds);
+        assert!((r - 1.08).abs() < 1e-12, "{r}");
+        assert_eq!(merge_quality_ratio(&[]), 1.0);
+    }
+
+    #[test]
+    fn ari_identical_partitions() {
+        let a = [0, 0, 1, 1, 2, 2];
+        assert_eq!(adjusted_rand_index(&a, &a), 1.0);
+        // Label permutation does not matter.
+        let b = [1, 1, 2, 2, 0, 0];
+        assert_eq!(adjusted_rand_index(&a, &b), 1.0);
+    }
+
+    #[test]
+    fn ari_known_value() {
+        // Classic worked example: ARI((0,0,1,1), (0,1,1,1)).
+        // sum_ij C2 = 1, sum_a = 2, sum_b = 3, total = 6, E = 1,
+        // max = 2.5 → (1-1)/(2.5-1) = 0.
+        let a = [0, 0, 1, 1];
+        let b = [0, 1, 1, 1];
+        assert!(adjusted_rand_index(&a, &b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ari_partial_agreement_is_between() {
+        let a = [0, 0, 0, 1, 1, 1];
+        let b = [0, 0, 1, 1, 1, 1];
+        let r = adjusted_rand_index(&a, &b);
+        assert!(r > 0.0 && r < 1.0, "{r}");
+    }
+
+    #[test]
+    fn ari_degenerate_partitions() {
+        assert_eq!(adjusted_rand_index(&[], &[]), 1.0);
+        // All singletons vs all singletons: nothing can disagree.
+        assert_eq!(adjusted_rand_index(&[0, 1, 2], &[0, 1, 2]), 1.0);
+        // One big cluster vs one big cluster.
+        assert_eq!(adjusted_rand_index(&[0, 0, 0], &[0, 0, 0]), 1.0);
+    }
+
+    #[test]
+    fn edge_scans_sums_both_sources() {
+        let m = RunMetrics {
+            rounds: vec![
+                RoundMetrics {
+                    nn_scan_entries: 10,
+                    eligibility_scan_entries: 100,
+                    ..Default::default()
+                },
+                RoundMetrics {
+                    nn_scan_entries: 5,
+                    ..Default::default()
+                },
+            ],
+            ..Default::default()
+        };
+        assert_eq!(edge_scans(&m), 115);
+    }
+}

@@ -60,6 +60,9 @@ pub enum EngineSpec {
     Rac { threads: usize },
     /// Distributed RAC over `machines × cpus` (paper §5).
     DistRac { machines: usize, cpus: usize },
+    /// Shared-memory (1+ε)-approximate engine (TeraHAC-style good
+    /// merges); `epsilon = 0` is bitwise-exact RAC.
+    Approx { epsilon: f64, threads: usize },
 }
 
 /// A full clustering run.
@@ -140,6 +143,16 @@ impl RunConfig {
                 machines: doc.usize_or("engine", "machines", 4)?,
                 cpus: doc.usize_or("engine", "cpus", 2)?,
             },
+            "approx" => {
+                let epsilon = doc.f64_or("engine", "epsilon", 0.1)?;
+                if !(epsilon >= 0.0 && epsilon.is_finite()) {
+                    bail!("engine.epsilon must be finite and >= 0, got {epsilon}");
+                }
+                EngineSpec::Approx {
+                    epsilon,
+                    threads: doc.usize_or("engine", "threads", 0)?,
+                }
+            }
             other => bail!("unknown engine.type {other:?}"),
         };
 
@@ -230,6 +243,35 @@ cpus = 4
         assert!(RunConfig::from_toml_str("[dataset]\ntype = \"mnist\"\n").is_err());
         assert!(RunConfig::from_toml_str("[engine]\ntype = \"spark\"\n").is_err());
         assert!(RunConfig::from_toml_str("[cluster]\nlinkage = \"magic\"\n").is_err());
+    }
+
+    #[test]
+    fn approx_engine_parses_with_defaults_and_overrides() {
+        let cfg = RunConfig::from_toml_str("[engine]\ntype = \"approx\"\n").unwrap();
+        assert_eq!(
+            cfg.engine,
+            EngineSpec::Approx {
+                epsilon: 0.1,
+                threads: 0
+            }
+        );
+        // Integer-literal epsilon must parse as a float (TOML subset
+        // coerces ints in float position).
+        let cfg = RunConfig::from_toml_str(
+            "[engine]\ntype = \"approx\"\nepsilon = 0\nthreads = 4\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.engine,
+            EngineSpec::Approx {
+                epsilon: 0.0,
+                threads: 4
+            }
+        );
+        assert!(RunConfig::from_toml_str(
+            "[engine]\ntype = \"approx\"\nepsilon = -0.5\n"
+        )
+        .is_err());
     }
 
     #[test]

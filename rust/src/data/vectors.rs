@@ -18,6 +18,58 @@ impl Metric {
             Metric::Cosine => "cosine",
         }
     }
+
+    /// Exact dissimilarity between two feature rows (the pure-Rust oracle
+    /// behind [`Dataset::dissimilarity`]; taking the slices directly lets
+    /// callers hoist one row's slice out of an inner loop).
+    pub fn dissimilarity(self, a: &[f32], b: &[f32]) -> f64 {
+        match self {
+            Metric::L2 => a
+                .iter()
+                .zip(b)
+                .map(|(&x, &y)| {
+                    let d = x as f64 - y as f64;
+                    d * d
+                })
+                .sum(),
+            Metric::Cosine => {
+                let (mut dot, mut na, mut nb) = (0f64, 0f64, 0f64);
+                for (&x, &y) in a.iter().zip(b) {
+                    dot += x as f64 * y as f64;
+                    na += x as f64 * x as f64;
+                    nb += y as f64 * y as f64;
+                }
+                1.0 - dot / (na.sqrt().max(1e-12) * nb.sqrt().max(1e-12))
+            }
+        }
+    }
+
+    /// Dissimilarity if it is `< bound`, else `None`. For L2 the
+    /// accumulation bails out as soon as the partial sum reaches `bound`
+    /// (terms are non-negative, so the full sum could only be larger) —
+    /// the ε-ball builder's early exit. Identical accumulation order to
+    /// [`Metric::dissimilarity`], so any returned value is bitwise the
+    /// same. Cosine has no monotone prefix, so it computes fully and
+    /// compares at the end.
+    pub fn dissimilarity_within(self, a: &[f32], b: &[f32], bound: f64) -> Option<f64> {
+        match self {
+            Metric::L2 => {
+                let mut acc = 0.0f64;
+                for (&x, &y) in a.iter().zip(b) {
+                    let d = x as f64 - y as f64;
+                    acc += d * d;
+                    if acc >= bound {
+                        return None;
+                    }
+                }
+                Some(acc)
+            }
+            Metric::Cosine => {
+                let w = self.dissimilarity(a, b);
+                (w < bound).then_some(w)
+            }
+        }
+    }
 }
 
 impl std::str::FromStr for Metric {
@@ -50,26 +102,7 @@ impl Dataset {
     /// Exact dissimilarity between two rows (pure-Rust oracle used by the
     /// kNN fallback path and by tests of the XLA path).
     pub fn dissimilarity(&self, i: usize, j: usize) -> f64 {
-        let (a, b) = (self.row(i), self.row(j));
-        match self.metric {
-            Metric::L2 => a
-                .iter()
-                .zip(b)
-                .map(|(&x, &y)| {
-                    let d = x as f64 - y as f64;
-                    d * d
-                })
-                .sum(),
-            Metric::Cosine => {
-                let (mut dot, mut na, mut nb) = (0f64, 0f64, 0f64);
-                for (&x, &y) in a.iter().zip(b) {
-                    dot += x as f64 * y as f64;
-                    na += x as f64 * x as f64;
-                    nb += y as f64 * y as f64;
-                }
-                1.0 - dot / (na.sqrt().max(1e-12) * nb.sqrt().max(1e-12))
-            }
-        }
+        self.metric.dissimilarity(self.row(i), self.row(j))
     }
 }
 
@@ -261,6 +294,20 @@ mod tests {
         };
         assert!((ds.dissimilarity(0, 1) - 1.0).abs() < 1e-6); // orthogonal
         assert!(ds.dissimilarity(0, 2).abs() < 1e-6); // parallel
+    }
+
+    #[test]
+    fn dissimilarity_within_agrees_with_full_computation() {
+        let a: Vec<f32> = vec![0.5, -1.0, 2.0, 0.0];
+        let b: Vec<f32> = vec![1.5, 1.0, -0.5, 0.25];
+        for metric in [Metric::L2, Metric::Cosine] {
+            let full = metric.dissimilarity(&a, &b);
+            // Bound above the value: bitwise the same result.
+            assert_eq!(metric.dissimilarity_within(&a, &b, full + 1.0), Some(full));
+            // Bound at or below the value: excluded (strict `<`).
+            assert_eq!(metric.dissimilarity_within(&a, &b, full), None);
+            assert_eq!(metric.dissimilarity_within(&a, &b, full / 2.0), None);
+        }
     }
 
     #[test]

@@ -129,11 +129,24 @@ impl Dendrogram {
     }
 
     /// Flat clustering with exactly `k` clusters (applies the `n - k`
-    /// smallest-weight merges; assumes a connected input).
+    /// smallest merges; assumes a connected input).
+    ///
+    /// Merges are ordered by the crate-wide total order `(weight, a, b)`,
+    /// so weight ties cut deterministically regardless of the order the
+    /// engine recorded them in. Where the boundary between the applied
+    /// and withheld merges falls at a *strict* weight increase, this
+    /// agrees with [`Dendrogram::cut_threshold`] at the first withheld
+    /// weight (property-tested in `rust/tests/approx_quality.rs`); a
+    /// threshold cut cannot split a tie, but `cut_k` can.
     pub fn cut_k(&self, k: usize) -> Vec<u32> {
         assert!(k >= 1 && k <= self.n);
         let mut order: Vec<&Merge> = self.merges.iter().collect();
-        order.sort_by(|x, y| x.weight.total_cmp(&y.weight));
+        order.sort_by(|x, y| {
+            x.weight
+                .total_cmp(&y.weight)
+                .then(x.a.cmp(&y.a))
+                .then(x.b.cmp(&y.b))
+        });
         let mut uf = UnionFind::new(self.n);
         for m in order.into_iter().take(self.n.saturating_sub(k)) {
             uf.union(m.a, m.b);
@@ -316,6 +329,33 @@ mod tests {
             let distinct: std::collections::HashSet<_> = labels.iter().collect();
             assert_eq!(distinct.len(), k);
         }
+    }
+
+    #[test]
+    fn cut_k_ties_are_deterministic_across_recording_order() {
+        // Two independent weight-1.0 merges: whichever the engine
+        // recorded first, cut_k(3) must apply the (weight, a, b)-smaller
+        // one, i.e. (0,1).
+        let forward = Dendrogram::new(
+            4,
+            vec![
+                Merge { a: 0, b: 1, weight: 1.0 },
+                Merge { a: 2, b: 3, weight: 1.0 },
+                Merge { a: 0, b: 2, weight: 5.0 },
+            ],
+        );
+        let reversed = Dendrogram::new(
+            4,
+            vec![
+                Merge { a: 2, b: 3, weight: 1.0 },
+                Merge { a: 0, b: 1, weight: 1.0 },
+                Merge { a: 0, b: 2, weight: 5.0 },
+            ],
+        );
+        let (lf, lr) = (forward.cut_k(3), reversed.cut_k(3));
+        assert_eq!(lf, lr);
+        assert_eq!(lf[0], lf[1], "the (weight, id)-first tie must merge");
+        assert_ne!(lf[2], lf[3]);
     }
 
     #[test]

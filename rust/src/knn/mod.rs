@@ -90,16 +90,20 @@ pub fn knn_graph(
 }
 
 /// Build the ε-ball graph: every pair with dissimilarity < `eps`.
-/// Exact (brute force over pairs), parallel over rows.
+/// Exact (brute force over pairs), parallel over rows; row `i`'s slice is
+/// hoisted out of the inner loop and the per-pair computation bails out
+/// early once the partial distance reaches `eps`
+/// ([`crate::data::Metric::dissimilarity_within`] — included edges are
+/// bitwise identical to the full computation).
 pub fn epsilon_graph(ds: &Dataset, eps: Weight) -> Graph {
     let rows: Vec<Vec<(Weight, u32)>> = par_map_indexed(default_threads(), ds.n, |i| {
+        let a = ds.row(i);
         let mut out = Vec::new();
         for j in 0..ds.n {
             if i == j {
                 continue;
             }
-            let w = ds.dissimilarity(i, j);
-            if w < eps {
+            if let Some(w) = ds.metric.dissimilarity_within(a, ds.row(j), eps) {
                 out.push((w, j as u32));
             }
         }
@@ -257,6 +261,49 @@ mod tests {
             }
         }
         assert_eq!(g.weight(0, best.1), Some(best.0));
+    }
+
+    /// Five 1-d points whose squared distances are tiny integers —
+    /// the hand-checkable fixture for the symmetrize pinning tests.
+    fn line5() -> Dataset {
+        Dataset {
+            n: 5,
+            d: 1,
+            metric: Metric::L2,
+            rows: vec![0.0, 1.0, 3.0, 6.0, 10.0],
+        }
+    }
+
+    fn adj(g: &crate::graph::Graph, u: u32) -> Vec<(u32, f64)> {
+        g.neighbors(u).collect()
+    }
+
+    #[test]
+    fn symmetrize_pins_sorted_dedup_rows_via_epsilon_graph() {
+        // Squared gaps: (0,1)=1 (0,2)=9 (1,2)=4 (2,3)=9 are < 10; all
+        // other pairs are >= 16. Every edge enters symmetrize from BOTH
+        // endpoints' rows, so this also pins the dedup.
+        let g = epsilon_graph(&line5(), 10.0);
+        g.validate().unwrap();
+        assert_eq!(adj(&g, 0), vec![(1, 1.0), (2, 9.0)]);
+        assert_eq!(adj(&g, 1), vec![(0, 1.0), (2, 4.0)]);
+        assert_eq!(adj(&g, 2), vec![(0, 9.0), (1, 4.0), (3, 9.0)]);
+        assert_eq!(adj(&g, 3), vec![(2, 9.0)]);
+        assert_eq!(adj(&g, 4), vec![]);
+    }
+
+    #[test]
+    fn symmetrize_pins_knn_union_rows() {
+        // 1-NN of each point: 0→1, 1→0, 2→1, 3→2, 4→3. The union
+        // symmetrisation gives node 1 degree 2 despite k = 1, and the
+        // reciprocal (0,1) candidate pair dedups to a single edge.
+        let g = knn_graph(&line5(), 1, Backend::Native, None).unwrap();
+        g.validate().unwrap();
+        assert_eq!(adj(&g, 0), vec![(1, 1.0)]);
+        assert_eq!(adj(&g, 1), vec![(0, 1.0), (2, 4.0)]);
+        assert_eq!(adj(&g, 2), vec![(1, 4.0), (3, 9.0)]);
+        assert_eq!(adj(&g, 3), vec![(2, 9.0), (4, 16.0)]);
+        assert_eq!(adj(&g, 4), vec![(3, 16.0)]);
     }
 
     #[test]

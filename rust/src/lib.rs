@@ -16,8 +16,10 @@
 //! * [`rac`] is the paper's contribution: the round-based
 //!   reciprocal-nearest-neighbor merge engine; [`dist`] runs the same
 //!   phases sharded across simulated machines with batched cross-shard
-//!   messaging; [`hac`] holds the exact sequential baselines the engine is
-//!   verified against. Both engines keep cluster adjacency in [`store`],
+//!   messaging; [`approx`] relaxes the merge rule to TeraHAC-style
+//!   (1+ε)-good merges for graphs where reciprocal pairs are scarce;
+//!   [`hac`] holds the exact sequential baselines the engines are
+//!   verified against. All engines keep cluster adjacency in [`store`],
 //!   a flat arena-backed neighbor store with tombstone deletion,
 //!   owner-sharded lock-free merge application, and periodic compaction.
 //!
@@ -60,7 +62,29 @@
 //! terms) — the resource columns of the paper's Table 2. Exactness is by
 //! construction: the merge arithmetic is the shared-memory engine's,
 //! bit for bit, so Theorem 1 applies to every topology.
+//!
+//! ## Approximate engine
+//!
+//! Exact RAC merges only reciprocal-nearest-neighbor pairs, so on inputs
+//! with few reciprocal pairs (the Theorem-4 adversarial instance needs
+//! Ω(n) rounds) parallelism collapses. [`approx::ApproxEngine`] trades a
+//! bounded amount of dendrogram fidelity for rounds: per round a cluster
+//! may merge with any neighbor whose linkage is within a `(1+ε)` factor
+//! of the minimum linkage visible to either endpoint (TeraHAC's
+//! good-merge criterion, arXiv:2308.03578), and a maximal conflict-free
+//! merge set is chosen with the crate-wide deterministic `(weight, id)`
+//! tie-break. Reach for `ε > 0` when round count — not per-merge cost —
+//! dominates wall time; every merge provably stays within the `(1+ε)`
+//! band of the best visible merge (recorded per merge and audited by
+//! [`approx::quality`]), which TeraHAC shows bounds global dendrogram
+//! distortion to the same factor. At `ε = 0` the criterion degenerates to
+//! reciprocal nearest neighbors and the engine is **bitwise identical**
+//! to [`rac::RacEngine`] — the correctness anchor, property-tested in
+//! `rust/tests/approx_quality.rs`. `benches/approx_tradeoff.rs` sweeps
+//! the ε × linkage × threads matrix and reports rounds, wall time, and
+//! adjusted-Rand agreement against the exact dendrogram.
 
+pub mod approx;
 pub mod config;
 pub mod data;
 pub mod dendrogram;

@@ -12,8 +12,9 @@
 //! ```
 //!
 //! `cluster` flags: `--dataset sift_like|docs_like|grid1d|adversarial|stable|random_regular`,
-//! `--n`, `--d`, `--k`, `--xla`, `--linkage L`, `--engine rac|dist_rac|naive_hac|nn_chain`,
-//! `--machines M`, `--cpus C`, `--seed S`.
+//! `--n`, `--d`, `--k`, `--xla`, `--linkage L`,
+//! `--engine rac|dist_rac|approx|naive_hac|nn_chain`,
+//! `--machines M`, `--cpus C`, `--epsilon E`, `--seed S`.
 
 use std::process::ExitCode;
 
@@ -58,7 +59,8 @@ rac — Reciprocal Agglomerative Clustering coordinator
 USAGE:
   rac run --config <file.toml> [--json]
   rac cluster [--dataset T] [--n N] [--d D] [--k K] [--xla] [--linkage L]
-              [--engine E] [--machines M] [--cpus C] [--seed S] [--json]
+              [--engine E] [--machines M] [--cpus C] [--epsilon E]
+              [--seed S] [--json]
   rac verify [--n N] [--seeds S]
   rac graph-info --config <file.toml>
   rac kernels [--artifacts DIR]
@@ -202,7 +204,7 @@ fn cmd_cluster(args: &[String]) -> Result<()> {
     if let Some(e) = flags.get("engine") {
         text.push_str(&format!("type = \"{e}\"\n"));
     }
-    for key in ["machines", "cpus", "threads"] {
+    for key in ["machines", "cpus", "threads", "epsilon"] {
         if let Some(v) = flags.get(key) {
             text.push_str(&format!("{key} = {v}\n"));
         }
@@ -242,7 +244,13 @@ fn cmd_verify(args: &[String]) -> Result<()> {
                 if !hac.same_clustering(&dist.dendrogram, 1e-9) {
                     bail!("DistRAC != HAC: linkage={linkage:?} seed={seed}");
                 }
-                checked += 2;
+                // The approximate engine's correctness anchor: ε = 0 is
+                // bitwise-exact RAC, hence exact HAC.
+                let approx = rac_hac::approx::ApproxEngine::new(g, linkage, 0.0).run();
+                if rac.dendrogram.bitwise_merges() != approx.dendrogram.bitwise_merges() {
+                    bail!("Approx(eps=0) != RAC: linkage={linkage:?} seed={seed}");
+                }
+                checked += 3;
             }
         }
     }

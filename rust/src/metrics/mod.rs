@@ -23,6 +23,11 @@ pub struct RoundMetrics {
     /// Neighbor-map entries scanned during NN recomputation (compute cost
     /// of the "update nearest neighbors" phase).
     pub nn_scan_entries: usize,
+    /// Neighbor-map entries scanned while testing merge eligibility
+    /// (approximate engine only: the per-round ε-good sweep reads whole
+    /// rows, where the exact engine's phase 1 is O(active) pointer
+    /// checks). Zero for the exact engines.
+    pub eligibility_scan_entries: usize,
     /// Wall time of the find-reciprocal-NN phase.
     pub t_find: Duration,
     /// Wall time of the merge / update-dissimilarities phase.
@@ -71,6 +76,10 @@ impl RoundMetrics {
             ("merges", self.merges.into()),
             ("nn_updates", self.nn_updates.into()),
             ("nn_scan_entries", self.nn_scan_entries.into()),
+            (
+                "eligibility_scan_entries",
+                self.eligibility_scan_entries.into(),
+            ),
             ("t_find_us", (self.t_find.as_micros() as usize).into()),
             ("t_merge_us", (self.t_merge.as_micros() as usize).into()),
             (

@@ -6,6 +6,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use crate::approx::ApproxEngine;
 use crate::config::{DatasetSpec, EngineSpec, GraphSpec, RunConfig};
 use crate::data::{
     adversarial_thm4, gaussian_mixture, grid1d_graph, random_regular_graph, stable_hierarchy,
@@ -118,6 +119,22 @@ pub fn run_engine(cfg: &RunConfig, g: &Graph) -> Result<RacResult> {
             DistConfig::new(machines, cpus),
         )
         .run()),
+        EngineSpec::Approx { epsilon, threads } => {
+            let threads = if threads == 0 {
+                default_threads()
+            } else {
+                threads
+            };
+            let r = ApproxEngine::new(g, cfg.linkage, epsilon)
+                .with_threads(threads)
+                .run();
+            // The per-merge quality trace stays engine-side; the pipeline
+            // reports the common dendrogram + metrics shape.
+            Ok(RacResult {
+                dendrogram: r.dendrogram,
+                metrics: r.metrics,
+            })
+        }
     }
 }
 
@@ -185,6 +202,32 @@ mod tests {
         assert!(hac.same_clustering(&chain, 1e-9));
         assert!(hac.same_clustering(&rac, 1e-9));
         assert!(hac.same_clustering(&dist, 1e-9));
+    }
+
+    #[test]
+    fn approx_engine_through_pipeline() {
+        let base = "[dataset]\ntype = \"grid1d\"\nn = 400\n[cluster]\nlinkage = \"average\"\n";
+        let exact = run(&cfg(&format!("{base}[engine]\ntype = \"rac\"\n")))
+            .unwrap()
+            .result;
+        // ε = 0 through the config path is still bitwise-exact RAC.
+        let zero = run(&cfg(&format!(
+            "{base}[engine]\ntype = \"approx\"\nepsilon = 0\n"
+        )))
+        .unwrap()
+        .result;
+        assert_eq!(
+            exact.dendrogram.bitwise_merges(),
+            zero.dendrogram.bitwise_merges()
+        );
+        // ε > 0 still fully clusters the component and reports rounds.
+        let relaxed = run(&cfg(&format!(
+            "{base}[engine]\ntype = \"approx\"\nepsilon = 0.5\n"
+        )))
+        .unwrap()
+        .result;
+        assert_eq!(relaxed.dendrogram.merges().len(), 399);
+        assert!(relaxed.metrics.merge_rounds() > 0);
     }
 
     #[test]

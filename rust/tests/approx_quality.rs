@@ -1,0 +1,396 @@
+//! Property suite for the (1+ε)-approximate engine and its quality
+//! instruments.
+//!
+//! The two contracts under test:
+//!
+//! * **ε = 0 exactness anchor** — `ApproxEngine` at `ε = 0` produces a
+//!   dendrogram **bitwise identical** to [`RacEngine`]'s, on random
+//!   sparse graphs for every `SPARSE_REDUCIBLE` linkage and across
+//!   thread counts, and on complete graphs for every reducible linkage
+//!   (Ward/WPGMA included). This pins the relaxed criterion's
+//!   degeneration to reciprocal nearest neighbors *and* the shared
+//!   phase-2/3 arithmetic and ordering.
+//! * **(1+ε) goodness band** — at any ε every merge's recorded
+//!   `(weight, visible minimum)` pair satisfies `ratio <= 1 + ε`, audited
+//!   through [`quality::merge_quality_ratio`] rather than the engine's
+//!   own selection code.
+//!
+//! Plus the `cut_k` / `cut_threshold` agreement property that underpins
+//! the ARI comparisons (`quality::compare_runs` cuts both dendrograms at
+//! the same `k`).
+
+use rac_hac::approx::{good, quality, ApproxEngine};
+use rac_hac::data;
+use rac_hac::graph::Graph;
+use rac_hac::hac::naive_hac;
+use rac_hac::linkage::{Linkage, Weight};
+use rac_hac::rac::RacEngine;
+use rac_hac::util::prop::for_all_seeds;
+use rac_hac::util::rng::Rng;
+
+/// Random sparse graph (same shape as the `store_equivalence` suite's):
+/// a mostly-connected random tree plus random extra edges.
+fn random_sparse_graph(rng: &mut Rng) -> Graph {
+    let n = rng.range_usize(2, 140);
+    let mut edges: Vec<(u32, u32, Weight)> = Vec::new();
+    for v in 1..n {
+        if rng.bool_with(1.0 / 12.0) {
+            continue;
+        }
+        let u = rng.below(v) as u32;
+        edges.push((u, v as u32, rng.range_f64(0.1, 100.0)));
+    }
+    let extra = rng.range_usize(0, 3 * n);
+    for _ in 0..extra {
+        let u = rng.below(n) as u32;
+        let v = rng.below(n) as u32;
+        if u != v {
+            edges.push((u.min(v), u.max(v), rng.range_f64(0.1, 100.0)));
+        }
+    }
+    Graph::from_edges(n, edges)
+}
+
+#[test]
+fn zero_epsilon_is_bitwise_exact_on_sparse_graphs() {
+    for_all_seeds(0xA9902, 30, |rng| {
+        let g = random_sparse_graph(rng);
+        for l in Linkage::SPARSE_REDUCIBLE {
+            let exact = RacEngine::new(&g, l).with_threads(1).run();
+            let approx = ApproxEngine::new(&g, l, 0.0).with_threads(1).run();
+            assert_eq!(
+                exact.dendrogram.bitwise_merges(),
+                approx.dendrogram.bitwise_merges(),
+                "{l:?}: eps=0 diverged from the exact engine (n={})",
+                g.n()
+            );
+        }
+    });
+}
+
+/// Like [`random_sparse_graph`] but with weights quantised to a handful
+/// of integer values — exact weight ties everywhere. This is the regime
+/// the boundary rule exists for: the engines' NN caches go stale on tie
+/// *ids* (a patch can add an equal-weight edge toward a lower id without
+/// triggering a rescan), and the exact engine still merges along its
+/// cached pointer. Continuous weights never exercise this.
+fn random_tied_graph(rng: &mut Rng) -> Graph {
+    let n = rng.range_usize(2, 120);
+    let mut edges: Vec<(u32, u32, Weight)> = Vec::new();
+    for v in 1..n {
+        if rng.bool_with(1.0 / 12.0) {
+            continue;
+        }
+        let u = rng.below(v) as u32;
+        edges.push((u, v as u32, (1 + rng.below(5)) as Weight));
+    }
+    for _ in 0..rng.range_usize(0, 3 * n) {
+        let u = rng.below(n) as u32;
+        let v = rng.below(n) as u32;
+        if u != v {
+            edges.push((u.min(v), u.max(v), (1 + rng.below(5)) as Weight));
+        }
+    }
+    Graph::from_edges(n, edges)
+}
+
+#[test]
+fn zero_epsilon_is_bitwise_exact_under_heavy_weight_ties() {
+    for_all_seeds(0x71ED, 30, |rng| {
+        let g = random_tied_graph(rng);
+        for l in Linkage::SPARSE_REDUCIBLE {
+            let exact = RacEngine::new(&g, l).with_threads(1).run();
+            for threads in [1usize, 4] {
+                let approx = ApproxEngine::new(&g, l, 0.0).with_threads(threads).run();
+                assert_eq!(
+                    exact.dendrogram.bitwise_merges(),
+                    approx.dendrogram.bitwise_merges(),
+                    "{l:?}: eps=0 diverged on a tie-heavy graph (n={}, threads={threads})",
+                    g.n()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn goodness_band_holds_under_heavy_weight_ties() {
+    for_all_seeds(0x71EE, 15, |rng| {
+        let g = random_tied_graph(rng);
+        for eps in [0.1, 1.0] {
+            let r = ApproxEngine::new(&g, Linkage::Average, eps).run();
+            r.dendrogram.validate().unwrap();
+            let ratio = quality::merge_quality_ratio(&r.bounds);
+            assert!(
+                ratio <= 1.0 + eps + 1e-12,
+                "eps={eps}: ratio {ratio} on tie-heavy graph (n={})",
+                g.n()
+            );
+        }
+    });
+}
+
+#[test]
+fn zero_epsilon_is_bitwise_exact_across_thread_counts() {
+    for_all_seeds(0xA9903, 15, |rng| {
+        let g = random_sparse_graph(rng);
+        for l in Linkage::SPARSE_REDUCIBLE {
+            let exact = RacEngine::new(&g, l).with_threads(1).run();
+            for threads in [2usize, 8] {
+                let approx = ApproxEngine::new(&g, l, 0.0).with_threads(threads).run();
+                assert_eq!(
+                    exact.dendrogram.bitwise_merges(),
+                    approx.dendrogram.bitwise_merges(),
+                    "{l:?}: eps=0 at {threads} threads diverged (n={})",
+                    g.n()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn zero_epsilon_is_bitwise_exact_on_complete_graphs() {
+    // Complete graphs admit every reducible linkage, including the
+    // complete-graph-only Ward and WPGMA updates.
+    for (depth, seed) in [(4u32, 23u64), (5, 7), (6, 91)] {
+        let g = data::stable_hierarchy(depth, 4.0, seed);
+        for l in [
+            Linkage::Single,
+            Linkage::Complete,
+            Linkage::Average,
+            Linkage::WeightedAverage,
+            Linkage::Ward,
+        ] {
+            let exact = RacEngine::new(&g, l).with_threads(4).run();
+            let approx = ApproxEngine::new(&g, l, 0.0).with_threads(4).run();
+            assert_eq!(
+                exact.dendrogram.bitwise_merges(),
+                approx.dendrogram.bitwise_merges(),
+                "{l:?} depth={depth}"
+            );
+        }
+    }
+}
+
+#[test]
+fn every_merge_respects_the_goodness_band() {
+    for_all_seeds(0xB04D, 20, |rng| {
+        let g = random_sparse_graph(rng);
+        for eps in [0.01, 0.1, 1.0] {
+            for l in Linkage::SPARSE_REDUCIBLE {
+                let r = ApproxEngine::new(&g, l, eps).run();
+                r.dendrogram.validate().unwrap();
+                assert_eq!(
+                    r.bounds.len(),
+                    r.dendrogram.merges().len(),
+                    "one bound per merge"
+                );
+                let ratio = quality::merge_quality_ratio(&r.bounds);
+                assert!(
+                    ratio <= 1.0 + eps + 1e-12,
+                    "{l:?} eps={eps}: worst ratio {ratio} (n={})",
+                    g.n()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn relaxation_never_loses_merges() {
+    // Approximation changes which merges happen, never how many: every
+    // component still fully agglomerates.
+    for_all_seeds(0xC0A7, 15, |rng| {
+        let g = random_sparse_graph(rng);
+        let exact = RacEngine::new(&g, Linkage::Average).run();
+        for eps in [0.1, 1.0] {
+            let approx = ApproxEngine::new(&g, Linkage::Average, eps).run();
+            assert_eq!(
+                approx.dendrogram.merges().len(),
+                exact.dendrogram.merges().len(),
+                "eps={eps} (n={})",
+                g.n()
+            );
+        }
+    });
+}
+
+#[test]
+fn relaxed_selection_is_thread_invariant() {
+    for_all_seeds(0x7123D, 10, |rng| {
+        let g = random_sparse_graph(rng);
+        for eps in [0.1, 1.0] {
+            let base = ApproxEngine::new(&g, Linkage::Average, eps)
+                .with_threads(1)
+                .run();
+            for threads in [2usize, 8] {
+                let r = ApproxEngine::new(&g, Linkage::Average, eps)
+                    .with_threads(threads)
+                    .run();
+                assert_eq!(
+                    base.dendrogram.bitwise_merges(),
+                    r.dendrogram.bitwise_merges(),
+                    "eps={eps} threads={threads} (n={})",
+                    g.n()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn adversarial_round_collapse_and_quality() {
+    // The Theorem-4 instance is the motivating workload: the exact
+    // engine exposes one reciprocal pair per round (Ω(n) rounds); the
+    // relaxed band restores per-round parallelism by orders of magnitude
+    // while every merge stays (1+ε)-good.
+    let g = data::adversarial_thm4(7); // n = 128
+    let exact = RacEngine::new(&g, Linkage::Average).run();
+    let exact_rounds = exact.metrics.merge_rounds();
+    assert!(exact_rounds >= 100, "exact collapse expected: {exact_rounds}");
+    for eps in [0.1, 1.0] {
+        let r = ApproxEngine::new(&g, Linkage::Average, eps).run();
+        assert_eq!(r.dendrogram.merges().len(), 127);
+        let rounds = r.metrics.merge_rounds();
+        // Any non-trivial band restores near-log round counts here (both
+        // ε values can hit that floor, so compare against exact, not
+        // against each other).
+        assert!(
+            rounds * 4 < exact_rounds,
+            "eps={eps}: {rounds} rounds vs exact {exact_rounds}"
+        );
+        let ratio = quality::merge_quality_ratio(&r.bounds);
+        assert!(ratio <= 1.0 + eps + 1e-12, "eps={eps}: {ratio}");
+    }
+}
+
+#[test]
+fn flat_cuts_agree_with_exact_hac_on_stable_hierarchies() {
+    // Theorem-5 stable hierarchy: separation bands are a factor base
+    // apart, so even ε = 1 merges stay inside the correct subtree and
+    // every natural cut matches exact HAC with ARI exactly 1.
+    let g = data::stable_hierarchy(6, 4.0, 23); // n = 64
+    let hac = naive_hac(&g, Linkage::Average);
+    for eps in [0.0, 0.1, 1.0] {
+        let approx = ApproxEngine::new(&g, Linkage::Average, eps).run();
+        for k in [2usize, 4, 8, 16] {
+            let ari = quality::adjusted_rand_index(&hac.cut_k(k), &approx.dendrogram.cut_k(k));
+            assert_eq!(ari, 1.0, "eps={eps} k={k}");
+        }
+    }
+}
+
+#[test]
+fn compare_runs_reports_the_tradeoff() {
+    let g = data::adversarial_thm4(6);
+    let exact = RacEngine::new(&g, Linkage::Average).run();
+    let approx = ApproxEngine::new(&g, Linkage::Average, 1.0).run();
+    let c = quality::compare_runs(
+        (&exact.dendrogram, &exact.metrics),
+        (&approx.dendrogram, &approx.metrics),
+        4,
+    );
+    assert!(c.rounds_approx < c.rounds_exact);
+    assert!(c.edge_scans_approx > 0 && c.edge_scans_exact > 0);
+    assert!((-1.0..=1.0).contains(&c.ari));
+}
+
+#[test]
+fn selection_is_a_maximal_conflict_free_set() {
+    // Engine-independent check of the selection invariants on random
+    // candidate sets: pairwise disjoint, and no unmatched candidate edge
+    // remains (maximality).
+    for_all_seeds(0x5E1EC7, 40, |rng| {
+        let n = rng.range_usize(2, 60);
+        let mut cands: Vec<(Weight, u32, u32)> = Vec::new();
+        for _ in 0..rng.range_usize(0, 3 * n) {
+            let a = rng.below(n) as u32;
+            let b = rng.below(n) as u32;
+            if a != b {
+                cands.push((rng.range_f64(0.1, 10.0), a.min(b), a.max(b)));
+            }
+        }
+        let mut matched = vec![false; n];
+        let pairs = good::select_matching(cands.clone(), &mut matched);
+        let mut seen = vec![false; n];
+        for p in &pairs {
+            assert!(p.leader < p.partner);
+            assert!(!seen[p.leader as usize] && !seen[p.partner as usize], "overlap");
+            seen[p.leader as usize] = true;
+            seen[p.partner as usize] = true;
+        }
+        assert_eq!(seen, matched);
+        for &(_, a, b) in &cands {
+            assert!(
+                matched[a as usize] || matched[b as usize],
+                "candidate ({a},{b}) left both endpoints unmatched — not maximal"
+            );
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// cut_k / cut_threshold agreement (the instrument the ARI comparisons
+// stand on).
+// ---------------------------------------------------------------------
+
+#[test]
+fn cut_k_agrees_with_cut_threshold_at_strict_boundaries() {
+    // On the exact dendrogram of a random sparse graph: applying the j
+    // smallest merges via cut_k(n - j) equals cutting at the (j+1)-th
+    // merge weight, whenever that boundary is a strict weight increase
+    // (a threshold cut cannot split ties; cut_k's documented
+    // (weight, id) order handles them deterministically).
+    for_all_seeds(0xC07, 25, |rng| {
+        let g = random_sparse_graph(rng);
+        for l in Linkage::SPARSE_REDUCIBLE {
+            let d = naive_hac(&g, l);
+            let mut weights: Vec<Weight> = d.merges().iter().map(|m| m.weight).collect();
+            weights.sort_by(Weight::total_cmp);
+            let n = d.n();
+            for j in 0..=weights.len() {
+                let strict_below = j == 0 || j == weights.len() || weights[j - 1] < weights[j];
+                if !strict_below {
+                    continue;
+                }
+                let threshold = if j == weights.len() {
+                    weights.last().copied().unwrap_or(0.0) + 1.0
+                } else {
+                    weights[j]
+                };
+                assert_eq!(
+                    d.cut_k(n - j),
+                    d.cut_threshold(threshold),
+                    "{l:?}: j={j} of {} merges (n={n})",
+                    weights.len()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn cut_agreement_holds_for_approx_dendrograms_too() {
+    // The same agreement on the ε-engine's output — quality comparisons
+    // cut approximate dendrograms with the same instruments.
+    for_all_seeds(0xC08, 10, |rng| {
+        let g = random_sparse_graph(rng);
+        let d = ApproxEngine::new(&g, Linkage::Average, 0.5).run().dendrogram;
+        let mut weights: Vec<Weight> = d.merges().iter().map(|m| m.weight).collect();
+        weights.sort_by(Weight::total_cmp);
+        let n = d.n();
+        for j in 0..=weights.len() {
+            let strict = j == 0 || j == weights.len() || weights[j - 1] < weights[j];
+            if !strict {
+                continue;
+            }
+            let threshold = if j == weights.len() {
+                weights.last().copied().unwrap_or(0.0) + 1.0
+            } else {
+                weights[j]
+            };
+            assert_eq!(d.cut_k(n - j), d.cut_threshold(threshold), "j={j} (n={n})");
+        }
+    });
+}
