@@ -3,7 +3,7 @@
 # it. `make bench` runs the perf-trajectory smoke bench and writes
 # BENCH_hot_paths.json (the per-PR datapoint CI uploads as an artifact).
 
-.PHONY: artifacts build test clippy bench bench-approx
+.PHONY: artifacts build test clippy fmt fmt-check bench bench-approx
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -13,6 +13,13 @@ build:
 
 test:
 	cargo test -q
+
+# Format in place; CI enforces the check variant.
+fmt:
+	cargo fmt --all
+
+fmt-check:
+	cargo fmt --all -- --check
 
 # --all-targets lints benches, tests and examples too (the library alone
 # leaves most of the harness code unlinted).

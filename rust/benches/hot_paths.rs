@@ -15,6 +15,13 @@
 //! hashmap baseline ([`HashRacEngine`]) at default threads. CI runs the
 //! smoke mode on every push and uploads `BENCH_hot_paths.json` as an
 //! artifact, so regressions and wins are visible PR over PR.
+//!
+//! Every entry is tagged with the engine-core revision
+//! ([`rac_hac::engine::DRIVER_REV`]) so the trajectory can show that the
+//! shared-round-driver refactor is overhead-free: the driver's store and
+//! selector parameters are generics (monomorphized per engine — no `dyn`
+//! in the inner loop), so post-refactor medians must track the
+//! pre-refactor datapoints.
 
 #[path = "common.rs"]
 mod common;
@@ -54,6 +61,7 @@ impl Cell {
         }
         obj([
             ("engine", self.engine.into()),
+            ("driver", rac_hac::engine::DRIVER_REV.into()),
             ("linkage", self.linkage.name().into()),
             ("threads", self.threads.into()),
             ("median_us", us(self.timing.median).into()),
@@ -222,6 +230,7 @@ fn main() {
     if write_json {
         let report = obj([
             ("schema", "bench_hot_paths/v1".into()),
+            ("driver", rac_hac::engine::DRIVER_REV.into()),
             ("mode", (if smoke { "smoke" } else { "full" }).into()),
             (
                 "workload",

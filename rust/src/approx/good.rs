@@ -1,6 +1,12 @@
-//! Merge eligibility for the (1+ε)-approximate engine: TeraHAC's
+//! Merge eligibility for the (1+ε)-approximate engines: TeraHAC's
 //! good-merge criterion lowered onto this repo's deterministic
 //! `(weight, id)` total order, plus the conflict-free merge selection.
+//!
+//! Consumed by both ε-good phase-1 implementations — the shared-memory
+//! driver selector ([`crate::engine::GoodSelector`]) and the sharded
+//! [`crate::dist::DistApproxEngine`] — so acceptance and matching are one
+//! function everywhere, which is what makes the sharded engine bitwise
+//! identical to the shared-memory one per topology.
 //!
 //! ## The ε-good criterion
 //!
@@ -52,6 +58,7 @@
 //! edges merges at least one pair.
 
 use crate::linkage::Weight;
+use crate::store::NeighborsRef;
 
 /// A candidate or selected merge edge `(weight, a, b)` with `a < b`.
 pub type Candidate = (Weight, u32, u32);
@@ -74,6 +81,37 @@ pub struct MergePair {
 pub fn accepts(w: Weight, partner: u32, epsilon: f64, nn_weight: Weight, nn_id: u32) -> bool {
     let thr = (1.0 + epsilon) * nn_weight;
     w < thr || (w == thr && partner == nn_id)
+}
+
+/// Scan one cluster's neighbor row for ε-good candidate edges. Candidates
+/// are oriented `b > a`, so every edge is tested exactly once, from its
+/// lower endpoint; an edge qualifies iff **both** endpoints [`accepts`] it
+/// against their cached NN edges. Returns the accepted `(weight, b)`
+/// partners in row-visit order plus the number of live entries scanned
+/// (the `eligibility_scan_entries` accounting unit).
+///
+/// This is the single implementation of the per-edge eligibility test,
+/// shared by the shared-memory selector
+/// ([`crate::engine::GoodSelector`]) and the sharded engine
+/// ([`crate::dist::DistApproxEngine`]) — keeping the criterion
+/// single-sourced is what makes the two bitwise-interchangeable.
+pub fn scan_row_candidates<N: NeighborsRef>(
+    row: N,
+    a: u32,
+    epsilon: f64,
+    nn_weight: &[Weight],
+    nn: &[u32],
+) -> (Vec<(Weight, u32)>, usize) {
+    let mut out = Vec::new();
+    row.for_each_edge(|b, e| {
+        if b > a
+            && accepts(e.weight, b, epsilon, nn_weight[a as usize], nn[a as usize])
+            && accepts(e.weight, a, epsilon, nn_weight[b as usize], nn[b as usize])
+        {
+            out.push((e.weight, b));
+        }
+    });
+    (out, row.live_len())
 }
 
 /// Select a maximal conflict-free merge set from `candidates`: greedy
@@ -162,6 +200,24 @@ mod tests {
         // weight would be accepted (vacuous — isolated rows yield no
         // candidates), without NaN poisoning.
         assert!(accepts(5.0, 1, 0.5, Weight::INFINITY, u32::MAX));
+    }
+
+    #[test]
+    fn scan_row_candidates_orients_and_filters() {
+        use crate::graph::Graph;
+        use crate::store::NeighborStore;
+        let g = Graph::from_edges(4, [(0, 1, 1.0), (1, 2, 1.05), (1, 3, 2.0)]);
+        let s = NeighborStore::from_graph(&g);
+        let nn = [1u32, 0, 1, 1];
+        let nn_weight = [1.0, 1.0, 1.05, 2.0];
+        // From cluster 1 only b > 1 is tested: (1,2) sits inside both
+        // endpoints' 1.1× bands; (1,3) fails 1's own band; (0,1) is
+        // cluster 0's to test.
+        let (cands, scanned) = scan_row_candidates(s.row(1), 1, 0.1, &nn_weight, &nn);
+        assert_eq!(scanned, 3);
+        assert_eq!(cands, vec![(1.05, 2)]);
+        let (cands, _) = scan_row_candidates(s.row(0), 0, 0.1, &nn_weight, &nn);
+        assert_eq!(cands, vec![(1.0, 1)]);
     }
 
     #[test]

@@ -17,8 +17,11 @@
 //!
 //! ## The round structure
 //!
-//! Same three phases as the exact engine, over the same flat
-//! [`crate::store::NeighborStore`]; only phase 1 differs:
+//! Same three phases as the exact engine — literally: this engine is the
+//! shared [`crate::engine::RoundDriver`] over the same flat
+//! [`crate::store::NeighborStore`], instantiated with the
+//! [`crate::engine::GoodSelector`] instead of the exact engine's
+//! reciprocal-NN selector. Only phase 1 differs:
 //!
 //! 1. **Find ε-good merges** — every active cluster scans its neighbor
 //!    row for edges within the `(1+ε)` band of the minimum linkage
@@ -58,19 +61,13 @@
 pub mod good;
 pub mod quality;
 
-use std::time::Instant;
-
-use crate::dendrogram::{Dendrogram, Merge};
+use crate::dendrogram::Dendrogram;
+use crate::engine::{GoodSelector, RoundDriver};
 use crate::graph::Graph;
-use crate::linkage::{EdgeState, Linkage, Weight};
-use crate::metrics::{RoundMetrics, RunMetrics};
-use crate::rac::logic::{compute_union_map, scan_nn, PairView};
-use crate::rac::NO_NN;
-use crate::store::{NeighborStore, UnionRow};
-use crate::util::parallel::default_threads;
-use crate::util::pool::Pool;
+use crate::linkage::Linkage;
+use crate::metrics::RunMetrics;
+use crate::store::NeighborStore;
 
-use good::MergePair;
 use quality::MergeBound;
 
 /// Result of an approximate clustering run: the dendrogram, the usual
@@ -87,23 +84,8 @@ pub struct ApproxResult {
 
 /// Shared-memory (1+ε)-approximate merge engine over the flat store.
 pub struct ApproxEngine {
-    linkage: Linkage,
+    driver: RoundDriver<NeighborStore>,
     epsilon: f64,
-    n: usize,
-    active: Vec<bool>,
-    active_ids: Vec<u32>,
-    size: Vec<u64>,
-    nn: Vec<u32>,
-    nn_weight: Vec<Weight>,
-    /// Selected for a merge this round (the exact engine's `will_merge`).
-    matched: Vec<bool>,
-    /// This round's merge partner (valid only while `matched`).
-    partner: Vec<u32>,
-    /// This round's merge weight (valid only while `matched`).
-    pair_weight: Vec<Weight>,
-    store: NeighborStore,
-    threads: usize,
-    max_rounds: usize,
 }
 
 impl ApproxEngine {
@@ -132,222 +114,34 @@ impl ApproxEngine {
                 "{linkage:?} linkage requires a complete graph"
             );
         }
-        let n = g.n();
         ApproxEngine {
-            linkage,
+            driver: RoundDriver::new(NeighborStore::from_graph(g), g.n(), linkage),
             epsilon,
-            n,
-            active: vec![true; n],
-            active_ids: (0..n as u32).collect(),
-            size: vec![1; n],
-            nn: vec![NO_NN; n],
-            nn_weight: vec![Weight::INFINITY; n],
-            matched: vec![false; n],
-            partner: vec![NO_NN; n],
-            pair_weight: vec![0.0; n],
-            store: NeighborStore::from_graph(g),
-            threads: default_threads(),
-            max_rounds: 4 * n + 64,
         }
     }
 
     /// Limit the worker-thread count.
     pub fn with_threads(mut self, threads: usize) -> Self {
-        self.threads = threads.max(1);
+        self.driver.set_threads(threads);
         self
     }
 
     /// Override the round safety cap.
     pub fn with_max_rounds(mut self, max_rounds: usize) -> Self {
-        self.max_rounds = max_rounds;
+        self.driver.set_max_rounds(max_rounds);
         self
     }
 
     /// Run to completion; returns the dendrogram, metrics, and the
     /// per-merge quality trace.
-    pub fn run(mut self) -> ApproxResult {
-        let pool = Pool::new(self.threads);
-        self.run_inner(&pool)
-    }
-
-    fn run_inner(&mut self, pool: &Pool) -> ApproxResult {
-        let t0 = Instant::now();
-        let mut merges: Vec<Merge> = Vec::with_capacity(self.n.saturating_sub(1));
-        let mut bounds: Vec<MergeBound> = Vec::with_capacity(self.n.saturating_sub(1));
-        let mut metrics = RunMetrics::default();
-
-        let init: Vec<(u32, Weight)> =
-            pool.par_map_indexed(self.n, |c| scan_nn(self.store.row(c as u32)));
-        for (c, (nn, w)) in init.into_iter().enumerate() {
-            self.nn[c] = nn;
-            self.nn_weight[c] = w;
-        }
-
-        let mut n_active = self.n;
-        for round in 0..self.max_rounds {
-            let mut rm = RoundMetrics {
-                round,
-                clusters: n_active,
-                ..Default::default()
-            };
-
-            // ---- Phase 1: find ε-good merges ----------------------------
-            // Each active cluster scans its row once for edges both
-            // endpoints accept (candidates are oriented a < b so every
-            // edge is tested exactly once, from its lower endpoint).
-            let t = Instant::now();
-            let scans: Vec<(Vec<(Weight, u32)>, usize)> =
-                pool.par_map(&self.active_ids, |&a| {
-                    let row = self.store.row(a);
-                    let mut out = Vec::new();
-                    for (b, e) in row.iter() {
-                        if b > a
-                            && good::accepts(
-                                e.weight,
-                                b,
-                                self.epsilon,
-                                self.nn_weight[a as usize],
-                                self.nn[a as usize],
-                            )
-                            && good::accepts(
-                                e.weight,
-                                a,
-                                self.epsilon,
-                                self.nn_weight[b as usize],
-                                self.nn[b as usize],
-                            )
-                        {
-                            out.push((e.weight, b));
-                        }
-                    }
-                    (out, row.live_len())
-                });
-            let mut candidates: Vec<good::Candidate> = Vec::new();
-            for (&a, (row_cands, scanned)) in self.active_ids.iter().zip(scans) {
-                rm.eligibility_scan_entries += scanned;
-                candidates.extend(row_cands.into_iter().map(|(w, b)| (w, a, b)));
-            }
-            let pairs: Vec<MergePair> = good::select_matching(candidates, &mut self.matched);
-            for p in &pairs {
-                self.partner[p.leader as usize] = p.partner;
-                self.partner[p.partner as usize] = p.leader;
-                self.pair_weight[p.leader as usize] = p.weight;
-                self.pair_weight[p.partner as usize] = p.weight;
-            }
-            rm.t_find = t.elapsed();
-            rm.merges = pairs.len();
-
-            if pairs.is_empty() {
-                metrics.rounds.push(rm);
-                break;
-            }
-
-            // ---- Phase 2: update cluster dissimilarities ----------------
-            let t = Instant::now();
-            let unions: Vec<UnionRow> =
-                pool.par_map(&pairs, |p| (p.leader, self.union_map(p.leader)));
-
-            for p in &pairs {
-                merges.push(Merge {
-                    a: p.leader,
-                    b: p.partner,
-                    weight: p.weight,
-                });
-                bounds.push(MergeBound {
-                    weight: p.weight,
-                    visible_min: self.nn_weight[p.leader as usize]
-                        .min(self.nn_weight[p.partner as usize]),
-                });
-            }
-            {
-                let store = &mut self.store;
-                let partner = &self.partner;
-                let matched = &self.matched;
-                store.par_apply_round(
-                    pool,
-                    &unions,
-                    |l| partner[l as usize],
-                    |t| !matched[t as usize],
-                );
-            }
-            for p in &pairs {
-                self.size[p.leader as usize] += self.size[p.partner as usize];
-                self.active[p.partner as usize] = false;
-            }
-            self.store.maybe_compact();
-            n_active -= rm.merges;
-            self.active_ids.retain(|&c| self.active[c as usize]);
-            rm.t_merge = t.elapsed();
-
-            // ---- Phase 3: update nearest neighbors ----------------------
-            // Same rescan rule as the exact engine: only a cluster that
-            // merged, or whose cached NN merged, can see its row minimum
-            // change (reducibility: patches never lower a row's minimum).
-            let t = Instant::now();
-            let updates: Vec<(u32, u32, Weight, usize)> = {
-                let ids = &self.active_ids;
-                pool.par_filter_map_indexed(ids.len(), |idx| {
-                    let c = ids[idx];
-                    let needs_rescan = self.matched[c as usize]
-                        || (self.nn[c as usize] != NO_NN
-                            && self.matched[self.nn[c as usize] as usize]);
-                    needs_rescan.then(|| {
-                        let row = self.store.row(c);
-                        let (nn, w) = scan_nn(row);
-                        (c, nn, w, row.live_len())
-                    })
-                })
-            };
-            rm.nn_updates = updates.len();
-            for (c, nn, w, scanned) in updates {
-                self.nn[c as usize] = nn;
-                self.nn_weight[c as usize] = w;
-                rm.nn_scan_entries += scanned;
-            }
-            // Clear this round's selection (cheaper than the exact
-            // engine's full recompute; equivalent — retired partners'
-            // stale flags are unreachable, no live `nn` points at them).
-            for p in &pairs {
-                self.matched[p.leader as usize] = false;
-                self.matched[p.partner as usize] = false;
-            }
-            rm.t_update_nn = t.elapsed();
-            metrics.rounds.push(rm);
-
-            if n_active <= 1 {
-                break;
-            }
-        }
-
-        metrics.total_time = t0.elapsed();
+    pub fn run(self) -> ApproxResult {
+        let mut selector = GoodSelector::new(self.epsilon);
+        let r = self.driver.run(&mut selector);
         ApproxResult {
-            dendrogram: Dendrogram::new(self.n, merges),
-            metrics,
-            bounds,
+            dendrogram: r.dendrogram,
+            metrics: r.metrics,
+            bounds: r.bounds,
         }
-    }
-
-    /// Union map of `L ∪ partner(L)` — the exact engine's computation,
-    /// with pair identity taken from this round's matching instead of the
-    /// NN cache (at ε = 0 the two coincide, bitwise).
-    fn union_map(&self, l: u32) -> Vec<(u32, EdgeState)> {
-        let p = self.partner[l as usize];
-        compute_union_map(
-            self.linkage,
-            l,
-            p,
-            self.pair_weight[l as usize],
-            self.size[l as usize],
-            self.size[p as usize],
-            self.store.row(l),
-            self.store.row(p),
-            |x| PairView {
-                merging: self.matched[x as usize],
-                partner: self.partner[x as usize],
-                size: self.size[x as usize],
-                pair_weight: self.pair_weight[x as usize],
-            },
-        )
     }
 }
 

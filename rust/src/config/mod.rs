@@ -63,6 +63,14 @@ pub enum EngineSpec {
     /// Shared-memory (1+ε)-approximate engine (TeraHAC-style good
     /// merges); `epsilon = 0` is bitwise-exact RAC.
     Approx { epsilon: f64, threads: usize },
+    /// Distributed (1+ε)-approximate engine: ε-good merges over sharded
+    /// state; bitwise-identical to `Approx` for every topology and to
+    /// `DistRac` at `epsilon = 0`.
+    DistApprox {
+        machines: usize,
+        cpus: usize,
+        epsilon: f64,
+    },
 }
 
 /// A full clustering run.
@@ -139,18 +147,20 @@ impl RunConfig {
             "rac" => EngineSpec::Rac {
                 threads: doc.usize_or("engine", "threads", 0)?,
             },
-            "dist_rac" => EngineSpec::DistRac {
-                machines: doc.usize_or("engine", "machines", 4)?,
-                cpus: doc.usize_or("engine", "cpus", 2)?,
+            "dist_rac" => {
+                let (machines, cpus) = parse_topology(&doc, "dist_rac")?;
+                EngineSpec::DistRac { machines, cpus }
+            }
+            "approx" => EngineSpec::Approx {
+                epsilon: parse_epsilon(&doc)?,
+                threads: doc.usize_or("engine", "threads", 0)?,
             },
-            "approx" => {
-                let epsilon = doc.f64_or("engine", "epsilon", 0.1)?;
-                if !(epsilon >= 0.0 && epsilon.is_finite()) {
-                    bail!("engine.epsilon must be finite and >= 0, got {epsilon}");
-                }
-                EngineSpec::Approx {
-                    epsilon,
-                    threads: doc.usize_or("engine", "threads", 0)?,
+            "dist_approx" => {
+                let (machines, cpus) = parse_topology(&doc, "dist_approx")?;
+                EngineSpec::DistApprox {
+                    machines,
+                    cpus,
+                    epsilon: parse_epsilon(&doc)?,
                 }
             }
             other => bail!("unknown engine.type {other:?}"),
@@ -173,6 +183,30 @@ impl RunConfig {
             _ => None, // graph-native datasets
         }
     }
+}
+
+/// Parse + validate a distributed engine's `(machines, cpus)` topology.
+/// Zero is rejected here with a descriptive error instead of surfacing as
+/// a confusing downstream clamp or divide-by-zero.
+fn parse_topology(doc: &TomlDoc, engine: &str) -> Result<(usize, usize)> {
+    let machines = doc.usize_or("engine", "machines", 4)?;
+    let cpus = doc.usize_or("engine", "cpus", 2)?;
+    if machines == 0 {
+        bail!("engine.machines must be >= 1 for {engine} (got 0; use 1 for a single-machine run)");
+    }
+    if cpus == 0 {
+        bail!("engine.cpus must be >= 1 for {engine} (got 0)");
+    }
+    Ok((machines, cpus))
+}
+
+/// Parse + validate the approximate engines' `epsilon` band.
+fn parse_epsilon(doc: &TomlDoc) -> Result<f64> {
+    let epsilon = doc.f64_or("engine", "epsilon", 0.1)?;
+    if !(epsilon >= 0.0 && epsilon.is_finite()) {
+        bail!("engine.epsilon must be finite and >= 0, got {epsilon}");
+    }
+    Ok(epsilon)
 }
 
 #[cfg(test)]
@@ -272,6 +306,54 @@ cpus = 4
             "[engine]\ntype = \"approx\"\nepsilon = -0.5\n"
         )
         .is_err());
+    }
+
+    #[test]
+    fn dist_approx_parses_with_defaults_and_overrides() {
+        let cfg = RunConfig::from_toml_str("[engine]\ntype = \"dist_approx\"\n").unwrap();
+        assert_eq!(
+            cfg.engine,
+            EngineSpec::DistApprox {
+                machines: 4,
+                cpus: 2,
+                epsilon: 0.1
+            }
+        );
+        // Integer-literal epsilon coerces, as for `approx`.
+        let cfg = RunConfig::from_toml_str(
+            "[engine]\ntype = \"dist_approx\"\nmachines = 8\ncpus = 3\nepsilon = 0\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.engine,
+            EngineSpec::DistApprox {
+                machines: 8,
+                cpus: 3,
+                epsilon: 0.0
+            }
+        );
+        assert!(RunConfig::from_toml_str(
+            "[engine]\ntype = \"dist_approx\"\nepsilon = -1.0\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn dist_topologies_reject_zero_machines_and_cpus() {
+        for engine in ["dist_rac", "dist_approx"] {
+            for (key, other) in [("machines", "cpus"), ("cpus", "machines")] {
+                let text =
+                    format!("[engine]\ntype = \"{engine}\"\n{key} = 0\n{other} = 2\n");
+                let err = RunConfig::from_toml_str(&text).unwrap_err().to_string();
+                assert!(
+                    err.contains(key) && err.contains(engine),
+                    "{engine}/{key}: error not descriptive: {err}"
+                );
+            }
+            // The valid minimum still parses.
+            let text = format!("[engine]\ntype = \"{engine}\"\nmachines = 1\ncpus = 1\n");
+            assert!(RunConfig::from_toml_str(&text).is_ok());
+        }
     }
 
     #[test]

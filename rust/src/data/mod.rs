@@ -16,5 +16,8 @@
 pub mod theory;
 pub mod vectors;
 
-pub use theory::{adversarial_thm4, grid1d_graph, random_regular_graph, stable_hierarchy};
+pub use theory::{
+    adversarial_thm4, grid1d_graph, random_regular_graph, random_sparse_graph, random_tied_graph,
+    stable_hierarchy,
+};
 pub use vectors::{gaussian_mixture, gaussian_mixture_labeled, topic_docs, Dataset, Metric};

@@ -116,9 +116,82 @@ pub fn random_regular_graph(n: usize, k: usize, seed: u64) -> Graph {
     )
 }
 
+/// Random sparse property-test graph: a random tree over most nodes
+/// (keeps the graph connected enough that runs produce long merge
+/// sequences) plus random extra edges, with occasional isolated tail
+/// nodes. The shape the differential suites
+/// (`rust/tests/store_equivalence.rs`, `rust/tests/approx_quality.rs`)
+/// throw at every engine; lives here so the suites share one generator.
+pub fn random_sparse_graph(rng: &mut Rng) -> Graph {
+    let n = rng.range_usize(2, 140);
+    let mut edges: Vec<(u32, u32, Weight)> = Vec::new();
+    for v in 1..n {
+        // ~1 node in 12 stays detached from the tree.
+        if rng.bool_with(1.0 / 12.0) {
+            continue;
+        }
+        let u = rng.below(v) as u32;
+        edges.push((u, v as u32, rng.range_f64(0.1, 100.0)));
+    }
+    let extra = rng.range_usize(0, 3 * n);
+    for _ in 0..extra {
+        let u = rng.below(n) as u32;
+        let v = rng.below(n) as u32;
+        if u != v {
+            edges.push((u.min(v), u.max(v), rng.range_f64(0.1, 100.0)));
+        }
+    }
+    Graph::from_edges(n, edges)
+}
+
+/// Like [`random_sparse_graph`] but with weights quantised to a handful
+/// of integer values — exact weight ties everywhere. This is the regime
+/// the ε-good boundary rule exists for: the engines' NN caches go stale
+/// on tie *ids* (a patch can add an equal-weight edge toward a lower id
+/// without triggering a rescan), and the exact engine still merges along
+/// its cached pointer. Continuous weights never exercise this
+/// (see `crate::approx::good`'s docs).
+pub fn random_tied_graph(rng: &mut Rng) -> Graph {
+    let n = rng.range_usize(2, 120);
+    let mut edges: Vec<(u32, u32, Weight)> = Vec::new();
+    for v in 1..n {
+        if rng.bool_with(1.0 / 12.0) {
+            continue;
+        }
+        let u = rng.below(v) as u32;
+        edges.push((u, v as u32, (1 + rng.below(5)) as Weight));
+    }
+    for _ in 0..rng.range_usize(0, 3 * n) {
+        let u = rng.below(n) as u32;
+        let v = rng.below(n) as u32;
+        if u != v {
+            edges.push((u.min(v), u.max(v), (1 + rng.below(5)) as Weight));
+        }
+    }
+    Graph::from_edges(n, edges)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn property_graphs_are_valid_and_sized() {
+        let mut rng = Rng::seed_from(0x9E0);
+        for _ in 0..20 {
+            let g = random_sparse_graph(&mut rng);
+            g.validate().unwrap();
+            assert!((2..140).contains(&g.n()));
+            let t = random_tied_graph(&mut rng);
+            t.validate().unwrap();
+            // Quantised weights: every edge is one of 1..=5.
+            for u in 0..t.n() as u32 {
+                for (_, w) in t.neighbors(u) {
+                    assert!((1.0..=5.0).contains(&w) && w.fract() == 0.0);
+                }
+            }
+        }
+    }
 
     #[test]
     fn grid1d_is_path() {

@@ -1,6 +1,15 @@
-//! The distributed RAC engine (paper §5): the same three phases as
-//! [`crate::rac::RacEngine`], sharded across simulated machines with
-//! batched cross-shard messaging and first-class network accounting.
+//! The distributed engines (paper §5): the same three phases as the
+//! shared-memory [`crate::engine::RoundDriver`] engines, sharded across
+//! simulated machines with batched cross-shard messaging and first-class
+//! network accounting. Two engines share one round body ([`DistCore`]):
+//!
+//! * [`DistRacEngine`] — exact reciprocal-NN merges (Theorem 1: equal to
+//!   sequential HAC for every topology).
+//! * [`DistApproxEngine`] — TeraHAC-style (1+ε)-good merges
+//!   ([`crate::approx::good`]) over the same sharded state: bitwise
+//!   identical to [`crate::approx::ApproxEngine`] for every
+//!   `(machines, cores, ε)` topology, hence bitwise identical to
+//!   [`DistRacEngine`] at ε = 0.
 //!
 //! ## Shard model
 //!
@@ -14,8 +23,15 @@
 //! has two steps: the fetch/lookup exchange before computing unions, and
 //! the patch push after applying them):
 //!
-//! 1. **Find reciprocal NNs** — NN-pointer queries/replies for clusters
-//!    whose cached nearest neighbor lives on another shard.
+//! 1. **Find merge pairs** — exact: NN-pointer queries/replies for
+//!    clusters whose cached nearest neighbor lives on another shard.
+//!    ε-good: the eligibility scan at edge `(a, b)` runs on the lower
+//!    endpoint's shard and needs `b`'s cached NN edge, so remote NN
+//!    *caches* (weight + pointer) are exchanged instead — only for edges
+//!    that already pass `a`'s purely local half of the test; each shard then
+//!    ships its candidate edges to the matching coordinator (machine 0),
+//!    which broadcasts the selected maximal matching to every shard
+//!    owning active clusters.
 //! 2. **Update dissimilarities** — leaders with a remote partner fetch the
 //!    partner's full neighbor map ([`network::Message::PartnerState`]);
 //!    pair views of remote neighbors are queried; patches to remote
@@ -27,19 +43,23 @@
 //!
 //! This is a single-process *simulation*: the round computation reads the
 //! authoritative global state directly (bit-identical to the shared-memory
-//! engine, so Theorem 1 exactness transfers verbatim and the dendrogram is
-//! independent of the `(machines, cores)` topology), while every
-//! cross-shard batch is encoded through the real wire codec and accounted
-//! at its exact encoded length. Per round this produces `net_messages`
-//! (batched RPCs), `net_bytes` (wire bytes), and `t_sim` — a
-//! critical-path time model (max per-machine work per barrier phase,
-//! divided by cores for cluster-parallel phases, plus latency and
-//! bandwidth terms) corresponding to paper Table 2's resource columns.
-//! With `machines == 1` nothing ever crosses a shard boundary and all
-//! three counters are exactly zero.
+//! engines, so Theorem 1 exactness — and the ε-band quality contract —
+//! transfer verbatim and the dendrogram is independent of the
+//! `(machines, cores)` topology), while every cross-shard batch is encoded
+//! through the real wire codec and accounted at its exact encoded length.
+//! Per round this produces `net_messages` (batched RPCs), `net_bytes`
+//! (wire bytes), and `t_sim` — a critical-path time model (max per-machine
+//! work per barrier phase, divided by cores for cluster-parallel phases,
+//! plus latency and bandwidth terms) corresponding to paper Table 2's
+//! resource columns. With `machines == 1` nothing ever crosses a shard
+//! boundary and all three counters are exactly zero.
 //!
-//! The former `coordinator` module stub was folded into this engine:
-//! [`DistRacEngine::run`] *is* the round orchestrator.
+//! The serial round body here deliberately mirrors the shared-memory
+//! [`crate::engine::RoundDriver`] phase for phase (selection logic is
+//! literally shared via [`crate::approx::good`] and the reciprocal-NN
+//! condition); it stays a separate loop because traffic/load accounting is
+//! woven through every phase. Folding it into the driver is the ROADMAP's
+//! subgraph-batching item.
 
 pub mod network;
 pub mod shard;
@@ -51,6 +71,9 @@ use std::time::{Duration, Instant};
 
 use rustc_hash::FxHashSet;
 
+use crate::approx::good::{self, MergePair};
+use crate::approx::quality::MergeBound;
+use crate::approx::ApproxResult;
 use crate::dendrogram::{Dendrogram, Merge};
 use crate::graph::Graph;
 use crate::linkage::{EdgeState, Linkage, Weight};
@@ -66,7 +89,7 @@ const T_MSG_NS: u128 = 50_000;
 /// Simulated per-byte cost (~1 GB/s effective cross-machine bandwidth).
 const T_BYTE_NS: u128 = 1;
 
-/// Deployment topology for the distributed engine (paper Fig 3's knobs).
+/// Deployment topology for the distributed engines (paper Fig 3's knobs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct DistConfig {
     /// Number of shards / machines (≥ 1).
@@ -95,10 +118,25 @@ impl Default for DistConfig {
 
 type UnionEntry = crate::store::UnionRow;
 
-/// Distributed RAC engine. Exact: for any topology the dendrogram is
-/// bitwise identical to [`crate::rac::RacEngine`]'s and therefore (for
-/// reducible linkages) to sequential HAC — Theorem 1.
-pub struct DistRacEngine {
+/// Phase-1 strategy for the sharded round body — the distributed analogue
+/// of the shared-memory [`crate::engine::PairSelector`] implementations
+/// (serial, with traffic accounting; an enum rather than a trait because
+/// the body is not generic-hot).
+#[derive(Debug, Clone, Copy)]
+enum DistSelector {
+    /// Reciprocal nearest neighbors (exact).
+    Rnn,
+    /// (1+ε)-good merge matching.
+    Good { epsilon: f64 },
+}
+
+/// The state and round body shared by both distributed engines. The
+/// phases, state layout, and per-round ordering are deliberately kept in
+/// lockstep with [`crate::engine::RoundDriver`] — the exactness contract
+/// is *bitwise* equality with the shared-memory engines' dendrograms
+/// (`matches_shared_memory_engine_bitwise`,
+/// `rust/tests/store_equivalence.rs`); change both or neither.
+struct DistCore {
     linkage: Linkage,
     cfg: DistConfig,
     n: usize,
@@ -108,29 +146,24 @@ pub struct DistRacEngine {
     size: Vec<u64>,
     nn: Vec<u32>,
     nn_weight: Vec<Weight>,
-    will_merge: Vec<bool>,
+    /// Selected for a merge this round (cleared per round; see the
+    /// phase-1 invariant in [`crate::engine::RoundState`]).
+    matched: Vec<bool>,
+    /// This round's merge partner (valid only while `matched`).
+    partner: Vec<u32>,
+    /// This round's merge weight (valid only while `matched`).
+    pair_weight: Vec<Weight>,
     /// Flat arena-backed adjacency, shared representation with the
-    /// shared-memory engine ([`crate::store`]).
+    /// shared-memory engines ([`crate::store`]).
     store: NeighborStore,
-    /// Hard cap on rounds (safety valve, as in the shared-memory engine).
+    /// Hard cap on rounds (safety valve, as in the shared-memory engines).
     max_rounds: usize,
 }
 
-impl DistRacEngine {
-    /// Build an engine over a dissimilarity graph.
-    ///
-    /// # Panics
-    /// If the linkage is not reducible (Theorem 1 does not apply), or if a
-    /// complete-graph-only linkage is given a sparse graph — the same
-    /// guards as the shared-memory engine.
-    ///
-    /// NOTE: the guards, state initialisation, and the per-phase loop
-    /// bodies below are deliberately kept in lockstep with
-    /// [`crate::rac::RacEngine`] — the exactness contract is *bitwise*
-    /// equality of the two engines' dendrograms (see the
-    /// `matches_shared_memory_engine_bitwise` test); change both or
-    /// neither.
-    pub fn new(g: &Graph, linkage: Linkage, cfg: DistConfig) -> DistRacEngine {
+impl DistCore {
+    /// Shared guards + state init (same checks as
+    /// [`crate::rac::RacEngine::new`]).
+    fn new(g: &Graph, linkage: Linkage, cfg: DistConfig) -> DistCore {
         assert!(
             linkage.is_reducible(),
             "RAC is exact only for reducible linkages (Theorem 1)"
@@ -143,7 +176,7 @@ impl DistRacEngine {
             );
         }
         let n = g.n();
-        DistRacEngine {
+        DistCore {
             linkage,
             cfg,
             n,
@@ -152,7 +185,9 @@ impl DistRacEngine {
             size: vec![1; n],
             nn: vec![NO_NN; n],
             nn_weight: vec![Weight::INFINITY; n],
-            will_merge: vec![false; n],
+            matched: vec![false; n],
+            partner: vec![NO_NN; n],
+            pair_weight: vec![0.0; n],
             // Rows pre-sized exactly from the CSR degrees — one arena
             // allocation, no per-insert growth.
             store: NeighborStore::from_graph(g),
@@ -160,26 +195,14 @@ impl DistRacEngine {
         }
     }
 
-    /// Override the round safety cap.
-    pub fn with_max_rounds(mut self, max_rounds: usize) -> DistRacEngine {
-        self.max_rounds = max_rounds;
-        self
-    }
-
-    /// Run to completion; returns the dendrogram and per-round metrics
-    /// (including the simulated network columns).
-    pub fn run(self) -> RacResult {
-        self.run_detailed().0
-    }
-
-    /// Like [`run`](Self::run), but also returns the full cross-shard
-    /// traffic log for accounting-invariant tests and topology studies.
-    pub fn run_detailed(mut self) -> (RacResult, NetReport) {
+    /// Run the sharded round loop to completion.
+    fn run_rounds(mut self, selector: DistSelector) -> (RacResult, NetReport, Vec<MergeBound>) {
         let t0 = Instant::now();
         let m = self.cfg.machines;
         let cores = self.cfg.cores_per_machine as u64;
         let mut net = Network::new(m);
         let mut merges: Vec<Merge> = Vec::with_capacity(self.n.saturating_sub(1));
+        let mut bounds: Vec<MergeBound> = Vec::with_capacity(self.n.saturating_sub(1));
         let mut metrics = RunMetrics::default();
 
         // Initial NN cache (local per shard: every shard scans only the
@@ -199,30 +222,18 @@ impl DistRacEngine {
             };
             let mut load = vec![ShardLoad::default(); m];
 
-            // ---- Phase 1: find reciprocal nearest neighbors -------------
+            // ---- Phase 1: select this round's merge pairs ---------------
             let t = Instant::now();
-            self.exchange_nn_pointers(&mut net, &mut load);
-            let flags: Vec<bool> = self
-                .active_ids
-                .iter()
-                .map(|&c| {
-                    let c = c as usize;
-                    self.nn[c] != NO_NN && self.nn[self.nn[c] as usize] == c as u32
-                })
-                .collect();
-            for (&c, flag) in self.active_ids.iter().zip(flags) {
-                self.will_merge[c as usize] = flag;
-            }
-            let leaders: Vec<u32> = self
-                .active_ids
-                .iter()
-                .copied()
-                .filter(|&c| self.will_merge[c as usize] && c < self.nn[c as usize])
-                .collect();
+            let pairs = match selector {
+                DistSelector::Rnn => self.select_reciprocal(&mut net, &mut load),
+                DistSelector::Good { epsilon } => {
+                    self.select_good(epsilon, &mut net, &mut load, &mut rm)
+                }
+            };
             rm.t_find = t.elapsed();
-            rm.merges = leaders.len();
+            rm.merges = pairs.len();
 
-            if leaders.is_empty() {
+            if pairs.is_empty() {
                 finish_round(&mut rm, &mut net, &load, cores);
                 metrics.rounds.push(rm);
                 break;
@@ -230,13 +241,17 @@ impl DistRacEngine {
 
             // ---- Phase 2: update cluster dissimilarities ----------------
             let t = Instant::now();
-            let unions = self.compute_unions(&leaders, &mut net, &mut load);
-            for &l in &leaders {
-                let p = self.nn[l as usize];
+            let unions = self.compute_unions(&pairs, &mut net, &mut load);
+            for p in &pairs {
                 merges.push(Merge {
-                    a: l,
-                    b: p,
-                    weight: self.nn_weight[l as usize],
+                    a: p.leader,
+                    b: p.partner,
+                    weight: p.weight,
+                });
+                bounds.push(MergeBound {
+                    weight: p.weight,
+                    visible_min: self.nn_weight[p.leader as usize]
+                        .min(self.nn_weight[p.partner as usize]),
                 });
             }
             self.apply_unions(unions, &mut net);
@@ -251,8 +266,8 @@ impl DistRacEngine {
                 .iter()
                 .filter_map(|&c| {
                     let c = c as usize;
-                    let needs_rescan = self.will_merge[c]
-                        || (self.nn[c] != NO_NN && self.will_merge[self.nn[c] as usize]);
+                    let needs_rescan = self.matched[c]
+                        || (self.nn[c] != NO_NN && self.matched[self.nn[c] as usize]);
                     needs_rescan.then(|| {
                         let row = self.store.row(c as u32);
                         let (nn, w) = scan_nn(row);
@@ -266,6 +281,12 @@ impl DistRacEngine {
                 self.nn_weight[c as usize] = w;
                 rm.nn_scan_entries += scanned;
                 load[shard_of(c, m)].nn_scan_work += scanned as u64;
+            }
+            // Clear this round's selection (phase-1 invariant; retired
+            // partners' stale flags are unreachable).
+            for p in &pairs {
+                self.matched[p.leader as usize] = false;
+                self.matched[p.partner as usize] = false;
             }
             rm.t_update_nn = t.elapsed();
 
@@ -284,13 +305,112 @@ impl DistRacEngine {
                 metrics,
             },
             net.into_report(),
+            bounds,
         )
     }
 
-    /// Phase-1 traffic: every shard must evaluate `nn(nn(c)) == c` for its
-    /// clusters, which needs the NN pointer of each *remote* `nn(c)`.
-    /// Queries are deduplicated per (asking shard, target cluster) and
-    /// batched per machine pair, replies likewise.
+    /// Exact phase 1: exchange remote NN pointers, then select the
+    /// reciprocal pairs (`nn(nn(c)) == c`) in ascending-id order.
+    fn select_reciprocal(&mut self, net: &mut Network, load: &mut [ShardLoad]) -> Vec<MergePair> {
+        self.exchange_nn_pointers(net, load);
+        let mut pairs = Vec::new();
+        for &c in &self.active_ids {
+            let ci = c as usize;
+            if self.nn[ci] != NO_NN && self.nn[self.nn[ci] as usize] == c {
+                self.matched[ci] = true;
+                self.partner[ci] = self.nn[ci];
+                self.pair_weight[ci] = self.nn_weight[ci];
+                if c < self.nn[ci] {
+                    pairs.push(MergePair {
+                        leader: c,
+                        partner: self.nn[ci],
+                        weight: self.nn_weight[ci],
+                    });
+                }
+            }
+        }
+        pairs
+    }
+
+    /// ε-good phase 1 over the sharded state: exchange remote NN caches,
+    /// scan owned rows for edges both endpoints accept
+    /// ([`good::accepts`]), gather candidates at the matching coordinator
+    /// (machine 0), select the maximal conflict-free matching
+    /// ([`good::select_matching`] — the same deterministic function the
+    /// shared-memory [`crate::engine::GoodSelector`] runs, so the selected
+    /// pairs are identical), and broadcast it back.
+    fn select_good(
+        &mut self,
+        epsilon: f64,
+        net: &mut Network,
+        load: &mut [ShardLoad],
+        rm: &mut RoundMetrics,
+    ) -> Vec<MergePair> {
+        let m = net.machines();
+        self.exchange_nn_caches(epsilon, net, load);
+
+        // Local scans, in ascending id order, through the single shared
+        // eligibility test ([`good::scan_row_candidates`] — the same
+        // function the shared-memory selector runs, so the candidate set
+        // is identical).
+        let mut candidates: Vec<good::Candidate> = Vec::new();
+        for &a in &self.active_ids {
+            let (row_cands, scanned) = good::scan_row_candidates(
+                self.store.row(a),
+                a,
+                epsilon,
+                &self.nn_weight,
+                &self.nn,
+            );
+            rm.eligibility_scan_entries += scanned;
+            candidates.extend(row_cands.into_iter().map(|(w, b)| (w, a, b)));
+        }
+
+        // Ship each shard's candidates to the coordinator...
+        if m > 1 {
+            let mut per_shard: Vec<Vec<(Weight, u32, u32)>> = vec![Vec::new(); m];
+            for &(w, a, b) in &candidates {
+                per_shard[shard_of(a, m)].push((w, a, b));
+            }
+            for (s, edges) in per_shard.into_iter().enumerate() {
+                if s != 0 && !edges.is_empty() {
+                    net.send(s, 0, &[Message::CandidateBatch { edges }]);
+                }
+            }
+        }
+        // ...who pays the matching cost...
+        load[0].find_work += candidates.len() as u64;
+        let pairs = good::select_matching(candidates, &mut self.matched);
+        for p in &pairs {
+            self.partner[p.leader as usize] = p.partner;
+            self.partner[p.partner as usize] = p.leader;
+            self.pair_weight[p.leader as usize] = p.weight;
+            self.pair_weight[p.partner as usize] = p.weight;
+        }
+        // ...and broadcasts the selection to every shard that owns live
+        // clusters (idle shards have nothing to merge or patch).
+        if m > 1 && !pairs.is_empty() {
+            let sel: Vec<(u32, u32, Weight)> = pairs
+                .iter()
+                .map(|p| (p.leader, p.partner, p.weight))
+                .collect();
+            let mut has_active = vec![false; m];
+            for &c in &self.active_ids {
+                has_active[shard_of(c, m)] = true;
+            }
+            for (s, owns) in has_active.iter().enumerate() {
+                if s != 0 && *owns {
+                    net.send(0, s, &[Message::MatchingBroadcast { pairs: sel.clone() }]);
+                }
+            }
+        }
+        pairs
+    }
+
+    /// Exact phase-1 traffic: every shard must evaluate `nn(nn(c)) == c`
+    /// for its clusters, which needs the NN pointer of each *remote*
+    /// `nn(c)`. Queries are deduplicated per (asking shard, target
+    /// cluster) and batched per machine pair, replies likewise.
     fn exchange_nn_pointers(&self, net: &mut Network, load: &mut [ShardLoad]) {
         let m = net.machines();
         for &c in &self.active_ids {
@@ -336,23 +456,88 @@ impl DistRacEngine {
         }
     }
 
+    /// ε-good phase-1 traffic: the eligibility test at edge `(a, b)` runs
+    /// on `a`'s shard (a < b) and needs `b`'s cached NN *edge* — weight
+    /// and pointer, not just the pointer — so remote caches are queried
+    /// per (asking shard, target), deduplicated and batched per machine
+    /// pair. `a`'s half of the test ([`good::accepts`] against `a`'s own
+    /// cache) is purely local, so a query is staged only for edges that
+    /// pass it — a real protocol never ships the rest, and filtering here
+    /// changes no selection result (the scan reads the authoritative
+    /// state directly), only tightens the traffic model. Scan work is
+    /// charged to the scanning shard.
+    fn exchange_nn_caches(&self, epsilon: f64, net: &mut Network, load: &mut [ShardLoad]) {
+        let m = net.machines();
+        for &a in &self.active_ids {
+            load[shard_of(a, m)].find_work += self.store.row(a).live_len() as u64;
+        }
+        if m == 1 {
+            return;
+        }
+        let mut queries: Vec<Vec<Message>> = vec![Vec::new(); m * m];
+        let mut seen: FxHashSet<(usize, u32)> = FxHashSet::default();
+        for &a in &self.active_ids {
+            let sa = shard_of(a, m);
+            for (b, e) in self.store.row(a).iter() {
+                if b > a
+                    && good::accepts(
+                        e.weight,
+                        b,
+                        epsilon,
+                        self.nn_weight[a as usize],
+                        self.nn[a as usize],
+                    )
+                {
+                    let sb = shard_of(b, m);
+                    if sb != sa && seen.insert((sa, b)) {
+                        queries[sa * m + sb].push(Message::NnCacheQuery { cluster: b });
+                    }
+                }
+            }
+        }
+        for src in 0..m {
+            for dst in 0..m {
+                if src == dst {
+                    continue;
+                }
+                let batch = std::mem::take(&mut queries[src * m + dst]);
+                if batch.is_empty() {
+                    continue;
+                }
+                let replies: Vec<Message> = batch
+                    .iter()
+                    .map(|q| match q {
+                        Message::NnCacheQuery { cluster } => Message::NnCacheReply {
+                            cluster: *cluster,
+                            nn: self.nn[*cluster as usize],
+                            weight: self.nn_weight[*cluster as usize],
+                        },
+                        _ => unreachable!("cache batches hold only NN-cache queries"),
+                    })
+                    .collect();
+                net.send(src, dst, &batch);
+                net.send(dst, src, &replies);
+            }
+        }
+    }
+
     /// Phase-2 compute: every leader builds the union map of `L ∪ P`
-    /// exactly as the shared-memory engine does (same fold, same order),
+    /// exactly as the shared-memory driver does (same fold, same order),
     /// while the traffic a real deployment would need — partner-state
     /// fetches, remote pair-view lookups — is staged and delivered as
     /// per-pair batches.
     fn compute_unions(
         &self,
-        leaders: &[u32],
+        pairs: &[MergePair],
         net: &mut Network,
         load: &mut [ShardLoad],
     ) -> Vec<UnionEntry> {
         let m = net.machines();
         let mut stage: Vec<Vec<Message>> = vec![Vec::new(); m * m];
         let mut viewed: FxHashSet<(usize, u32)> = FxHashSet::default();
-        let mut out = Vec::with_capacity(leaders.len());
-        for &l in leaders {
-            let p = self.nn[l as usize];
+        let mut out = Vec::with_capacity(pairs.len());
+        for pr in pairs {
+            let (l, p) = (pr.leader, pr.partner);
             let (sl, sp) = (shard_of(l, m), shard_of(p, m));
             load[sl].merge_work +=
                 (self.store.row(l).live_len() + self.store.row(p).live_len()) as u64;
@@ -377,8 +562,8 @@ impl DistRacEngine {
                     continue;
                 }
                 self.stage_view(x, sl, m, &mut viewed, &mut stage);
-                if self.will_merge[x as usize] {
-                    self.stage_view(self.nn[x as usize], sl, m, &mut viewed, &mut stage);
+                if self.matched[x as usize] {
+                    self.stage_view(self.partner[x as usize], sl, m, &mut viewed, &mut stage);
                 }
             }
             out.push((l, self.union_map(l, p)));
@@ -410,25 +595,25 @@ impl DistRacEngine {
         stage[sl * m + sx].push(Message::PairViewQuery { cluster: x });
         stage[sx * m + sl].push(Message::PairViewReply {
             cluster: x,
-            merging: self.will_merge[x as usize],
-            partner: self.nn[x as usize],
+            merging: self.matched[x as usize],
+            partner: self.partner[x as usize],
             size: self.size[x as usize],
-            pair_weight: self.nn_weight[x as usize],
+            pair_weight: self.pair_weight[x as usize],
         });
     }
 
     /// Phase-2 apply, in ascending leader order (identical to the
-    /// shared-memory engine): install unions, retire partners, patch
+    /// shared-memory driver): install unions, retire partners, patch
     /// non-merging neighbors — shipping each patch whose target lives on
     /// another shard.
     fn apply_unions(&mut self, unions: Vec<UnionEntry>, net: &mut Network) {
         let m = net.machines();
         let mut patches: Vec<Vec<Message>> = vec![Vec::new(); m * m];
         for (l, map) in unions {
-            let p = self.nn[l as usize];
+            let p = self.partner[l as usize];
             let sl = shard_of(l, m);
             for &(t_id, e) in &map {
-                if !self.will_merge[t_id as usize] {
+                if !self.matched[t_id as usize] {
                     self.store.patch(t_id, l, p, e);
                     let st = shard_of(t_id, m);
                     if st != sl {
@@ -447,8 +632,8 @@ impl DistRacEngine {
             self.store.clear_row(p);
             self.active[p as usize] = false;
         }
-        // Same per-round compaction point as the shared-memory engine, so
-        // the two stores' live/dead trajectories stay in lockstep.
+        // Same per-round compaction point as the shared-memory engines, so
+        // the stores' live/dead trajectories stay in lockstep.
         self.store.maybe_compact();
         for src in 0..m {
             for dst in 0..m {
@@ -461,24 +646,120 @@ impl DistRacEngine {
 
     /// Neighbor map of the union `L ∪ P` — delegates to the engine-shared
     /// [`compute_union_map`] with the same arguments as the shared-memory
-    /// engine, so the arithmetic (and its floating-point rounding) is
+    /// driver, so the arithmetic (and its floating-point rounding) is
     /// bitwise identical.
     fn union_map(&self, l: u32, p: u32) -> Vec<(u32, EdgeState)> {
         compute_union_map(
             self.linkage,
             l,
             p,
-            self.nn_weight[l as usize],
+            self.pair_weight[l as usize],
             self.size[l as usize],
             self.size[p as usize],
             self.store.row(l),
             self.store.row(p),
             |x| PairView {
-                merging: self.will_merge[x as usize],
-                partner: self.nn[x as usize],
+                merging: self.matched[x as usize],
+                partner: self.partner[x as usize],
                 size: self.size[x as usize],
-                pair_weight: self.nn_weight[x as usize],
+                pair_weight: self.pair_weight[x as usize],
             },
+        )
+    }
+}
+
+/// Distributed RAC engine. Exact: for any topology the dendrogram is
+/// bitwise identical to [`crate::rac::RacEngine`]'s and therefore (for
+/// reducible linkages) to sequential HAC — Theorem 1.
+pub struct DistRacEngine {
+    core: DistCore,
+}
+
+impl DistRacEngine {
+    /// Build an engine over a dissimilarity graph.
+    ///
+    /// # Panics
+    /// If the linkage is not reducible (Theorem 1 does not apply), or if a
+    /// complete-graph-only linkage is given a sparse graph — the same
+    /// guards as the shared-memory engine.
+    pub fn new(g: &Graph, linkage: Linkage, cfg: DistConfig) -> DistRacEngine {
+        DistRacEngine {
+            core: DistCore::new(g, linkage, cfg),
+        }
+    }
+
+    /// Override the round safety cap.
+    pub fn with_max_rounds(mut self, max_rounds: usize) -> DistRacEngine {
+        self.core.max_rounds = max_rounds;
+        self
+    }
+
+    /// Run to completion; returns the dendrogram and per-round metrics
+    /// (including the simulated network columns).
+    pub fn run(self) -> RacResult {
+        self.run_detailed().0
+    }
+
+    /// Like [`run`](Self::run), but also returns the full cross-shard
+    /// traffic log for accounting-invariant tests and topology studies.
+    pub fn run_detailed(self) -> (RacResult, NetReport) {
+        let (result, report, _bounds) = self.core.run_rounds(DistSelector::Rnn);
+        (result, report)
+    }
+}
+
+/// Distributed (1+ε)-approximate engine (`dist_approx`): ε-good merges
+/// ([`crate::approx::good`]) over the sharded state. For every
+/// `(machines, cores)` topology the dendrogram is bitwise identical to
+/// [`crate::approx::ApproxEngine`] at the same ε — so at ε = 0 it is
+/// bitwise identical to [`DistRacEngine`] and (Theorem 1) sequential HAC.
+pub struct DistApproxEngine {
+    core: DistCore,
+    epsilon: f64,
+}
+
+impl DistApproxEngine {
+    /// Build an engine over a dissimilarity graph.
+    ///
+    /// # Panics
+    /// The same guards as [`crate::approx::ApproxEngine::new`]: `epsilon`
+    /// must be finite and `>= 0`, the linkage reducible, and
+    /// complete-graph-only linkages need a complete graph.
+    pub fn new(g: &Graph, linkage: Linkage, cfg: DistConfig, epsilon: f64) -> DistApproxEngine {
+        assert!(
+            epsilon >= 0.0 && epsilon.is_finite(),
+            "epsilon must be finite and >= 0, got {epsilon}"
+        );
+        DistApproxEngine {
+            core: DistCore::new(g, linkage, cfg),
+            epsilon,
+        }
+    }
+
+    /// Override the round safety cap.
+    pub fn with_max_rounds(mut self, max_rounds: usize) -> DistApproxEngine {
+        self.core.max_rounds = max_rounds;
+        self
+    }
+
+    /// Run to completion; returns the dendrogram, metrics (including the
+    /// simulated network columns), and the per-merge quality trace.
+    pub fn run(self) -> ApproxResult {
+        self.run_detailed().0
+    }
+
+    /// Like [`run`](Self::run), but also returns the full cross-shard
+    /// traffic log.
+    pub fn run_detailed(self) -> (ApproxResult, NetReport) {
+        let epsilon = self.epsilon;
+        let (result, report, bounds) = self.core.run_rounds(DistSelector::Good { epsilon });
+        (
+            ApproxResult {
+                dendrogram: result.dendrogram,
+                metrics: result.metrics,
+                bounds,
+            },
+            report,
         )
     }
 }
@@ -503,6 +784,7 @@ fn finish_round(rm: &mut RoundMetrics, net: &mut Network, load: &[ShardLoad], co
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::approx::{quality, ApproxEngine};
     use crate::data;
     use crate::hac::naive_hac;
 
@@ -612,5 +894,89 @@ mod tests {
             fast.metrics.total_sim_time() < slow.metrics.total_sim_time(),
             "more cores per machine must shorten the simulated critical path"
         );
+    }
+
+    // ------------------------------------------------------------------
+    // dist_approx
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn dist_approx_matches_shared_memory_approx_bitwise() {
+        let g = data::grid1d_graph(200, 17);
+        for eps in [0.0, 0.1, 1.0] {
+            let shared = ApproxEngine::new(&g, Linkage::Average, eps).run();
+            let dist =
+                DistApproxEngine::new(&g, Linkage::Average, DistConfig::new(5, 3), eps).run();
+            assert_eq!(
+                shared.dendrogram.bitwise_merges(),
+                dist.dendrogram.bitwise_merges(),
+                "eps={eps}"
+            );
+            // The quality trace rides along unchanged.
+            assert_eq!(dist.bounds.len(), dist.dendrogram.merges().len());
+            assert!(quality::merge_quality_ratio(&dist.bounds) <= 1.0 + eps + 1e-12);
+        }
+    }
+
+    #[test]
+    fn dist_approx_zero_epsilon_degenerates_to_dist_rac() {
+        let g = data::grid1d_graph(150, 5);
+        for l in Linkage::SPARSE_REDUCIBLE {
+            let exact = DistRacEngine::new(&g, l, DistConfig::new(4, 2)).run();
+            let approx = DistApproxEngine::new(&g, l, DistConfig::new(4, 2), 0.0).run();
+            assert_eq!(
+                exact.dendrogram.bitwise_merges(),
+                approx.dendrogram.bitwise_merges(),
+                "{l:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn dist_approx_single_machine_is_silent() {
+        let g = data::grid1d_graph(64, 7);
+        let (r, report) =
+            DistApproxEngine::new(&g, Linkage::Average, DistConfig::new(1, 4), 0.5).run_detailed();
+        assert_eq!(r.dendrogram.merges().len(), 63);
+        assert_eq!(r.metrics.total_net_messages(), 0);
+        assert_eq!(r.metrics.total_net_bytes(), 0);
+        assert!(report.batches.is_empty());
+    }
+
+    #[test]
+    fn dist_approx_traffic_is_cross_shard_and_accounted() {
+        let g = data::grid1d_graph(80, 3);
+        let (r, report) =
+            DistApproxEngine::new(&g, Linkage::Average, DistConfig::new(3, 2), 0.3).run_detailed();
+        assert!(r.metrics.total_net_messages() > 0, "caches must be exchanged");
+        for b in &report.batches {
+            assert_ne!(b.src, b.dst);
+            assert!(b.bytes >= b.messages);
+        }
+        assert_eq!(r.metrics.total_net_messages(), report.total_batches());
+        assert_eq!(r.metrics.total_net_bytes(), report.total_bytes());
+        // The ε sweep reads whole rows: the scan accounting must show it.
+        assert!(r.metrics.rounds[0].eligibility_scan_entries > 0);
+    }
+
+    #[test]
+    fn dist_approx_more_machines_than_clusters() {
+        let g = data::grid1d_graph(5, 1);
+        let r = DistApproxEngine::new(&g, Linkage::Single, DistConfig::new(16, 4), 0.5).run();
+        assert_eq!(r.dendrogram.merges().len(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "epsilon")]
+    fn dist_approx_rejects_negative_epsilon() {
+        let g = data::grid1d_graph(4, 0);
+        DistApproxEngine::new(&g, Linkage::Average, DistConfig::default(), -0.1);
+    }
+
+    #[test]
+    #[should_panic(expected = "reducible")]
+    fn dist_approx_rejects_centroid() {
+        let g = data::stable_hierarchy(2, 4.0, 0);
+        DistApproxEngine::new(&g, Linkage::Centroid, DistConfig::default(), 0.1);
     }
 }

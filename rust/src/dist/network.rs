@@ -51,6 +51,22 @@ pub enum Message {
         weight: Weight,
         count: u64,
     },
+    /// Approx find phase: ask `cluster`'s owner for its cached NN *edge*
+    /// (the ε-good test needs the weight as well as the pointer).
+    NnCacheQuery { cluster: u32 },
+    /// Approx find phase: the owner's answer.
+    NnCacheReply {
+        cluster: u32,
+        nn: u32,
+        weight: Weight,
+    },
+    /// Approx find phase: a shard ships its locally-discovered ε-good
+    /// candidate edges `(weight, a, b)` to the matching coordinator.
+    CandidateBatch { edges: Vec<(Weight, u32, u32)> },
+    /// Approx find phase: the coordinator broadcasts the selected maximal
+    /// matching `(leader, partner, weight)` to the shards that own active
+    /// clusters.
+    MatchingBroadcast { pairs: Vec<(u32, u32, Weight)> },
 }
 
 fn put_u32(buf: &mut Vec<u8>, v: u32) {
@@ -164,6 +180,38 @@ fn encode_message(msg: &Message, buf: &mut Vec<u8>) {
             put_f64(buf, *weight);
             put_u64(buf, *count);
         }
+        Message::NnCacheQuery { cluster } => {
+            buf.push(7);
+            put_u32(buf, *cluster);
+        }
+        Message::NnCacheReply {
+            cluster,
+            nn,
+            weight,
+        } => {
+            buf.push(8);
+            put_u32(buf, *cluster);
+            put_u32(buf, *nn);
+            put_f64(buf, *weight);
+        }
+        Message::CandidateBatch { edges } => {
+            buf.push(9);
+            put_u32(buf, edges.len() as u32);
+            for &(w, a, b) in edges {
+                put_f64(buf, w);
+                put_u32(buf, a);
+                put_u32(buf, b);
+            }
+        }
+        Message::MatchingBroadcast { pairs } => {
+            buf.push(10);
+            put_u32(buf, pairs.len() as u32);
+            for &(a, b, w) in pairs {
+                put_u32(buf, a);
+                put_u32(buf, b);
+                put_f64(buf, w);
+            }
+        }
     }
 }
 
@@ -205,6 +253,28 @@ fn decode_message(r: &mut Reader<'_>) -> Result<Message, String> {
             weight: r.f64()?,
             count: r.u64()?,
         },
+        7 => Message::NnCacheQuery { cluster: r.u32()? },
+        8 => Message::NnCacheReply {
+            cluster: r.u32()?,
+            nn: r.u32()?,
+            weight: r.f64()?,
+        },
+        9 => {
+            let len = r.u32()? as usize;
+            let mut edges = Vec::with_capacity(len.min(1 << 20));
+            for _ in 0..len {
+                edges.push((r.f64()?, r.u32()?, r.u32()?));
+            }
+            Message::CandidateBatch { edges }
+        }
+        10 => {
+            let len = r.u32()? as usize;
+            let mut pairs = Vec::with_capacity(len.min(1 << 20));
+            for _ in 0..len {
+                pairs.push((r.u32()?, r.u32()?, r.f64()?));
+            }
+            Message::MatchingBroadcast { pairs }
+        }
         other => return Err(format!("unknown message tag {other}")),
     })
 }
@@ -364,7 +434,28 @@ mod tests {
                 weight: 3.5,
                 count: 8,
             },
+            Message::NnCacheQuery { cluster: 31 },
+            Message::NnCacheReply {
+                cluster: 31,
+                nn: 4,
+                weight: 0.75,
+            },
+            Message::CandidateBatch {
+                edges: vec![(1.5, 0, 9), (2.25, 3, 4)],
+            },
+            Message::MatchingBroadcast {
+                pairs: vec![(0, 9, 1.5)],
+            },
         ]
+    }
+
+    #[test]
+    fn empty_payload_vectors_round_trip() {
+        let msgs = vec![
+            Message::CandidateBatch { edges: vec![] },
+            Message::MatchingBroadcast { pairs: vec![] },
+        ];
+        assert_eq!(decode_batch(&encode_batch(&msgs)).unwrap(), msgs);
     }
 
     #[test]

@@ -1,0 +1,613 @@
+//! `engine` — the shared bulk-synchronous round driver behind every
+//! shared-memory engine in the crate.
+//!
+//! Before this module existed, [`crate::rac::RacEngine`],
+//! [`crate::rac::baseline::HashRacEngine`] and
+//! [`crate::approx::ApproxEngine`] each carried a private copy of the same
+//! loop: initial NN scan, phase-1 pair selection, phase-2 union
+//! compute + apply, phase-3 rescan, round metrics, termination. The copies
+//! differed along exactly two axes, so those are the two parameters here:
+//!
+//! * **Store** ([`EngineStore`]) — where cluster adjacency lives and how a
+//!   merge round is applied to it. Two implementations: the flat
+//!   arena-backed [`NeighborStore`] (lock-free owner-sharded parallel
+//!   apply + compaction) and the hashmap [`crate::rac::baseline::HashStore`]
+//!   (the PR-1 representation, serial apply — kept as the differential
+//!   oracle and perf baseline).
+//! * **Selector** ([`PairSelector`]) — how phase 1 picks this round's
+//!   merge pairs. Two implementations: [`RnnSelector`] (exact reciprocal
+//!   nearest neighbors — the paper's Algorithm 2 condition, `O(active)`
+//!   pointer checks) and [`GoodSelector`] (TeraHAC-style (1+ε)-good merge
+//!   matching from [`crate::approx::good`], `O(edges)` row scans).
+//!
+//! The three engines are the three useful points of that 2×2 grid:
+//! `RacEngine` = flat × RNN, `HashRacEngine` = hashmap × RNN,
+//! `ApproxEngine` = flat × good. The ε = 0 bitwise anchor
+//! (`Approx(0) == Rac`, `rust/tests/approx_quality.rs`) is therefore a
+//! property of two *selectors* over literally shared phase-2/3 code, not of
+//! two mirrored loops that must be edited in lockstep.
+//!
+//! ## Determinism contract
+//!
+//! The driver inherits and centralises the engines' bitwise-reproducibility
+//! requirements: selectors return pairs in ascending-leader order, union
+//! maps are computed read-only in pair order, the store applies each row's
+//! patches in ascending union order for every thread count, and phase-3
+//! rescans go through the shared [`crate::rac::logic::scan_nn`]
+//! `(weight, id)` total order. Dendrograms are identical bit for bit
+//! across stores, selectors-at-ε=0, and thread counts
+//! (`rust/tests/store_equivalence.rs`).
+//!
+//! ## Dispatch
+//!
+//! Both parameters are generics, never trait objects: each engine
+//! monomorphises its own copy of [`RoundDriver::run`], so the refactor adds
+//! zero indirect calls to the inner loop. `BENCH_hot_paths.json` entries
+//! are tagged with [`DRIVER_REV`] so the perf trajectory can pin this
+//! (flat-store medians must not regress against pre-driver datapoints).
+//!
+//! The distributed engines ([`crate::dist`]) run the same three phases
+//! serially with batched cross-shard traffic accounting woven through each
+//! phase; they share the phase-1 *selection logic* with this driver (both
+//! of `dist`'s engines reuse [`crate::approx::good`] / the reciprocal-NN
+//! condition) but keep their own accounting loop — see `dist`'s docs.
+
+use std::time::Instant;
+
+use crate::dendrogram::{Dendrogram, Merge};
+use crate::linkage::{EdgeState, Linkage, Weight};
+use crate::metrics::{RoundMetrics, RunMetrics};
+use crate::rac::logic::{compute_union_map, scan_nn, PairView};
+use crate::rac::NO_NN;
+use crate::store::{NeighborStore, NeighborsRef, RowRef, UnionRow};
+use crate::util::parallel::default_threads;
+use crate::util::pool::Pool;
+
+use crate::approx::good;
+use crate::approx::quality::MergeBound;
+
+pub use crate::approx::good::MergePair;
+
+/// Revision tag of the driver core, stamped into bench reports so the
+/// perf trajectory can attribute datapoints to engine-core rewires.
+pub const DRIVER_REV: &str = "round_driver/v1";
+
+/// Cluster-adjacency backend the driver runs over.
+///
+/// Implementations must mirror each other observationally: `row` exposes
+/// the same live edge set, and `apply_round` must be equivalent to the
+/// serial patch → install → clear sequence per union in ascending union
+/// order (plus any store-internal housekeeping such as compaction). That
+/// equivalence is what `rust/tests/store_equivalence.rs` pins.
+pub trait EngineStore: Sync {
+    /// Read-only view of one cluster's adjacency row.
+    type Row<'a>: NeighborsRef
+    where
+        Self: 'a;
+
+    /// The row of cluster `c`.
+    fn row(&self, c: u32) -> Self::Row<'_>;
+
+    /// Apply one merge round: for each `(leader, union_map)` in `unions`
+    /// (ascending-leader order), patch every target `t` with
+    /// `patch_target(t)` true, install the union row under the leader, and
+    /// retire `partner_of(leader)`'s row.
+    fn apply_round(
+        &mut self,
+        pool: &Pool,
+        unions: &[UnionRow],
+        partner_of: impl Fn(u32) -> u32 + Sync,
+        patch_target: impl Fn(u32) -> bool + Sync,
+    );
+}
+
+impl EngineStore for NeighborStore {
+    type Row<'a>
+        = RowRef<'a>
+    where
+        Self: 'a;
+
+    #[inline]
+    fn row(&self, c: u32) -> RowRef<'_> {
+        NeighborStore::row(self, c)
+    }
+
+    fn apply_round(
+        &mut self,
+        pool: &Pool,
+        unions: &[UnionRow],
+        partner_of: impl Fn(u32) -> u32 + Sync,
+        patch_target: impl Fn(u32) -> bool + Sync,
+    ) {
+        self.par_apply_round(pool, unions, partner_of, patch_target);
+        // Same per-round compaction point as the pre-driver engines; the
+        // trigger reads only live/dead counts, so layouts stay bit-for-bit
+        // reproducible across thread counts (store module docs).
+        self.maybe_compact();
+    }
+}
+
+/// The per-cluster state every engine keeps between rounds. Selectors read
+/// the NN caches and fill the selection arrays; the driver owns everything
+/// else.
+pub struct RoundState {
+    pub n: usize,
+    /// `active[c]`: cluster `c` has not been retired by a merge.
+    pub active: Vec<bool>,
+    /// Live cluster ids, ascending; compacted once per round so per-round
+    /// phases cost `O(active)`, not `O(n)`.
+    pub active_ids: Vec<u32>,
+    pub size: Vec<u64>,
+    /// Cached nearest-neighbor id (the weight is always the true row
+    /// minimum; the id may be a stale tie — see [`crate::approx::good`]).
+    pub nn: Vec<u32>,
+    pub nn_weight: Vec<Weight>,
+    /// Selected for a merge this round. Invariant at phase-1 entry: false
+    /// for every live cluster (the driver clears pair endpoints at the end
+    /// of each round; stale `true` on long-retired clusters is never read).
+    pub matched: Vec<bool>,
+    /// This round's merge partner (valid only while `matched`).
+    pub partner: Vec<u32>,
+    /// This round's merge weight (valid only while `matched`).
+    pub pair_weight: Vec<Weight>,
+}
+
+impl RoundState {
+    pub fn new(n: usize) -> RoundState {
+        RoundState {
+            n,
+            active: vec![true; n],
+            active_ids: (0..n as u32).collect(),
+            size: vec![1; n],
+            nn: vec![NO_NN; n],
+            nn_weight: vec![Weight::INFINITY; n],
+            matched: vec![false; n],
+            partner: vec![NO_NN; n],
+            pair_weight: vec![0.0; n],
+        }
+    }
+}
+
+/// Phase-1 strategy: pick this round's merge pairs.
+///
+/// Contract: returns pairs in **ascending-leader order** with
+/// `leader < partner`, pairwise disjoint; for every returned pair, sets
+/// `matched`/`partner`/`pair_weight` on **both** endpoints. Must not touch
+/// any other driver state. Selection must be a pure function of the
+/// visible state (no thread-count or visit-order dependence) — the
+/// bitwise-reproducibility contract.
+pub trait PairSelector<S: EngineStore> {
+    fn select(
+        &mut self,
+        pool: &Pool,
+        store: &S,
+        state: &mut RoundState,
+        rm: &mut RoundMetrics,
+    ) -> Vec<MergePair>;
+}
+
+/// Exact phase 1: merge the reciprocal-nearest-neighbor pairs
+/// (`nn[nn[c]] == c`), the paper's Algorithm 2 condition. `O(active)`
+/// pointer checks, parallelised over the pool.
+pub struct RnnSelector;
+
+impl<S: EngineStore> PairSelector<S> for RnnSelector {
+    fn select(
+        &mut self,
+        pool: &Pool,
+        _store: &S,
+        state: &mut RoundState,
+        _rm: &mut RoundMetrics,
+    ) -> Vec<MergePair> {
+        let nn = &state.nn;
+        let flags = pool.par_map(&state.active_ids, |&c| {
+            let c = c as usize;
+            nn[c] != NO_NN && nn[nn[c] as usize] == c as u32
+        });
+        let mut pairs = Vec::new();
+        for (idx, flag) in flags.into_iter().enumerate() {
+            if !flag {
+                continue;
+            }
+            let c = state.active_ids[idx] as usize;
+            let p = state.nn[c];
+            state.matched[c] = true;
+            state.partner[c] = p;
+            state.pair_weight[c] = state.nn_weight[c];
+            if (c as u32) < p {
+                pairs.push(MergePair {
+                    leader: c as u32,
+                    partner: p,
+                    weight: state.nn_weight[c],
+                });
+            }
+        }
+        pairs
+    }
+}
+
+/// Approximate phase 1: TeraHAC-style (1+ε)-good merges. Every active
+/// cluster scans its row for edges both endpoints accept
+/// ([`good::accepts`] — candidates oriented `a < b` so each edge is tested
+/// once, from its lower endpoint), then a maximal conflict-free set is
+/// chosen deterministically ([`good::select_matching`]). At ε = 0 the
+/// criterion degenerates to the reciprocal-NN pointer condition, so this
+/// selector is bitwise-interchangeable with [`RnnSelector`] (the crate's
+/// correctness anchor).
+pub struct GoodSelector {
+    epsilon: f64,
+}
+
+impl GoodSelector {
+    /// `epsilon` must be finite and `>= 0` (callers guard; see
+    /// [`crate::approx::ApproxEngine::new`]).
+    pub fn new(epsilon: f64) -> GoodSelector {
+        debug_assert!(epsilon >= 0.0 && epsilon.is_finite());
+        GoodSelector { epsilon }
+    }
+}
+
+impl<S: EngineStore> PairSelector<S> for GoodSelector {
+    fn select(
+        &mut self,
+        pool: &Pool,
+        store: &S,
+        state: &mut RoundState,
+        rm: &mut RoundMetrics,
+    ) -> Vec<MergePair> {
+        let eps = self.epsilon;
+        let scans: Vec<(Vec<(Weight, u32)>, usize)> = {
+            let nn = &state.nn;
+            let nn_weight = &state.nn_weight;
+            pool.par_map(&state.active_ids, |&a| {
+                good::scan_row_candidates(store.row(a), a, eps, nn_weight, nn)
+            })
+        };
+        let mut candidates: Vec<good::Candidate> = Vec::new();
+        for (&a, (row_cands, scanned)) in state.active_ids.iter().zip(scans) {
+            rm.eligibility_scan_entries += scanned;
+            candidates.extend(row_cands.into_iter().map(|(w, b)| (w, a, b)));
+        }
+        let pairs = good::select_matching(candidates, &mut state.matched);
+        for p in &pairs {
+            state.partner[p.leader as usize] = p.partner;
+            state.partner[p.partner as usize] = p.leader;
+            state.pair_weight[p.leader as usize] = p.weight;
+            state.pair_weight[p.partner as usize] = p.weight;
+        }
+        pairs
+    }
+}
+
+/// What a finished driver run reports. Engine wrappers adapt this to
+/// their public result types ([`crate::rac::RacResult`],
+/// [`crate::approx::ApproxResult`]).
+#[derive(Debug)]
+pub struct DriverResult {
+    pub dendrogram: Dendrogram,
+    pub metrics: RunMetrics,
+    /// Per merge, in recording order: `(weight, visible minimum)` at merge
+    /// time — the approximate engines' quality trace. Recorded for every
+    /// selector (for [`RnnSelector`] the ratio is identically 1); exact
+    /// wrappers simply drop it.
+    pub bounds: Vec<MergeBound>,
+}
+
+/// The shared round loop. Owns all driver state; phase 1 is delegated to a
+/// [`PairSelector`], storage and round application to an [`EngineStore`].
+pub struct RoundDriver<S: EngineStore> {
+    linkage: Linkage,
+    store: S,
+    state: RoundState,
+    threads: usize,
+    max_rounds: usize,
+}
+
+impl<S: EngineStore> RoundDriver<S> {
+    /// Build a driver over `n` singleton clusters backed by `store`.
+    pub fn new(store: S, n: usize, linkage: Linkage) -> RoundDriver<S> {
+        RoundDriver {
+            linkage,
+            store,
+            state: RoundState::new(n),
+            threads: default_threads(),
+            // Safety valve for non-reducible linkages (same cap as the
+            // pre-driver engines).
+            max_rounds: 4 * n + 64,
+        }
+    }
+
+    /// Limit the worker-thread count (the paper's CPUs knob, Fig 3c).
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
+    }
+
+    /// Override the round safety cap.
+    pub fn set_max_rounds(&mut self, max_rounds: usize) {
+        self.max_rounds = max_rounds;
+    }
+
+    /// Run to completion: init NN scan, then rounds of select → merge →
+    /// rescan until no pair is selected (or the safety cap trips).
+    pub fn run<P: PairSelector<S>>(mut self, selector: &mut P) -> DriverResult {
+        // One persistent worker pool for the whole run: phases are short
+        // and frequent, so per-phase thread spawning would dominate.
+        let pool = Pool::new(self.threads);
+        let t0 = Instant::now();
+        let n = self.state.n;
+        let mut merges: Vec<Merge> = Vec::with_capacity(n.saturating_sub(1));
+        let mut bounds: Vec<MergeBound> = Vec::with_capacity(n.saturating_sub(1));
+        let mut metrics = RunMetrics::default();
+
+        // Initial NN cache for every cluster.
+        let init: Vec<(u32, Weight)> = {
+            let store = &self.store;
+            pool.par_map_indexed(n, |c| scan_nn(store.row(c as u32)))
+        };
+        for (c, (nn, w)) in init.into_iter().enumerate() {
+            self.state.nn[c] = nn;
+            self.state.nn_weight[c] = w;
+        }
+
+        let mut n_active = n;
+        for round in 0..self.max_rounds {
+            let mut rm = RoundMetrics {
+                round,
+                clusters: n_active,
+                ..Default::default()
+            };
+
+            // ---- Phase 1: select this round's merge pairs ---------------
+            let t = Instant::now();
+            let pairs = selector.select(&pool, &self.store, &mut self.state, &mut rm);
+            rm.t_find = t.elapsed();
+            rm.merges = pairs.len();
+
+            if pairs.is_empty() {
+                metrics.rounds.push(rm);
+                break;
+            }
+
+            // ---- Phase 2: update cluster dissimilarities ----------------
+            // Compute every leader's union map in parallel (read-only over
+            // shared state; pair–pair dissimilarities are computed twice,
+            // once by each leader — the paper's contention-free choice)...
+            let t = Instant::now();
+            let unions: Vec<UnionRow> = {
+                let store = &self.store;
+                let state = &self.state;
+                let linkage = self.linkage;
+                pool.par_map(&pairs, |pr| {
+                    (pr.leader, union_map(linkage, store, state, pr.leader))
+                })
+            };
+
+            for pr in &pairs {
+                merges.push(Merge {
+                    a: pr.leader,
+                    b: pr.partner,
+                    weight: pr.weight,
+                });
+                bounds.push(MergeBound {
+                    weight: pr.weight,
+                    visible_min: self.state.nn_weight[pr.leader as usize]
+                        .min(self.state.nn_weight[pr.partner as usize]),
+                });
+            }
+            // ...then apply through the store (for the flat arena this is
+            // the lock-free owner-sharded parallel pass).
+            {
+                let partner = &self.state.partner;
+                let matched = &self.state.matched;
+                self.store.apply_round(
+                    &pool,
+                    &unions,
+                    |l| partner[l as usize],
+                    |t| !matched[t as usize],
+                );
+            }
+            for pr in &pairs {
+                self.state.size[pr.leader as usize] += self.state.size[pr.partner as usize];
+                self.state.active[pr.partner as usize] = false;
+            }
+            n_active -= rm.merges;
+            {
+                let active = &self.state.active;
+                self.state.active_ids.retain(|&c| active[c as usize]);
+            }
+            rm.t_merge = t.elapsed();
+
+            // ---- Phase 3: update nearest neighbors ----------------------
+            // Only a cluster that merged, or whose cached NN merged, can
+            // see its row minimum change (reducibility: patches never
+            // lower a row's minimum) — the paper's rescan condition.
+            let t = Instant::now();
+            let updates: Vec<(u32, u32, Weight, usize)> = {
+                let st = &self.state;
+                let store = &self.store;
+                let ids = &self.state.active_ids;
+                pool.par_filter_map_indexed(ids.len(), |idx| {
+                    let c = ids[idx];
+                    let needs_rescan = st.matched[c as usize]
+                        || (st.nn[c as usize] != NO_NN
+                            && st.matched[st.nn[c as usize] as usize]);
+                    needs_rescan.then(|| {
+                        let row = store.row(c);
+                        let (nn, w) = scan_nn(row);
+                        (c, nn, w, row.live_len())
+                    })
+                })
+            };
+            rm.nn_updates = updates.len();
+            for (c, nn, w, scanned) in updates {
+                self.state.nn[c as usize] = nn;
+                self.state.nn_weight[c as usize] = w;
+                rm.nn_scan_entries += scanned;
+            }
+            // Clear this round's selection so the phase-1 invariant holds
+            // next round (retired partners' stale flags are unreachable —
+            // no live `nn` points at them).
+            for pr in &pairs {
+                self.state.matched[pr.leader as usize] = false;
+                self.state.matched[pr.partner as usize] = false;
+            }
+            rm.t_update_nn = t.elapsed();
+            metrics.rounds.push(rm);
+
+            if n_active <= 1 {
+                break;
+            }
+        }
+
+        metrics.total_time = t0.elapsed();
+        DriverResult {
+            dendrogram: Dendrogram::new(n, merges),
+            metrics,
+            bounds,
+        }
+    }
+}
+
+/// Neighbor map of the union `L ∪ partner(L)` — the single call site of
+/// the engine-agnostic [`compute_union_map`] for every driver-backed
+/// engine, so the arithmetic (and its floating-point rounding) is bitwise
+/// identical across stores and selectors.
+fn union_map<S: EngineStore>(
+    linkage: Linkage,
+    store: &S,
+    st: &RoundState,
+    l: u32,
+) -> Vec<(u32, EdgeState)> {
+    let p = st.partner[l as usize];
+    compute_union_map(
+        linkage,
+        l,
+        p,
+        st.pair_weight[l as usize],
+        st.size[l as usize],
+        st.size[p as usize],
+        store.row(l),
+        store.row(p),
+        |x| PairView {
+            merging: st.matched[x as usize],
+            partner: st.partner[x as usize],
+            size: st.size[x as usize],
+            pair_weight: st.pair_weight[x as usize],
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+    use crate::rac::baseline::HashStore;
+
+    fn tiny_graph() -> Graph {
+        Graph::from_edges(
+            6,
+            [
+                (0, 1, 1.0),
+                (2, 3, 1.5),
+                (1, 3, 10.0),
+                (3, 4, 2.0),
+                (4, 5, 7.0),
+            ],
+        )
+    }
+
+    fn run<S: EngineStore, P: PairSelector<S>>(
+        store: S,
+        n: usize,
+        selector: &mut P,
+        threads: usize,
+    ) -> DriverResult {
+        let mut d = RoundDriver::new(store, n, Linkage::Average);
+        d.set_threads(threads);
+        d.run(selector)
+    }
+
+    #[test]
+    fn both_stores_agree_bitwise_under_both_selectors() {
+        let g = tiny_graph();
+        for threads in [1usize, 3] {
+            let flat_rnn = run(NeighborStore::from_graph(&g), 6, &mut RnnSelector, threads);
+            let hash_rnn = run(HashStore::from_graph(&g), 6, &mut RnnSelector, threads);
+            let flat_good = run(
+                NeighborStore::from_graph(&g),
+                6,
+                &mut GoodSelector::new(0.0),
+                threads,
+            );
+            let hash_good = run(
+                HashStore::from_graph(&g),
+                6,
+                &mut GoodSelector::new(0.0),
+                threads,
+            );
+            let want = flat_rnn.dendrogram.bitwise_merges();
+            assert_eq!(want.len(), 5);
+            for (name, r) in [
+                ("hash×rnn", &hash_rnn),
+                ("flat×good", &flat_good),
+                ("hash×good", &hash_good),
+            ] {
+                assert_eq!(want, r.dendrogram.bitwise_merges(), "{name} t={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn bounds_are_recorded_for_every_selector() {
+        let g = tiny_graph();
+        let exact = run(NeighborStore::from_graph(&g), 6, &mut RnnSelector, 1);
+        assert_eq!(exact.bounds.len(), exact.dendrogram.merges().len());
+        assert_eq!(crate::approx::quality::merge_quality_ratio(&exact.bounds), 1.0);
+        let good = run(
+            NeighborStore::from_graph(&g),
+            6,
+            &mut GoodSelector::new(0.5),
+            1,
+        );
+        assert_eq!(good.bounds.len(), good.dendrogram.merges().len());
+        assert!(crate::approx::quality::merge_quality_ratio(&good.bounds) <= 1.5 + 1e-12);
+    }
+
+    #[test]
+    fn empty_and_singleton_inputs() {
+        for n in [0usize, 1] {
+            let g = Graph::from_edges(n, []);
+            let r = run(NeighborStore::from_graph(&g), n, &mut RnnSelector, 2);
+            assert!(r.dendrogram.merges().is_empty());
+            assert!(r.bounds.is_empty());
+        }
+    }
+
+    #[test]
+    fn max_rounds_zero_runs_nothing() {
+        let g = tiny_graph();
+        let mut d = RoundDriver::new(NeighborStore::from_graph(&g), 6, Linkage::Average);
+        d.set_max_rounds(0);
+        let r = d.run(&mut RnnSelector);
+        assert!(r.dendrogram.merges().is_empty());
+        assert!(r.metrics.rounds.is_empty());
+    }
+
+    #[test]
+    fn eligibility_scans_accounted_only_by_good_selector() {
+        let g = tiny_graph();
+        let exact = run(NeighborStore::from_graph(&g), 6, &mut RnnSelector, 1);
+        assert!(exact
+            .metrics
+            .rounds
+            .iter()
+            .all(|r| r.eligibility_scan_entries == 0));
+        let good = run(
+            NeighborStore::from_graph(&g),
+            6,
+            &mut GoodSelector::new(0.1),
+            1,
+        );
+        assert!(good.metrics.rounds[0].eligibility_scan_entries > 0);
+    }
+}

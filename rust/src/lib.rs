@@ -16,12 +16,18 @@
 //! * [`rac`] is the paper's contribution: the round-based
 //!   reciprocal-nearest-neighbor merge engine; [`dist`] runs the same
 //!   phases sharded across simulated machines with batched cross-shard
-//!   messaging; [`approx`] relaxes the merge rule to TeraHAC-style
-//!   (1+ε)-good merges for graphs where reciprocal pairs are scarce;
-//!   [`hac`] holds the exact sequential baselines the engines are
-//!   verified against. All engines keep cluster adjacency in [`store`],
-//!   a flat arena-backed neighbor store with tombstone deletion,
-//!   owner-sharded lock-free merge application, and periodic compaction.
+//!   messaging (exact `dist_rac` and ε-good `dist_approx`); [`approx`]
+//!   relaxes the merge rule to TeraHAC-style (1+ε)-good merges for graphs
+//!   where reciprocal pairs are scarce; [`hac`] holds the exact
+//!   sequential baselines the engines are verified against. The
+//!   shared-memory engines are all one loop: [`engine`]'s `RoundDriver`
+//!   owns the init-scan + phase-2/3 machinery, parameterized by an
+//!   [`engine::EngineStore`] backend and an [`engine::PairSelector`]
+//!   (reciprocal-NN or ε-good) — so the ε = 0 bitwise anchor is shared
+//!   code, not mirrored code. All engines keep cluster adjacency in
+//!   [`store`], a flat arena-backed neighbor store with tombstone
+//!   deletion, owner-sharded lock-free merge application, and periodic
+//!   compaction.
 //!
 //! Quick start (see `examples/quickstart.rs` for the larger runnable
 //! version):
@@ -62,6 +68,11 @@
 //! terms) — the resource columns of the paper's Table 2. Exactness is by
 //! construction: the merge arithmetic is the shared-memory engine's,
 //! bit for bit, so Theorem 1 applies to every topology.
+//! [`dist::DistApproxEngine`] (`dist_approx`) runs the ε-good selection
+//! over the same sharded state — per topology it is bitwise identical to
+//! [`approx::ApproxEngine`], and at ε = 0 to [`dist::DistRacEngine`] —
+//! with the find phase additionally exchanging remote NN caches and
+//! routing candidate edges through a matching coordinator.
 //!
 //! ## Approximate engine
 //!
@@ -89,6 +100,7 @@ pub mod config;
 pub mod data;
 pub mod dendrogram;
 pub mod dist;
+pub mod engine;
 pub mod graph;
 pub mod hac;
 pub mod knn;

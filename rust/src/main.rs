@@ -13,8 +13,10 @@
 //!
 //! `cluster` flags: `--dataset sift_like|docs_like|grid1d|adversarial|stable|random_regular`,
 //! `--n`, `--d`, `--k`, `--xla`, `--linkage L`,
-//! `--engine rac|dist_rac|approx|naive_hac|nn_chain`,
-//! `--machines M`, `--cpus C`, `--epsilon E`, `--seed S`.
+//! `--engine rac|dist_rac|approx|dist_approx|naive_hac|nn_chain`,
+//! `--machines M`, `--cpus C`, `--epsilon E`, `--seed S`
+//! (`dist_approx` takes the topology knobs *and* the ε band:
+//! `--engine dist_approx --machines 8 --cpus 4 --epsilon 0.1`).
 
 use std::process::ExitCode;
 
@@ -216,7 +218,9 @@ fn cmd_cluster(args: &[String]) -> Result<()> {
 }
 
 /// Exactness sweep: RAC (shared and distributed) vs sequential HAC on
-/// random kNN graphs and 1-d grids, all sparse reducible linkages.
+/// random kNN graphs and 1-d grids, all sparse reducible linkages. The
+/// approximate engines are pinned at their ε = 0 anchors: `Approx(0)` and
+/// `DistApprox(0)` must both be bitwise-exact RAC, hence exact HAC.
 fn cmd_verify(args: &[String]) -> Result<()> {
     let flags = Flags::parse(args)?;
     let n = flags.usize_or("n", 300)?;
@@ -244,13 +248,23 @@ fn cmd_verify(args: &[String]) -> Result<()> {
                 if !hac.same_clustering(&dist.dendrogram, 1e-9) {
                     bail!("DistRAC != HAC: linkage={linkage:?} seed={seed}");
                 }
-                // The approximate engine's correctness anchor: ε = 0 is
+                // The approximate engines' correctness anchor: ε = 0 is
                 // bitwise-exact RAC, hence exact HAC.
                 let approx = rac_hac::approx::ApproxEngine::new(g, linkage, 0.0).run();
                 if rac.dendrogram.bitwise_merges() != approx.dendrogram.bitwise_merges() {
                     bail!("Approx(eps=0) != RAC: linkage={linkage:?} seed={seed}");
                 }
-                checked += 3;
+                let dist_approx = rac_hac::dist::DistApproxEngine::new(
+                    g,
+                    linkage,
+                    rac_hac::dist::DistConfig::new(4, 2),
+                    0.0,
+                )
+                .run();
+                if rac.dendrogram.bitwise_merges() != dist_approx.dendrogram.bitwise_merges() {
+                    bail!("DistApprox(eps=0) != RAC: linkage={linkage:?} seed={seed}");
+                }
+                checked += 4;
             }
         }
     }

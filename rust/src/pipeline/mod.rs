@@ -12,7 +12,7 @@ use crate::data::{
     adversarial_thm4, gaussian_mixture, grid1d_graph, random_regular_graph, stable_hierarchy,
     topic_docs, Dataset,
 };
-use crate::dist::{DistConfig, DistRacEngine};
+use crate::dist::{DistApproxEngine, DistConfig, DistRacEngine};
 use crate::graph::Graph;
 use crate::hac::{naive_hac, nn_chain};
 use crate::knn::{complete_graph, epsilon_graph, knn_graph, Backend};
@@ -135,6 +135,23 @@ pub fn run_engine(cfg: &RunConfig, g: &Graph) -> Result<RacResult> {
                 metrics: r.metrics,
             })
         }
+        EngineSpec::DistApprox {
+            machines,
+            cpus,
+            epsilon,
+        } => {
+            let r = DistApproxEngine::new(
+                g,
+                cfg.linkage,
+                DistConfig::new(machines, cpus),
+                epsilon,
+            )
+            .run();
+            Ok(RacResult {
+                dendrogram: r.dendrogram,
+                metrics: r.metrics,
+            })
+        }
     }
 }
 
@@ -228,6 +245,44 @@ mod tests {
         .result;
         assert_eq!(relaxed.dendrogram.merges().len(), 399);
         assert!(relaxed.metrics.merge_rounds() > 0);
+    }
+
+    #[test]
+    fn dist_approx_engine_through_pipeline() {
+        let base = "[dataset]\ntype = \"grid1d\"\nn = 300\n[cluster]\nlinkage = \"average\"\n";
+        // ε = 0 through the config path degenerates to dist_rac (hence
+        // exact RAC), bitwise.
+        let exact = run(&cfg(&format!(
+            "{base}[engine]\ntype = \"dist_rac\"\nmachines = 3\ncpus = 2\n"
+        )))
+        .unwrap()
+        .result;
+        let zero = run(&cfg(&format!(
+            "{base}[engine]\ntype = \"dist_approx\"\nmachines = 3\ncpus = 2\nepsilon = 0\n"
+        )))
+        .unwrap()
+        .result;
+        assert_eq!(
+            exact.dendrogram.bitwise_merges(),
+            zero.dendrogram.bitwise_merges()
+        );
+        // ε > 0 sharded equals ε > 0 shared-memory, bitwise, and reports
+        // network traffic.
+        let relaxed_shared = run(&cfg(&format!(
+            "{base}[engine]\ntype = \"approx\"\nepsilon = 0.5\n"
+        )))
+        .unwrap()
+        .result;
+        let relaxed_dist = run(&cfg(&format!(
+            "{base}[engine]\ntype = \"dist_approx\"\nmachines = 5\ncpus = 1\nepsilon = 0.5\n"
+        )))
+        .unwrap()
+        .result;
+        assert_eq!(
+            relaxed_shared.dendrogram.bitwise_merges(),
+            relaxed_dist.dendrogram.bitwise_merges()
+        );
+        assert!(relaxed_dist.metrics.total_net_messages() > 0);
     }
 
     #[test]

@@ -1,53 +1,97 @@
-//! The PR-1 hashmap-backed RAC engine, preserved verbatim in behavior as
+//! The PR-1 hashmap-backed RAC engine, preserved in behavior as
 //! [`HashRacEngine`].
 //!
 //! Kept for two jobs (and only those — production callers use
 //! [`super::RacEngine`]):
 //!
 //! * **Differential oracle** — `rust/tests/store_equivalence.rs` asserts
-//!   the flat-store engine's dendrogram is bitwise identical to this
-//!   engine's on random sparse graphs, for every `SPARSE_REDUCIBLE`
-//!   linkage and across thread counts. Both engines share
-//!   [`super::logic`], so any divergence isolates a bug in the store
-//!   layer itself.
+//!   that every flat-store engine's dendrogram is bitwise identical to
+//!   this engine's on random sparse graphs, for every `SPARSE_REDUCIBLE`
+//!   linkage and across thread counts. All engines share the
+//!   [`crate::engine::RoundDriver`] loop and [`super::logic`] arithmetic,
+//!   so any divergence isolates a bug in the store layer itself.
 //! * **Perf baseline** — `benches/hot_paths.rs` reports this engine next
 //!   to the flat-store engine so `BENCH_hot_paths.json` carries the
 //!   hashmap-vs-arena trajectory from the first datapoint onward.
 //!
-//! Differences from the flat engine: cluster adjacency is one
-//! `FxHashMap<u32, EdgeState>` per cluster, and the phase-2 apply is the
-//! original serial loop (the hashmap layout has no owner-sharded
-//! disjoint-write story). Phase 1/2-compute/3 use the same `Pool`
-//! parallelism as PR 1.
-
-use std::time::Instant;
+//! The difference from the flat engine is exactly one driver parameter:
+//! the [`HashStore`] backend keeps one `FxHashMap<u32, EdgeState>` per
+//! cluster and applies merge rounds with the original serial loop (the
+//! hashmap layout has no owner-sharded disjoint-write story). Phase
+//! 1/2-compute/3 use the same `Pool` parallelism as every driver engine.
 
 use rustc_hash::FxHashMap;
 
-use crate::dendrogram::{Dendrogram, Merge};
+use crate::engine::{EngineStore, RnnSelector, RoundDriver};
 use crate::graph::Graph;
-use crate::linkage::{EdgeState, Linkage, Weight};
-use crate::metrics::{RoundMetrics, RunMetrics};
-use crate::util::parallel::default_threads;
+use crate::linkage::{EdgeState, Linkage};
+use crate::store::UnionRow;
 use crate::util::pool::Pool;
 
-use super::logic::{compute_union_map, scan_nn, PairView};
-use super::{RacResult, NO_NN};
+use super::RacResult;
+
+/// Hashmap cluster-adjacency backend (the PR-1 representation): one
+/// `FxHashMap` per cluster, serial round application.
+pub struct HashStore {
+    maps: Vec<FxHashMap<u32, EdgeState>>,
+}
+
+impl HashStore {
+    /// Build from a graph, one map per node.
+    pub fn from_graph(g: &Graph) -> HashStore {
+        HashStore {
+            maps: (0..g.n() as u32)
+                .map(|u| {
+                    g.neighbors(u)
+                        .map(|(v, w)| (v, EdgeState::point(w)))
+                        .collect()
+                })
+                .collect(),
+        }
+    }
+}
+
+impl EngineStore for HashStore {
+    type Row<'a>
+        = &'a FxHashMap<u32, EdgeState>
+    where
+        Self: 'a;
+
+    #[inline]
+    fn row(&self, c: u32) -> &FxHashMap<u32, EdgeState> {
+        &self.maps[c as usize]
+    }
+
+    /// The PR-1 serial apply (the critical section this baseline exists
+    /// to measure): per union in ascending-leader order, patch non-merging
+    /// targets, install the union map under the leader, retire the
+    /// partner.
+    fn apply_round(
+        &mut self,
+        _pool: &Pool,
+        unions: &[UnionRow],
+        partner_of: impl Fn(u32) -> u32 + Sync,
+        patch_target: impl Fn(u32) -> bool + Sync,
+    ) {
+        for (l, map) in unions {
+            let p = partner_of(*l);
+            for &(t_id, e) in map {
+                if patch_target(t_id) {
+                    let tm = &mut self.maps[t_id as usize];
+                    tm.remove(&p);
+                    tm.insert(*l, e);
+                }
+            }
+            self.maps[*l as usize] = map.iter().copied().collect();
+            self.maps[p as usize] = FxHashMap::default();
+        }
+    }
+}
 
 /// Hashmap-backed shared-memory RAC engine (PR-1 baseline; see module
 /// docs for why it is retained).
 pub struct HashRacEngine {
-    linkage: Linkage,
-    n: usize,
-    active: Vec<bool>,
-    active_ids: Vec<u32>,
-    size: Vec<u64>,
-    nn: Vec<u32>,
-    nn_weight: Vec<Weight>,
-    will_merge: Vec<bool>,
-    neighbors: Vec<FxHashMap<u32, EdgeState>>,
-    threads: usize,
-    max_rounds: usize,
+    driver: RoundDriver<HashStore>,
 }
 
 impl HashRacEngine {
@@ -65,165 +109,24 @@ impl HashRacEngine {
                 "{linkage:?} linkage requires a complete graph"
             );
         }
-        let n = g.n();
-        let neighbors: Vec<FxHashMap<u32, EdgeState>> = (0..n as u32)
-            .map(|u| {
-                g.neighbors(u)
-                    .map(|(v, w)| (v, EdgeState::point(w)))
-                    .collect()
-            })
-            .collect();
         HashRacEngine {
-            linkage,
-            n,
-            active: vec![true; n],
-            active_ids: (0..n as u32).collect(),
-            size: vec![1; n],
-            nn: vec![NO_NN; n],
-            nn_weight: vec![Weight::INFINITY; n],
-            will_merge: vec![false; n],
-            neighbors,
-            threads: default_threads(),
-            max_rounds: 4 * n + 64,
+            driver: RoundDriver::new(HashStore::from_graph(g), g.n(), linkage),
         }
     }
 
     /// Limit the worker-thread count.
     pub fn with_threads(mut self, threads: usize) -> Self {
-        self.threads = threads.max(1);
+        self.driver.set_threads(threads);
         self
     }
 
     /// Run to completion.
-    pub fn run(mut self) -> RacResult {
-        let pool = Pool::new(self.threads);
-        let t0 = Instant::now();
-        let mut merges: Vec<Merge> = Vec::with_capacity(self.n.saturating_sub(1));
-        let mut metrics = RunMetrics::default();
-
-        let init: Vec<(u32, Weight)> =
-            pool.par_map_indexed(self.n, |c| scan_nn(&self.neighbors[c]));
-        for (c, (nn, w)) in init.into_iter().enumerate() {
-            self.nn[c] = nn;
-            self.nn_weight[c] = w;
-        }
-
-        let mut n_active = self.n;
-        for round in 0..self.max_rounds {
-            let mut rm = RoundMetrics {
-                round,
-                clusters: n_active,
-                ..Default::default()
-            };
-
-            // Phase 1: find reciprocal nearest neighbors.
-            let t = Instant::now();
-            let flags = pool.par_map(&self.active_ids, |&c| {
-                let c = c as usize;
-                self.nn[c] != NO_NN && self.nn[self.nn[c] as usize] == c as u32
-            });
-            for (&c, flag) in self.active_ids.iter().zip(flags) {
-                self.will_merge[c as usize] = flag;
-            }
-            let leaders: Vec<u32> = self
-                .active_ids
-                .iter()
-                .copied()
-                .filter(|&c| self.will_merge[c as usize] && c < self.nn[c as usize])
-                .collect();
-            rm.t_find = t.elapsed();
-            rm.merges = leaders.len();
-
-            if leaders.is_empty() {
-                metrics.rounds.push(rm);
-                break;
-            }
-
-            // Phase 2: parallel union compute, serial apply (the PR-1
-            // critical section this baseline exists to measure).
-            let t = Instant::now();
-            let unions: Vec<crate::store::UnionRow> =
-                pool.par_map(&leaders, |&l| (l, self.union_map(l)));
-
-            for &l in &leaders {
-                let p = self.nn[l as usize];
-                merges.push(Merge {
-                    a: l,
-                    b: p,
-                    weight: self.nn_weight[l as usize],
-                });
-            }
-            for (l, map) in unions {
-                let p = self.nn[l as usize];
-                for &(t_id, e) in &map {
-                    if !self.will_merge[t_id as usize] {
-                        let tm = &mut self.neighbors[t_id as usize];
-                        tm.remove(&p);
-                        tm.insert(l, e);
-                    }
-                }
-                self.size[l as usize] += self.size[p as usize];
-                self.neighbors[l as usize] = map.into_iter().collect();
-                self.neighbors[p as usize] = FxHashMap::default();
-                self.active[p as usize] = false;
-            }
-            n_active -= rm.merges;
-            self.active_ids.retain(|&c| self.active[c as usize]);
-            rm.t_merge = t.elapsed();
-
-            // Phase 3: update nearest neighbors.
-            let t = Instant::now();
-            let updates: Vec<(u32, u32, Weight, usize)> = {
-                let ids = &self.active_ids;
-                pool.par_filter_map_indexed(ids.len(), |idx| {
-                    let c = ids[idx] as usize;
-                    let needs_rescan = self.will_merge[c]
-                        || (self.nn[c] != NO_NN && self.will_merge[self.nn[c] as usize]);
-                    needs_rescan.then(|| {
-                        let (nn, w) = scan_nn(&self.neighbors[c]);
-                        (c as u32, nn, w, self.neighbors[c].len())
-                    })
-                })
-            };
-            rm.nn_updates = updates.len();
-            for (c, nn, w, scanned) in updates {
-                self.nn[c as usize] = nn;
-                self.nn_weight[c as usize] = w;
-                rm.nn_scan_entries += scanned;
-            }
-            rm.t_update_nn = t.elapsed();
-            metrics.rounds.push(rm);
-
-            if n_active <= 1 {
-                break;
-            }
-        }
-
-        metrics.total_time = t0.elapsed();
+    pub fn run(self) -> RacResult {
+        let r = self.driver.run(&mut RnnSelector);
         RacResult {
-            dendrogram: Dendrogram::new(self.n, merges),
-            metrics,
+            dendrogram: r.dendrogram,
+            metrics: r.metrics,
         }
-    }
-
-    fn union_map(&self, l: u32) -> Vec<(u32, EdgeState)> {
-        let p = self.nn[l as usize];
-        compute_union_map(
-            self.linkage,
-            l,
-            p,
-            self.nn_weight[l as usize],
-            self.size[l as usize],
-            self.size[p as usize],
-            &self.neighbors[l as usize],
-            &self.neighbors[p as usize],
-            |x| PairView {
-                merging: self.will_merge[x as usize],
-                partner: self.nn[x as usize],
-                size: self.size[x as usize],
-                pair_weight: self.nn_weight[x as usize],
-            },
-        )
     }
 }
 

@@ -42,26 +42,26 @@
 //! per target pair. Theorem-1 property tests (`rust/tests/`) verify
 //! exactness against sequential HAC.
 //!
-//! The distributed version of the same phases (sharded state, batched
-//! cross-machine messages) lives in [`crate::dist`]. The PR-1
-//! hashmap-backed engine survives as [`baseline::HashRacEngine`] — the
-//! differential oracle and perf baseline for the flat store
-//! (`rust/tests/store_equivalence.rs`, `benches/hot_paths.rs`).
+//! The round loop itself — init scan, phase-2 compute/apply, phase-3
+//! rescan, metrics, termination — is the engine-shared
+//! [`crate::engine::RoundDriver`]; this engine is the driver instantiated
+//! with the flat [`NeighborStore`] and the exact reciprocal-NN phase-1
+//! selector ([`crate::engine::RnnSelector`]). The distributed version of
+//! the same phases (sharded state, batched cross-machine messages) lives
+//! in [`crate::dist`]. The PR-1 hashmap-backed engine survives as
+//! [`baseline::HashRacEngine`] — the differential oracle and perf
+//! baseline for the flat store (`rust/tests/store_equivalence.rs`,
+//! `benches/hot_paths.rs`).
 
 pub mod baseline;
 pub mod logic;
 
-use std::time::Instant;
-
-use crate::dendrogram::{Dendrogram, Merge};
+use crate::dendrogram::Dendrogram;
+use crate::engine::{RnnSelector, RoundDriver};
 use crate::graph::Graph;
-use crate::linkage::{EdgeState, Linkage, Weight};
-use crate::metrics::{RoundMetrics, RunMetrics};
-use crate::store::{NeighborStore, UnionRow};
-use crate::util::parallel::default_threads;
-use crate::util::pool::Pool;
-
-use logic::{compute_union_map, scan_nn, PairView};
+use crate::linkage::Linkage;
+use crate::metrics::RunMetrics;
+use crate::store::NeighborStore;
 
 /// Sentinel "no nearest neighbor" (isolated cluster).
 pub const NO_NN: u32 = u32::MAX;
@@ -75,20 +75,7 @@ pub struct RacResult {
 
 /// Shared-memory RAC engine over the flat neighbor store.
 pub struct RacEngine {
-    linkage: Linkage,
-    n: usize,
-    active: Vec<bool>,
-    /// Live cluster ids, ascending; compacted once per round so the
-    /// per-round phases cost O(active), not O(n) (§Perf item 4).
-    active_ids: Vec<u32>,
-    size: Vec<u64>,
-    nn: Vec<u32>,
-    nn_weight: Vec<Weight>,
-    will_merge: Vec<bool>,
-    store: NeighborStore,
-    threads: usize,
-    /// Hard cap on rounds (safety valve for non-reducible linkages).
-    max_rounds: usize,
+    driver: RoundDriver<NeighborStore>,
 }
 
 impl RacEngine {
@@ -123,180 +110,29 @@ impl RacEngine {
         }
         let n = g.n();
         RacEngine {
-            linkage,
-            n,
-            active: vec![true; n],
-            active_ids: (0..n as u32).collect(),
-            size: vec![1; n],
-            nn: vec![NO_NN; n],
-            nn_weight: vec![Weight::INFINITY; n],
-            will_merge: vec![false; n],
-            store: NeighborStore::from_graph(g),
-            threads: default_threads(),
-            max_rounds: 4 * n + 64,
+            driver: RoundDriver::new(NeighborStore::from_graph(g), n, linkage),
         }
     }
 
     /// Limit the worker-thread count (the paper's CPUs knob, Fig 3c).
     pub fn with_threads(mut self, threads: usize) -> Self {
-        self.threads = threads.max(1);
+        self.driver.set_threads(threads);
         self
     }
 
     /// Override the round safety cap.
     pub fn with_max_rounds(mut self, max_rounds: usize) -> Self {
-        self.max_rounds = max_rounds;
+        self.driver.set_max_rounds(max_rounds);
         self
     }
 
     /// Run RAC to completion; returns the dendrogram and per-round metrics.
-    pub fn run(mut self) -> RacResult {
-        // One persistent worker pool for the whole run: phases are short
-        // and frequent, so per-phase thread spawning would dominate.
-        let pool = Pool::new(self.threads);
-        self.run_inner(&pool)
-    }
-
-    fn run_inner(&mut self, pool: &Pool) -> RacResult {
-        let t0 = Instant::now();
-        let mut merges: Vec<Merge> = Vec::with_capacity(self.n.saturating_sub(1));
-        let mut metrics = RunMetrics::default();
-
-        // Initial NN cache for every cluster.
-        let init: Vec<(u32, Weight)> =
-            pool.par_map_indexed(self.n, |c| scan_nn(self.store.row(c as u32)));
-        for (c, (nn, w)) in init.into_iter().enumerate() {
-            self.nn[c] = nn;
-            self.nn_weight[c] = w;
-        }
-
-        let mut n_active = self.n;
-        for round in 0..self.max_rounds {
-            let mut rm = RoundMetrics {
-                round,
-                clusters: n_active,
-                ..Default::default()
-            };
-
-            // ---- Phase 1: find reciprocal nearest neighbors -------------
-            let t = Instant::now();
-            let flags = pool.par_map(&self.active_ids, |&c| {
-                let c = c as usize;
-                self.nn[c] != NO_NN && self.nn[self.nn[c] as usize] == c as u32
-            });
-            for (&c, flag) in self.active_ids.iter().zip(flags) {
-                self.will_merge[c as usize] = flag;
-            }
-            let leaders: Vec<u32> = self
-                .active_ids
-                .iter()
-                .copied()
-                .filter(|&c| self.will_merge[c as usize] && c < self.nn[c as usize])
-                .collect();
-            rm.t_find = t.elapsed();
-            rm.merges = leaders.len();
-
-            if leaders.is_empty() {
-                metrics.rounds.push(rm);
-                break;
-            }
-
-            // ---- Phase 2: update cluster dissimilarities ----------------
-            // Compute every leader's union map in parallel (read-only)...
-            let t = Instant::now();
-            let unions: Vec<UnionRow> =
-                pool.par_map(&leaders, |&l| (l, self.union_map(l)));
-
-            for &l in &leaders {
-                let p = self.nn[l as usize];
-                merges.push(Merge {
-                    a: l,
-                    b: p,
-                    weight: self.nn_weight[l as usize],
-                });
-            }
-            // ...then apply with the lock-free owner-sharded parallel
-            // pass: install unions, retire partners, patch non-merging
-            // neighbors (module docs).
-            {
-                let store = &mut self.store;
-                let nn = &self.nn;
-                let will_merge = &self.will_merge;
-                store.par_apply_round(
-                    pool,
-                    &unions,
-                    |l| nn[l as usize],
-                    |t| !will_merge[t as usize],
-                );
-            }
-            for &l in &leaders {
-                let p = self.nn[l as usize];
-                self.size[l as usize] += self.size[p as usize];
-                self.active[p as usize] = false;
-            }
-            self.store.maybe_compact();
-            n_active -= rm.merges;
-            self.active_ids.retain(|&c| self.active[c as usize]);
-            rm.t_merge = t.elapsed();
-
-            // ---- Phase 3: update nearest neighbors ----------------------
-            let t = Instant::now();
-            let updates: Vec<(u32, u32, Weight, usize)> = {
-                let ids = &self.active_ids;
-                pool.par_filter_map_indexed(ids.len(), |idx| {
-                    let c = ids[idx];
-                    let needs_rescan = self.will_merge[c as usize]
-                        || (self.nn[c as usize] != NO_NN
-                            && self.will_merge[self.nn[c as usize] as usize]);
-                    needs_rescan.then(|| {
-                        let row = self.store.row(c);
-                        let (nn, w) = scan_nn(row);
-                        (c, nn, w, row.live_len())
-                    })
-                })
-            };
-            rm.nn_updates = updates.len();
-            for (c, nn, w, scanned) in updates {
-                self.nn[c as usize] = nn;
-                self.nn_weight[c as usize] = w;
-                rm.nn_scan_entries += scanned;
-            }
-            rm.t_update_nn = t.elapsed();
-            metrics.rounds.push(rm);
-
-            if n_active <= 1 {
-                break;
-            }
-        }
-
-        metrics.total_time = t0.elapsed();
+    pub fn run(self) -> RacResult {
+        let r = self.driver.run(&mut RnnSelector);
         RacResult {
-            dendrogram: Dendrogram::new(self.n, merges),
-            metrics,
+            dendrogram: r.dendrogram,
+            metrics: r.metrics,
         }
-    }
-
-    /// Compute the neighbor map of the union `L ∪ P` (read-only on shared
-    /// state; each leader runs this independently in parallel). Delegates
-    /// to the engine-agnostic [`logic::compute_union_map`].
-    fn union_map(&self, l: u32) -> Vec<(u32, EdgeState)> {
-        let p = self.nn[l as usize];
-        compute_union_map(
-            self.linkage,
-            l,
-            p,
-            self.nn_weight[l as usize],
-            self.size[l as usize],
-            self.size[p as usize],
-            self.store.row(l),
-            self.store.row(p),
-            |x| PairView {
-                merging: self.will_merge[x as usize],
-                partner: self.nn[x as usize],
-                size: self.size[x as usize],
-                pair_weight: self.nn_weight[x as usize],
-            },
-        )
     }
 }
 

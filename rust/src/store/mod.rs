@@ -1,6 +1,10 @@
 //! Flat arena-backed neighbor store — the cluster-adjacency representation
-//! shared by both engines ([`crate::rac::RacEngine`] and
-//! [`crate::dist::DistRacEngine`]).
+//! shared by every engine: the [`crate::engine::RoundDriver`]-backed
+//! shared-memory engines ([`crate::rac::RacEngine`],
+//! [`crate::approx::ApproxEngine`]) use it as their
+//! [`crate::engine::EngineStore`] backend, and the distributed engines
+//! ([`crate::dist`]) run the same representation under their accounting
+//! loop.
 //!
 //! The PR-1 engines kept one `FxHashMap<u32, EdgeState>` per cluster, so
 //! every hot-path operation (NN scans, union folds, per-round patches) was
@@ -162,9 +166,11 @@ impl<'a> RowRef<'a> {
 }
 
 /// Read-only neighbor view the engine-shared logic
-/// ([`crate::rac::logic`]) folds over. Implemented by the flat store's
+/// ([`crate::rac::logic`]) and the driver's selectors
+/// ([`crate::engine`]) fold over. Implemented by the flat store's
 /// [`RowRef`] and — for the differential oracle
-/// ([`crate::rac::baseline`]) — by `&FxHashMap<u32, EdgeState>`.
+/// ([`crate::rac::baseline::HashStore`]) — by
+/// `&FxHashMap<u32, EdgeState>`.
 ///
 /// Implementations MUST visit each live neighbor exactly once; visit
 /// *order* is explicitly unspecified, and all arithmetic layered on top

@@ -17,39 +17,24 @@
 //!
 //! Plus the `cut_k` / `cut_threshold` agreement property that underpins
 //! the ARI comparisons (`quality::compare_runs` cuts both dendrograms at
-//! the same `k`).
+//! the same `k`), and the `dist_approx` topology-invariance property: the
+//! sharded ε-good engine is bitwise identical to the shared-memory one
+//! for every `(machines, cores, ε)` (the sharding layer is
+//! accounting-only, exactly as for the exact engines).
+//!
+//! The random property graphs (`random_sparse_graph`,
+//! `random_tied_graph`) are the crate-shared generators in
+//! `rac_hac::data` — the same shapes `store_equivalence` throws at the
+//! engines.
 
 use rac_hac::approx::{good, quality, ApproxEngine};
 use rac_hac::data;
-use rac_hac::graph::Graph;
+use rac_hac::data::{random_sparse_graph, random_tied_graph};
+use rac_hac::dist::{DistApproxEngine, DistConfig};
 use rac_hac::hac::naive_hac;
 use rac_hac::linkage::{Linkage, Weight};
 use rac_hac::rac::RacEngine;
 use rac_hac::util::prop::for_all_seeds;
-use rac_hac::util::rng::Rng;
-
-/// Random sparse graph (same shape as the `store_equivalence` suite's):
-/// a mostly-connected random tree plus random extra edges.
-fn random_sparse_graph(rng: &mut Rng) -> Graph {
-    let n = rng.range_usize(2, 140);
-    let mut edges: Vec<(u32, u32, Weight)> = Vec::new();
-    for v in 1..n {
-        if rng.bool_with(1.0 / 12.0) {
-            continue;
-        }
-        let u = rng.below(v) as u32;
-        edges.push((u, v as u32, rng.range_f64(0.1, 100.0)));
-    }
-    let extra = rng.range_usize(0, 3 * n);
-    for _ in 0..extra {
-        let u = rng.below(n) as u32;
-        let v = rng.below(n) as u32;
-        if u != v {
-            edges.push((u.min(v), u.max(v), rng.range_f64(0.1, 100.0)));
-        }
-    }
-    Graph::from_edges(n, edges)
-}
 
 #[test]
 fn zero_epsilon_is_bitwise_exact_on_sparse_graphs() {
@@ -66,32 +51,6 @@ fn zero_epsilon_is_bitwise_exact_on_sparse_graphs() {
             );
         }
     });
-}
-
-/// Like [`random_sparse_graph`] but with weights quantised to a handful
-/// of integer values — exact weight ties everywhere. This is the regime
-/// the boundary rule exists for: the engines' NN caches go stale on tie
-/// *ids* (a patch can add an equal-weight edge toward a lower id without
-/// triggering a rescan), and the exact engine still merges along its
-/// cached pointer. Continuous weights never exercise this.
-fn random_tied_graph(rng: &mut Rng) -> Graph {
-    let n = rng.range_usize(2, 120);
-    let mut edges: Vec<(u32, u32, Weight)> = Vec::new();
-    for v in 1..n {
-        if rng.bool_with(1.0 / 12.0) {
-            continue;
-        }
-        let u = rng.below(v) as u32;
-        edges.push((u, v as u32, (1 + rng.below(5)) as Weight));
-    }
-    for _ in 0..rng.range_usize(0, 3 * n) {
-        let u = rng.below(n) as u32;
-        let v = rng.below(n) as u32;
-        if u != v {
-            edges.push((u.min(v), u.max(v), (1 + rng.below(5)) as Weight));
-        }
-    }
-    Graph::from_edges(n, edges)
 }
 
 #[test]
@@ -279,6 +238,106 @@ fn flat_cuts_agree_with_exact_hac_on_stable_hierarchies() {
             assert_eq!(ari, 1.0, "eps={eps} k={k}");
         }
     }
+}
+
+// ---------------------------------------------------------------------
+// dist_approx: the sharded ε-good engine.
+// ---------------------------------------------------------------------
+
+/// Topology invariance: for any `(machines, cores)` and any ε, the
+/// sharded engine's dendrogram AND quality trace are bitwise the
+/// shared-memory engine's. Runs on the tie-heavy quantised-weight graphs
+/// — the hardest regime for selection determinism.
+#[test]
+fn dist_approx_is_topology_invariant_bitwise() {
+    for_all_seeds(0xD1AC, 8, |rng| {
+        let g = if rng.bool_with(0.5) {
+            random_tied_graph(rng)
+        } else {
+            random_sparse_graph(rng)
+        };
+        for eps in [0.0, 0.1, 1.0] {
+            let base = ApproxEngine::new(&g, Linkage::Average, eps).run();
+            for (machines, cores) in [(1usize, 1usize), (2, 4), (5, 2), (9, 1)] {
+                let r = DistApproxEngine::new(
+                    &g,
+                    Linkage::Average,
+                    DistConfig::new(machines, cores),
+                    eps,
+                )
+                .run();
+                assert_eq!(
+                    base.dendrogram.bitwise_merges(),
+                    r.dendrogram.bitwise_merges(),
+                    "eps={eps} topology=({machines},{cores}) (n={})",
+                    g.n()
+                );
+                let key = |bs: &[quality::MergeBound]| -> Vec<(u64, u64)> {
+                    bs.iter()
+                        .map(|b| (b.weight.to_bits(), b.visible_min.to_bits()))
+                        .collect()
+                };
+                assert_eq!(
+                    key(&base.bounds),
+                    key(&r.bounds),
+                    "eps={eps} topology=({machines},{cores}): quality trace diverged"
+                );
+            }
+        }
+    });
+}
+
+/// The ε=0 anchor composes with sharding: `DistApprox(0)` equals the
+/// exact engine bitwise for every linkage on tie-heavy graphs.
+#[test]
+fn dist_approx_zero_epsilon_anchor_under_heavy_weight_ties() {
+    for_all_seeds(0xD1AD, 10, |rng| {
+        let g = random_tied_graph(rng);
+        for l in Linkage::SPARSE_REDUCIBLE {
+            let exact = RacEngine::new(&g, l).with_threads(1).run();
+            let dist =
+                DistApproxEngine::new(&g, l, DistConfig::new(4, 2), 0.0).run();
+            assert_eq!(
+                exact.dendrogram.bitwise_merges(),
+                dist.dendrogram.bitwise_merges(),
+                "{l:?} (n={})",
+                g.n()
+            );
+        }
+    });
+}
+
+/// The goodness band holds for the sharded engine's recorded trace, and
+/// its network accounting keeps the dist invariants (bytes >= messages,
+/// strictly cross-shard batches).
+#[test]
+fn dist_approx_band_and_accounting_invariants() {
+    for_all_seeds(0xD1AE, 8, |rng| {
+        let g = random_sparse_graph(rng);
+        let machines = rng.range_usize(1, 7);
+        let cores = rng.range_usize(1, 4);
+        for eps in [0.1, 1.0] {
+            let (r, report) = DistApproxEngine::new(
+                &g,
+                Linkage::Average,
+                DistConfig::new(machines, cores),
+                eps,
+            )
+            .run_detailed();
+            r.dendrogram.validate().unwrap();
+            let ratio = quality::merge_quality_ratio(&r.bounds);
+            assert!(ratio <= 1.0 + eps + 1e-12, "eps={eps}: {ratio}");
+            for b in &report.batches {
+                assert_ne!(b.src, b.dst, "local traffic accounted");
+                assert!(b.bytes >= b.messages);
+            }
+            if machines == 1 {
+                assert!(report.batches.is_empty(), "single machine must be silent");
+            }
+            assert_eq!(r.metrics.total_net_messages(), report.total_batches());
+            assert_eq!(r.metrics.total_net_bytes(), report.total_bytes());
+        }
+    });
 }
 
 #[test]

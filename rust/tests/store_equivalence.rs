@@ -1,47 +1,26 @@
-//! Differential property suite for the flat neighbor store: on random
-//! sparse graphs, the arena-backed [`RacEngine`] must produce dendrograms
-//! **bitwise identical** to the PR-1 hashmap oracle
-//! ([`HashRacEngine`]) — for every `SPARSE_REDUCIBLE` linkage — and
-//! identical to itself across thread counts 1/2/8. The distributed
-//! engine is held to the same bit-level standard, so all three neighbor
-//! representations (arena, hashmap, sharded arena) are pinned together.
+//! Differential property suite for the engine core: on random sparse
+//! graphs, **every** selector-backed engine must produce dendrograms
+//! **bitwise identical** to the PR-1 hashmap oracle ([`HashRacEngine`]) —
+//! for every `SPARSE_REDUCIBLE` linkage, across thread counts 1/2/8, and
+//! across `dist` topologies — including on tie-heavy quantised-weight
+//! graphs, the regime where the ε-good boundary rule and the stale-tie NN
+//! caches interact.
 //!
-//! This is the contract that lets the perf work proceed safely: any
-//! divergence isolates a bug in the store layer or the owner-sharded
-//! apply, because every engine shares `rac::logic` for the arithmetic.
+//! Since PR 4 all shared-memory engines run through one
+//! [`engine::RoundDriver`] loop and share `rac::logic` for the
+//! arithmetic, so any divergence isolates a bug in a store backend
+//! ([`store::NeighborStore`] vs [`rac::baseline::HashStore`]), a selector
+//! ([`engine::RnnSelector`] vs [`engine::GoodSelector`] at ε = 0), or the
+//! dist accounting wrapper — not in mirrored loop bodies.
 
-use rac_hac::dist::{DistConfig, DistRacEngine};
+use rac_hac::data::{random_sparse_graph, random_tied_graph};
+use rac_hac::dist::{DistApproxEngine, DistConfig, DistRacEngine};
 use rac_hac::graph::Graph;
 use rac_hac::linkage::{Linkage, Weight};
 use rac_hac::rac::baseline::HashRacEngine;
 use rac_hac::rac::RacEngine;
 use rac_hac::util::prop::for_all_seeds;
 use rac_hac::util::rng::Rng;
-
-/// Random sparse graph: a random tree (keeps most of the graph connected
-/// so runs produce long merge sequences) plus random extra edges, with
-/// occasional isolated tail nodes.
-fn random_sparse_graph(rng: &mut Rng) -> Graph {
-    let n = rng.range_usize(2, 140);
-    let mut edges: Vec<(u32, u32, Weight)> = Vec::new();
-    for v in 1..n {
-        // ~1 node in 12 stays detached from the tree.
-        if rng.bool_with(1.0 / 12.0) {
-            continue;
-        }
-        let u = rng.below(v) as u32;
-        edges.push((u, v as u32, rng.range_f64(0.1, 100.0)));
-    }
-    let extra = rng.range_usize(0, 3 * n);
-    for _ in 0..extra {
-        let u = rng.below(n) as u32;
-        let v = rng.below(n) as u32;
-        if u != v {
-            edges.push((u.min(v), u.max(v), rng.range_f64(0.1, 100.0)));
-        }
-    }
-    Graph::from_edges(n, edges)
-}
 
 #[test]
 fn flat_store_matches_hashmap_oracle() {
@@ -82,7 +61,8 @@ fn flat_store_identical_across_thread_counts() {
 #[test]
 fn parallel_oracle_agrees_too() {
     // The oracle's own parallelism (phases 1/2-compute/3) must not change
-    // anything either — pins the shared logic layer, not just the store.
+    // anything either — pins the shared driver + logic layers, not just
+    // the store.
     for_all_seeds(0x0AC1E, 12, |rng| {
         let g = random_sparse_graph(rng);
         for l in Linkage::SPARSE_REDUCIBLE {
@@ -106,6 +86,71 @@ fn dist_engine_matches_flat_store() {
                 "{l:?}: dist engine diverged (n={})",
                 g.n()
             );
+        }
+    });
+}
+
+/// The full driver matrix: every selector-backed engine — exact flat,
+/// ε=0 approx, exact dist, ε=0 dist_approx — pinned bitwise against the
+/// hashmap oracle, across thread counts and topologies, on both
+/// continuous-weight and tie-heavy quantised-weight graphs.
+#[test]
+fn every_selector_backed_engine_matches_the_oracle() {
+    for_all_seeds(0x0D21E2, 10, |rng| {
+        let tied = rng.bool_with(0.5);
+        let g = if tied {
+            random_tied_graph(rng)
+        } else {
+            random_sparse_graph(rng)
+        };
+        for l in Linkage::SPARSE_REDUCIBLE {
+            let want = HashRacEngine::new(&g, l)
+                .with_threads(1)
+                .run()
+                .dendrogram
+                .bitwise_merges();
+            for threads in [1usize, 2, 8] {
+                let flat = RacEngine::new(&g, l).with_threads(threads).run();
+                assert_eq!(
+                    want,
+                    flat.dendrogram.bitwise_merges(),
+                    "{l:?} rac t={threads} tied={tied} (n={})",
+                    g.n()
+                );
+                let hash = HashRacEngine::new(&g, l).with_threads(threads).run();
+                assert_eq!(
+                    want,
+                    hash.dendrogram.bitwise_merges(),
+                    "{l:?} oracle t={threads} tied={tied} (n={})",
+                    g.n()
+                );
+                let approx = rac_hac::approx::ApproxEngine::new(&g, l, 0.0)
+                    .with_threads(threads)
+                    .run();
+                assert_eq!(
+                    want,
+                    approx.dendrogram.bitwise_merges(),
+                    "{l:?} approx(0) t={threads} tied={tied} (n={})",
+                    g.n()
+                );
+            }
+            for (machines, cores) in [(1usize, 1usize), (3, 2), (7, 4)] {
+                let dist = DistRacEngine::new(&g, l, DistConfig::new(machines, cores)).run();
+                assert_eq!(
+                    want,
+                    dist.dendrogram.bitwise_merges(),
+                    "{l:?} dist_rac {machines}x{cores} tied={tied} (n={})",
+                    g.n()
+                );
+                let dapprox =
+                    DistApproxEngine::new(&g, l, DistConfig::new(machines, cores), 0.0).run();
+                assert_eq!(
+                    want,
+                    dapprox.dendrogram.bitwise_merges(),
+                    "{l:?} dist_approx(0) {machines}x{cores} tied={tied} (n={})",
+                    g.n()
+                );
+            }
         }
     });
 }
