@@ -3,7 +3,7 @@
 # it. `make bench` runs the perf-trajectory smoke bench and writes
 # BENCH_hot_paths.json (the per-PR datapoint CI uploads as an artifact).
 
-.PHONY: artifacts build test clippy fmt fmt-check bench bench-approx
+.PHONY: artifacts build test test-differential clippy fmt fmt-check bench bench-approx bench-dist
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -13,6 +13,14 @@ build:
 
 test:
 	cargo test -q
+
+# The oracle-vs-engine differential suites as a named target, so CI can
+# run them as a distinct step: a failure here means an engine diverged
+# from an oracle (hashmap store, naive HAC, per-round engine, pinned wire
+# traffic), which reads very differently from a unit failure.
+test-differential:
+	cargo test -q --test store_equivalence --test approx_quality \
+		--test dist_batching --test dist_sharding --test theorem1_exactness
 
 # Format in place; CI enforces the check variant.
 fmt:
@@ -31,3 +39,6 @@ bench:
 
 bench-approx:
 	cargo bench --bench approx_tradeoff -- --json --smoke
+
+bench-dist:
+	cargo bench --bench dist_sync -- --json --smoke

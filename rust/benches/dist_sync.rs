@@ -1,0 +1,288 @@
+//! Sync-point trajectory harness for the distributed engines.
+//!
+//! ```bash
+//! cargo bench --bench dist_sync                    # human tables
+//! cargo bench --bench dist_sync -- --json          # + BENCH_dist_sync.json
+//! cargo bench --bench dist_sync -- --json --smoke  # CI short-budget mode
+//! cargo bench --bench dist_sync -- --json --out target/dist_sync.json
+//! ```
+//!
+//! For each workload × engine × ε × topology, runs the simulated fleet
+//! and reports merges, rounds, **sync_points** (global barriers), the
+//! critical-path time model `t_sim`, and wire traffic. The headline is
+//! TeraHAC's subgraph-batching claim, pinned in-bench: on the Theorem-4
+//! adversarial chain and the Theorem-5 stable hierarchy the batched
+//! `dist_approx` engine needs strictly fewer sync points than rounds
+//! (per-round engines pay one barrier per round by construction), while
+//! merges stay O(n) and the dendrogram remains topology-invariant.
+//!
+//! CI uploads the JSON as the third perf-trajectory artifact next to
+//! `BENCH_hot_paths.json` and `BENCH_approx_tradeoff.json`.
+
+use rac_hac::approx::ApproxResult;
+use rac_hac::data;
+use rac_hac::dist::{DistApproxEngine, DistConfig, DistRacEngine, SyncMode};
+use rac_hac::graph::Graph;
+use rac_hac::linkage::Linkage;
+use rac_hac::metrics::RunMetrics;
+use rac_hac::util::bench::Table;
+use rac_hac::util::json::{obj, Json};
+
+const EPSILONS: [f64; 3] = [0.0, 0.1, 1.0];
+const TOPOLOGIES: [(usize, usize); 3] = [(1, 1), (4, 2), (8, 4)];
+const VSHARDS: u32 = 8;
+
+struct Workload {
+    name: &'static str,
+    graph: Graph,
+}
+
+fn workloads(smoke: bool) -> Vec<Workload> {
+    let (adv, stable, grid) = if smoke { (6, 6, 256) } else { (8, 8, 1024) };
+    vec![
+        Workload {
+            name: "adversarial",
+            graph: data::adversarial_thm4(adv),
+        },
+        Workload {
+            name: "stable_hierarchy",
+            graph: data::stable_hierarchy(stable, 4.0, 23),
+        },
+        Workload {
+            name: "grid1d",
+            graph: data::grid1d_graph(grid, 11),
+        },
+    ]
+}
+
+struct Cell {
+    workload: &'static str,
+    engine: &'static str,
+    epsilon: f64,
+    machines: usize,
+    cpus: usize,
+    merges: usize,
+    rounds: usize,
+    sync_points: usize,
+    t_sim_us: usize,
+    net_messages: usize,
+    net_bytes: usize,
+}
+
+impl Cell {
+    fn from_metrics(
+        workload: &'static str,
+        engine: &'static str,
+        epsilon: f64,
+        (machines, cpus): (usize, usize),
+        merges: usize,
+        m: &RunMetrics,
+    ) -> Cell {
+        Cell {
+            workload,
+            engine,
+            epsilon,
+            machines,
+            cpus,
+            merges,
+            rounds: m.rounds.len(),
+            sync_points: m.total_sync_points(),
+            t_sim_us: m.total_sim_time().as_micros() as usize,
+            net_messages: m.total_net_messages(),
+            net_bytes: m.total_net_bytes(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        obj([
+            ("workload", self.workload.into()),
+            ("engine", self.engine.into()),
+            ("epsilon", self.epsilon.into()),
+            ("machines", self.machines.into()),
+            ("cpus", self.cpus.into()),
+            ("merges", self.merges.into()),
+            ("rounds", self.rounds.into()),
+            ("sync_points", self.sync_points.into()),
+            ("t_sim_us", self.t_sim_us.into()),
+            ("net_messages", self.net_messages.into()),
+            ("net_bytes", self.net_bytes.into()),
+        ])
+    }
+}
+
+fn run_batched(g: &Graph, topo: (usize, usize), eps: f64) -> ApproxResult {
+    DistApproxEngine::new(g, Linkage::Average, DistConfig::new(topo.0, topo.1), eps)
+        .with_sync_mode(SyncMode::Batched { vshards: VSHARDS })
+        .run()
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let write_json = args.iter().any(|a| a == "--json");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_dist_sync.json".to_string());
+
+    let mut cells: Vec<Cell> = Vec::new();
+    let mut workload_meta: Vec<Json> = Vec::new();
+    for w in workloads(smoke) {
+        println!("== workload {}: n={} edges={} ==", w.name, w.graph.n(), w.graph.m());
+        workload_meta.push(obj([
+            ("name", w.name.into()),
+            ("n", w.graph.n().into()),
+            ("edges", w.graph.m().into()),
+        ]));
+        let t = Table::new(
+            &[
+                "engine", "epsilon", "machines", "cpus", "rounds", "syncs", "t_sim", "net_kB",
+            ],
+            &[20, 8, 9, 5, 7, 6, 12, 9],
+        );
+        for &topo in &TOPOLOGIES {
+            // Exact baseline: one barrier per round, rounds = merge
+            // schedule of exact RAC.
+            let exact =
+                DistRacEngine::new(&w.graph, Linkage::Average, DistConfig::new(topo.0, topo.1))
+                    .run();
+            cells.push(Cell::from_metrics(
+                w.name,
+                "dist_rac",
+                0.0,
+                topo,
+                exact.dendrogram.merges().len(),
+                &exact.metrics,
+            ));
+            for eps in EPSILONS {
+                let unbatched = DistApproxEngine::new(
+                    &w.graph,
+                    Linkage::Average,
+                    DistConfig::new(topo.0, topo.1),
+                    eps,
+                )
+                .run();
+                assert_eq!(
+                    unbatched.metrics.total_sync_points(),
+                    unbatched.metrics.rounds.len(),
+                    "per-round engine: every round is a sync point"
+                );
+                cells.push(Cell::from_metrics(
+                    w.name,
+                    "dist_approx",
+                    eps,
+                    topo,
+                    unbatched.dendrogram.merges().len(),
+                    &unbatched.metrics,
+                ));
+
+                let batched = run_batched(&w.graph, topo, eps);
+                assert_eq!(
+                    batched.dendrogram.merges().len(),
+                    unbatched.dendrogram.merges().len(),
+                    "batching must not lose merges"
+                );
+                let (rounds, syncs) = (
+                    batched.metrics.rounds.len(),
+                    batched.metrics.total_sync_points(),
+                );
+                assert!(syncs <= rounds, "{}: sync_points > rounds", w.name);
+                if w.name != "grid1d" {
+                    // The collapse workloads: strictly fewer barriers
+                    // than rounds (the acceptance-bar claim).
+                    assert!(
+                        syncs < rounds,
+                        "{} eps={eps}: batching produced no local rounds",
+                        w.name
+                    );
+                }
+                cells.push(Cell::from_metrics(
+                    w.name,
+                    "dist_approx_batched",
+                    eps,
+                    topo,
+                    batched.dendrogram.merges().len(),
+                    &batched.metrics,
+                ));
+            }
+        }
+        // Topology invariance of the batched schedule (quick in-bench
+        // anchor; the full property lives in rust/tests/dist_batching.rs).
+        let a = run_batched(&w.graph, TOPOLOGIES[0], 0.1);
+        let b = run_batched(&w.graph, TOPOLOGIES[2], 0.1);
+        assert_eq!(
+            a.dendrogram.bitwise_merges(),
+            b.dendrogram.bitwise_merges(),
+            "{}: batched dendrogram depends on topology",
+            w.name
+        );
+        for c in cells.iter().filter(|c| c.workload == w.name) {
+            t.row(&[
+                c.engine,
+                &c.epsilon.to_string(),
+                &c.machines.to_string(),
+                &c.cpus.to_string(),
+                &c.rounds.to_string(),
+                &c.sync_points.to_string(),
+                &format!("{}us", c.t_sim_us),
+                &format!("{:.1}", c.net_bytes as f64 / 1024.0),
+            ]);
+        }
+        println!();
+    }
+
+    // Headline: barrier collapse on the adversarial chain at ε = 1,
+    // default fleet (4 machines × 2 cpus).
+    let pick = |engine: &str| {
+        cells
+            .iter()
+            .find(|c| {
+                c.workload == "adversarial"
+                    && c.engine == engine
+                    && c.machines == 4
+                    && (c.engine == "dist_rac" || c.epsilon == 1.0)
+            })
+            .expect("headline cell measured")
+    };
+    let (exact, unbatched, batched) =
+        (pick("dist_rac"), pick("dist_approx"), pick("dist_approx_batched"));
+    println!(
+        "headline (adversarial, average, 4x2): dist_rac {} rounds/syncs vs \
+         dist_approx(eps=1) {} vs batched {} rounds / {} sync points \
+         ({} merges, t_sim {}us vs {}us)",
+        exact.rounds,
+        unbatched.rounds,
+        batched.rounds,
+        batched.sync_points,
+        batched.merges,
+        batched.t_sim_us,
+        unbatched.t_sim_us,
+    );
+
+    if write_json {
+        let report = obj([
+            ("schema", "bench_dist_sync/v1".into()),
+            ("mode", (if smoke { "smoke" } else { "full" }).into()),
+            ("vshards", (VSHARDS as usize).into()),
+            ("workloads", Json::Arr(workload_meta)),
+            (
+                "headline",
+                obj([
+                    ("workload", "adversarial".into()),
+                    ("rounds_dist_rac", exact.rounds.into()),
+                    ("rounds_dist_approx_eps1", unbatched.rounds.into()),
+                    ("rounds_batched_eps1", batched.rounds.into()),
+                    ("sync_points_batched_eps1", batched.sync_points.into()),
+                    ("merges", batched.merges.into()),
+                ]),
+            ),
+            ("cells", Json::Arr(cells.iter().map(Cell::to_json).collect())),
+        ]);
+        std::fs::write(&out_path, format!("{report}\n")).expect("write bench report");
+        println!("\nwrote {out_path}");
+    }
+
+    println!("\ndist_sync bench OK");
+}

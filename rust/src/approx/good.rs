@@ -102,9 +102,29 @@ pub fn scan_row_candidates<N: NeighborsRef>(
     nn_weight: &[Weight],
     nn: &[u32],
 ) -> (Vec<(Weight, u32)>, usize) {
+    scan_row_candidates_scoped(row, a, epsilon, nn_weight, nn, |_, _| true)
+}
+
+/// [`scan_row_candidates`] restricted to a caller-supplied edge scope:
+/// only edges with `scope(a, b)` true are eligibility-tested. The hook
+/// behind the subgraph-batching engines — a scope admitting only edges
+/// whose endpoints share a (virtual) shard turns the sweep into the
+/// shard-local phase of TeraHAC-style batching
+/// ([`crate::engine::EdgeScope`], `crate::dist`'s batched `SyncMode`).
+/// The whole row is still scanned (and accounted): a real shard owns its
+/// rows and must look at every live entry to find the in-scope ones.
+pub fn scan_row_candidates_scoped<N: NeighborsRef>(
+    row: N,
+    a: u32,
+    epsilon: f64,
+    nn_weight: &[Weight],
+    nn: &[u32],
+    scope: impl Fn(u32, u32) -> bool,
+) -> (Vec<(Weight, u32)>, usize) {
     let mut out = Vec::new();
     row.for_each_edge(|b, e| {
         if b > a
+            && scope(a, b)
             && accepts(e.weight, b, epsilon, nn_weight[a as usize], nn[a as usize])
             && accepts(e.weight, a, epsilon, nn_weight[b as usize], nn[b as usize])
         {
@@ -218,6 +238,31 @@ mod tests {
         assert_eq!(cands, vec![(1.05, 2)]);
         let (cands, _) = scan_row_candidates(s.row(0), 0, 0.1, &nn_weight, &nn);
         assert_eq!(cands, vec![(1.0, 1)]);
+    }
+
+    #[test]
+    fn scoped_scan_filters_but_still_accounts_the_whole_row() {
+        use crate::graph::Graph;
+        use crate::store::NeighborStore;
+        let g = Graph::from_edges(4, [(0, 1, 1.0), (1, 2, 1.05), (1, 3, 2.0)]);
+        let s = NeighborStore::from_graph(&g);
+        let nn = [1u32, 0, 1, 1];
+        let nn_weight = [1.0, 1.0, 1.05, 2.0];
+        // Unscoped, cluster 1 yields (1.05, 2); a scope that splits
+        // {0, 1} from {2, 3} rejects it without touching the criterion.
+        let scope = |a: u32, b: u32| (a < 2) == (b < 2);
+        let (cands, scanned) =
+            scan_row_candidates_scoped(s.row(1), 1, 0.1, &nn_weight, &nn, scope);
+        assert_eq!(scanned, 3, "scope must not shrink the scan accounting");
+        assert!(cands.is_empty());
+        // Edges inside the scope still pass (cluster 0 tests (0, 1)).
+        let (cands, _) = scan_row_candidates_scoped(s.row(0), 0, 0.1, &nn_weight, &nn, scope);
+        assert_eq!(cands, vec![(1.0, 1)]);
+        // A pass-all scope is exactly the unscoped scan.
+        let (all, _) = scan_row_candidates(s.row(1), 1, 0.1, &nn_weight, &nn);
+        let (scoped_all, _) =
+            scan_row_candidates_scoped(s.row(1), 1, 0.1, &nn_weight, &nn, |_, _| true);
+        assert_eq!(all, scoped_all);
     }
 
     #[test]

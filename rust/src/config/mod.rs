@@ -16,6 +16,7 @@ use std::str::FromStr;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::data::Metric;
+use crate::dist::{SyncMode, DEFAULT_VSHARDS};
 use crate::linkage::Linkage;
 
 /// Which dataset generator to run (DESIGN.md §1 substitutions).
@@ -64,12 +65,15 @@ pub enum EngineSpec {
     /// merges); `epsilon = 0` is bitwise-exact RAC.
     Approx { epsilon: f64, threads: usize },
     /// Distributed (1+ε)-approximate engine: ε-good merges over sharded
-    /// state; bitwise-identical to `Approx` for every topology and to
-    /// `DistRac` at `epsilon = 0`.
+    /// state; with `sync: PerRound` bitwise-identical to `Approx` for
+    /// every topology and to `DistRac` at `epsilon = 0`; with
+    /// `sync: Batched` runs TeraHAC-style shard-local merge batching
+    /// (`sync_mode = "batched"`, optional `vshards`).
     DistApprox {
         machines: usize,
         cpus: usize,
         epsilon: f64,
+        sync: SyncMode,
     },
 }
 
@@ -161,6 +165,7 @@ impl RunConfig {
                     machines,
                     cpus,
                     epsilon: parse_epsilon(&doc)?,
+                    sync: parse_sync_mode(&doc)?,
                 }
             }
             other => bail!("unknown engine.type {other:?}"),
@@ -207,6 +212,36 @@ fn parse_epsilon(doc: &TomlDoc) -> Result<f64> {
         bail!("engine.epsilon must be finite and >= 0, got {epsilon}");
     }
     Ok(epsilon)
+}
+
+/// Parse + validate `dist_approx`'s synchronisation schedule:
+/// `sync_mode = "per_round"` (default) or `"batched"`, with an optional
+/// `vshards` block count that only makes sense when batching.
+fn parse_sync_mode(doc: &TomlDoc) -> Result<SyncMode> {
+    let mode = doc.str_or("engine", "sync_mode", "per_round")?;
+    match mode.as_str() {
+        "per_round" => {
+            if doc.get("engine", "vshards").is_some() {
+                bail!(
+                    "engine.vshards only applies to sync_mode = \"batched\" \
+                     (per_round has no subgraph partition)"
+                );
+            }
+            Ok(SyncMode::PerRound)
+        }
+        "batched" => {
+            let vshards = doc.usize_or("engine", "vshards", DEFAULT_VSHARDS as usize)?;
+            if vshards == 0 {
+                bail!("engine.vshards must be >= 1 (got 0)");
+            }
+            let vshards = u32::try_from(vshards)
+                .map_err(|_| anyhow!("engine.vshards must fit in u32 (got {vshards})"))?;
+            Ok(SyncMode::Batched { vshards })
+        }
+        other => bail!(
+            "unknown engine.sync_mode {other:?} (expected \"per_round\" or \"batched\")"
+        ),
+    }
 }
 
 #[cfg(test)]
@@ -316,7 +351,8 @@ cpus = 4
             EngineSpec::DistApprox {
                 machines: 4,
                 cpus: 2,
-                epsilon: 0.1
+                epsilon: 0.1,
+                sync: SyncMode::PerRound
             }
         );
         // Integer-literal epsilon coerces, as for `approx`.
@@ -329,13 +365,85 @@ cpus = 4
             EngineSpec::DistApprox {
                 machines: 8,
                 cpus: 3,
-                epsilon: 0.0
+                epsilon: 0.0,
+                sync: SyncMode::PerRound
             }
         );
         assert!(RunConfig::from_toml_str(
             "[engine]\ntype = \"dist_approx\"\nepsilon = -1.0\n"
         )
         .is_err());
+    }
+
+    #[test]
+    fn dist_approx_sync_mode_parses_and_validates() {
+        // Batched with the documented default block count.
+        let cfg = RunConfig::from_toml_str(
+            "[engine]\ntype = \"dist_approx\"\nsync_mode = \"batched\"\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.engine,
+            EngineSpec::DistApprox {
+                machines: 4,
+                cpus: 2,
+                epsilon: 0.1,
+                sync: SyncMode::Batched {
+                    vshards: DEFAULT_VSHARDS
+                }
+            }
+        );
+        // Explicit vshards.
+        let cfg = RunConfig::from_toml_str(
+            "[engine]\ntype = \"dist_approx\"\nsync_mode = \"batched\"\nvshards = 16\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.engine,
+            EngineSpec::DistApprox {
+                machines: 4,
+                cpus: 2,
+                epsilon: 0.1,
+                sync: SyncMode::Batched { vshards: 16 }
+            }
+        );
+        // Explicit per_round round-trips to the default.
+        let cfg = RunConfig::from_toml_str(
+            "[engine]\ntype = \"dist_approx\"\nsync_mode = \"per_round\"\n",
+        )
+        .unwrap();
+        assert!(matches!(
+            cfg.engine,
+            EngineSpec::DistApprox {
+                sync: SyncMode::PerRound,
+                ..
+            }
+        ));
+        // vshards without batching is a configuration error, named.
+        let err = RunConfig::from_toml_str("[engine]\ntype = \"dist_approx\"\nvshards = 8\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("vshards") && err.contains("batched"), "{err}");
+        // Zero blocks, u32 overflow, and unknown modes are rejected with
+        // the field name.
+        let err = RunConfig::from_toml_str(
+            "[engine]\ntype = \"dist_approx\"\nsync_mode = \"batched\"\nvshards = 0\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("vshards"), "{err}");
+        let err = RunConfig::from_toml_str(
+            "[engine]\ntype = \"dist_approx\"\nsync_mode = \"batched\"\nvshards = 4294967296\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("vshards"), "{err}");
+        let err = RunConfig::from_toml_str(
+            "[engine]\ntype = \"dist_approx\"\nsync_mode = \"eventually\"\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("sync_mode"), "{err}");
     }
 
     #[test]

@@ -58,14 +58,65 @@
 //! [`crate::engine::RoundDriver`] phase for phase (selection logic is
 //! literally shared via [`crate::approx::good`] and the reciprocal-NN
 //! condition); it stays a separate loop because traffic/load accounting is
-//! woven through every phase. Folding it into the driver is the ROADMAP's
-//! subgraph-batching item.
+//! woven through every phase.
+//!
+//! ## Subgraph batching (`SyncMode::Batched`)
+//!
+//! The per-round engines pay one global synchronisation *every* round:
+//! the ε-good find phase alone costs an NN-cache exchange, a candidate
+//! gather at the coordinator, and a matching broadcast. TeraHAC
+//! (arXiv:2308.03578) keeps those off the critical path by running many
+//! good merges *inside* machine-local subgraphs between synchronisations.
+//! [`SyncMode::Batched`] is that protocol over this crate's determinism
+//! discipline:
+//!
+//! * Clusters are partitioned into `vshards` contiguous-id blocks
+//!   ([`shard::vshard_of`]) — a *topology-independent* stand-in for
+//!   TeraHAC's locality-maximising graph partition. Machines own whole
+//!   blocks ([`shard::Placement::Blocked`]), so a block-local merge never
+//!   needs another machine.
+//! * Each round runs **one** eligibility sweep (the shared
+//!   [`good::scan_row_candidates`] test) and partitions the candidates
+//!   into *co-block* — every input to the test is machine-local, so the
+//!   edge is mergeable with zero traffic — and *frontier*. Co-block
+//!   selection is exactly what a shared-memory
+//!   [`crate::engine::RoundDriver`] under the co-block
+//!   [`crate::engine::EdgeScope`] mask would pick (blocks are
+//!   endpoint-disjoint; `rust/tests/dist_batching.rs` pins the batched
+//!   run's pre-sync merge prefix bitwise against a scoped driver run).
+//!   Local rounds send **nothing**: phase-2 patches whose target lives
+//!   on another machine are *deferred* — staged as
+//!   [`Message::EdgePatch`] batches and flushed at the next sync point,
+//!   which is when a real deployment would reconcile frontier replicas.
+//! * Only when a local round finds no merge does the engine fall back to
+//!   the full global exchange (the unbatched find phase, frontier edges
+//!   included) — one **sync point**, counted in
+//!   [`RoundMetrics::sync_points`] (1 per round for the per-round
+//!   engines; the batched engine's headline is `sync_points < rounds`,
+//!   demonstrated by `benches/dist_sync.rs` / `BENCH_dist_sync.json`).
+//!
+//! Correctness model: as everywhere in `dist`, the *computation* reads
+//! the authoritative global state (so the dendrogram and quality trace
+//! are bitwise invariant across `(machines, cpus)` — the partition
+//! depends only on `(n, vshards)`), while the *traffic model* charges
+//! what the deferred-flush protocol would ship, and only at sync
+//! boundaries. A real deployment working from deferred (stale) frontier
+//! state stays inside the quality contract by reducibility: patches never
+//! lower a row's minimum, so a stale NN cache under-estimates the
+//! visible minimum and only *tightens* the (1+ε) acceptance band. Every
+//! recorded merge is still audited against the fresh visible minimum
+//! (`rust/tests/dist_batching.rs`). At ε = 0 the batched schedule merges
+//! only reciprocal-NN pairs, so it builds the same merge tree as the
+//! exact engines whenever linkage values are distinct — but grouping
+//! merges into different rounds associates the Lance–Williams folds
+//! differently, so equality is dendrogram-wise (`same_clustering`), not
+//! bitwise; the bitwise ε = 0 anchor is the *unbatched* engine's.
 
 pub mod network;
 pub mod shard;
 
 pub use network::{decode_batch, encode_batch, BatchRecord, Message, NetReport, Network};
-pub use shard::{partition, shard_of, ShardLoad};
+pub use shard::{partition, shard_of, vshard_of, Placement, ShardLoad, VShardScope};
 
 use std::time::{Duration, Instant};
 
@@ -116,6 +167,26 @@ impl Default for DistConfig {
     }
 }
 
+/// Default virtual-shard count for [`SyncMode::Batched`] (the config-file
+/// default when `sync_mode = "batched"` gives no `vshards`).
+pub const DEFAULT_VSHARDS: u32 = 64;
+
+/// Synchronisation schedule of the ε-good distributed engine.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum SyncMode {
+    /// One global synchronisation per round (the PR-4 engine, unchanged —
+    /// and the bitwise ε = 0 anchor to `dist_rac`).
+    #[default]
+    PerRound,
+    /// TeraHAC-style subgraph batching: drain (1+ε)-good merges inside
+    /// `vshards` contiguous-id blocks between synchronisations, syncing
+    /// only when no block-local merge remains (module docs). `vshards` is
+    /// part of the algorithm configuration — it changes the merge
+    /// schedule (never the quality contract), while `(machines, cpus)`
+    /// never change anything but traffic and `t_sim`.
+    Batched { vshards: u32 },
+}
+
 type UnionEntry = crate::store::UnionRow;
 
 /// Phase-1 strategy for the sharded round body — the distributed analogue
@@ -126,8 +197,12 @@ type UnionEntry = crate::store::UnionRow;
 enum DistSelector {
     /// Reciprocal nearest neighbors (exact).
     Rnn,
-    /// (1+ε)-good merge matching.
+    /// (1+ε)-good merge matching, one global sync per round.
     Good { epsilon: f64 },
+    /// (1+ε)-good matching with shard-local subgraph batching: co-block
+    /// merges drain locally (no traffic, deferred patches), the global
+    /// exchange runs only when a local round is dry (module docs).
+    GoodBatched { epsilon: f64, vshards: u32 },
 }
 
 /// The state and round body shared by both distributed engines. The
@@ -156,6 +231,14 @@ struct DistCore {
     /// Flat arena-backed adjacency, shared representation with the
     /// shared-memory engines ([`crate::store`]).
     store: NeighborStore,
+    /// Cluster → machine ownership for the traffic accounting (never
+    /// affects results). `Mod` for the per-round engines; `Blocked` when
+    /// batching, so virtual shards are machine-local.
+    place: Placement,
+    /// Cross-machine patches generated by local (non-sync) rounds, staged
+    /// per ordered machine pair and flushed as real batches at the next
+    /// sync point — "wire traffic only at sync boundaries".
+    pending: Vec<Vec<Message>>,
     /// Hard cap on rounds (safety valve, as in the shared-memory engines).
     max_rounds: usize,
 }
@@ -191,8 +274,18 @@ impl DistCore {
             // Rows pre-sized exactly from the CSR degrees — one arena
             // allocation, no per-insert growth.
             store: NeighborStore::from_graph(g),
+            place: Placement::Mod {
+                machines: cfg.machines,
+            },
+            pending: vec![Vec::new(); cfg.machines * cfg.machines],
             max_rounds: 4 * n + 64,
         }
+    }
+
+    /// The machine owning `cluster` under this engine's placement.
+    #[inline]
+    fn machine_of(&self, cluster: u32) -> usize {
+        self.place.machine_of(cluster)
     }
 
     /// Run the sharded round loop to completion.
@@ -223,11 +316,24 @@ impl DistCore {
             let mut load = vec![ShardLoad::default(); m];
 
             // ---- Phase 1: select this round's merge pairs ---------------
+            // Every round of the per-round engines is one global
+            // synchronisation; a batched round is local (and silent)
+            // unless its shard-local merges are exhausted, in which case
+            // it escalates to a sync point in place — flushing the
+            // deferred cross-machine patches first, so the exchange
+            // operates on reconciled replicas.
             let t = Instant::now();
-            let pairs = match selector {
-                DistSelector::Rnn => self.select_reciprocal(&mut net, &mut load),
+            let (pairs, synced) = match selector {
+                DistSelector::Rnn => {
+                    rm.sync_points = 1;
+                    (self.select_reciprocal(&mut net, &mut load), true)
+                }
                 DistSelector::Good { epsilon } => {
-                    self.select_good(epsilon, &mut net, &mut load, &mut rm)
+                    rm.sync_points = 1;
+                    (self.select_good(epsilon, &mut net, &mut load, &mut rm), true)
+                }
+                DistSelector::GoodBatched { epsilon, vshards } => {
+                    self.select_good_batched(epsilon, vshards, &mut net, &mut load, &mut rm)
                 }
             };
             rm.t_find = t.elapsed();
@@ -241,7 +347,7 @@ impl DistCore {
 
             // ---- Phase 2: update cluster dissimilarities ----------------
             let t = Instant::now();
-            let unions = self.compute_unions(&pairs, &mut net, &mut load);
+            let unions = self.compute_unions(&pairs, &mut net, &mut load, synced);
             for p in &pairs {
                 merges.push(Merge {
                     a: p.leader,
@@ -254,7 +360,7 @@ impl DistCore {
                         .min(self.nn_weight[p.partner as usize]),
                 });
             }
-            self.apply_unions(unions, &mut net);
+            self.apply_unions(unions, &mut net, synced);
             n_active -= rm.merges;
             self.active_ids.retain(|&c| self.active[c as usize]);
             rm.t_merge = t.elapsed();
@@ -280,7 +386,7 @@ impl DistCore {
                 self.nn[c as usize] = nn;
                 self.nn_weight[c as usize] = w;
                 rm.nn_scan_entries += scanned;
-                load[shard_of(c, m)].nn_scan_work += scanned as u64;
+                load[self.machine_of(c)].nn_scan_work += scanned as u64;
             }
             // Clear this round's selection (phase-1 invariant; retired
             // partners' stale flags are unreachable).
@@ -290,6 +396,16 @@ impl DistCore {
             }
             rm.t_update_nn = t.elapsed();
 
+            if n_active <= 1 {
+                // A local round can finish the run outright only when one
+                // machine holds every remaining cluster (cross-machine
+                // merges happen at sync points, which flush) — so nothing
+                // deferred can be pending here.
+                debug_assert!(
+                    self.pending.iter().all(Vec::is_empty),
+                    "run finished with unflushed deferred patches"
+                );
+            }
             finish_round(&mut rm, &mut net, &load, cores);
             metrics.rounds.push(rm);
 
@@ -334,11 +450,8 @@ impl DistCore {
 
     /// ε-good phase 1 over the sharded state: exchange remote NN caches,
     /// scan owned rows for edges both endpoints accept
-    /// ([`good::accepts`]), gather candidates at the matching coordinator
-    /// (machine 0), select the maximal conflict-free matching
-    /// ([`good::select_matching`] — the same deterministic function the
-    /// shared-memory [`crate::engine::GoodSelector`] runs, so the selected
-    /// pairs are identical), and broadcast it back.
+    /// ([`good::accepts`]), then run the shared coordinator matching
+    /// ([`Self::coordinate_matching`]).
     fn select_good(
         &mut self,
         epsilon: f64,
@@ -346,7 +459,6 @@ impl DistCore {
         load: &mut [ShardLoad],
         rm: &mut RoundMetrics,
     ) -> Vec<MergePair> {
-        let m = net.machines();
         self.exchange_nn_caches(epsilon, net, load);
 
         // Local scans, in ascending id order, through the single shared
@@ -365,12 +477,102 @@ impl DistCore {
             rm.eligibility_scan_entries += scanned;
             candidates.extend(row_cands.into_iter().map(|(w, b)| (w, a, b)));
         }
+        self.coordinate_matching(candidates, net, load)
+    }
 
+    /// Batched phase 1: **one** eligibility sweep per round, partitioned
+    /// into co-block candidates (decidable and mergeable with zero
+    /// traffic — every input to the test lives on the block's machine)
+    /// and frontier candidates (their remote halves need the global
+    /// exchange; the simulation evaluates them against the authoritative
+    /// state as usual, and they are *used* only at sync rounds, where the
+    /// cache-exchange traffic is staged). Local merges win the round when
+    /// any exist: blocks are endpoint-disjoint, so pooling the co-block
+    /// candidates through the shared [`good::select_matching`] yields
+    /// exactly the union of the per-block matchings a fleet of scoped
+    /// per-shard drivers would select (`rust/tests/dist_batching.rs` pins
+    /// the equivalence). At the local fixed point the round escalates to
+    /// a sync in place: deferred patches flush, the cache queries are
+    /// staged (the sweep itself is already charged — no double count),
+    /// and the full candidate set — exactly the frontier, the local set
+    /// being empty — goes through the same coordinator matching as the
+    /// per-round engine.
+    fn select_good_batched(
+        &mut self,
+        epsilon: f64,
+        vshards: u32,
+        net: &mut Network,
+        load: &mut [ShardLoad],
+        rm: &mut RoundMetrics,
+    ) -> (Vec<MergePair>, bool) {
+        let n = self.n;
+        let mut local: Vec<good::Candidate> = Vec::new();
+        let mut frontier: Vec<good::Candidate> = Vec::new();
+        for &a in &self.active_ids {
+            load[self.machine_of(a)].find_work += self.store.row(a).live_len() as u64;
+            let (row_cands, scanned) = good::scan_row_candidates(
+                self.store.row(a),
+                a,
+                epsilon,
+                &self.nn_weight,
+                &self.nn,
+            );
+            rm.eligibility_scan_entries += scanned;
+            let va = vshard_of(a, n, vshards);
+            for (w, b) in row_cands {
+                if vshard_of(b, n, vshards) == va {
+                    local.push((w, a, b));
+                } else {
+                    frontier.push((w, a, b));
+                }
+            }
+        }
+        if !local.is_empty() {
+            // Each block's matching runs on its own machine.
+            for &(_, a, _) in &local {
+                load[self.machine_of(a)].find_work += 1;
+            }
+            let pairs = good::select_matching(local, &mut self.matched);
+            for p in &pairs {
+                debug_assert_eq!(
+                    self.machine_of(p.leader),
+                    self.machine_of(p.partner),
+                    "local merges must be machine-local"
+                );
+                self.partner[p.leader as usize] = p.partner;
+                self.partner[p.partner as usize] = p.leader;
+                self.pair_weight[p.leader as usize] = p.weight;
+                self.pair_weight[p.partner as usize] = p.weight;
+            }
+            (pairs, false)
+        } else {
+            rm.sync_points = 1;
+            self.flush_pending(net);
+            self.stage_nn_cache_queries(epsilon, net);
+            (self.coordinate_matching(frontier, net, load), true)
+        }
+    }
+
+    /// Coordinator step shared by the per-round and batched sync paths:
+    /// ship each machine's candidates to the coordinator (machine 0),
+    /// select the maximal conflict-free matching
+    /// ([`good::select_matching`] — the same deterministic function the
+    /// shared-memory [`crate::engine::GoodSelector`] runs, so the
+    /// selected pairs are identical), record the pair bookkeeping, and
+    /// broadcast the selection to every shard owning active clusters
+    /// (idle shards have nothing to merge or patch).
+    fn coordinate_matching(
+        &mut self,
+        candidates: Vec<good::Candidate>,
+        net: &mut Network,
+        load: &mut [ShardLoad],
+    ) -> Vec<MergePair> {
+        let m = net.machines();
         // Ship each shard's candidates to the coordinator...
         if m > 1 {
             let mut per_shard: Vec<Vec<(Weight, u32, u32)>> = vec![Vec::new(); m];
             for &(w, a, b) in &candidates {
-                per_shard[shard_of(a, m)].push((w, a, b));
+                per_shard[self.machine_of(a)].push((w, a, b));
             }
             for (s, edges) in per_shard.into_iter().enumerate() {
                 if s != 0 && !edges.is_empty() {
@@ -387,8 +589,7 @@ impl DistCore {
             self.pair_weight[p.leader as usize] = p.weight;
             self.pair_weight[p.partner as usize] = p.weight;
         }
-        // ...and broadcasts the selection to every shard that owns live
-        // clusters (idle shards have nothing to merge or patch).
+        // ...and broadcasts the selection.
         if m > 1 && !pairs.is_empty() {
             let sel: Vec<(u32, u32, Weight)> = pairs
                 .iter()
@@ -396,7 +597,7 @@ impl DistCore {
                 .collect();
             let mut has_active = vec![false; m];
             for &c in &self.active_ids {
-                has_active[shard_of(c, m)] = true;
+                has_active[self.machine_of(c)] = true;
             }
             for (s, owns) in has_active.iter().enumerate() {
                 if s != 0 && *owns {
@@ -407,6 +608,20 @@ impl DistCore {
         pairs
     }
 
+    /// Ship the cross-machine patches deferred by local rounds as real
+    /// batches, charged to the current round (a sync boundary).
+    fn flush_pending(&mut self, net: &mut Network) {
+        let m = net.machines();
+        for src in 0..m {
+            for dst in 0..m {
+                let batch = std::mem::take(&mut self.pending[src * m + dst]);
+                if !batch.is_empty() {
+                    net.send(src, dst, &batch);
+                }
+            }
+        }
+    }
+
     /// Exact phase-1 traffic: every shard must evaluate `nn(nn(c)) == c`
     /// for its clusters, which needs the NN pointer of each *remote*
     /// `nn(c)`. Queries are deduplicated per (asking shard, target
@@ -414,7 +629,7 @@ impl DistCore {
     fn exchange_nn_pointers(&self, net: &mut Network, load: &mut [ShardLoad]) {
         let m = net.machines();
         for &c in &self.active_ids {
-            load[shard_of(c, m)].find_work += 1;
+            load[self.machine_of(c)].find_work += 1;
         }
         if m == 1 {
             return;
@@ -426,7 +641,7 @@ impl DistCore {
             if v == NO_NN {
                 continue;
             }
-            let (src, dst) = (shard_of(c, m), shard_of(v, m));
+            let (src, dst) = (self.machine_of(c), self.machine_of(v));
             if src != dst && seen.insert((src, v)) {
                 queries[src * m + dst].push(Message::NnQuery { cluster: v });
             }
@@ -467,17 +682,24 @@ impl DistCore {
     /// state directly), only tightens the traffic model. Scan work is
     /// charged to the scanning shard.
     fn exchange_nn_caches(&self, epsilon: f64, net: &mut Network, load: &mut [ShardLoad]) {
-        let m = net.machines();
         for &a in &self.active_ids {
-            load[shard_of(a, m)].find_work += self.store.row(a).live_len() as u64;
+            load[self.machine_of(a)].find_work += self.store.row(a).live_len() as u64;
         }
+        self.stage_nn_cache_queries(epsilon, net);
+    }
+
+    /// The staging half of [`Self::exchange_nn_caches`]: queries/replies
+    /// only, no scan-work charge — the batched sync path calls this after
+    /// its (already charged) partitioned sweep.
+    fn stage_nn_cache_queries(&self, epsilon: f64, net: &mut Network) {
+        let m = net.machines();
         if m == 1 {
             return;
         }
         let mut queries: Vec<Vec<Message>> = vec![Vec::new(); m * m];
         let mut seen: FxHashSet<(usize, u32)> = FxHashSet::default();
         for &a in &self.active_ids {
-            let sa = shard_of(a, m);
+            let sa = self.machine_of(a);
             for (b, e) in self.store.row(a).iter() {
                 if b > a
                     && good::accepts(
@@ -488,7 +710,7 @@ impl DistCore {
                         self.nn[a as usize],
                     )
                 {
-                    let sb = shard_of(b, m);
+                    let sb = self.machine_of(b);
                     if sb != sa && seen.insert((sa, b)) {
                         queries[sa * m + sb].push(Message::NnCacheQuery { cluster: b });
                     }
@@ -526,11 +748,18 @@ impl DistCore {
     /// while the traffic a real deployment would need — partner-state
     /// fetches, remote pair-view lookups — is staged and delivered as
     /// per-pair batches.
+    ///
+    /// In a batched engine's local round (`synced == false`) nothing is
+    /// staged: leaders and partners share a machine by construction, and
+    /// a real deployment's local phase reads its own (frontier-stale)
+    /// replicas instead of querying remote pair views — the sync point is
+    /// where reconciliation traffic flows (module docs).
     fn compute_unions(
         &self,
         pairs: &[MergePair],
         net: &mut Network,
         load: &mut [ShardLoad],
+        synced: bool,
     ) -> Vec<UnionEntry> {
         let m = net.machines();
         let mut stage: Vec<Vec<Message>> = vec![Vec::new(); m * m];
@@ -538,32 +767,34 @@ impl DistCore {
         let mut out = Vec::with_capacity(pairs.len());
         for pr in pairs {
             let (l, p) = (pr.leader, pr.partner);
-            let (sl, sp) = (shard_of(l, m), shard_of(p, m));
+            let (sl, sp) = (self.machine_of(l), self.machine_of(p));
             load[sl].merge_work +=
                 (self.store.row(l).live_len() + self.store.row(p).live_len()) as u64;
-            if sl != sp {
-                stage[sl * m + sp].push(Message::PartnerFetch { partner: p });
-                stage[sp * m + sl].push(Message::PartnerState {
-                    partner: p,
-                    size: self.size[p as usize],
-                    entries: self
-                        .store
-                        .row(p)
-                        .iter()
-                        .map(|(t, e)| (t, e.weight, e.count))
-                        .collect(),
-                });
-            }
-            // Pair views the union computation will request: every
-            // neighbor of L or P, plus the partner of any merging
-            // neighbor (the canonicalisation step views both members).
-            for (x, _) in self.store.row(l).iter().chain(self.store.row(p).iter()) {
-                if x == l || x == p {
-                    continue;
+            if synced {
+                if sl != sp {
+                    stage[sl * m + sp].push(Message::PartnerFetch { partner: p });
+                    stage[sp * m + sl].push(Message::PartnerState {
+                        partner: p,
+                        size: self.size[p as usize],
+                        entries: self
+                            .store
+                            .row(p)
+                            .iter()
+                            .map(|(t, e)| (t, e.weight, e.count))
+                            .collect(),
+                    });
                 }
-                self.stage_view(x, sl, m, &mut viewed, &mut stage);
-                if self.matched[x as usize] {
-                    self.stage_view(self.partner[x as usize], sl, m, &mut viewed, &mut stage);
+                // Pair views the union computation will request: every
+                // neighbor of L or P, plus the partner of any merging
+                // neighbor (the canonicalisation step views both members).
+                for (x, _) in self.store.row(l).iter().chain(self.store.row(p).iter()) {
+                    if x == l || x == p {
+                        continue;
+                    }
+                    self.stage_view(x, sl, m, &mut viewed, &mut stage);
+                    if self.matched[x as usize] {
+                        self.stage_view(self.partner[x as usize], sl, m, &mut viewed, &mut stage);
+                    }
                 }
             }
             out.push((l, self.union_map(l, p)));
@@ -588,7 +819,7 @@ impl DistCore {
         viewed: &mut FxHashSet<(usize, u32)>,
         stage: &mut [Vec<Message>],
     ) {
-        let sx = shard_of(x, m);
+        let sx = self.machine_of(x);
         if sx == sl || !viewed.insert((sl, x)) {
             return;
         }
@@ -605,17 +836,22 @@ impl DistCore {
     /// Phase-2 apply, in ascending leader order (identical to the
     /// shared-memory driver): install unions, retire partners, patch
     /// non-merging neighbors — shipping each patch whose target lives on
-    /// another shard.
-    fn apply_unions(&mut self, unions: Vec<UnionEntry>, net: &mut Network) {
+    /// another machine. Local rounds (`synced == false`) *defer* those
+    /// cross-machine patches into [`Self::flush_pending`]'s staging
+    /// instead of sending: the wire carries them at the next sync
+    /// boundary, which is when the modeled protocol reconciles frontier
+    /// replicas (the simulation applies them to the authoritative store
+    /// immediately either way — placement never affects results).
+    fn apply_unions(&mut self, unions: Vec<UnionEntry>, net: &mut Network, synced: bool) {
         let m = net.machines();
         let mut patches: Vec<Vec<Message>> = vec![Vec::new(); m * m];
         for (l, map) in unions {
             let p = self.partner[l as usize];
-            let sl = shard_of(l, m);
+            let sl = self.machine_of(l);
             for &(t_id, e) in &map {
                 if !self.matched[t_id as usize] {
                     self.store.patch(t_id, l, p, e);
-                    let st = shard_of(t_id, m);
+                    let st = self.machine_of(t_id);
                     if st != sl {
                         patches[sl * m + st].push(Message::EdgePatch {
                             target: t_id,
@@ -637,8 +873,14 @@ impl DistCore {
         self.store.maybe_compact();
         for src in 0..m {
             for dst in 0..m {
-                if src != dst {
-                    net.send(src, dst, &patches[src * m + dst]);
+                if src == dst {
+                    continue;
+                }
+                let batch = std::mem::take(&mut patches[src * m + dst]);
+                if synced {
+                    net.send(src, dst, &batch);
+                } else {
+                    self.pending[src * m + dst].extend(batch);
                 }
             }
         }
@@ -709,17 +951,25 @@ impl DistRacEngine {
 }
 
 /// Distributed (1+ε)-approximate engine (`dist_approx`): ε-good merges
-/// ([`crate::approx::good`]) over the sharded state. For every
-/// `(machines, cores)` topology the dendrogram is bitwise identical to
-/// [`crate::approx::ApproxEngine`] at the same ε — so at ε = 0 it is
-/// bitwise identical to [`DistRacEngine`] and (Theorem 1) sequential HAC.
+/// ([`crate::approx::good`]) over the sharded state. In the default
+/// [`SyncMode::PerRound`], for every `(machines, cores)` topology the
+/// dendrogram is bitwise identical to [`crate::approx::ApproxEngine`] at
+/// the same ε — so at ε = 0 it is bitwise identical to [`DistRacEngine`]
+/// and (Theorem 1) sequential HAC. [`SyncMode::Batched`] trades that
+/// bitwise anchor for TeraHAC-style shard-local merge batching
+/// (`sync_points < rounds`; module docs): the dendrogram is still
+/// bitwise invariant across topologies, every merge still audits within
+/// (1+ε) of the visible minimum, and at ε = 0 it builds the exact merge
+/// tree whenever linkage values are distinct.
 pub struct DistApproxEngine {
     core: DistCore,
     epsilon: f64,
+    sync: SyncMode,
 }
 
 impl DistApproxEngine {
-    /// Build an engine over a dissimilarity graph.
+    /// Build an engine over a dissimilarity graph (sync mode:
+    /// [`SyncMode::PerRound`]).
     ///
     /// # Panics
     /// The same guards as [`crate::approx::ApproxEngine::new`]: `epsilon`
@@ -733,12 +983,36 @@ impl DistApproxEngine {
         DistApproxEngine {
             core: DistCore::new(g, linkage, cfg),
             epsilon,
+            sync: SyncMode::PerRound,
         }
     }
 
     /// Override the round safety cap.
     pub fn with_max_rounds(mut self, max_rounds: usize) -> DistApproxEngine {
         self.core.max_rounds = max_rounds;
+        self
+    }
+
+    /// Select the synchronisation schedule. Batching switches machine
+    /// placement to whole virtual shards ([`Placement::Blocked`]) so the
+    /// local phase is machine-local by construction.
+    ///
+    /// # Panics
+    /// If a batched mode passes `vshards == 0`.
+    pub fn with_sync_mode(mut self, sync: SyncMode) -> DistApproxEngine {
+        if let SyncMode::Batched { vshards } = sync {
+            assert!(vshards >= 1, "vshards must be >= 1, got {vshards}");
+            self.core.place = Placement::Blocked {
+                n: self.core.n,
+                vshards,
+                machines: self.core.cfg.machines,
+            };
+        } else {
+            self.core.place = Placement::Mod {
+                machines: self.core.cfg.machines,
+            };
+        }
+        self.sync = sync;
         self
     }
 
@@ -752,7 +1026,11 @@ impl DistApproxEngine {
     /// traffic log.
     pub fn run_detailed(self) -> (ApproxResult, NetReport) {
         let epsilon = self.epsilon;
-        let (result, report, bounds) = self.core.run_rounds(DistSelector::Good { epsilon });
+        let selector = match self.sync {
+            SyncMode::PerRound => DistSelector::Good { epsilon },
+            SyncMode::Batched { vshards } => DistSelector::GoodBatched { epsilon, vshards },
+        };
+        let (result, report, bounds) = self.core.run_rounds(selector);
         (
             ApproxResult {
                 dendrogram: result.dendrogram,
@@ -978,5 +1256,114 @@ mod tests {
     fn dist_approx_rejects_centroid() {
         let g = data::stable_hierarchy(2, 4.0, 0);
         DistApproxEngine::new(&g, Linkage::Centroid, DistConfig::default(), 0.1);
+    }
+
+    // ------------------------------------------------------------------
+    // dist_approx, batched sync mode
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn batched_local_rounds_are_silent_and_sync_points_counted() {
+        let g = data::grid1d_graph(96, 11);
+        let (r, report) = DistApproxEngine::new(&g, Linkage::Average, DistConfig::new(3, 2), 0.5)
+            .with_sync_mode(SyncMode::Batched { vshards: 8 })
+            .run_detailed();
+        assert_eq!(r.dendrogram.merges().len(), 95);
+        let rounds = r.metrics.rounds.len();
+        let syncs = r.metrics.total_sync_points();
+        assert!(syncs >= 1, "termination requires at least one sync");
+        assert!(
+            syncs < rounds,
+            "a grid with vshards < n must batch some local rounds ({syncs} of {rounds})"
+        );
+        // Wire traffic only at sync boundaries.
+        for rm in &r.metrics.rounds {
+            assert!(rm.sync_points <= 1);
+            if rm.sync_points == 0 {
+                assert_eq!(rm.net_messages, 0, "round {}: local round sent", rm.round);
+                assert_eq!(rm.net_bytes, 0);
+            }
+        }
+        let sync_rounds: Vec<usize> = r
+            .metrics
+            .rounds
+            .iter()
+            .filter(|rm| rm.sync_points == 1)
+            .map(|rm| rm.round)
+            .collect();
+        for b in &report.batches {
+            assert!(
+                sync_rounds.contains(&b.round),
+                "batch in non-sync round {}",
+                b.round
+            );
+        }
+    }
+
+    #[test]
+    fn batched_per_round_engines_count_every_round_as_a_sync() {
+        let g = data::grid1d_graph(64, 3);
+        let exact = DistRacEngine::new(&g, Linkage::Average, DistConfig::new(3, 1)).run();
+        assert_eq!(
+            exact.metrics.total_sync_points(),
+            exact.metrics.rounds.len()
+        );
+        let approx =
+            DistApproxEngine::new(&g, Linkage::Average, DistConfig::new(3, 1), 0.2).run();
+        assert_eq!(
+            approx.metrics.total_sync_points(),
+            approx.metrics.rounds.len()
+        );
+    }
+
+    #[test]
+    fn batched_dendrogram_is_topology_invariant_bitwise() {
+        let g = data::grid1d_graph(120, 7);
+        for eps in [0.0, 0.3] {
+            let base = DistApproxEngine::new(&g, Linkage::Average, DistConfig::new(1, 1), eps)
+                .with_sync_mode(SyncMode::Batched { vshards: 8 })
+                .run();
+            for (machines, cores) in [(3usize, 2usize), (7, 4)] {
+                let r = DistApproxEngine::new(
+                    &g,
+                    Linkage::Average,
+                    DistConfig::new(machines, cores),
+                    eps,
+                )
+                .with_sync_mode(SyncMode::Batched { vshards: 8 })
+                .run();
+                assert_eq!(
+                    base.dendrogram.bitwise_merges(),
+                    r.dendrogram.bitwise_merges(),
+                    "eps={eps} topology=({machines},{cores})"
+                );
+                assert_eq!(
+                    base.metrics.total_sync_points(),
+                    r.metrics.total_sync_points(),
+                    "sync schedule must be a pure function of (n, vshards)"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batched_single_machine_is_silent() {
+        let g = data::grid1d_graph(64, 7);
+        let (r, report) = DistApproxEngine::new(&g, Linkage::Average, DistConfig::new(1, 4), 0.5)
+            .with_sync_mode(SyncMode::Batched { vshards: 8 })
+            .run_detailed();
+        assert_eq!(r.dendrogram.merges().len(), 63);
+        assert_eq!(r.metrics.total_net_messages(), 0);
+        assert!(report.batches.is_empty());
+        // The sync schedule is still counted (it is traffic-independent).
+        assert!(r.metrics.total_sync_points() >= 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "vshards")]
+    fn batched_rejects_zero_vshards() {
+        let g = data::grid1d_graph(8, 0);
+        DistApproxEngine::new(&g, Linkage::Average, DistConfig::default(), 0.1)
+            .with_sync_mode(SyncMode::Batched { vshards: 0 });
     }
 }

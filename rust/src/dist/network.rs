@@ -317,6 +317,10 @@ pub struct BatchRecord {
     /// encodes to at least one byte — the per-round `net_bytes >=
     /// net_messages` invariant follows).
     pub bytes: usize,
+    /// Engine round the batch was sent in (0-based; rounds advance at
+    /// [`Network::end_round`]). Lets the batching suite assert that wire
+    /// traffic only flows at synchronisation rounds.
+    pub round: usize,
 }
 
 /// The simulated interconnect: counts batched RPCs and payload bytes per
@@ -325,6 +329,7 @@ pub struct BatchRecord {
 #[derive(Debug)]
 pub struct Network {
     machines: usize,
+    round: usize,
     round_messages: usize,
     round_bytes: usize,
     batches: Vec<BatchRecord>,
@@ -351,6 +356,7 @@ impl Network {
     pub fn new(machines: usize) -> Network {
         Network {
             machines: machines.max(1),
+            round: 0,
             round_messages: 0,
             round_bytes: 0,
             batches: Vec::new(),
@@ -383,12 +389,15 @@ impl Network {
             dst,
             messages: msgs.len(),
             bytes: wire.len(),
+            round: self.round,
         });
     }
 
-    /// Close the round: return and reset `(net_messages, net_bytes)`.
+    /// Close the round: return and reset `(net_messages, net_bytes)` and
+    /// advance the round stamp subsequent batches carry.
     pub fn end_round(&mut self) -> (usize, usize) {
         let out = (self.round_messages, self.round_bytes);
+        self.round += 1;
         self.round_messages = 0;
         self.round_bytes = 0;
         out
@@ -505,6 +514,19 @@ mod tests {
         assert_eq!(m, 1);
         assert!(b >= m, "net_bytes >= net_messages");
         assert_eq!(net.end_round(), (0, 0), "counters reset per round");
+    }
+
+    #[test]
+    fn batches_carry_their_round_stamp() {
+        let mut net = Network::new(2);
+        net.send(0, 1, &[Message::NnQuery { cluster: 0 }]);
+        net.end_round();
+        net.end_round(); // a silent round advances the stamp too
+        net.send(1, 0, &[Message::NnQuery { cluster: 1 }]);
+        net.end_round();
+        let report = net.into_report();
+        let rounds: Vec<usize> = report.batches.iter().map(|b| b.round).collect();
+        assert_eq!(rounds, vec![0, 2]);
     }
 
     #[test]

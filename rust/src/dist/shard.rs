@@ -14,6 +14,100 @@ pub fn shard_of(cluster: u32, machines: usize) -> usize {
     (cluster as usize) % machines.max(1)
 }
 
+/// The *virtual shard* of `cluster`: one of `vshards` contiguous blocks
+/// of the initial id space `[0, n)`.
+///
+/// The batched `dist_approx` engine partitions clusters into these
+/// subgraphs and drains (1+ε)-good merges *inside* each block between
+/// global synchronisations. Two deliberate properties:
+///
+/// * **Topology-independent** — the partition is a function of `(n,
+///   vshards)` only, never of the machine count, so the batched engine's
+///   merge schedule (and hence its dendrogram) is bitwise invariant
+///   across `(machines, cpus)` topologies: machines own whole virtual
+///   shards ([`Placement::Blocked`] maps `vshard % machines`), which only
+///   moves *traffic accounting*, exactly like the exact engine's
+///   sharding. `vshards` itself is part of the algorithm configuration
+///   (like ε), not a deployment knob.
+/// * **Contiguous blocks, not residues** — TeraHAC feeds its subgraph
+///   phase with a locality-maximising graph partition; this crate's
+///   datasets and generators emit locality-correlated ids (grid paths,
+///   hierarchy subtrees, kNN over mixture draws), so contiguous id
+///   blocks are the id-space stand-in for that partitioner. Residue
+///   classes (`id % vshards`) would put *nearby* clusters on different
+///   shards and leave nothing local to merge.
+///
+/// A merged cluster keeps its leader's (lower) id, so it stays in its
+/// leader's block and placement remains a pure id function mid-run.
+#[inline]
+pub fn vshard_of(cluster: u32, n: usize, vshards: u32) -> u32 {
+    debug_assert!((cluster as usize) < n.max(1));
+    ((cluster as u64 * vshards as u64) / n.max(1) as u64) as u32
+}
+
+/// An [`crate::engine::EdgeScope`] admitting only edges whose endpoints
+/// share a virtual shard — plugging this into an
+/// [`crate::engine::GoodSelector`] turns the shared round driver into the
+/// per-shard local engine of the batched `dist_approx` mode
+/// (`rust/tests/dist_batching.rs` pins the equivalence).
+#[derive(Debug, Clone, Copy)]
+pub struct VShardScope {
+    n: usize,
+    vshards: u32,
+}
+
+impl VShardScope {
+    /// Scope over `vshards` blocks of the id space `[0, n)` (`vshards`
+    /// clamped to at least 1).
+    pub fn new(n: usize, vshards: u32) -> VShardScope {
+        VShardScope {
+            n,
+            vshards: vshards.max(1),
+        }
+    }
+}
+
+impl crate::engine::EdgeScope for VShardScope {
+    #[inline]
+    fn admits(&self, a: u32, b: u32) -> bool {
+        vshard_of(a, self.n, self.vshards) == vshard_of(b, self.n, self.vshards)
+    }
+}
+
+/// Cluster → machine placement for the distributed engines' traffic
+/// accounting. [`Placement::Mod`] is the PR-1 id-residue rule (the
+/// per-round engines, unchanged); [`Placement::Blocked`] assigns whole
+/// virtual shards to machines so the batched engine's shard-local merges
+/// are machine-local by construction. Placement never affects results —
+/// only which state accesses cross a machine boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// `cluster % machines` (the exact engines' hash partition).
+    Mod { machines: usize },
+    /// `vshard_of(cluster) % machines`: contiguous id blocks, each wholly
+    /// owned by one machine.
+    Blocked {
+        n: usize,
+        vshards: u32,
+        machines: usize,
+    },
+}
+
+impl Placement {
+    /// The machine that owns `cluster`.
+    #[inline]
+    pub fn machine_of(self, cluster: u32) -> usize {
+        match self {
+            Placement::Mod { machines } => shard_of(cluster, machines),
+            Placement::Blocked {
+                n,
+                vshards,
+                machines,
+            } => vshard_of(cluster, n, vshards) as usize % machines.max(1),
+        }
+    }
+}
+
 /// Partition `ids` into per-shard owned lists (order within a shard
 /// follows the input order). Every id lands on exactly one shard — the
 /// placement is a total partition, property-tested in
@@ -93,5 +187,63 @@ mod tests {
     fn single_machine_owns_everything() {
         let parts = partition(&[5, 9, 100], 1);
         assert_eq!(parts, vec![vec![5, 9, 100]]);
+    }
+
+    #[test]
+    fn vshards_are_contiguous_balanced_blocks() {
+        // n = 128, V = 8 → blocks of exactly 16 consecutive ids.
+        for c in 0..128u32 {
+            assert_eq!(vshard_of(c, 128, 8), c / 16, "cluster {c}");
+        }
+        // Non-dividing n: monotone, in range, every shard non-empty.
+        let n = 100;
+        let mut prev = 0;
+        let mut seen = vec![false; 7];
+        for c in 0..n as u32 {
+            let v = vshard_of(c, n, 7);
+            assert!(v < 7 && v >= prev, "cluster {c}: vshard {v}");
+            seen[v as usize] = true;
+            prev = v;
+        }
+        assert!(seen.iter().all(|&s| s), "empty virtual shard");
+        // More vshards than ids: still in range (blocks of <= 1).
+        assert!(vshard_of(2, 3, 16) < 16);
+        // Degenerate n never divides by zero.
+        assert_eq!(vshard_of(0, 0, 4), 0);
+    }
+
+    #[test]
+    fn vshard_scope_admits_only_co_shard_edges() {
+        use crate::engine::EdgeScope;
+        let scope = VShardScope::new(32, 4); // blocks of 8
+        assert!(scope.admits(0, 7));
+        assert!(!scope.admits(7, 8));
+        assert!(scope.admits(24, 31));
+        // vshards clamps to 1 → everything co-shard.
+        let all = VShardScope::new(32, 0);
+        assert!(all.admits(0, 31));
+    }
+
+    #[test]
+    fn blocked_placement_keeps_virtual_shards_whole() {
+        let place = Placement::Blocked {
+            n: 64,
+            vshards: 8,
+            machines: 3,
+        };
+        for c in 0..64u32 {
+            let v = vshard_of(c, 64, 8);
+            assert_eq!(place.machine_of(c), v as usize % 3);
+            // Every member of c's block lands on the same machine.
+            let block_start = v as usize * 8;
+            for m in block_start..block_start + 8 {
+                assert_eq!(place.machine_of(m as u32), place.machine_of(c));
+            }
+        }
+        // Mod placement is the PR-1 rule, bit for bit.
+        let modp = Placement::Mod { machines: 5 };
+        for c in 0..40u32 {
+            assert_eq!(modp.machine_of(c), shard_of(c, 5));
+        }
     }
 }

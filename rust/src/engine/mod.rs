@@ -226,6 +226,30 @@ impl<S: EngineStore> PairSelector<S> for RnnSelector {
     }
 }
 
+/// Which edges a [`GoodSelector`] may even consider: the driver's
+/// edge-eligibility mask. The default [`FullScope`] admits everything;
+/// the batched distributed engine restricts selection to edges whose
+/// endpoints share a virtual shard (`crate::dist::VShardScope`), which is
+/// what lets a per-shard driver instance drain its subgraph's good merges
+/// without any cross-shard coordination. Scopes must be pure functions of
+/// the endpoint ids (no round state), so selection stays a pure function
+/// of the visible state — the bitwise-reproducibility contract.
+pub trait EdgeScope: Sync {
+    /// May the edge `(a, b)` (`a < b`) be selected?
+    fn admits(&self, a: u32, b: u32) -> bool;
+}
+
+/// The trivial scope: every edge is eligible (the shared-memory engines).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FullScope;
+
+impl EdgeScope for FullScope {
+    #[inline]
+    fn admits(&self, _a: u32, _b: u32) -> bool {
+        true
+    }
+}
+
 /// Approximate phase 1: TeraHAC-style (1+ε)-good merges. Every active
 /// cluster scans its row for edges both endpoints accept
 /// ([`good::accepts`] — candidates oriented `a < b` so each edge is tested
@@ -234,20 +258,34 @@ impl<S: EngineStore> PairSelector<S> for RnnSelector {
 /// criterion degenerates to the reciprocal-NN pointer condition, so this
 /// selector is bitwise-interchangeable with [`RnnSelector`] (the crate's
 /// correctness anchor).
-pub struct GoodSelector {
+///
+/// The `E` parameter is the edge-eligibility mask ([`EdgeScope`]): with
+/// the default [`FullScope`] this is the PR-3/4 selector unchanged; with
+/// a restrictive scope the selector only ever matches in-scope edges —
+/// the building block of the subgraph-batched distributed engine, which
+/// runs the driver loop per shard over a shard-local scope.
+pub struct GoodSelector<E: EdgeScope = FullScope> {
     epsilon: f64,
+    scope: E,
 }
 
 impl GoodSelector {
     /// `epsilon` must be finite and `>= 0` (callers guard; see
     /// [`crate::approx::ApproxEngine::new`]).
     pub fn new(epsilon: f64) -> GoodSelector {
-        debug_assert!(epsilon >= 0.0 && epsilon.is_finite());
-        GoodSelector { epsilon }
+        GoodSelector::scoped(epsilon, FullScope)
     }
 }
 
-impl<S: EngineStore> PairSelector<S> for GoodSelector {
+impl<E: EdgeScope> GoodSelector<E> {
+    /// A selector restricted to the edges `scope` admits.
+    pub fn scoped(epsilon: f64, scope: E) -> GoodSelector<E> {
+        debug_assert!(epsilon >= 0.0 && epsilon.is_finite());
+        GoodSelector { epsilon, scope }
+    }
+}
+
+impl<S: EngineStore, E: EdgeScope> PairSelector<S> for GoodSelector<E> {
     fn select(
         &mut self,
         pool: &Pool,
@@ -259,8 +297,11 @@ impl<S: EngineStore> PairSelector<S> for GoodSelector {
         let scans: Vec<(Vec<(Weight, u32)>, usize)> = {
             let nn = &state.nn;
             let nn_weight = &state.nn_weight;
+            let scope = &self.scope;
             pool.par_map(&state.active_ids, |&a| {
-                good::scan_row_candidates(store.row(a), a, eps, nn_weight, nn)
+                good::scan_row_candidates_scoped(store.row(a), a, eps, nn_weight, nn, |x, y| {
+                    scope.admits(x, y)
+                })
             })
         };
         let mut candidates: Vec<good::Candidate> = Vec::new();
@@ -609,5 +650,76 @@ mod tests {
             1,
         );
         assert!(good.metrics.rounds[0].eligibility_scan_entries > 0);
+    }
+
+    /// A scope splitting the ids into halves: the driver drains each
+    /// half's good merges but never crosses the boundary.
+    struct Halves {
+        split: u32,
+    }
+
+    impl EdgeScope for Halves {
+        fn admits(&self, a: u32, b: u32) -> bool {
+            (a < self.split) == (b < self.split)
+        }
+    }
+
+    #[test]
+    fn scoped_selector_never_crosses_the_scope_boundary() {
+        let g = tiny_graph();
+        for eps in [0.0, 0.5] {
+            let r = run(
+                NeighborStore::from_graph(&g),
+                6,
+                &mut GoodSelector::scoped(eps, Halves { split: 3 }),
+                1,
+            );
+            // The driver drains only in-scope good merges and stops at
+            // the scoped fixed point: (0, 1) is always in scope and
+            // reciprocal, the bridges (1,3)/(2,3) are masked, and
+            // cluster 2 (whose ONLY edge is the masked bridge) can never
+            // merge. Note the fixed point may strand more than the
+            // bridge endpoints — a cluster whose visible minimum lies
+            // out of scope rejects in-scope edges above its band — which
+            // is exactly why the batched distributed engine falls back
+            // to a global sync when local merges dry up.
+            assert!(!r.dendrogram.merges().is_empty(), "eps={eps}");
+            for m in r.dendrogram.merges() {
+                assert_eq!(
+                    m.a < 3,
+                    m.b < 3,
+                    "eps={eps}: merge ({}, {}) crossed the scope",
+                    m.a,
+                    m.b
+                );
+                assert!(m.a != 2 && m.b != 2, "eps={eps}: the masked cluster merged");
+            }
+            // The band audit applies to the scoped run unchanged.
+            assert!(crate::approx::quality::merge_quality_ratio(&r.bounds) <= 1.0 + eps + 1e-12);
+        }
+    }
+
+    #[test]
+    fn full_scope_is_the_unscoped_selector_bitwise() {
+        let g = tiny_graph();
+        for eps in [0.0, 0.3] {
+            let plain = run(
+                NeighborStore::from_graph(&g),
+                6,
+                &mut GoodSelector::new(eps),
+                2,
+            );
+            let scoped = run(
+                NeighborStore::from_graph(&g),
+                6,
+                &mut GoodSelector::scoped(eps, FullScope),
+                2,
+            );
+            assert_eq!(
+                plain.dendrogram.bitwise_merges(),
+                scoped.dendrogram.bitwise_merges(),
+                "eps={eps}"
+            );
+        }
     }
 }

@@ -72,7 +72,18 @@
 //! over the same sharded state — per topology it is bitwise identical to
 //! [`approx::ApproxEngine`], and at ε = 0 to [`dist::DistRacEngine`] —
 //! with the find phase additionally exchanging remote NN caches and
-//! routing candidate edges through a matching coordinator.
+//! routing candidate edges through a matching coordinator. Its
+//! [`dist::SyncMode::Batched`] mode adds TeraHAC-style subgraph
+//! batching: clusters partition into `vshards` contiguous-id blocks
+//! (machine-local by construction), good merges drain *inside* blocks
+//! with zero traffic — cross-machine patches deferred to the next sync
+//! boundary — and the global exchange runs only when the local rounds
+//! dry up, so coordination scales with [`metrics::RoundMetrics::sync_points`]
+//! instead of rounds (`benches/dist_sync.rs` →
+//! `BENCH_dist_sync.json`). The block scope is the same
+//! [`engine::EdgeScope`] mask the shared driver takes, so one block's
+//! local engine *is* a scoped [`engine::GoodSelector`] driver instance
+//! (pinned in `rust/tests/dist_batching.rs`).
 //!
 //! ## Approximate engine
 //!

@@ -44,6 +44,15 @@ pub struct RoundMetrics {
     /// This is what a real fleet's wall clock would track; in-process
     /// wall clock cannot show scaling on this 1-CPU testbed (DESIGN.md §1).
     pub t_sim: Duration,
+    /// Global synchronisation barriers this round required (distributed
+    /// engines only; zero for the shared-memory engines). Every
+    /// bulk-synchronous round of the per-round engines is one sync point;
+    /// the batched `dist_approx` engine's shard-local rounds are zero —
+    /// TeraHAC's claim is that coordination scales with sync points, not
+    /// merges. Counted per the *algorithm's* schedule, so it is a pure
+    /// function of the run (topology-invariant), unlike `net_messages`,
+    /// which is zero whenever `machines == 1`.
+    pub sync_points: usize,
 }
 
 impl RoundMetrics {
@@ -89,6 +98,7 @@ impl RoundMetrics {
             ("net_messages", self.net_messages.into()),
             ("net_bytes", self.net_bytes.into()),
             ("t_sim_us", (self.t_sim.as_micros() as usize).into()),
+            ("sync_points", self.sync_points.into()),
         ])
     }
 }
@@ -159,6 +169,14 @@ impl RunMetrics {
         self.rounds.iter().map(|r| r.net_messages).sum()
     }
 
+    /// Total global synchronisation barriers (see
+    /// [`RoundMetrics::sync_points`]). For the per-round distributed
+    /// engines this equals the recorded round count; the batched engine's
+    /// headline is pushing it strictly below.
+    pub fn total_sync_points(&self) -> usize {
+        self.rounds.iter().map(|r| r.sync_points).sum()
+    }
+
     /// (merges, merge-phase seconds) pairs — the Fig 3d scatter.
     pub fn merge_time_series(&self) -> Vec<(usize, f64)> {
         self.rounds
@@ -222,6 +240,30 @@ mod tests {
         assert!((run.min_alpha() - 1.0 / 3.0).abs() < 1e-9);
         assert!((run.mean_beta() - 0.75).abs() < 1e-9);
         assert!((run.max_beta() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sync_points_aggregate_and_serialize() {
+        let run = RunMetrics {
+            rounds: vec![
+                RoundMetrics {
+                    sync_points: 1,
+                    ..round(10, 5, 5)
+                },
+                RoundMetrics {
+                    sync_points: 0,
+                    ..round(5, 2, 2)
+                },
+                RoundMetrics {
+                    sync_points: 1,
+                    ..round(3, 1, 1)
+                },
+            ],
+            ..Default::default()
+        };
+        assert_eq!(run.total_sync_points(), 2);
+        let js = run.to_json().to_string();
+        assert!(js.contains("\"sync_points\":1"), "{js}");
     }
 
     #[test]

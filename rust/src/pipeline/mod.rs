@@ -139,6 +139,7 @@ pub fn run_engine(cfg: &RunConfig, g: &Graph) -> Result<RacResult> {
             machines,
             cpus,
             epsilon,
+            sync,
         } => {
             let r = DistApproxEngine::new(
                 g,
@@ -146,6 +147,7 @@ pub fn run_engine(cfg: &RunConfig, g: &Graph) -> Result<RacResult> {
                 DistConfig::new(machines, cpus),
                 epsilon,
             )
+            .with_sync_mode(sync)
             .run();
             Ok(RacResult {
                 dendrogram: r.dendrogram,
@@ -283,6 +285,33 @@ mod tests {
             relaxed_dist.dendrogram.bitwise_merges()
         );
         assert!(relaxed_dist.metrics.total_net_messages() > 0);
+    }
+
+    #[test]
+    fn batched_dist_approx_through_pipeline() {
+        let base = "[dataset]\ntype = \"grid1d\"\nn = 300\n[cluster]\nlinkage = \"average\"\n";
+        // ε = 0 batched builds the exact merge tree (distinct weights on
+        // a random grid), though rounds group differently — compare
+        // dendrogram-wise, not bitwise (engine docs).
+        let exact = run(&cfg(&format!("{base}[engine]\ntype = \"rac\"\n")))
+            .unwrap()
+            .result;
+        let zero = run(&cfg(&format!(
+            "{base}[engine]\ntype = \"dist_approx\"\nmachines = 3\ncpus = 2\nepsilon = 0\n\
+             sync_mode = \"batched\"\nvshards = 8\n"
+        )))
+        .unwrap()
+        .result;
+        assert!(exact.dendrogram.same_clustering(&zero.dendrogram, 1e-9));
+        // ε > 0 batched fully clusters and needs fewer syncs than rounds.
+        let relaxed = run(&cfg(&format!(
+            "{base}[engine]\ntype = \"dist_approx\"\nmachines = 3\ncpus = 2\nepsilon = 0.5\n\
+             sync_mode = \"batched\"\nvshards = 8\n"
+        )))
+        .unwrap()
+        .result;
+        assert_eq!(relaxed.dendrogram.merges().len(), 299);
+        assert!(relaxed.metrics.total_sync_points() < relaxed.metrics.rounds.len());
     }
 
     #[test]

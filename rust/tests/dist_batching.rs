@@ -1,0 +1,390 @@
+//! Differential suite for the batched `dist_approx` engine (TeraHAC-style
+//! shard-local subgraph batching, `SyncMode::Batched`) against the
+//! per-round engine and the shared-memory oracles.
+//!
+//! Contracts under test:
+//!
+//! * **Topology invariance, bitwise** — the batched merge schedule is a
+//!   pure function of `(graph, ε, vshards)`: the subgraph partition is
+//!   `vshard_of(id, n, vshards)`, never the machine count, so dendrogram
+//!   AND quality trace are bitwise identical across `(machines, cpus)`
+//!   topologies (the sharding layer stays accounting-only).
+//! * **The (1+ε) band** — every recorded merge audits within `1 + ε` of
+//!   the minimum linkage visible to either endpoint, via
+//!   [`quality::merge_quality_ratio`] over the trace, not the engine's
+//!   own selection code. At ε = 0 the ratio is exactly 1 — every merge
+//!   happens at its visible minimum — even on tie-heavy graphs.
+//! * **ε = 0 dendrogram equality** — with distinct linkage values the
+//!   batched schedule merges only reciprocal-NN pairs, so it builds the
+//!   same merge *tree* as the unbatched engine (= RAC = HAC); grouping
+//!   merges into different rounds associates the Lance–Williams folds
+//!   differently, so the comparison is `same_clustering`, not bitwise
+//!   (the bitwise ε = 0 anchor belongs to the unbatched engine and is
+//!   pinned in `approx_quality.rs` / `store_equivalence.rs`).
+//! * **Sync-point accounting** — `sync_points <= rounds` always (each
+//!   round is at most one global barrier), every round of the per-round
+//!   engines is exactly one sync point, wire traffic flows only in sync
+//!   rounds, and on the round-collapse workloads (Theorem-4 adversarial
+//!   chain, Theorem-5 stable hierarchy) the inequality is **strict**:
+//!   batching provably takes global synchronisation off some rounds.
+//! * **Per-shard driver equivalence** — the batched engine's pre-sync
+//!   merge prefix is bitwise the run of the shared-memory
+//!   [`RoundDriver`] under a [`GoodSelector`] scoped to the same virtual
+//!   shards ([`VShardScope`]): the local phase *is* the shared driver
+//!   restricted to locally-owned edges.
+
+use rac_hac::approx::quality;
+use rac_hac::data;
+use rac_hac::data::{random_sparse_graph, random_tied_graph};
+use rac_hac::dist::{vshard_of, DistApproxEngine, DistConfig, SyncMode, VShardScope};
+use rac_hac::engine::{GoodSelector, RoundDriver};
+use rac_hac::graph::Graph;
+use rac_hac::linkage::Linkage;
+use rac_hac::rac::RacEngine;
+use rac_hac::store::NeighborStore;
+use rac_hac::util::prop::for_all_seeds;
+
+const TOPOLOGIES: [(usize, usize); 3] = [(1, 1), (3, 2), (7, 4)];
+const EPSILONS: [f64; 3] = [0.0, 0.1, 1.0];
+const VSHARDS: u32 = 8;
+
+fn batched(
+    g: &Graph,
+    linkage: Linkage,
+    (machines, cpus): (usize, usize),
+    eps: f64,
+) -> rac_hac::approx::ApproxResult {
+    DistApproxEngine::new(g, linkage, DistConfig::new(machines, cpus), eps)
+        .with_sync_mode(SyncMode::Batched { vshards: VSHARDS })
+        .run()
+}
+
+#[test]
+fn batched_dendrogram_and_trace_are_topology_invariant_bitwise() {
+    for_all_seeds(0xBA7C1, 8, |rng| {
+        let g = if rng.bool_with(0.5) {
+            random_tied_graph(rng)
+        } else {
+            random_sparse_graph(rng)
+        };
+        for eps in EPSILONS {
+            let base = batched(&g, Linkage::Average, TOPOLOGIES[0], eps);
+            for &topo in &TOPOLOGIES[1..] {
+                let r = batched(&g, Linkage::Average, topo, eps);
+                assert_eq!(
+                    base.dendrogram.bitwise_merges(),
+                    r.dendrogram.bitwise_merges(),
+                    "eps={eps} topology={topo:?} (n={})",
+                    g.n()
+                );
+                let key = |bs: &[quality::MergeBound]| -> Vec<(u64, u64)> {
+                    bs.iter()
+                        .map(|b| (b.weight.to_bits(), b.visible_min.to_bits()))
+                        .collect()
+                };
+                assert_eq!(
+                    key(&base.bounds),
+                    key(&r.bounds),
+                    "eps={eps} topology={topo:?}: quality trace diverged"
+                );
+                // The sync schedule is part of the algorithm, not the
+                // deployment: identical per-round sync flags everywhere.
+                let syncs = |m: &rac_hac::metrics::RunMetrics| -> Vec<usize> {
+                    m.rounds.iter().map(|r| r.sync_points).collect()
+                };
+                assert_eq!(
+                    syncs(&base.metrics),
+                    syncs(&r.metrics),
+                    "eps={eps} topology={topo:?}: sync schedule diverged"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn batched_is_topology_invariant_on_the_adversarial_chain() {
+    // The deterministic theory generator counterpart of the random
+    // property above: the Theorem-4 instance (n = 32), all ε, all
+    // topologies — bitwise.
+    let g = data::adversarial_thm4(5);
+    for eps in EPSILONS {
+        let base = batched(&g, Linkage::Average, TOPOLOGIES[0], eps);
+        assert_eq!(base.dendrogram.merges().len(), 31, "eps={eps}");
+        for &topo in &TOPOLOGIES[1..] {
+            let r = batched(&g, Linkage::Average, topo, eps);
+            assert_eq!(
+                base.dendrogram.bitwise_merges(),
+                r.dendrogram.bitwise_merges(),
+                "eps={eps} topology={topo:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn every_batched_merge_respects_the_goodness_band() {
+    for_all_seeds(0xBA7C2, 10, |rng| {
+        let g = if rng.bool_with(0.5) {
+            random_tied_graph(rng)
+        } else {
+            random_sparse_graph(rng)
+        };
+        let reference = RacEngine::new(&g, Linkage::Average).run();
+        for eps in EPSILONS {
+            let r = batched(&g, Linkage::Average, (3, 2), eps);
+            r.dendrogram.validate().unwrap();
+            assert_eq!(r.bounds.len(), r.dendrogram.merges().len(), "one bound per merge");
+            let ratio = quality::merge_quality_ratio(&r.bounds);
+            assert!(
+                ratio <= 1.0 + eps + 1e-12,
+                "eps={eps}: worst ratio {ratio} (n={})",
+                g.n()
+            );
+            // Batching reschedules merges, never loses them: every
+            // component still fully agglomerates.
+            assert_eq!(
+                r.dendrogram.merges().len(),
+                reference.dendrogram.merges().len(),
+                "eps={eps} (n={})",
+                g.n()
+            );
+        }
+    });
+}
+
+#[test]
+fn batched_zero_epsilon_quality_is_exact_even_under_ties() {
+    // At ε = 0 acceptance requires the merge weight to equal both
+    // endpoints' cached minima, so every audited ratio is exactly 1 —
+    // including on quantised-weight graphs where tie scheduling may
+    // legitimately pick a different (equally exact) tree.
+    for_all_seeds(0xBA7C3, 10, |rng| {
+        let g = random_tied_graph(rng);
+        let r = batched(&g, Linkage::Average, (3, 2), 0.0);
+        assert_eq!(quality::merge_quality_ratio(&r.bounds), 1.0, "n={}", g.n());
+    });
+}
+
+#[test]
+fn batched_zero_epsilon_matches_unbatched_dendrogram_wise() {
+    // Continuous weights (no ties): the batched ε = 0 schedule merges
+    // only reciprocal-NN pairs, so the merge tree equals the unbatched
+    // engine's (= RAC's); only the round grouping — and with it the FP
+    // association of the folds — differs.
+    for_all_seeds(0xBA7C4, 12, |rng| {
+        let g = random_sparse_graph(rng);
+        for l in Linkage::SPARSE_REDUCIBLE {
+            let unbatched = DistApproxEngine::new(&g, l, DistConfig::new(3, 2), 0.0).run();
+            let b = batched(&g, l, (3, 2), 0.0);
+            assert!(
+                unbatched.dendrogram.same_clustering(&b.dendrogram, 1e-9),
+                "{l:?}: batched eps=0 tree diverged (n={})",
+                g.n()
+            );
+        }
+    });
+}
+
+#[test]
+fn sync_points_bounded_by_rounds_and_traffic_only_at_sync() {
+    for_all_seeds(0xBA7C5, 10, |rng| {
+        let g = random_sparse_graph(rng);
+        let machines = rng.range_usize(1, 8);
+        let cores = rng.range_usize(1, 4);
+        for eps in [0.1, 1.0] {
+            // Per-round engine: every round is exactly one sync point.
+            let (u, _) = DistApproxEngine::new(
+                &g,
+                Linkage::Average,
+                DistConfig::new(machines, cores),
+                eps,
+            )
+            .run_detailed();
+            assert_eq!(u.metrics.total_sync_points(), u.metrics.rounds.len());
+
+            // Batched engine: monotone improvement, silent local rounds.
+            let (b, report) = DistApproxEngine::new(
+                &g,
+                Linkage::Average,
+                DistConfig::new(machines, cores),
+                eps,
+            )
+            .with_sync_mode(SyncMode::Batched { vshards: VSHARDS })
+            .run_detailed();
+            assert!(b.metrics.total_sync_points() <= b.metrics.rounds.len());
+            let mut sync_rounds = Vec::new();
+            for rm in &b.metrics.rounds {
+                assert!(rm.sync_points <= 1, "a round is at most one barrier");
+                assert!(rm.net_bytes >= rm.net_messages);
+                if rm.sync_points == 0 {
+                    assert_eq!(
+                        (rm.net_messages, rm.net_bytes),
+                        (0, 0),
+                        "round {}: local rounds must be silent",
+                        rm.round
+                    );
+                } else {
+                    sync_rounds.push(rm.round);
+                }
+            }
+            for batch in &report.batches {
+                assert_ne!(batch.src, batch.dst, "local traffic accounted");
+                assert!(
+                    sync_rounds.contains(&batch.round),
+                    "batch sent in non-sync round {}",
+                    batch.round
+                );
+            }
+            if machines == 1 {
+                assert!(report.batches.is_empty(), "single machine must be silent");
+            }
+            assert_eq!(b.metrics.total_net_messages(), report.total_batches());
+            assert_eq!(b.metrics.total_net_bytes(), report.total_bytes());
+        }
+    });
+}
+
+/// The Theorem-4 adversarial chain: the exact engine exposes one
+/// reciprocal pair per round (Ω(n) rounds); ε-good selection collapses
+/// rounds to ~log n (PR 3), and batching takes the global barrier off
+/// the shard-local ones — `sync_points < rounds`, strictly, while merges
+/// stay O(n).
+#[test]
+fn adversarial_round_and_sync_point_collapse() {
+    let g = data::adversarial_thm4(7); // n = 128
+    let exact = RacEngine::new(&g, Linkage::Average).run();
+    let exact_rounds = exact.metrics.merge_rounds();
+    assert!(exact_rounds >= 100, "exact collapse expected: {exact_rounds}");
+    for eps in EPSILONS {
+        let u = DistApproxEngine::new(&g, Linkage::Average, DistConfig::new(3, 2), eps).run();
+        assert_eq!(u.metrics.total_sync_points(), u.metrics.rounds.len());
+
+        let b = batched(&g, Linkage::Average, (3, 2), eps);
+        assert_eq!(b.dendrogram.merges().len(), 127, "eps={eps}");
+        let rounds = b.metrics.rounds.len();
+        let syncs = b.metrics.total_sync_points();
+        assert!(
+            syncs < rounds,
+            "eps={eps}: no local round batched ({syncs} syncs of {rounds} rounds)"
+        );
+        let ratio = quality::merge_quality_ratio(&b.bounds);
+        assert!(ratio <= 1.0 + eps + 1e-12, "eps={eps}: {ratio}");
+    }
+    // Explicit round-count collapse at a relaxed band: the batched
+    // engine's rounds AND sync points sit far below the exact engine's
+    // Ω(n) rounds (merges stay at n - 1 = 127 throughout).
+    let b = batched(&g, Linkage::Average, (3, 2), 1.0);
+    assert!(
+        b.metrics.rounds.len() * 4 < exact_rounds,
+        "batched rounds {} vs exact {exact_rounds}",
+        b.metrics.rounds.len()
+    );
+    assert!(
+        b.metrics.total_sync_points() * 4 < exact_rounds,
+        "batched sync points {} vs exact rounds {exact_rounds}",
+        b.metrics.total_sync_points()
+    );
+}
+
+/// Theorem-5 stable hierarchy: subtrees are contiguous id ranges, so
+/// whole subtrees drain inside virtual shards and only the top-of-tree
+/// merges need sync points — strictly fewer barriers than rounds, with
+/// flat cuts still agreeing with exact HAC (even ε = 1 cannot cross the
+/// separation bands).
+#[test]
+fn stable_hierarchy_sync_point_collapse_with_perfect_cuts() {
+    let g = data::stable_hierarchy(6, 4.0, 23); // n = 64
+    let hac = rac_hac::hac::naive_hac(&g, Linkage::Average);
+    for eps in EPSILONS {
+        let b = batched(&g, Linkage::Average, (3, 2), eps);
+        assert_eq!(b.dendrogram.merges().len(), 63, "eps={eps}");
+        let rounds = b.metrics.rounds.len();
+        let syncs = b.metrics.total_sync_points();
+        assert!(
+            syncs < rounds,
+            "eps={eps}: subtree merges did not batch ({syncs} of {rounds})"
+        );
+        for k in [2usize, 4, 8] {
+            let ari = quality::adjusted_rand_index(&hac.cut_k(k), &b.dendrogram.cut_k(k));
+            assert_eq!(ari, 1.0, "eps={eps} k={k}");
+        }
+    }
+}
+
+/// The local phase IS the shared round driver under a vshard-scoped
+/// selector: running [`RoundDriver`] with `GoodSelector::scoped(eps,
+/// VShardScope)` to its fixed point reproduces, bitwise, the batched
+/// engine's merge prefix up to its first sync point — and every scoped
+/// merge stays inside one virtual shard.
+#[test]
+fn scoped_driver_reproduces_the_batched_engines_local_prefix() {
+    // Ascending path: weights 1..n-1, so the frontier pair is unique and
+    // the local fixed point is exactly "absorb block 0" — deterministic
+    // and non-trivial for every ε.
+    let n = 64usize;
+    let g = Graph::from_edges(
+        n,
+        (0..n - 1).map(|i| (i as u32, (i + 1) as u32, (i + 1) as f64)),
+    );
+    for eps in [0.0, 0.5] {
+        let mut driver = RoundDriver::new(NeighborStore::from_graph(&g), n, Linkage::Average);
+        driver.set_threads(2);
+        let mut selector = GoodSelector::scoped(eps, VShardScope::new(n, VSHARDS));
+        let scoped = driver.run(&mut selector);
+        assert!(
+            !scoped.dendrogram.merges().is_empty(),
+            "eps={eps}: the scoped fixed point must be non-trivial"
+        );
+        for m in scoped.dendrogram.merges() {
+            assert_eq!(
+                vshard_of(m.a, n, VSHARDS),
+                vshard_of(m.b, n, VSHARDS),
+                "eps={eps}: scoped merge ({}, {}) crossed a virtual shard",
+                m.a,
+                m.b
+            );
+        }
+        let b = batched(&g, Linkage::Average, (3, 2), eps);
+        let prefix_len = scoped.dendrogram.merges().len();
+        assert!(b.dendrogram.merges().len() > prefix_len, "sync work remains");
+        let full = b.dendrogram.bitwise_merges();
+        assert_eq!(
+            scoped.dendrogram.bitwise_merges()[..],
+            full[..prefix_len],
+            "eps={eps}: batched local prefix != scoped driver run"
+        );
+    }
+}
+
+/// vshards is an algorithm knob: one block degenerates to the unbatched
+/// schedule's merge set (everything is local until the final sync), and
+/// a block per cluster degenerates to the per-round engine exactly.
+#[test]
+fn vshard_extremes_degenerate_sensibly() {
+    let mut rng = rac_hac::util::rng::Rng::seed_from(0xBA7C6);
+    let g = random_sparse_graph(&mut rng);
+    let n = g.n();
+    // One block: every edge is local, so at most the terminal (empty)
+    // sync fires — zero when a local round finishes the run outright.
+    let one = DistApproxEngine::new(&g, Linkage::Average, DistConfig::new(3, 2), 0.5)
+        .with_sync_mode(SyncMode::Batched { vshards: 1 })
+        .run();
+    assert!(one.metrics.total_sync_points() <= 1);
+    // A block per cluster: nothing is ever local, so every round is a
+    // sync and the schedule (and dendrogram, bitwise) is the per-round
+    // engine's.
+    let per_cluster = DistApproxEngine::new(&g, Linkage::Average, DistConfig::new(3, 2), 0.5)
+        .with_sync_mode(SyncMode::Batched { vshards: n as u32 })
+        .run();
+    let unbatched =
+        DistApproxEngine::new(&g, Linkage::Average, DistConfig::new(3, 2), 0.5).run();
+    assert_eq!(
+        per_cluster.metrics.total_sync_points(),
+        per_cluster.metrics.rounds.len()
+    );
+    assert_eq!(
+        per_cluster.dendrogram.bitwise_merges(),
+        unbatched.dendrogram.bitwise_merges()
+    );
+}

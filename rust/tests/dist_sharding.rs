@@ -5,9 +5,18 @@
 //! * every accounted network batch is strictly cross-shard (a single
 //!   machine is perfectly silent);
 //! * the per-round accounting invariants hold: `net_bytes >=
-//!   net_messages`, and the run-level totals equal the batch log.
+//!   net_messages`, and the run-level totals equal the batch log;
+//! * **pinned wire traffic** — on hand-built graphs the *exact* batch
+//!   sequence (src, dst, round, messages, encoded bytes) of `dist_rac`,
+//!   `dist_approx`, and batched `dist_approx` is asserted message for
+//!   message, with byte counts derived through the real codec
+//!   ([`encode_batch`]), so any future wire/protocol change shows up as
+//!   a reviewable diff instead of silent accounting drift.
 
-use rac_hac::dist::{partition, shard_of, DistConfig, DistRacEngine};
+use rac_hac::dist::{
+    encode_batch, partition, shard_of, BatchRecord, DistApproxEngine, DistConfig, DistRacEngine,
+    Message, SyncMode,
+};
 use rac_hac::graph::Graph;
 use rac_hac::linkage::Linkage;
 use rac_hac::util::prop::for_all_seeds;
@@ -100,6 +109,309 @@ fn round_accounting_invariants() {
         assert_eq!(r.metrics.total_net_messages(), report.total_batches());
         assert_eq!(r.metrics.total_net_bytes(), report.total_bytes());
     });
+}
+
+// ---------------------------------------------------------------------
+// Pinned wire-traffic regressions.
+// ---------------------------------------------------------------------
+
+/// Build the expected batch log from `(src, dst, round, messages)`
+/// tuples, encoding each batch through the real codec so the pinned byte
+/// counts are the wire lengths (the codec round-trip is exercised again
+/// by `Network::send`'s debug assertion on every live batch).
+fn expected_records(batches: &[(usize, usize, usize, Vec<Message>)]) -> Vec<BatchRecord> {
+    batches
+        .iter()
+        .map(|(src, dst, round, msgs)| BatchRecord {
+            src: *src,
+            dst: *dst,
+            messages: msgs.len(),
+            bytes: encode_batch(msgs).len(),
+            round: *round,
+        })
+        .collect()
+}
+
+/// The 4-point pinning graph: 0-1 merge first (w=1), 2-3 second (w=2),
+/// the unions join last over the 1-2 bridge (w=9). With `machines = 2`
+/// and id-mod placement the shards are {0, 2} and {1, 3}, so both round-0
+/// merges are cross-shard — every phase's traffic is exercised.
+fn pin_graph() -> Graph {
+    Graph::from_edges(4, [(0, 1, 1.0), (2, 3, 2.0), (1, 2, 9.0)])
+}
+
+#[test]
+fn pinned_dist_rac_traffic_on_a_hand_built_graph() {
+    let (r, report) =
+        DistRacEngine::new(&pin_graph(), Linkage::Average, DistConfig::new(2, 1)).run_detailed();
+    assert_eq!(r.dendrogram.merges().len(), 3);
+    // Round 0: NN-pointer exchange (every pointer is cross-shard), then
+    // the merge phase ships both partner states and the cross-pair
+    // views. Round 1 merges (0, 2) entirely on shard 0 — silent — and
+    // finishes the run (no empty terminal round is recorded).
+    let expected = expected_records(&[
+        (
+            0,
+            1,
+            0,
+            vec![Message::NnQuery { cluster: 1 }, Message::NnQuery { cluster: 3 }],
+        ),
+        (
+            1,
+            0,
+            0,
+            vec![
+                Message::NnReply { cluster: 1, nn: 0 },
+                Message::NnReply { cluster: 3, nn: 2 },
+            ],
+        ),
+        (
+            1,
+            0,
+            0,
+            vec![Message::NnQuery { cluster: 0 }, Message::NnQuery { cluster: 2 }],
+        ),
+        (
+            0,
+            1,
+            0,
+            vec![
+                Message::NnReply { cluster: 0, nn: 1 },
+                Message::NnReply { cluster: 2, nn: 3 },
+            ],
+        ),
+        (
+            0,
+            1,
+            0,
+            vec![
+                Message::PartnerFetch { partner: 1 },
+                Message::PairViewQuery { cluster: 3 },
+                Message::PartnerFetch { partner: 3 },
+                Message::PairViewQuery { cluster: 1 },
+            ],
+        ),
+        (
+            1,
+            0,
+            0,
+            vec![
+                Message::PartnerState {
+                    partner: 1,
+                    size: 1,
+                    entries: vec![(0, 1.0, 1), (2, 9.0, 1)],
+                },
+                Message::PairViewReply {
+                    cluster: 3,
+                    merging: true,
+                    partner: 2,
+                    size: 1,
+                    pair_weight: 2.0,
+                },
+                Message::PartnerState {
+                    partner: 3,
+                    size: 1,
+                    entries: vec![(2, 2.0, 1)],
+                },
+                Message::PairViewReply {
+                    cluster: 1,
+                    merging: true,
+                    partner: 0,
+                    size: 1,
+                    pair_weight: 1.0,
+                },
+            ],
+        ),
+    ]);
+    assert_eq!(report.batches, expected);
+    // Per-round counters mirror the log, and every bulk-synchronous
+    // round (terminal one included) is one sync point.
+    let per_round: Vec<(usize, usize, usize)> = r
+        .metrics
+        .rounds
+        .iter()
+        .map(|rm| (rm.net_messages, rm.net_bytes, rm.sync_points))
+        .collect();
+    let round0_bytes: usize = expected.iter().map(|b| b.bytes).sum();
+    assert_eq!(per_round, vec![(6, round0_bytes, 1), (0, 0, 1)]);
+}
+
+#[test]
+fn pinned_dist_approx_traffic_on_a_hand_built_graph() {
+    let (r, report) =
+        DistApproxEngine::new(&pin_graph(), Linkage::Average, DistConfig::new(2, 1), 0.0)
+            .run_detailed();
+    assert_eq!(r.dendrogram.merges().len(), 3);
+    // Round 0: the ε-good find phase queries remote NN *caches* only for
+    // edges passing the local half of the test — (0,1) and (2,3); both
+    // candidates originate on the coordinator shard, so no gather batch
+    // is sent, and the matching broadcast reaches shard 1. The merge
+    // phase mirrors dist_rac's. Round 1 (merge (0,2) on shard 0) is
+    // silent and finishes the run.
+    let expected = expected_records(&[
+        (
+            0,
+            1,
+            0,
+            vec![
+                Message::NnCacheQuery { cluster: 1 },
+                Message::NnCacheQuery { cluster: 3 },
+            ],
+        ),
+        (
+            1,
+            0,
+            0,
+            vec![
+                Message::NnCacheReply {
+                    cluster: 1,
+                    nn: 0,
+                    weight: 1.0,
+                },
+                Message::NnCacheReply {
+                    cluster: 3,
+                    nn: 2,
+                    weight: 2.0,
+                },
+            ],
+        ),
+        (
+            0,
+            1,
+            0,
+            vec![Message::MatchingBroadcast {
+                pairs: vec![(0, 1, 1.0), (2, 3, 2.0)],
+            }],
+        ),
+        (
+            0,
+            1,
+            0,
+            vec![
+                Message::PartnerFetch { partner: 1 },
+                Message::PairViewQuery { cluster: 3 },
+                Message::PartnerFetch { partner: 3 },
+                Message::PairViewQuery { cluster: 1 },
+            ],
+        ),
+        (
+            1,
+            0,
+            0,
+            vec![
+                Message::PartnerState {
+                    partner: 1,
+                    size: 1,
+                    entries: vec![(0, 1.0, 1), (2, 9.0, 1)],
+                },
+                Message::PairViewReply {
+                    cluster: 3,
+                    merging: true,
+                    partner: 2,
+                    size: 1,
+                    pair_weight: 2.0,
+                },
+                Message::PartnerState {
+                    partner: 3,
+                    size: 1,
+                    entries: vec![(2, 2.0, 1)],
+                },
+                Message::PairViewReply {
+                    cluster: 1,
+                    merging: true,
+                    partner: 0,
+                    size: 1,
+                    pair_weight: 1.0,
+                },
+            ],
+        ),
+    ]);
+    assert_eq!(report.batches, expected);
+    let per_round: Vec<(usize, usize, usize)> = r
+        .metrics
+        .rounds
+        .iter()
+        .map(|rm| (rm.net_messages, rm.net_bytes, rm.sync_points))
+        .collect();
+    let round0_bytes: usize = expected.iter().map(|b| b.bytes).sum();
+    assert_eq!(per_round, vec![(5, round0_bytes, 1), (0, 0, 1)]);
+}
+
+#[test]
+fn pinned_batched_dist_approx_traffic_with_deferred_patch_flush() {
+    // 3 points, vshards = 2 → blocks {0, 1} and {2}; machines = 2 own one
+    // block each (Blocked placement). Round 0 merges (0, 1) locally and
+    // DEFERS the cross-machine patch of cluster 2's row; round 1 has no
+    // local work, so it synchronises: the deferred EdgePatch flushes
+    // first, then the global find exchange and the cross-machine merge
+    // of (0, 2) — all of it charged to the sync round.
+    let g = Graph::from_edges(3, [(0, 1, 1.0), (1, 2, 5.0)]);
+    let (r, report) = DistApproxEngine::new(&g, Linkage::Average, DistConfig::new(2, 1), 0.0)
+        .with_sync_mode(SyncMode::Batched { vshards: 2 })
+        .run_detailed();
+    assert_eq!(
+        r.dendrogram
+            .merges()
+            .iter()
+            .map(|m| (m.a, m.b, m.weight))
+            .collect::<Vec<_>>(),
+        vec![(0, 1, 1.0), (0, 2, 5.0)]
+    );
+    let expected = expected_records(&[
+        (
+            0,
+            1,
+            1,
+            vec![Message::EdgePatch {
+                target: 2,
+                leader: 0,
+                retired: 1,
+                weight: 5.0,
+                count: 1,
+            }],
+        ),
+        (0, 1, 1, vec![Message::NnCacheQuery { cluster: 2 }]),
+        (
+            1,
+            0,
+            1,
+            vec![Message::NnCacheReply {
+                cluster: 2,
+                nn: 0,
+                weight: 5.0,
+            }],
+        ),
+        (
+            0,
+            1,
+            1,
+            vec![Message::MatchingBroadcast {
+                pairs: vec![(0, 2, 5.0)],
+            }],
+        ),
+        (0, 1, 1, vec![Message::PartnerFetch { partner: 2 }]),
+        (
+            1,
+            0,
+            1,
+            vec![Message::PartnerState {
+                partner: 2,
+                size: 1,
+                entries: vec![(0, 5.0, 1)],
+            }],
+        ),
+    ]);
+    assert_eq!(report.batches, expected);
+    // Round 0 is a silent local round; round 1 carries everything and is
+    // the run's only sync point.
+    let per_round: Vec<(usize, usize, usize)> = r
+        .metrics
+        .rounds
+        .iter()
+        .map(|rm| (rm.net_messages, rm.net_bytes, rm.sync_points))
+        .collect();
+    let sync_bytes: usize = expected.iter().map(|b| b.bytes).sum();
+    assert_eq!(per_round, vec![(0, 0, 0), (6, sync_bytes, 1)]);
 }
 
 #[test]
