@@ -3,7 +3,7 @@
 # it. `make bench` runs the perf-trajectory smoke bench and writes
 # BENCH_hot_paths.json (the per-PR datapoint CI uploads as an artifact).
 
-.PHONY: artifacts build test test-differential clippy fmt fmt-check bench bench-approx bench-dist
+.PHONY: artifacts build test test-differential test-executed clippy fmt fmt-check bench bench-approx bench-dist
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -21,6 +21,14 @@ test:
 test-differential:
 	cargo test -q --test store_equivalence --test approx_quality \
 		--test dist_batching --test dist_sharding --test theorem1_exactness
+
+# Executed-mode differential + fault recovery and the hostile-bytes codec
+# properties, as a named target: a failure here means real threads +
+# channels + checkpoint replay diverged from the simulation (or a decoder
+# trusted attacker-controlled bytes), which reads very differently from a
+# unit failure.
+test-executed:
+	cargo test -q --test dist_executed --test codec_adversarial
 
 # Format in place; CI enforces the check variant.
 fmt:

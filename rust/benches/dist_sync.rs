@@ -16,12 +16,17 @@
 //! (per-round engines pay one barrier per round by construction), while
 //! merges stay O(n) and the dendrogram remains topology-invariant.
 //!
+//! Executed-mode counterpart cells (`*_exec` engines) run the default
+//! fleet for real — thread-per-machine shards over channels — and report
+//! the measured `t_exec` next to the model's `t_sim`, pinned bitwise
+//! against the simulation in-bench.
+//!
 //! CI uploads the JSON as the third perf-trajectory artifact next to
 //! `BENCH_hot_paths.json` and `BENCH_approx_tradeoff.json`.
 
 use rac_hac::approx::ApproxResult;
 use rac_hac::data;
-use rac_hac::dist::{DistApproxEngine, DistConfig, DistRacEngine, SyncMode};
+use rac_hac::dist::{DistApproxEngine, DistConfig, DistRacEngine, ExecOptions, SyncMode};
 use rac_hac::graph::Graph;
 use rac_hac::linkage::Linkage;
 use rac_hac::metrics::RunMetrics;
@@ -65,6 +70,8 @@ struct Cell {
     rounds: usize,
     sync_points: usize,
     t_sim_us: usize,
+    /// Measured executed-mode wall time; zero for simulated cells.
+    t_exec_us: usize,
     net_messages: usize,
     net_bytes: usize,
 }
@@ -88,6 +95,7 @@ impl Cell {
             rounds: m.rounds.len(),
             sync_points: m.total_sync_points(),
             t_sim_us: m.total_sim_time().as_micros() as usize,
+            t_exec_us: m.total_exec_time().as_micros() as usize,
             net_messages: m.total_net_messages(),
             net_bytes: m.total_net_bytes(),
         }
@@ -104,6 +112,7 @@ impl Cell {
             ("rounds", self.rounds.into()),
             ("sync_points", self.sync_points.into()),
             ("t_sim_us", self.t_sim_us.into()),
+            ("t_exec_us", self.t_exec_us.into()),
             ("net_messages", self.net_messages.into()),
             ("net_bytes", self.net_bytes.into()),
         ])
@@ -138,9 +147,10 @@ fn main() {
         ]));
         let t = Table::new(
             &[
-                "engine", "epsilon", "machines", "cpus", "rounds", "syncs", "t_sim", "net_kB",
+                "engine", "epsilon", "machines", "cpus", "rounds", "syncs", "t_sim", "t_exec",
+                "net_kB",
             ],
-            &[20, 8, 9, 5, 7, 6, 12, 9],
+            &[24, 8, 9, 5, 7, 6, 12, 12, 9],
         );
         for &topo in &TOPOLOGIES {
             // Exact baseline: one barrier per round, rounds = merge
@@ -218,6 +228,51 @@ fn main() {
             "{}: batched dendrogram depends on topology",
             w.name
         );
+        // Executed-mode counterpart cells on the default fleet (4×2):
+        // real threads + channels, measured t_exec, pinned bitwise
+        // against the simulation (the full differential matrix lives in
+        // rust/tests/dist_executed.rs).
+        let topo = (4, 2);
+        let sim_rac =
+            DistRacEngine::new(&w.graph, Linkage::Average, DistConfig::new(topo.0, topo.1)).run();
+        let exec_rac =
+            DistRacEngine::new(&w.graph, Linkage::Average, DistConfig::new(topo.0, topo.1))
+                .with_exec(ExecOptions::default())
+                .run();
+        assert_eq!(
+            sim_rac.dendrogram.bitwise_merges(),
+            exec_rac.dendrogram.bitwise_merges(),
+            "{}: executed dist_rac diverged from simulation",
+            w.name
+        );
+        cells.push(Cell::from_metrics(
+            w.name,
+            "dist_rac_exec",
+            0.0,
+            topo,
+            exec_rac.dendrogram.merges().len(),
+            &exec_rac.metrics,
+        ));
+        let sim_batched = run_batched(&w.graph, topo, 0.1);
+        let exec_batched =
+            DistApproxEngine::new(&w.graph, Linkage::Average, DistConfig::new(topo.0, topo.1), 0.1)
+                .with_sync_mode(SyncMode::Batched { vshards: VSHARDS })
+                .with_exec(ExecOptions::default())
+                .run();
+        assert_eq!(
+            sim_batched.dendrogram.bitwise_merges(),
+            exec_batched.dendrogram.bitwise_merges(),
+            "{}: executed batched dist_approx diverged from simulation",
+            w.name
+        );
+        cells.push(Cell::from_metrics(
+            w.name,
+            "dist_approx_batched_exec",
+            0.1,
+            topo,
+            exec_batched.dendrogram.merges().len(),
+            &exec_batched.metrics,
+        ));
         for c in cells.iter().filter(|c| c.workload == w.name) {
             t.row(&[
                 c.engine,
@@ -227,6 +282,7 @@ fn main() {
                 &c.rounds.to_string(),
                 &c.sync_points.to_string(),
                 &format!("{}us", c.t_sim_us),
+                &format!("{}us", c.t_exec_us),
                 &format!("{:.1}", c.net_bytes as f64 / 1024.0),
             ]);
         }
@@ -263,7 +319,7 @@ fn main() {
 
     if write_json {
         let report = obj([
-            ("schema", "bench_dist_sync/v1".into()),
+            ("schema", "bench_dist_sync/v2".into()),
             ("mode", (if smoke { "smoke" } else { "full" }).into()),
             ("vshards", (VSHARDS as usize).into()),
             ("workloads", Json::Arr(workload_meta)),

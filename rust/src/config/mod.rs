@@ -12,11 +12,12 @@ pub use toml::{TomlDoc, TomlValue};
 
 use std::path::Path;
 use std::str::FromStr;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::data::Metric;
-use crate::dist::{SyncMode, DEFAULT_VSHARDS};
+use crate::dist::{ExecOptions, FaultSpec, SyncMode, DEFAULT_VSHARDS};
 use crate::linkage::Linkage;
 
 /// Which dataset generator to run (DESIGN.md §1 substitutions).
@@ -85,6 +86,11 @@ pub struct RunConfig {
     pub graph: GraphSpec,
     pub linkage: Linkage,
     pub engine: EngineSpec,
+    /// `Some` switches the distributed engines from simulated accounting
+    /// to executed mode (thread-per-machine shards over real channels;
+    /// `exec_mode = "executed"` plus the latency/jitter/fault knobs).
+    /// `None` (the default) keeps the pure simulation.
+    pub exec: Option<ExecOptions>,
 }
 
 impl RunConfig {
@@ -171,12 +177,15 @@ impl RunConfig {
             other => bail!("unknown engine.type {other:?}"),
         };
 
+        let exec = parse_exec(&doc, &engine)?;
+
         Ok(RunConfig {
             dataset,
             seed: doc.usize_or("dataset", "seed", 42)? as u64,
             graph,
             linkage,
             engine,
+            exec,
         })
     }
 
@@ -242,6 +251,75 @@ fn parse_sync_mode(doc: &TomlDoc) -> Result<SyncMode> {
             "unknown engine.sync_mode {other:?} (expected \"per_round\" or \"batched\")"
         ),
     }
+}
+
+/// Parse + validate the executed-mode block: `exec_mode = "simulated"`
+/// (default) or `"executed"`, with per-link latency/jitter and an optional
+/// fault-injection point that only make sense when actually executing.
+/// Executed mode needs real shards to run on, so it is rejected for the
+/// shared-memory engines with the engine name in the error.
+fn parse_exec(doc: &TomlDoc, engine: &EngineSpec) -> Result<Option<ExecOptions>> {
+    let mode = doc.str_or("engine", "exec_mode", "simulated")?;
+    let executed = match mode.as_str() {
+        "simulated" => false,
+        "executed" => true,
+        other => bail!(
+            "unknown engine.exec_mode {other:?} (expected \"simulated\" or \"executed\")"
+        ),
+    };
+    if !executed {
+        for key in [
+            "link_latency_us",
+            "link_jitter_us",
+            "fault_machine",
+            "fault_round",
+        ] {
+            if doc.get("engine", key).is_some() {
+                bail!(
+                    "engine.{key} only applies to exec_mode = \"executed\" \
+                     (the simulation has no physical links to fault or delay)"
+                );
+            }
+        }
+        return Ok(None);
+    }
+    let machines = match engine {
+        EngineSpec::DistRac { machines, .. } | EngineSpec::DistApprox { machines, .. } => {
+            *machines
+        }
+        _ => bail!(
+            "exec_mode = \"executed\" requires a distributed engine \
+             (dist_rac or dist_approx); shared-memory engines have no shards to execute"
+        ),
+    };
+    let latency = Duration::from_micros(doc.usize_or("engine", "link_latency_us", 0)? as u64);
+    let jitter = Duration::from_micros(doc.usize_or("engine", "link_jitter_us", 0)? as u64);
+    let fault = match (
+        doc.get("engine", "fault_machine"),
+        doc.get("engine", "fault_round"),
+    ) {
+        (None, None) => None,
+        (Some(_), Some(_)) => {
+            let machine = doc.usize_or("engine", "fault_machine", 0)?;
+            let round = doc.usize_or("engine", "fault_round", 0)?;
+            if machine >= machines {
+                bail!(
+                    "engine.fault_machine must be < machines \
+                     (got {machine} with machines = {machines})"
+                );
+            }
+            Some(FaultSpec { machine, round })
+        }
+        _ => bail!(
+            "engine.fault_machine and engine.fault_round must be set together \
+             (a fault is a (machine, round) point)"
+        ),
+    };
+    Ok(Some(ExecOptions {
+        latency,
+        jitter,
+        fault,
+    }))
 }
 
 #[cfg(test)]
@@ -462,6 +540,95 @@ cpus = 4
             let text = format!("[engine]\ntype = \"{engine}\"\nmachines = 1\ncpus = 1\n");
             assert!(RunConfig::from_toml_str(&text).is_ok());
         }
+    }
+
+    #[test]
+    fn exec_mode_defaults_to_simulated() {
+        let cfg = RunConfig::from_toml_str("[engine]\ntype = \"dist_rac\"\n").unwrap();
+        assert_eq!(cfg.exec, None);
+        let cfg = RunConfig::from_toml_str(
+            "[engine]\ntype = \"dist_approx\"\nexec_mode = \"simulated\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.exec, None);
+    }
+
+    #[test]
+    fn exec_mode_parses_with_knobs() {
+        let cfg = RunConfig::from_toml_str(
+            "[engine]\ntype = \"dist_approx\"\nmachines = 3\ncpus = 2\n\
+             exec_mode = \"executed\"\nlink_latency_us = 50\nlink_jitter_us = 10\n\
+             fault_machine = 1\nfault_round = 3\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.exec,
+            Some(ExecOptions {
+                latency: Duration::from_micros(50),
+                jitter: Duration::from_micros(10),
+                fault: Some(FaultSpec {
+                    machine: 1,
+                    round: 3
+                }),
+            })
+        );
+        // Bare executed mode: zero latency, zero jitter, no fault.
+        let cfg = RunConfig::from_toml_str(
+            "[engine]\ntype = \"dist_rac\"\nexec_mode = \"executed\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.exec, Some(ExecOptions::default()));
+    }
+
+    #[test]
+    fn exec_mode_validates() {
+        // Executed mode is a distributed-engine feature.
+        for engine in ["rac", "approx", "naive_hac"] {
+            let err = RunConfig::from_toml_str(&format!(
+                "[engine]\ntype = \"{engine}\"\nexec_mode = \"executed\"\n"
+            ))
+            .unwrap_err()
+            .to_string();
+            assert!(err.contains("exec_mode"), "{engine}: {err}");
+        }
+        // Exec knobs without executed mode are configuration errors, named.
+        for key in [
+            "link_latency_us",
+            "link_jitter_us",
+            "fault_machine",
+            "fault_round",
+        ] {
+            let err = RunConfig::from_toml_str(&format!(
+                "[engine]\ntype = \"dist_rac\"\n{key} = 1\n"
+            ))
+            .unwrap_err()
+            .to_string();
+            assert!(err.contains(key) && err.contains("executed"), "{key}: {err}");
+        }
+        // A fault is a (machine, round) point: half a fault is an error.
+        for key in ["fault_machine", "fault_round"] {
+            let err = RunConfig::from_toml_str(&format!(
+                "[engine]\ntype = \"dist_rac\"\nexec_mode = \"executed\"\n{key} = 1\n"
+            ))
+            .unwrap_err()
+            .to_string();
+            assert!(err.contains("together"), "{key}: {err}");
+        }
+        // The fault target must exist in the topology.
+        let err = RunConfig::from_toml_str(
+            "[engine]\ntype = \"dist_rac\"\nmachines = 3\ncpus = 1\n\
+             exec_mode = \"executed\"\nfault_machine = 3\nfault_round = 0\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("fault_machine"), "{err}");
+        // Unknown modes are rejected with the field name.
+        let err = RunConfig::from_toml_str(
+            "[engine]\ntype = \"dist_rac\"\nexec_mode = \"real\"\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("exec_mode"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,262 @@
+//! Versioned binary snapshots of per-machine engine state, taken at sync
+//! points by the executed distributed mode ([`super::exec`]).
+//!
+//! A sync point is the only cut where a consistent global snapshot exists
+//! for free: every deferred patch has been flushed, every in-flight
+//! exchange has been drained by its barrier, and the next round has not
+//! started. The executed driver checkpoints there, and recovery from a
+//! killed shard restores *every* machine from the same cut — a global
+//! rollback, the standard BSP recovery discipline — then replays rounds.
+//! Determinism of the round body makes the replay bitwise identical, which
+//! `rust/tests/dist_executed.rs` pins.
+//!
+//! ## Wire format (version 1)
+//!
+//! Little-endian, one blob per machine:
+//!
+//! ```text
+//! magic   u32   0x4B434152 ("RACK")
+//! version u32   1
+//! machine u32   owner of this blob
+//! machines u32  fleet width the blob was cut for
+//! round   u64   next round to execute after restore
+//! n       u64   total cluster-id space
+//! owned   u32   number of owned-row records
+//! owned × record:
+//!   id        u32
+//!   nn        u32   cached nearest-neighbor pointer
+//!   nn_weight f64   cached NN edge weight (bit-exact)
+//!   live_len  u32   entry count
+//!   live_len × (target u32, weight f64, count u64)
+//! size    u64 × n   replicated cluster sizes
+//! active  u8  × n   replicated liveness flags
+//! ```
+//!
+//! Rows are recorded for every owned id in ascending order (retired rows
+//! as zero entries), preserving live-entry *order*: the union-map fold
+//! emits its output in first-encounter order of the input rows, so
+//! restoring rows in a different entry order would change later map
+//! orders — layout may differ after restore (arena offsets, tombstones),
+//! but the per-row live sequence is what the bitwise contract needs.
+//!
+//! Decoding reuses the hardened wire [`Reader`]: length prefixes are
+//! validated against the remaining buffer *before* any element loop, so a
+//! corrupt or truncated blob is rejected with an error instead of a panic
+//! or an unbounded allocation.
+
+use super::network::{len_u32, put_f64, put_u32, put_u64, Reader};
+use crate::linkage::Weight;
+
+const MAGIC: u32 = 0x4B43_4152; // "RACK" in little-endian byte order
+const VERSION: u32 = 1;
+
+/// One owned-row record: `(id, nn, nn_weight, entries)`.
+pub type RowRecord = (u32, u32, Weight, Vec<(u32, Weight, u64)>);
+
+/// The complete serializable state of one executed-mode machine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MachineCheckpoint {
+    /// Machine this blob belongs to.
+    pub machine: u32,
+    /// Fleet width the blob was cut for (restore validates it).
+    pub machines: u32,
+    /// Next round to execute after restore.
+    pub round: u64,
+    /// Total cluster-id space.
+    pub n: usize,
+    /// Owned rows in ascending id order, with the owned slice of the NN
+    /// cache riding along per row.
+    pub rows: Vec<RowRecord>,
+    /// Replicated size vector (all `n` entries).
+    pub size: Vec<u64>,
+    /// Replicated liveness flags (all `n` entries).
+    pub active: Vec<bool>,
+}
+
+/// Serialize a machine snapshot to the version-1 binary format.
+pub fn encode(cp: &MachineCheckpoint) -> Vec<u8> {
+    assert_eq!(cp.size.len(), cp.n, "size vector must cover the id space");
+    assert_eq!(cp.active.len(), cp.n, "active vector must cover the id space");
+    let mut buf = Vec::new();
+    put_u32(&mut buf, MAGIC);
+    put_u32(&mut buf, VERSION);
+    put_u32(&mut buf, cp.machine);
+    put_u32(&mut buf, cp.machines);
+    put_u64(&mut buf, cp.round);
+    put_u64(&mut buf, cp.n as u64);
+    put_u32(&mut buf, len_u32(cp.rows.len(), "checkpoint row"));
+    for (id, nn, nn_weight, entries) in &cp.rows {
+        put_u32(&mut buf, *id);
+        put_u32(&mut buf, *nn);
+        put_f64(&mut buf, *nn_weight);
+        put_u32(&mut buf, len_u32(entries.len(), "checkpoint row entry"));
+        for &(t, w, c) in entries {
+            put_u32(&mut buf, t);
+            put_f64(&mut buf, w);
+            put_u64(&mut buf, c);
+        }
+    }
+    for &s in &cp.size {
+        put_u64(&mut buf, s);
+    }
+    for &a in &cp.active {
+        buf.push(u8::from(a));
+    }
+    buf
+}
+
+/// Decode a version-1 blob, rejecting wrong magic/version, truncation,
+/// corrupt length prefixes, and trailing bytes.
+pub fn decode(bytes: &[u8]) -> Result<MachineCheckpoint, String> {
+    let mut r = Reader::new(bytes);
+    let magic = r.u32()?;
+    if magic != MAGIC {
+        return Err(format!("bad checkpoint magic {magic:#010x}"));
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        return Err(format!(
+            "unsupported checkpoint version {version} (this build reads {VERSION})"
+        ));
+    }
+    let machine = r.u32()?;
+    let machines = r.u32()?;
+    let round = r.u64()?;
+    let n64 = r.u64()?;
+    // The trailing size+active sections alone need 9 bytes per id; a
+    // blob claiming more ids than its length supports is corrupt.
+    if n64 > (r.remaining() / 9) as u64 {
+        return Err(format!(
+            "corrupt checkpoint id-space {n64}: only {} bytes remain",
+            r.remaining()
+        ));
+    }
+    let n = n64 as usize;
+    let owned = r.u32()? as usize;
+    // id + nn + nn_weight + live_len = 20 bytes minimum per record.
+    r.check_count(owned, 20, "checkpoint row")?;
+    let mut rows = Vec::with_capacity(owned);
+    for _ in 0..owned {
+        let id = r.u32()?;
+        let nn = r.u32()?;
+        let nn_weight = r.f64()?;
+        let len = r.u32()? as usize;
+        // (target u32, weight f64, count u64) = 20 bytes per entry.
+        r.check_count(len, 20, "checkpoint row entry")?;
+        let mut entries = Vec::with_capacity(len);
+        for _ in 0..len {
+            entries.push((r.u32()?, r.f64()?, r.u64()?));
+        }
+        rows.push((id, nn, nn_weight, entries));
+    }
+    r.check_count(n, 8, "checkpoint size entry")?;
+    let mut size = Vec::with_capacity(n);
+    for _ in 0..n {
+        size.push(r.u64()?);
+    }
+    r.check_count(n, 1, "checkpoint active flag")?;
+    let mut active = Vec::with_capacity(n);
+    for _ in 0..n {
+        active.push(r.u8()? != 0);
+    }
+    if r.remaining() != 0 {
+        return Err(format!(
+            "{} trailing bytes after checkpoint payload",
+            r.remaining()
+        ));
+    }
+    Ok(MachineCheckpoint {
+        machine,
+        machines,
+        round,
+        n,
+        rows,
+        size,
+        active,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> MachineCheckpoint {
+        MachineCheckpoint {
+            machine: 1,
+            machines: 3,
+            round: 7,
+            n: 5,
+            rows: vec![
+                (1, 4, 0.25, vec![(4, 0.25, 1), (2, f64::INFINITY, 3)]),
+                (4, u32::MAX, Weight::INFINITY, vec![]),
+            ],
+            size: vec![1, 2, 1, 0, 3],
+            active: vec![true, true, false, false, true],
+        }
+    }
+
+    #[test]
+    fn round_trips_bitwise() {
+        let cp = sample();
+        let blob = encode(&cp);
+        let back = decode(&blob).unwrap();
+        assert_eq!(back, cp);
+        // Weight bits survive exactly (PartialEq on f64 misses -0.0/NaN
+        // subtleties; pin the raw bits too).
+        assert_eq!(
+            back.rows[0].2.to_bits(),
+            cp.rows[0].2.to_bits(),
+            "nn_weight must round-trip bit-exactly"
+        );
+    }
+
+    #[test]
+    fn rejects_wrong_magic_and_version() {
+        let mut blob = encode(&sample());
+        blob[0] ^= 0xFF;
+        assert!(decode(&blob).unwrap_err().contains("magic"));
+        let mut blob = encode(&sample());
+        blob[4] = 99;
+        assert!(decode(&blob).unwrap_err().contains("version"));
+    }
+
+    #[test]
+    fn rejects_truncation_at_every_cut() {
+        let blob = encode(&sample());
+        for cut in 0..blob.len() {
+            assert!(decode(&blob[..cut]).is_err(), "cut={cut} accepted");
+        }
+        let mut extended = blob.clone();
+        extended.push(0);
+        assert!(decode(&extended).unwrap_err().contains("trailing"));
+    }
+
+    #[test]
+    fn rejects_corrupt_counts_without_allocation() {
+        // Blow up the owned-row count: the pre-loop guard must catch it.
+        let mut blob = encode(&sample());
+        // magic(4)+version(4)+machine(4)+machines(4)+round(8)+n(8) = 32.
+        blob[32..36].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = decode(&blob).unwrap_err();
+        assert!(err.contains("corrupt"), "want count rejection, got: {err}");
+        // Blow up the id space: the size/active sections cannot fit.
+        let mut blob = encode(&sample());
+        blob[24..32].copy_from_slice(&u64::MAX.to_le_bytes());
+        let err = decode(&blob).unwrap_err();
+        assert!(err.contains("corrupt"), "want id-space rejection, got: {err}");
+    }
+
+    #[test]
+    fn empty_machine_round_trips() {
+        let cp = MachineCheckpoint {
+            machine: 0,
+            machines: 1,
+            round: 0,
+            n: 0,
+            rows: vec![],
+            size: vec![],
+            active: vec![],
+        };
+        assert_eq!(decode(&encode(&cp)).unwrap(), cp);
+    }
+}

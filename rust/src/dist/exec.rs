@@ -1,0 +1,1296 @@
+//! Executed distribution: one OS thread per machine, each owning its
+//! arena shard, exchanging the *same* [`Message`] batches the simulation
+//! accounts for — over real `std::sync::mpsc` channels with injected
+//! per-link latency and jitter.
+//!
+//! ## Why a second mode
+//!
+//! The simulated engine ([`super::DistCore`]) computes against the
+//! authoritative global state and *stages* traffic through the wire codec;
+//! `t_sim` is a model. That design makes the dendrogram provably
+//! topology-invariant, but nothing ever actually crosses a thread
+//! boundary, so the codec, the barrier structure, and the recovery story
+//! are exercised only by construction, not by execution. This module runs
+//! the identical round body truly sharded: every machine holds only its
+//! owned rows plus replicated scalars, every remote read is a real
+//! encode → channel → decode round trip, and the run reports a *measured*
+//! wall clock ([`RoundMetrics::t_exec`]) as the empirical sibling of
+//! `t_sim`. The contract, pinned by `rust/tests/dist_executed.rs`:
+//!
+//! > executed and simulated runs produce **bitwise identical** dendrogram,
+//! > (1+ε) bounds trace, and sync-point schedule, for every topology,
+//! > ε, and sync mode — and a shard killed mid-run recovers from the last
+//! > sync-point checkpoint to the same bits.
+//!
+//! ## Why bitwise equality holds
+//!
+//! The only numeric folds are `scan_nn` and `compute_union_map`, and both
+//! consume rows in storage order. The executed mode preserves exactly the
+//! state the simulation reads at each decision point:
+//!
+//! * **Owned rows** — patched in per-(target, leader) sorted order, which
+//!   matches the simulation's serial pair-loop order per row (patch
+//!   targets of distinct pairs commute across rows; within a row, leaders
+//!   apply ascending both here and there). Install/clear/compaction use
+//!   the shared [`NeighborStore`] code, which preserves live-entry order.
+//! * **Replicated scalars** (`active`, `size`, `matched`, `partner`,
+//!   `pair_weight`) — rebuilt on every machine from the same broadcast
+//!   pair list, in the same order the simulation writes them.
+//! * **Remote NN caches** — refreshed each round by the same query sets
+//!   the simulation stages ([`Message::NnQuery`]/[`Message::NnCacheQuery`]
+//!   with identical batch content and order). A stale shadow is never
+//!   decisive: the ε-good candidate test needs *both* halves to accept,
+//!   and the half owned by the scanning machine is authoritative.
+//!
+//! ## Traffic accounting
+//!
+//! Batches are counted under the simulation's rule — one RPC per
+//! non-empty (src, dst) pair per phase, at encoded wire length. Per-round
+//! exact and ε-good executed traffic equals the simulation's minus its
+//! `PairViewQuery`/`PairViewReply` batches (the executed mode replicates
+//! pair state from the merge broadcast instead of querying it). The
+//! batched mode diverges further by design: real execution must refresh
+//! NN caches and reach the coordinator every round and must ship patches
+//! eagerly, where the simulation's deferred-flush accounting charges the
+//! wire only at sync points — the executed numbers are what a real
+//! deployment pays for the same schedule, the simulated numbers are the
+//! sync-boundary lower bound. The *schedule itself* (`sync_points`) is
+//! bitwise shared.
+//!
+//! ## Checkpoint / recovery
+//!
+//! At every sync point the driver collects one versioned
+//! [`super::checkpoint`] blob per machine (the codec also serializes the
+//! initial state, so every executed run exercises a restore). A
+//! round-indexed [`FaultSpec`] kills the whole fleet at the top of the
+//! chosen round — the shard's death tears down the bulk-synchronous round
+//! for everyone, which is exactly why recovery is a *global* rollback:
+//! the driver respawns the fleet, feeds each machine its last blob, and
+//! replays from the checkpointed round. Determinism makes the replay
+//! bitwise identical to the unfaulted run.
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use rustc_hash::{FxHashMap, FxHashSet};
+
+use super::checkpoint::{self, MachineCheckpoint};
+use super::network::{decode_batch, encode_batch, BatchRecord, Message, NetReport};
+use super::{vshard_of, DistCore, DistSelector, Placement};
+use crate::approx::good::{self, Candidate, MergePair};
+use crate::approx::quality::MergeBound;
+use crate::dendrogram::{Dendrogram, Merge};
+use crate::linkage::{EdgeState, Linkage, Weight};
+use crate::metrics::{RoundMetrics, RunMetrics};
+use crate::rac::logic::{compute_union_map, scan_nn, PairView};
+use crate::rac::{RacResult, NO_NN};
+use crate::store::{NeighborStore, NeighborsRef, RowRef};
+
+/// Kill the fleet at the top of `round` (0-based), then recover every
+/// machine from its last sync-point checkpoint and replay.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// Machine reported as failed (must be `< machines`; with one fleet
+    /// per process the whole fleet restarts either way — BSP recovery is
+    /// a global rollback).
+    pub machine: usize,
+    /// Round at whose start the fault fires. A round the run never
+    /// reaches simply never faults.
+    pub round: usize,
+}
+
+/// Knobs for the executed distributed mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ExecOptions {
+    /// Fixed one-way link latency added to every cross-machine packet.
+    pub latency: Duration,
+    /// Upper bound on deterministic per-packet jitter (hashed from the
+    /// link and round, so reruns see identical delays).
+    pub jitter: Duration,
+    /// Optional fault injection; `None` runs clean.
+    pub fault: Option<FaultSpec>,
+}
+
+/// How long the driver waits for any single machine report before
+/// declaring the fleet wedged. Generous: test topologies finish rounds in
+/// microseconds; only a deadlock bug ever gets near this.
+const REPORT_TIMEOUT: Duration = Duration::from_secs(120);
+
+// Per-round exchange step ids (unique per (round, step) because a round
+// runs exactly one selector). Exact rounds:
+const STEP_NN_QUERY: u8 = 0;
+const STEP_NN_REPLY: u8 = 1;
+// ε-good rounds:
+const STEP_CACHE_QUERY: u8 = 0;
+const STEP_CACHE_REPLY: u8 = 1;
+const STEP_CANDIDATES: u8 = 2;
+const STEP_MATCHING: u8 = 3;
+// Merge phase (offset past the selector's find steps):
+const EXACT_MERGE_BASE: u8 = 2;
+const GOOD_MERGE_BASE: u8 = 4;
+
+/// One wire packet: an encoded [`Message`] batch plus its delivery time.
+/// Empty batches still flow (they are the barrier) but are never counted.
+struct Packet {
+    src: usize,
+    round: usize,
+    step: u8,
+    bytes: Vec<u8>,
+    deliver_at: Instant,
+}
+
+/// Driver → machine commands.
+#[derive(Clone)]
+enum Cmd {
+    /// Adopt the given checkpoint blob as the complete machine state.
+    Restore(Vec<u8>),
+    /// Run the find phase of `round` and report `Phase1`.
+    Round { round: usize },
+    /// Apply the globally selected pairs and report `RoundDone`.
+    Merge { pairs: Vec<MergePair> },
+    /// Serialize state and report `CheckpointBlob`.
+    Checkpoint { round: usize },
+    /// No pairs anywhere: report `FinishAck` and exit.
+    Finish,
+    /// Tear down immediately (normal completion or fault injection).
+    Exit,
+}
+
+/// Per-round wire counters a machine hands back with each report.
+#[derive(Default)]
+struct NetStats {
+    messages: usize,
+    bytes: usize,
+    log: Vec<BatchRecord>,
+}
+
+/// Machine → driver reports.
+enum Report {
+    /// Find-phase result. Exact rounds: one per machine (pairs from owned
+    /// leaders). ε-good rounds: from the coordinator only.
+    Phase1 { pairs: Vec<MergePair>, synced: bool },
+    /// Merge phase done. `nn_weights` carries the pre-merge NN weight
+    /// bits of owned pair members — the driver's (1+ε) bounds inputs.
+    RoundDone {
+        nn_weights: Vec<(u32, u64)>,
+        nn_updates: usize,
+        nn_scan_entries: usize,
+        eligibility_scan_entries: usize,
+        net: NetStats,
+    },
+    CheckpointBlob { machine: usize, blob: Vec<u8> },
+    FinishAck {
+        eligibility_scan_entries: usize,
+        net: NetStats,
+    },
+}
+
+/// A neighbor row that is either borrowed from the local arena or was
+/// fetched over the wire. [`compute_union_map`] takes one row type for
+/// both inputs; this adapter lets a local leader row fold against a
+/// remote partner's fetched entries without copying the local side.
+#[derive(Clone, Copy)]
+enum RowView<'a> {
+    Store(RowRef<'a>),
+    Fetched(&'a [(u32, EdgeState)]),
+}
+
+impl NeighborsRef for RowView<'_> {
+    fn for_each_edge(self, mut f: impl FnMut(u32, EdgeState)) {
+        match self {
+            RowView::Store(r) => r.for_each_edge(f),
+            RowView::Fetched(entries) => {
+                for &(t, e) in entries {
+                    f(t, e);
+                }
+            }
+        }
+    }
+
+    fn live_len(self) -> usize {
+        match self {
+            RowView::Store(r) => r.live_len(),
+            RowView::Fetched(entries) => entries.len(),
+        }
+    }
+}
+
+/// Deterministic per-packet jitter: splitmix64 over the link identity,
+/// so a replayed round sees identical delays (recovery determinism).
+fn jitter_ns(src: usize, dst: usize, round: usize, step: u8, bound: Duration) -> u64 {
+    let bound = bound.as_nanos() as u64;
+    if bound == 0 {
+        return 0;
+    }
+    let mut x = (src as u64)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add((dst as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9))
+        .wrapping_add((round as u64).wrapping_mul(0x94D0_49BB_1331_11EB))
+        .wrapping_add(step as u64 + 1);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    x % (bound + 1)
+}
+
+/// The channel fabric of one machine: senders to every peer, its own
+/// inbox, and the per-round traffic counters.
+struct Wire {
+    me: usize,
+    machines: usize,
+    peers: Vec<Sender<Packet>>,
+    inbox: Receiver<Packet>,
+    /// Packets that arrived ahead of the step we are collecting.
+    stash: Vec<Packet>,
+    latency: Duration,
+    jitter: Duration,
+    round: usize,
+    stats: NetStats,
+}
+
+impl Wire {
+    /// Ship one physical packet. Empty batches flow (barrier) but only
+    /// non-empty ones are accounted — the simulation's counting rule.
+    fn post(&mut self, dst: usize, step: u8, msgs: &[Message]) {
+        debug_assert_ne!(dst, self.me, "machines never post to themselves");
+        let bytes = encode_batch(msgs);
+        if !msgs.is_empty() {
+            self.stats.messages += 1;
+            self.stats.bytes += bytes.len();
+            self.stats.log.push(BatchRecord {
+                src: self.me,
+                dst,
+                messages: msgs.len(),
+                bytes: bytes.len(),
+                round: self.round,
+            });
+        }
+        let delay = self.latency
+            + Duration::from_nanos(jitter_ns(self.me, dst, self.round, step, self.jitter));
+        let packet = Packet {
+            src: self.me,
+            round: self.round,
+            step,
+            bytes,
+            deliver_at: Instant::now() + delay,
+        };
+        // A dead peer (fault teardown) makes sends fail; the machine will
+        // be told to exit via its command channel, so just drop.
+        let _ = self.peers[dst].send(packet);
+    }
+
+    /// Wait for one packet from each of `from`, honoring delivery times,
+    /// and decode them in ascending src order.
+    fn collect(
+        &mut self,
+        step: u8,
+        from: impl Iterator<Item = usize>,
+    ) -> Vec<(usize, Vec<Message>)> {
+        let expected = from.count();
+        let mut packets: Vec<Packet> = Vec::with_capacity(expected);
+        let mut i = 0;
+        while i < self.stash.len() {
+            if self.stash[i].round == self.round && self.stash[i].step == step {
+                packets.push(self.stash.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        while packets.len() < expected {
+            let p = self
+                .inbox
+                .recv_timeout(REPORT_TIMEOUT)
+                .expect("peer silent mid-step: executed fleet wedged");
+            if p.round == self.round && p.step == step {
+                packets.push(p);
+            } else {
+                self.stash.push(p);
+            }
+        }
+        // The link delay is modeled at the receiver: nothing is readable
+        // before its delivery time.
+        if let Some(latest) = packets.iter().map(|p| p.deliver_at).max() {
+            let now = Instant::now();
+            if latest > now {
+                std::thread::sleep(latest - now);
+            }
+        }
+        packets.sort_by_key(|p| p.src);
+        packets
+            .into_iter()
+            .map(|p| {
+                let msgs = decode_batch(&p.bytes).expect("peer sent a corrupt batch");
+                (p.src, msgs)
+            })
+            .collect()
+    }
+
+    /// Symmetric exchange: post `out[dst]` to every peer, collect one
+    /// packet from every peer.
+    fn all_to_all(&mut self, step: u8, out: Vec<Vec<Message>>) -> Vec<(usize, Vec<Message>)> {
+        debug_assert_eq!(out.len(), self.machines);
+        for (dst, msgs) in out.iter().enumerate() {
+            if dst != self.me {
+                self.post(dst, step, msgs);
+            }
+        }
+        let me = self.me;
+        self.collect(step, (0..self.machines).filter(move |&s| s != me))
+    }
+
+    /// Gather: non-root machines post `msgs` to `root`; root collects.
+    fn gather_to(&mut self, root: usize, step: u8, msgs: &[Message]) -> Vec<(usize, Vec<Message>)> {
+        if self.me == root {
+            let machines = self.machines;
+            self.collect(step, (0..machines).filter(move |&s| s != root))
+        } else {
+            self.post(root, step, msgs);
+            Vec::new()
+        }
+    }
+
+    /// Broadcast: root posts `out[dst]` to every peer; peers receive one
+    /// batch from root.
+    fn broadcast_from(&mut self, root: usize, step: u8, out: &[Vec<Message>]) -> Vec<Message> {
+        if self.me == root {
+            for (dst, msgs) in out.iter().enumerate() {
+                if dst != root {
+                    self.post(dst, step, msgs);
+                }
+            }
+            Vec::new()
+        } else {
+            let mut got = self.collect(step, std::iter::once(root));
+            got.pop().map(|(_, msgs)| msgs).unwrap_or_default()
+        }
+    }
+
+    fn take_stats(&mut self) -> NetStats {
+        std::mem::take(&mut self.stats)
+    }
+}
+
+/// One executed machine: the owned shard of the arena plus the replicated
+/// scalars, mirroring [`super::DistCore`]'s fields sliced by ownership.
+struct Machine {
+    me: usize,
+    n: usize,
+    linkage: Linkage,
+    place: Placement,
+    selector: DistSelector,
+    store: NeighborStore,
+    /// Owned ids still active, ascending (the machine's `active_ids`).
+    owned_active: Vec<u32>,
+    /// Replicated liveness (maintained from broadcast pair lists).
+    active: Vec<bool>,
+    /// Replicated sizes (same maintenance).
+    size: Vec<u64>,
+    /// NN cache: authoritative for owned ids, per-round-refreshed shadow
+    /// for remote ids (defaults harmless — see module docs).
+    nn: Vec<u32>,
+    nn_weight: Vec<Weight>,
+    /// Per-round pair state, replicated from the merge broadcast.
+    matched: Vec<bool>,
+    partner: Vec<u32>,
+    pair_weight: Vec<Weight>,
+    /// Per-round ε-good sweep cost (reported, then reset).
+    eligibility_scan_entries: usize,
+    wire: Wire,
+}
+
+impl Machine {
+    fn owns(&self, c: u32) -> bool {
+        self.place.machine_of(c) == self.me
+    }
+
+    /// Adopt a checkpoint blob as the complete machine state.
+    fn restore(&mut self, blob: &[u8]) {
+        let cp = checkpoint::decode(blob).expect("driver handed a corrupt checkpoint");
+        assert_eq!(cp.machine as usize, self.me, "blob for the wrong machine");
+        assert_eq!(
+            cp.machines as usize, self.wire.machines,
+            "blob for the wrong fleet width"
+        );
+        self.n = cp.n;
+        self.store = NeighborStore::new(cp.n);
+        self.owned_active.clear();
+        self.nn = vec![NO_NN; cp.n];
+        self.nn_weight = vec![Weight::INFINITY; cp.n];
+        for (id, nn, nn_weight, entries) in &cp.rows {
+            let row: Vec<(u32, EdgeState)> = entries
+                .iter()
+                .map(|&(t, w, c)| (t, EdgeState { weight: w, count: c }))
+                .collect();
+            if !row.is_empty() {
+                self.store.install_row(*id, &row);
+            }
+            self.nn[*id as usize] = *nn;
+            self.nn_weight[*id as usize] = *nn_weight;
+        }
+        self.size = cp.size;
+        self.active = cp.active;
+        self.owned_active = (0..cp.n as u32)
+            .filter(|&c| self.owns(c) && self.active[c as usize])
+            .collect();
+        self.matched = vec![false; cp.n];
+        self.partner = vec![NO_NN; cp.n];
+        self.pair_weight = vec![0.0; cp.n];
+    }
+
+    /// Serialize the complete machine state for the given next round.
+    fn checkpoint(&self, round: usize) -> Vec<u8> {
+        let rows = (0..self.n as u32)
+            .filter(|&c| self.owns(c))
+            .map(|c| {
+                let entries =
+                    self.store.row(c).iter().map(|(t, e)| (t, e.weight, e.count)).collect();
+                (c, self.nn[c as usize], self.nn_weight[c as usize], entries)
+            })
+            .collect();
+        checkpoint::encode(&MachineCheckpoint {
+            machine: self.me as u32,
+            machines: self.wire.machines as u32,
+            round: round as u64,
+            n: self.n,
+            rows,
+            size: self.size.clone(),
+            active: self.active.clone(),
+        })
+    }
+
+    fn begin_round(&mut self, round: usize) {
+        self.wire.round = round;
+        self.wire.stats = NetStats::default();
+        self.eligibility_scan_entries = 0;
+    }
+
+    /// Exact find phase: refresh remote NN shadows, then test reciprocity
+    /// over owned active ids. Query staging matches the simulation's
+    /// `exchange_nn_pointers` (ascending scan, per-destination dedup).
+    fn find_reciprocal(&mut self) -> Vec<MergePair> {
+        let m = self.wire.machines;
+        let mut queries: Vec<Vec<Message>> = vec![Vec::new(); m];
+        let mut seen: FxHashSet<u32> = FxHashSet::default();
+        for &c in &self.owned_active {
+            let v = self.nn[c as usize];
+            if v == NO_NN {
+                continue;
+            }
+            let sv = self.place.machine_of(v);
+            if sv != self.me && seen.insert(v) {
+                queries[sv].push(Message::NnQuery { cluster: v });
+            }
+        }
+        let incoming = self.wire.all_to_all(STEP_NN_QUERY, queries);
+        let mut replies: Vec<Vec<Message>> = vec![Vec::new(); m];
+        for (src, batch) in incoming {
+            replies[src] = batch
+                .iter()
+                .map(|q| match q {
+                    Message::NnQuery { cluster } => Message::NnReply {
+                        cluster: *cluster,
+                        nn: self.nn[*cluster as usize],
+                    },
+                    other => panic!("unexpected message in NN-query step: {other:?}"),
+                })
+                .collect();
+        }
+        for (_, batch) in self.wire.all_to_all(STEP_NN_REPLY, replies) {
+            for msg in batch {
+                match msg {
+                    Message::NnReply { cluster, nn } => self.nn[cluster as usize] = nn,
+                    other => panic!("unexpected message in NN-reply step: {other:?}"),
+                }
+            }
+        }
+        let mut pairs = Vec::new();
+        for &c in &self.owned_active {
+            let v = self.nn[c as usize];
+            if v != NO_NN && self.nn[v as usize] == c && c < v {
+                pairs.push(MergePair {
+                    leader: c,
+                    partner: v,
+                    weight: self.nn_weight[c as usize],
+                });
+            }
+        }
+        pairs
+    }
+
+    /// ε-good find phase (per-round and batched). Refreshes the remote NN
+    /// shadows needed by the sweep's partner-half test, sweeps owned rows,
+    /// gathers candidates to the coordinator (machine 0), which selects
+    /// the matching — globally for per-round mode, or with the batched
+    /// local-first rule — and broadcasts it. Returns the selection on the
+    /// coordinator, `None` elsewhere.
+    fn find_good(&mut self, epsilon: f64, vshards: Option<u32>) -> Option<(Vec<MergePair>, bool)> {
+        let m = self.wire.machines;
+        // Steps 0/1: refresh the shadow NN cache for remote upper
+        // endpoints that pass our half of the acceptance test — the same
+        // query set the simulation stages in `stage_nn_cache_queries`.
+        let mut queries: Vec<Vec<Message>> = vec![Vec::new(); m];
+        let mut seen: FxHashSet<u32> = FxHashSet::default();
+        for &a in &self.owned_active {
+            let ai = a as usize;
+            let (nn_a, w_a) = (self.nn[ai], self.nn_weight[ai]);
+            for (b, e) in self.store.row(a).iter() {
+                if b > a && good::accepts(e.weight, b, epsilon, w_a, nn_a) {
+                    let sb = self.place.machine_of(b);
+                    if sb != self.me && seen.insert(b) {
+                        queries[sb].push(Message::NnCacheQuery { cluster: b });
+                    }
+                }
+            }
+        }
+        let incoming = self.wire.all_to_all(STEP_CACHE_QUERY, queries);
+        let mut replies: Vec<Vec<Message>> = vec![Vec::new(); m];
+        for (src, batch) in incoming {
+            replies[src] = batch
+                .iter()
+                .map(|q| match q {
+                    Message::NnCacheQuery { cluster } => Message::NnCacheReply {
+                        cluster: *cluster,
+                        nn: self.nn[*cluster as usize],
+                        weight: self.nn_weight[*cluster as usize],
+                    },
+                    other => panic!("unexpected message in cache-query step: {other:?}"),
+                })
+                .collect();
+        }
+        for (_, batch) in self.wire.all_to_all(STEP_CACHE_REPLY, replies) {
+            for msg in batch {
+                match msg {
+                    Message::NnCacheReply { cluster, nn, weight } => {
+                        self.nn[cluster as usize] = nn;
+                        self.nn_weight[cluster as usize] = weight;
+                    }
+                    other => panic!("unexpected message in cache-reply step: {other:?}"),
+                }
+            }
+        }
+        // Sweep owned rows in ascending order — concatenated across
+        // machines by the gather below, this reproduces the simulation's
+        // global ascending candidate order.
+        let mut cands: Vec<Candidate> = Vec::new();
+        for &a in &self.owned_active {
+            let (row_cands, scanned) =
+                good::scan_row_candidates(self.store.row(a), a, epsilon, &self.nn_weight, &self.nn);
+            self.eligibility_scan_entries += scanned;
+            cands.extend(row_cands.into_iter().map(|(w, b)| (w, a, b)));
+        }
+        // Step 2: gather to the coordinator.
+        let gathered = if self.me != 0 && !cands.is_empty() {
+            vec![Message::CandidateBatch { edges: std::mem::take(&mut cands) }]
+        } else {
+            Vec::new()
+        };
+        let incoming = self.wire.gather_to(0, STEP_CANDIDATES, &gathered);
+        let selection = (self.me == 0).then(|| {
+            let mut all = cands;
+            for (_, batch) in incoming {
+                for msg in batch {
+                    match msg {
+                        Message::CandidateBatch { edges } => all.extend(edges),
+                        other => panic!("unexpected message in candidate step: {other:?}"),
+                    }
+                }
+            }
+            let mut scratch = vec![false; self.n];
+            match vshards {
+                None => (good::select_matching(all, &mut scratch), true),
+                Some(v) => {
+                    // The batched local-first rule, decided globally: any
+                    // co-block candidate anywhere makes this a local
+                    // round; only a dry sweep forces the sync round.
+                    let (local, frontier): (Vec<Candidate>, Vec<Candidate>) = all
+                        .into_iter()
+                        .partition(|&(_, a, b)| vshard_of(a, self.n, v) == vshard_of(b, self.n, v));
+                    if !local.is_empty() {
+                        (good::select_matching(local, &mut scratch), false)
+                    } else {
+                        (good::select_matching(frontier, &mut scratch), true)
+                    }
+                }
+            }
+        });
+        // Step 3: broadcast the matching. The physical packet is the
+        // barrier; the simulation's accounting rule (non-empty matching,
+        // destination owns an active cluster) decides what is counted.
+        let mut out: Vec<Vec<Message>> = vec![Vec::new(); m];
+        if let Some((pairs, _)) = &selection {
+            if !pairs.is_empty() {
+                let mut has_active = vec![false; m];
+                for c in 0..self.n as u32 {
+                    if self.active[c as usize] {
+                        has_active[self.place.machine_of(c)] = true;
+                    }
+                }
+                let wire_pairs: Vec<(u32, u32, Weight)> =
+                    pairs.iter().map(|p| (p.leader, p.partner, p.weight)).collect();
+                for (dst, slot) in out.iter_mut().enumerate() {
+                    if dst != 0 && has_active[dst] {
+                        *slot = vec![Message::MatchingBroadcast { pairs: wire_pairs.clone() }];
+                    }
+                }
+            }
+        }
+        let _echo = self.wire.broadcast_from(0, STEP_MATCHING, &out);
+        // Non-coordinators apply the authoritative pair list from the
+        // driver's `Cmd::Merge`; the broadcast they just received carries
+        // the same pairs (wire-accounting fidelity).
+        selection
+    }
+
+    /// Merge phase: replicate pair state, fetch remote partner rows, fold
+    /// union maps for owned leaders, route and apply patches, update
+    /// replicated scalars, rescan stale NN caches. Ordering mirrors the
+    /// simulation's `compute_unions` + `apply_unions` + phase 3.
+    fn merge_and_rescan(&mut self, pairs: &[MergePair]) -> Report {
+        let m = self.wire.machines;
+        let base = match self.selector {
+            DistSelector::Rnn => EXACT_MERGE_BASE,
+            _ => GOOD_MERGE_BASE,
+        };
+        // Pre-merge NN weights of owned pair members: the driver's
+        // (1+ε) bounds inputs (the simulation reads these before its
+        // phase 3 overwrites them).
+        let mut nn_weights: Vec<(u32, u64)> = Vec::new();
+        for p in pairs {
+            for c in [p.leader, p.partner] {
+                if self.owns(c) {
+                    nn_weights.push((c, self.nn_weight[c as usize].to_bits()));
+                }
+            }
+        }
+        // Replicate pair state — every machine sees the same list in the
+        // same order, so `PairView` reads are bitwise shared.
+        for p in pairs {
+            let (l, pr) = (p.leader as usize, p.partner as usize);
+            self.matched[l] = true;
+            self.matched[pr] = true;
+            self.partner[l] = p.partner;
+            self.partner[pr] = p.leader;
+            self.pair_weight[l] = p.weight;
+            self.pair_weight[pr] = p.weight;
+        }
+        // Fetch remote partner rows for owned leaders (ascending pair
+        // order — the simulation's staging order).
+        let mut fetch: Vec<Vec<Message>> = vec![Vec::new(); m];
+        for p in pairs {
+            if self.owns(p.leader) {
+                let sp = self.place.machine_of(p.partner);
+                if sp != self.me {
+                    fetch[sp].push(Message::PartnerFetch { partner: p.partner });
+                }
+            }
+        }
+        let incoming = self.wire.all_to_all(base, fetch);
+        let mut replies: Vec<Vec<Message>> = vec![Vec::new(); m];
+        for (src, batch) in incoming {
+            replies[src] = batch
+                .iter()
+                .map(|q| match q {
+                    Message::PartnerFetch { partner } => Message::PartnerState {
+                        partner: *partner,
+                        size: self.size[*partner as usize],
+                        entries: self
+                            .store
+                            .row(*partner)
+                            .iter()
+                            .map(|(t, e)| (t, e.weight, e.count))
+                            .collect(),
+                    },
+                    other => panic!("unexpected message in partner-fetch step: {other:?}"),
+                })
+                .collect();
+        }
+        let mut fetched: FxHashMap<u32, Vec<(u32, EdgeState)>> = FxHashMap::default();
+        for (_, batch) in self.wire.all_to_all(base + 1, replies) {
+            for msg in batch {
+                match msg {
+                    Message::PartnerState { partner, entries, .. } => {
+                        fetched.insert(
+                            partner,
+                            entries
+                                .into_iter()
+                                .map(|(t, w, c)| (t, EdgeState { weight: w, count: c }))
+                                .collect(),
+                        );
+                    }
+                    other => panic!("unexpected message in partner-state step: {other:?}"),
+                }
+            }
+        }
+        // Union maps for owned leaders, in pair-list order — the same
+        // order the simulation's `compute_unions` walks (ascending leader
+        // for exact rounds, matching order for ε-good rounds). Sizes are
+        // still pre-merge here, as in the simulation.
+        let mut unions: Vec<(u32, Vec<(u32, EdgeState)>)> = Vec::new();
+        for p in pairs {
+            if !self.owns(p.leader) {
+                continue;
+            }
+            let row_l = RowView::Store(self.store.row(p.leader));
+            let fetched_row;
+            let row_p = if self.owns(p.partner) {
+                RowView::Store(self.store.row(p.partner))
+            } else {
+                fetched_row = &fetched[&p.partner];
+                RowView::Fetched(fetched_row)
+            };
+            let map = compute_union_map(
+                self.linkage,
+                p.leader,
+                p.partner,
+                self.pair_weight[p.leader as usize],
+                self.size[p.leader as usize],
+                self.size[p.partner as usize],
+                row_l,
+                row_p,
+                |x| PairView {
+                    merging: self.matched[x as usize],
+                    partner: self.partner[x as usize],
+                    size: self.size[x as usize],
+                    pair_weight: self.pair_weight[x as usize],
+                },
+            );
+            unions.push((p.leader, map));
+        }
+        // Route patches: local ones applied below, remote ones shipped
+        // now (the executed mode has no deferred-flush option — state is
+        // truly sharded, so correctness needs the bytes this round).
+        let mut patches: Vec<(u32, u32, u32, EdgeState)> = Vec::new();
+        let mut out: Vec<Vec<Message>> = vec![Vec::new(); m];
+        for (l, map) in &unions {
+            let pr = self.partner[*l as usize];
+            for &(t, e) in map {
+                if !self.matched[t as usize] {
+                    let st = self.place.machine_of(t);
+                    if st == self.me {
+                        patches.push((t, *l, pr, e));
+                    } else {
+                        out[st].push(Message::EdgePatch {
+                            target: t,
+                            leader: *l,
+                            retired: pr,
+                            weight: e.weight,
+                            count: e.count,
+                        });
+                    }
+                }
+            }
+        }
+        for (_, batch) in self.wire.all_to_all(base + 2, out) {
+            for msg in batch {
+                match msg {
+                    Message::EdgePatch { target, leader, retired, weight, count } => {
+                        patches.push((target, leader, retired, EdgeState { weight, count }));
+                    }
+                    other => panic!("unexpected message in patch step: {other:?}"),
+                }
+            }
+        }
+        // Apply in (target, leader) order: per-row ascending leaders is
+        // the simulation's serial order, and distinct rows commute.
+        patches.sort_unstable_by_key(|&(t, l, _, _)| (t, l));
+        for (t, l, pr, e) in patches {
+            self.store.patch(t, l, pr, e);
+        }
+        // Commit the merges to the replicated scalars and owned rows.
+        for p in pairs {
+            let (l, pr) = (p.leader as usize, p.partner as usize);
+            self.size[l] += self.size[pr];
+            self.active[pr] = false;
+        }
+        for (l, map) in &unions {
+            self.store.install_row(*l, map);
+        }
+        for p in pairs {
+            if self.owns(p.partner) {
+                self.store.clear_row(p.partner);
+            }
+        }
+        self.store.maybe_compact();
+        self.owned_active.retain(|&c| self.active[c as usize]);
+        // Phase 3: rescan owned NN caches invalidated by the merges —
+        // the same filter and scan as the simulation's round tail.
+        let mut nn_updates = 0;
+        let mut nn_scan_entries = 0;
+        let updates: Vec<(u32, u32, Weight, usize)> = self
+            .owned_active
+            .iter()
+            .filter_map(|&c| {
+                let ci = c as usize;
+                let v = self.nn[ci];
+                let stale = self.matched[ci] || (v != NO_NN && self.matched[v as usize]);
+                stale.then(|| {
+                    let row = self.store.row(c);
+                    let (nn, w) = scan_nn(row);
+                    (c, nn, w, row.live_len())
+                })
+            })
+            .collect();
+        for (c, nn, w, scanned) in updates {
+            self.nn[c as usize] = nn;
+            self.nn_weight[c as usize] = w;
+            nn_updates += 1;
+            nn_scan_entries += scanned;
+        }
+        for p in pairs {
+            self.matched[p.leader as usize] = false;
+            self.matched[p.partner as usize] = false;
+        }
+        Report::RoundDone {
+            nn_weights,
+            nn_updates,
+            nn_scan_entries,
+            eligibility_scan_entries: std::mem::take(&mut self.eligibility_scan_entries),
+            net: self.wire.take_stats(),
+        }
+    }
+}
+
+/// Machine thread body: obey driver commands until told to exit.
+fn machine_main(mut mc: Machine, cmds: Receiver<Cmd>, reports: Sender<Report>) {
+    loop {
+        let cmd = match cmds.recv() {
+            Ok(cmd) => cmd,
+            // Driver gone (fault teardown or panic): die quietly.
+            Err(_) => return,
+        };
+        match cmd {
+            Cmd::Restore(blob) => mc.restore(&blob),
+            Cmd::Round { round } => {
+                mc.begin_round(round);
+                match mc.selector {
+                    DistSelector::Rnn => {
+                        let pairs = mc.find_reciprocal();
+                        let _ = reports.send(Report::Phase1 { pairs, synced: true });
+                    }
+                    DistSelector::Good { epsilon } => {
+                        if let Some((pairs, synced)) = mc.find_good(epsilon, None) {
+                            let _ = reports.send(Report::Phase1 { pairs, synced });
+                        }
+                    }
+                    DistSelector::GoodBatched { epsilon, vshards } => {
+                        if let Some((pairs, synced)) = mc.find_good(epsilon, Some(vshards)) {
+                            let _ = reports.send(Report::Phase1 { pairs, synced });
+                        }
+                    }
+                }
+            }
+            Cmd::Merge { pairs } => {
+                let report = mc.merge_and_rescan(&pairs);
+                let _ = reports.send(report);
+            }
+            Cmd::Checkpoint { round } => {
+                let _ = reports.send(Report::CheckpointBlob {
+                    machine: mc.me,
+                    blob: mc.checkpoint(round),
+                });
+            }
+            Cmd::Finish => {
+                let _ = reports.send(Report::FinishAck {
+                    eligibility_scan_entries: std::mem::take(&mut mc.eligibility_scan_entries),
+                    net: mc.wire.take_stats(),
+                });
+                return;
+            }
+            Cmd::Exit => return,
+        }
+    }
+}
+
+/// The driver's handle on a running fleet.
+struct Fleet {
+    cmds: Vec<Sender<Cmd>>,
+    reports: Receiver<Report>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Fleet {
+    fn send_all(&self, cmd: &Cmd) {
+        for c in &self.cmds {
+            let _ = c.send(cmd.clone());
+        }
+    }
+
+    fn recv(&self) -> Report {
+        self.reports
+            .recv_timeout(REPORT_TIMEOUT)
+            .expect("machine unresponsive: executed fleet wedged")
+    }
+
+    /// Tear the fleet down and reap the threads, surfacing any panic.
+    fn shutdown(self) {
+        for c in &self.cmds {
+            let _ = c.send(Cmd::Exit);
+        }
+        for h in self.handles {
+            if h.join().is_err() {
+                panic!("executed machine thread panicked");
+            }
+        }
+    }
+}
+
+/// Immutable per-run parameters shared by spawns and respawns.
+struct FleetSpec {
+    machines: usize,
+    linkage: Linkage,
+    place: Placement,
+    selector: DistSelector,
+    latency: Duration,
+    jitter: Duration,
+}
+
+/// Spawn the fleet and feed every machine its state blob — recovery and
+/// cold start are the same code path, so the checkpoint codec is
+/// exercised by every executed run.
+fn spawn_fleet(spec: &FleetSpec, blobs: &[Vec<u8>]) -> Fleet {
+    let m = spec.machines;
+    let (report_tx, report_rx) = mpsc::channel::<Report>();
+    let data: Vec<(Sender<Packet>, Receiver<Packet>)> = (0..m).map(|_| mpsc::channel()).collect();
+    let peer_senders: Vec<Sender<Packet>> = data.iter().map(|(tx, _)| tx.clone()).collect();
+    let mut data_rx: Vec<Option<Receiver<Packet>>> =
+        data.into_iter().map(|(_, rx)| Some(rx)).collect();
+    let mut cmds = Vec::with_capacity(m);
+    let mut handles = Vec::with_capacity(m);
+    for me in 0..m {
+        let (cmd_tx, cmd_rx) = mpsc::channel::<Cmd>();
+        let machine = Machine {
+            me,
+            n: 0,
+            linkage: spec.linkage,
+            place: spec.place,
+            selector: spec.selector,
+            store: NeighborStore::new(0),
+            owned_active: Vec::new(),
+            active: Vec::new(),
+            size: Vec::new(),
+            nn: Vec::new(),
+            nn_weight: Vec::new(),
+            matched: Vec::new(),
+            partner: Vec::new(),
+            pair_weight: Vec::new(),
+            eligibility_scan_entries: 0,
+            wire: Wire {
+                me,
+                machines: m,
+                peers: peer_senders.clone(),
+                inbox: data_rx[me].take().expect("inbox taken once"),
+                stash: Vec::new(),
+                latency: spec.latency,
+                jitter: spec.jitter,
+                round: 0,
+                stats: NetStats::default(),
+            },
+        };
+        let reports = report_tx.clone();
+        handles.push(std::thread::spawn(move || machine_main(machine, cmd_rx, reports)));
+        let _ = cmd_tx.send(Cmd::Restore(blobs[me].clone()));
+        cmds.push(cmd_tx);
+    }
+    Fleet {
+        cmds,
+        reports: report_rx,
+        handles,
+    }
+}
+
+/// The driver's recovery image: everything needed to roll the run back
+/// to a sync point — the machines' blobs plus the driver-side outputs
+/// accumulated up to that cut.
+struct Snapshot {
+    round: usize,
+    n_active: usize,
+    merges: Vec<Merge>,
+    bounds: Vec<MergeBound>,
+    rounds: Vec<RoundMetrics>,
+    log: Vec<BatchRecord>,
+    blobs: Vec<Vec<u8>>,
+}
+
+/// Run the distributed round schedule for real: thread-per-machine,
+/// channel-backed wire, measured `t_exec`, sync-point checkpoints, and
+/// optional fault injection + recovery. Consumes the prepared core; the
+/// returned results are bitwise identical to `core.run_rounds(selector)`
+/// on the dendrogram, bounds trace, and sync-point schedule.
+pub(super) fn run_executed(
+    core: DistCore,
+    selector: DistSelector,
+    opts: &ExecOptions,
+) -> (RacResult, NetReport, Vec<MergeBound>) {
+    let t0 = Instant::now();
+    let m = core.cfg.machines;
+    let n = core.n;
+    if let Some(f) = opts.fault {
+        assert!(
+            f.machine < m,
+            "fault machine {} out of range for {m} machines",
+            f.machine
+        );
+    }
+    // Initial NN scan over the full graph — identical to the simulated
+    // engine's init — then cut the round-0 "checkpoint" every machine
+    // boots from.
+    let mut nn = vec![NO_NN; n];
+    let mut nn_weight = vec![Weight::INFINITY; n];
+    for c in 0..n {
+        let (v, w) = scan_nn(core.store.row(c as u32));
+        nn[c] = v;
+        nn_weight[c] = w;
+    }
+    let blobs: Vec<Vec<u8>> = (0..m)
+        .map(|mid| {
+            let rows = (0..n as u32)
+                .filter(|&c| core.place.machine_of(c) == mid)
+                .map(|c| {
+                    let entries =
+                        core.store.row(c).iter().map(|(t, e)| (t, e.weight, e.count)).collect();
+                    (c, nn[c as usize], nn_weight[c as usize], entries)
+                })
+                .collect();
+            checkpoint::encode(&MachineCheckpoint {
+                machine: mid as u32,
+                machines: m as u32,
+                round: 0,
+                n,
+                rows,
+                size: core.size.clone(),
+                active: core.active.clone(),
+            })
+        })
+        .collect();
+    let spec = FleetSpec {
+        machines: m,
+        linkage: core.linkage,
+        place: core.place,
+        selector,
+        latency: opts.latency,
+        jitter: opts.jitter,
+    };
+    let mut snapshot = Snapshot {
+        round: 0,
+        n_active: n,
+        merges: Vec::new(),
+        bounds: Vec::new(),
+        rounds: Vec::new(),
+        log: Vec::new(),
+        blobs,
+    };
+    let mut merges: Vec<Merge> = Vec::new();
+    let mut bounds: Vec<MergeBound> = Vec::new();
+    let mut metrics = RunMetrics::default();
+    let mut log: Vec<BatchRecord> = Vec::new();
+    let mut n_active = n;
+    let mut fault = opts.fault;
+    let mut fleet = Some(spawn_fleet(&spec, &snapshot.blobs));
+    let mut round = 0;
+    while round < core.max_rounds {
+        if let Some(f) = fault {
+            if f.round == round {
+                // Fault: machine f.machine dies at the round boundary. A
+                // dead shard stalls the whole bulk-synchronous round, so
+                // recovery is a global rollback — tear down, respawn,
+                // restore everyone from the last sync-point cut, replay.
+                fault = None;
+                fleet.take().expect("fleet alive").shutdown();
+                merges = snapshot.merges.clone();
+                bounds = snapshot.bounds.clone();
+                metrics.rounds = snapshot.rounds.clone();
+                log = snapshot.log.clone();
+                n_active = snapshot.n_active;
+                round = snapshot.round;
+                fleet = Some(spawn_fleet(&spec, &snapshot.blobs));
+                continue;
+            }
+        }
+        let fl = fleet.as_ref().expect("fleet alive");
+        let t_round = Instant::now();
+        fl.send_all(&Cmd::Round { round });
+        // Exact rounds: every machine reports its owned pairs and the
+        // driver merges them into the global ascending-leader list.
+        // ε-good rounds: the coordinator reports the global matching.
+        let (pairs, synced) = match selector {
+            DistSelector::Rnn => {
+                let mut all: Vec<MergePair> = Vec::new();
+                for _ in 0..m {
+                    match fl.recv() {
+                        Report::Phase1 { pairs, .. } => all.extend(pairs),
+                        _ => panic!("expected Phase1 report"),
+                    }
+                }
+                all.sort_unstable_by_key(|p| p.leader);
+                (all, true)
+            }
+            _ => match fl.recv() {
+                Report::Phase1 { pairs, synced } => (pairs, synced),
+                _ => panic!("expected Phase1 report"),
+            },
+        };
+        let t_find = t_round.elapsed();
+        let mut rm = RoundMetrics {
+            round,
+            clusters: n_active,
+            merges: pairs.len(),
+            sync_points: usize::from(synced),
+            t_find,
+            ..Default::default()
+        };
+        if pairs.is_empty() {
+            fl.send_all(&Cmd::Finish);
+            for _ in 0..m {
+                match fl.recv() {
+                    Report::FinishAck { eligibility_scan_entries, net } => {
+                        rm.eligibility_scan_entries += eligibility_scan_entries;
+                        rm.net_messages += net.messages;
+                        rm.net_bytes += net.bytes;
+                        log.extend(net.log);
+                    }
+                    _ => panic!("expected FinishAck report"),
+                }
+            }
+            rm.t_exec = t_round.elapsed();
+            metrics.rounds.push(rm);
+            // Finish is a terminal command: machines have already exited.
+            for h in fleet.take().expect("fleet alive").handles {
+                if h.join().is_err() {
+                    panic!("executed machine thread panicked");
+                }
+            }
+            break;
+        }
+        let t_merge = Instant::now();
+        fl.send_all(&Cmd::Merge { pairs: pairs.clone() });
+        let mut pre_nn: FxHashMap<u32, u64> = FxHashMap::default();
+        for _ in 0..m {
+            match fl.recv() {
+                Report::RoundDone {
+                    nn_weights,
+                    nn_updates,
+                    nn_scan_entries,
+                    eligibility_scan_entries,
+                    net,
+                } => {
+                    pre_nn.extend(nn_weights);
+                    rm.nn_updates += nn_updates;
+                    rm.nn_scan_entries += nn_scan_entries;
+                    rm.eligibility_scan_entries += eligibility_scan_entries;
+                    rm.net_messages += net.messages;
+                    rm.net_bytes += net.bytes;
+                    log.extend(net.log);
+                }
+                _ => panic!("expected RoundDone report"),
+            }
+        }
+        for p in &pairs {
+            merges.push(Merge {
+                a: p.leader,
+                b: p.partner,
+                weight: p.weight,
+            });
+            let wl = f64::from_bits(pre_nn[&p.leader]);
+            let wp = f64::from_bits(pre_nn[&p.partner]);
+            bounds.push(MergeBound {
+                weight: p.weight,
+                visible_min: wl.min(wp),
+            });
+        }
+        n_active -= pairs.len();
+        rm.t_merge = t_merge.elapsed();
+        rm.t_exec = t_round.elapsed();
+        metrics.rounds.push(rm);
+        if n_active <= 1 {
+            fleet.take().expect("fleet alive").shutdown();
+            break;
+        }
+        if synced {
+            // Sync point: cut a recovery image (checkpoint time is
+            // deliberately outside `t_exec` — it is recovery machinery,
+            // not round work).
+            let fl = fleet.as_ref().expect("fleet alive");
+            fl.send_all(&Cmd::Checkpoint { round: round + 1 });
+            let mut cp_blobs: Vec<Vec<u8>> = vec![Vec::new(); m];
+            for _ in 0..m {
+                match fl.recv() {
+                    Report::CheckpointBlob { machine, blob } => cp_blobs[machine] = blob,
+                    _ => panic!("expected CheckpointBlob report"),
+                }
+            }
+            snapshot = Snapshot {
+                round: round + 1,
+                n_active,
+                merges: merges.clone(),
+                bounds: bounds.clone(),
+                rounds: metrics.rounds.clone(),
+                log: log.clone(),
+                blobs: cp_blobs,
+            };
+        }
+        round += 1;
+    }
+    if let Some(fl) = fleet.take() {
+        // Round cap exhausted with the fleet still up (safety valve).
+        fl.shutdown();
+    }
+    metrics.total_time = t0.elapsed();
+    log.sort_by_key(|b| (b.round, b.src, b.dst));
+    (
+        RacResult {
+            dendrogram: Dendrogram::new(n, merges),
+            metrics,
+        },
+        NetReport { batches: log },
+        bounds,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jitter_is_deterministic_and_bounded() {
+        let bound = Duration::from_micros(50);
+        for (src, dst, round, step) in [(0, 1, 0, 0u8), (1, 0, 0, 0), (2, 5, 31, 4)] {
+            let a = jitter_ns(src, dst, round, step, bound);
+            let b = jitter_ns(src, dst, round, step, bound);
+            assert_eq!(a, b, "same link+round must hash identically");
+            assert!(a <= bound.as_nanos() as u64);
+        }
+        assert_eq!(jitter_ns(0, 1, 0, 0, Duration::ZERO), 0);
+        // Direction matters: the hash must separate (src, dst) from
+        // (dst, src) on at least some links.
+        let diff = (0..16).any(|r| {
+            jitter_ns(0, 1, r, 0, bound) != jitter_ns(1, 0, r, 0, bound)
+        });
+        assert!(diff, "jitter hash ignores link direction");
+    }
+
+    #[test]
+    fn row_view_adapters_agree() {
+        let mut store = NeighborStore::new(4);
+        let row: Vec<(u32, EdgeState)> = vec![
+            (2, EdgeState { weight: 0.5, count: 1 }),
+            (1, EdgeState { weight: 0.25, count: 2 }),
+        ];
+        store.install_row(0, &row);
+        let from_store = {
+            let mut v = Vec::new();
+            RowView::Store(store.row(0)).for_each_edge(|t, e| v.push((t, e.weight, e.count)));
+            v
+        };
+        let from_fetched = {
+            let mut v = Vec::new();
+            RowView::Fetched(&row).for_each_edge(|t, e| v.push((t, e.weight, e.count)));
+            v
+        };
+        assert_eq!(from_store, from_fetched, "adapters must iterate identically");
+        assert_eq!(RowView::Store(store.row(0)).live_len(), 2);
+        assert_eq!(RowView::Fetched(&row).live_len(), 2);
+    }
+}

@@ -54,6 +54,22 @@
 //! resource columns. With `machines == 1` nothing ever crosses a shard
 //! boundary and all three counters are exactly zero.
 //!
+//! ## Executed mode
+//!
+//! Every run can alternatively *execute* the same schedule for real:
+//! [`DistRacEngine::with_exec`] / [`DistApproxEngine::with_exec`] switch
+//! to [`exec`] — one OS thread per machine owning only its shard of the
+//! arena, exchanging the same [`network::Message`] batches over channels
+//! with injected link latency/jitter, checkpointing at sync points
+//! through the versioned [`checkpoint`] codec, and optionally recovering
+//! from an injected shard fault. The dendrogram, (1+ε) bounds trace, and
+//! sync-point schedule are bitwise identical to the simulated run
+//! (`rust/tests/dist_executed.rs`); the executed mode reports measured
+//! wall clock as [`RoundMetrics::t_exec`] where the simulation reports
+//! modeled `t_sim`. Traffic accounting diverges where real execution
+//! must ship bytes the deferred accounting does not charge (see the
+//! [`exec`] module docs).
+//!
 //! The serial round body here deliberately mirrors the shared-memory
 //! [`crate::engine::RoundDriver`] phase for phase (selection logic is
 //! literally shared via [`crate::approx::good`] and the reciprocal-NN
@@ -112,9 +128,12 @@
 //! differently, so equality is dendrogram-wise (`same_clustering`), not
 //! bitwise; the bitwise ε = 0 anchor is the *unbatched* engine's.
 
+pub mod checkpoint;
+pub mod exec;
 pub mod network;
 pub mod shard;
 
+pub use exec::{ExecOptions, FaultSpec};
 pub use network::{decode_batch, encode_batch, BatchRecord, Message, NetReport, Network};
 pub use shard::{partition, shard_of, vshard_of, Placement, ShardLoad, VShardScope};
 
@@ -915,6 +934,7 @@ impl DistCore {
 /// reducible linkages) to sequential HAC — Theorem 1.
 pub struct DistRacEngine {
     core: DistCore,
+    exec: Option<ExecOptions>,
 }
 
 impl DistRacEngine {
@@ -927,12 +947,22 @@ impl DistRacEngine {
     pub fn new(g: &Graph, linkage: Linkage, cfg: DistConfig) -> DistRacEngine {
         DistRacEngine {
             core: DistCore::new(g, linkage, cfg),
+            exec: None,
         }
     }
 
     /// Override the round safety cap.
     pub fn with_max_rounds(mut self, max_rounds: usize) -> DistRacEngine {
         self.core.max_rounds = max_rounds;
+        self
+    }
+
+    /// Run *executed* instead of simulated: thread-per-machine shards,
+    /// channel-backed wire, sync-point checkpoints, optional fault
+    /// injection (module docs, [`exec`]). Bitwise-equal results;
+    /// measured `t_exec` instead of modeled `t_sim`.
+    pub fn with_exec(mut self, opts: ExecOptions) -> DistRacEngine {
+        self.exec = Some(opts);
         self
     }
 
@@ -945,7 +975,10 @@ impl DistRacEngine {
     /// Like [`run`](Self::run), but also returns the full cross-shard
     /// traffic log for accounting-invariant tests and topology studies.
     pub fn run_detailed(self) -> (RacResult, NetReport) {
-        let (result, report, _bounds) = self.core.run_rounds(DistSelector::Rnn);
+        let (result, report, _bounds) = match self.exec {
+            Some(opts) => exec::run_executed(self.core, DistSelector::Rnn, &opts),
+            None => self.core.run_rounds(DistSelector::Rnn),
+        };
         (result, report)
     }
 }
@@ -965,6 +998,7 @@ pub struct DistApproxEngine {
     core: DistCore,
     epsilon: f64,
     sync: SyncMode,
+    exec: Option<ExecOptions>,
 }
 
 impl DistApproxEngine {
@@ -984,7 +1018,17 @@ impl DistApproxEngine {
             core: DistCore::new(g, linkage, cfg),
             epsilon,
             sync: SyncMode::PerRound,
+            exec: None,
         }
+    }
+
+    /// Run *executed* instead of simulated: thread-per-machine shards,
+    /// channel-backed wire, sync-point checkpoints, optional fault
+    /// injection (module docs, [`exec`]). Bitwise-equal results;
+    /// measured `t_exec` instead of modeled `t_sim`.
+    pub fn with_exec(mut self, opts: ExecOptions) -> DistApproxEngine {
+        self.exec = Some(opts);
+        self
     }
 
     /// Override the round safety cap.
@@ -1030,7 +1074,10 @@ impl DistApproxEngine {
             SyncMode::PerRound => DistSelector::Good { epsilon },
             SyncMode::Batched { vshards } => DistSelector::GoodBatched { epsilon, vshards },
         };
-        let (result, report, bounds) = self.core.run_rounds(selector);
+        let (result, report, bounds) = match self.exec {
+            Some(opts) => exec::run_executed(self.core, selector, &opts),
+            None => self.core.run_rounds(selector),
+        };
         (
             ApproxResult {
                 dendrogram: result.dendrogram,

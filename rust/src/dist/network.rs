@@ -69,52 +69,106 @@ pub enum Message {
     MatchingBroadcast { pairs: Vec<(u32, u32, Weight)> },
 }
 
-fn put_u32(buf: &mut Vec<u8>, v: u32) {
+pub(crate) fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_u64(buf: &mut Vec<u8>, v: u64) {
+pub(crate) fn put_u64(buf: &mut Vec<u8>, v: u64) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_f64(buf: &mut Vec<u8>, v: f64) {
+pub(crate) fn put_f64(buf: &mut Vec<u8>, v: f64) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
-/// Little-endian cursor over an encoded batch.
-struct Reader<'a> {
+/// Convert a container length to its `u32` wire prefix, failing loudly on
+/// overflow instead of silently truncating (a wrapped prefix would decode
+/// as a *valid* short batch on the other side — the worst kind of
+/// corruption, because nothing downstream can detect it).
+pub(crate) fn len_u32(len: usize, what: &str) -> u32 {
+    u32::try_from(len)
+        .unwrap_or_else(|_| panic!("{what} length {len} exceeds the u32 wire-prefix limit"))
+}
+
+/// Little-endian cursor over an encoded batch. Also reused by the
+/// checkpoint codec ([`crate::dist::checkpoint`]), which faces the same
+/// hostile-bytes concerns when restoring state from a snapshot.
+pub(crate) struct Reader<'a> {
     buf: &'a [u8],
     pos: usize,
 }
 
 impl<'a> Reader<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
-        if self.pos + n > self.buf.len() {
-            return Err(format!(
-                "truncated batch: wanted {n} bytes at offset {}, have {}",
-                self.pos,
-                self.buf.len()
-            ));
-        }
-        let out = &self.buf[self.pos..self.pos + n];
-        self.pos += n;
+    pub(crate) fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed. (`pos <= buf.len()` is an invariant:
+    /// `take` only ever advances to a validated end offset.)
+    pub(crate) fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Current cursor offset.
+    pub(crate) fn pos(&self) -> usize {
+        self.pos
+    }
+
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&end| end <= self.buf.len())
+            .ok_or_else(|| {
+                format!(
+                    "truncated batch: wanted {n} bytes at offset {}, have {} remaining",
+                    self.pos,
+                    self.remaining()
+                )
+            })?;
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
         Ok(out)
     }
 
-    fn u8(&mut self) -> Result<u8, String> {
+    pub(crate) fn u8(&mut self) -> Result<u8, String> {
         Ok(self.take(1)?[0])
     }
 
-    fn u32(&mut self) -> Result<u32, String> {
+    pub(crate) fn u32(&mut self) -> Result<u32, String> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn u64(&mut self) -> Result<u64, String> {
+    pub(crate) fn u64(&mut self) -> Result<u64, String> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    fn f64(&mut self) -> Result<f64, String> {
+    pub(crate) fn f64(&mut self) -> Result<f64, String> {
         Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Guard an element-count prefix *before* the element loop: with
+    /// fewer than `len * min_elem_size` bytes remaining, the prefix is
+    /// corrupt no matter what the elements contain. Rejecting here (a)
+    /// caps `Vec::with_capacity(len)` at a value the buffer itself
+    /// justifies — an attacker cannot make us reserve gigabytes with a
+    /// 4-byte prefix — and (b) turns a long walk to an eventual `take`
+    /// error into an immediate one.
+    pub(crate) fn check_count(
+        &self,
+        len: usize,
+        min_elem_size: usize,
+        what: &str,
+    ) -> Result<(), String> {
+        debug_assert!(min_elem_size > 0);
+        if len > self.remaining() / min_elem_size {
+            return Err(format!(
+                "corrupt {what} count {len}: needs at least {min_elem_size} \
+                 bytes per element but only {} remain",
+                self.remaining()
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -141,7 +195,7 @@ fn encode_message(msg: &Message, buf: &mut Vec<u8>) {
             buf.push(3);
             put_u32(buf, *partner);
             put_u64(buf, *size);
-            put_u32(buf, entries.len() as u32);
+            put_u32(buf, len_u32(entries.len(), "PartnerState entries"));
             for &(t, w, c) in entries {
                 put_u32(buf, t);
                 put_f64(buf, w);
@@ -196,7 +250,7 @@ fn encode_message(msg: &Message, buf: &mut Vec<u8>) {
         }
         Message::CandidateBatch { edges } => {
             buf.push(9);
-            put_u32(buf, edges.len() as u32);
+            put_u32(buf, len_u32(edges.len(), "CandidateBatch edges"));
             for &(w, a, b) in edges {
                 put_f64(buf, w);
                 put_u32(buf, a);
@@ -205,7 +259,7 @@ fn encode_message(msg: &Message, buf: &mut Vec<u8>) {
         }
         Message::MatchingBroadcast { pairs } => {
             buf.push(10);
-            put_u32(buf, pairs.len() as u32);
+            put_u32(buf, len_u32(pairs.len(), "MatchingBroadcast pairs"));
             for &(a, b, w) in pairs {
                 put_u32(buf, a);
                 put_u32(buf, b);
@@ -228,7 +282,9 @@ fn decode_message(r: &mut Reader<'_>) -> Result<Message, String> {
             let partner = r.u32()?;
             let size = r.u64()?;
             let len = r.u32()? as usize;
-            let mut entries = Vec::with_capacity(len.min(1 << 20));
+            // (target u32, weight f64, count u64) = 20 bytes minimum.
+            r.check_count(len, 20, "PartnerState entry")?;
+            let mut entries = Vec::with_capacity(len);
             for _ in 0..len {
                 entries.push((r.u32()?, r.f64()?, r.u64()?));
             }
@@ -261,7 +317,9 @@ fn decode_message(r: &mut Reader<'_>) -> Result<Message, String> {
         },
         9 => {
             let len = r.u32()? as usize;
-            let mut edges = Vec::with_capacity(len.min(1 << 20));
+            // (weight f64, a u32, b u32) = 16 bytes minimum.
+            r.check_count(len, 16, "CandidateBatch edge")?;
+            let mut edges = Vec::with_capacity(len);
             for _ in 0..len {
                 edges.push((r.f64()?, r.u32()?, r.u32()?));
             }
@@ -269,7 +327,9 @@ fn decode_message(r: &mut Reader<'_>) -> Result<Message, String> {
         }
         10 => {
             let len = r.u32()? as usize;
-            let mut pairs = Vec::with_capacity(len.min(1 << 20));
+            // (leader u32, partner u32, weight f64) = 16 bytes minimum.
+            r.check_count(len, 16, "MatchingBroadcast pair")?;
+            let mut pairs = Vec::with_capacity(len);
             for _ in 0..len {
                 pairs.push((r.u32()?, r.u32()?, r.f64()?));
             }
@@ -282,7 +342,7 @@ fn decode_message(r: &mut Reader<'_>) -> Result<Message, String> {
 /// Encode a batch: `u32` message count, then each message.
 pub fn encode_batch(msgs: &[Message]) -> Vec<u8> {
     let mut buf = Vec::with_capacity(4 + 16 * msgs.len());
-    put_u32(&mut buf, msgs.len() as u32);
+    put_u32(&mut buf, len_u32(msgs.len(), "batch message"));
     for m in msgs {
         encode_message(m, &mut buf);
     }
@@ -291,9 +351,11 @@ pub fn encode_batch(msgs: &[Message]) -> Vec<u8> {
 
 /// Decode a batch; rejects truncation, unknown tags, and trailing bytes.
 pub fn decode_batch(bytes: &[u8]) -> Result<Vec<Message>, String> {
-    let mut r = Reader { buf: bytes, pos: 0 };
+    let mut r = Reader::new(bytes);
     let len = r.u32()? as usize;
-    let mut out = Vec::with_capacity(len.min(1 << 20));
+    // Every message encodes to at least its 1-byte tag.
+    r.check_count(len, 1, "batch message")?;
+    let mut out = Vec::with_capacity(len);
     for _ in 0..len {
         out.push(decode_message(&mut r)?);
     }
@@ -534,6 +596,58 @@ mod tests {
     fn local_sends_are_a_bug() {
         let mut net = Network::new(2);
         net.send(1, 1, &[Message::NnQuery { cluster: 0 }]);
+    }
+
+    #[test]
+    fn oversized_length_prefixes_panic_instead_of_wrapping() {
+        // `len_u32` is the guard behind every `put_u32(len)` site; an
+        // actual > 4-billion-element vector is not constructible in a
+        // test, so pin the helper directly.
+        assert_eq!(len_u32(0, "x"), 0);
+        assert_eq!(len_u32(u32::MAX as usize, "x"), u32::MAX);
+        let oversized = u32::MAX as usize + 1;
+        let r = std::panic::catch_unwind(|| len_u32(oversized, "regression"));
+        assert!(r.is_err(), "a wrapping prefix must fail loudly");
+    }
+
+    #[test]
+    fn corrupt_count_prefixes_are_rejected_before_the_element_loop() {
+        // A PartnerState claiming u32::MAX entries in a near-empty buffer
+        // must be rejected from the prefix alone (no element walk, no
+        // giant allocation).
+        let mut wire = Vec::new();
+        put_u32(&mut wire, 1); // one message in the batch
+        wire.push(3); // PartnerState tag
+        put_u32(&mut wire, 19); // partner
+        put_u64(&mut wire, 1); // size
+        put_u32(&mut wire, u32::MAX); // corrupt entry count
+        let err = decode_batch(&wire).unwrap_err();
+        assert!(err.contains("corrupt"), "want prefix rejection, got: {err}");
+
+        // Same for the batch-level message count.
+        let mut wire = Vec::new();
+        put_u32(&mut wire, u32::MAX);
+        wire.push(0);
+        let err = decode_batch(&wire).unwrap_err();
+        assert!(err.contains("corrupt"), "want prefix rejection, got: {err}");
+    }
+
+    #[test]
+    fn reader_take_reports_remaining_bytes_and_survives_overflow() {
+        let buf = [0u8; 8];
+        let mut r = Reader::new(&buf);
+        r.take(5).unwrap();
+        let err = r.take(10).unwrap_err();
+        assert!(
+            err.contains("have 3 remaining"),
+            "error must report remaining bytes, got: {err}"
+        );
+        // An adversarial length near usize::MAX must not overflow the
+        // bounds check into an accept.
+        let mut r = Reader::new(&buf);
+        r.take(4).unwrap();
+        assert!(r.take(usize::MAX - 2).is_err());
+        assert_eq!(r.remaining(), 4, "failed take must not move the cursor");
     }
 
     #[test]

@@ -85,6 +85,20 @@
 //! local engine *is* a scoped [`engine::GoodSelector`] driver instance
 //! (pinned in `rust/tests/dist_batching.rs`).
 //!
+//! Both distributed engines also run **executed** ([`dist::exec`],
+//! `exec_mode = "executed"`): one OS thread per machine owning its shard
+//! of the rows, exchanging the same encoded batches over real channels
+//! with injected per-link latency/jitter, so the modeled `t_sim` gains a
+//! measured sibling [`metrics::RoundMetrics::t_exec`]. Machines
+//! checkpoint at sync points through a versioned binary format
+//! ([`dist::checkpoint`]); a shard killed mid-run (round-indexed fault
+//! injection, [`dist::FaultSpec`]) recovers by BSP global rollback to
+//! the last checkpoint. Execution changes the clock, never the
+//! algorithm: dendrogram, (1+ε) bounds trace, and sync schedule stay
+//! bitwise equal to the simulation, faulted or not — pinned in
+//! `rust/tests/dist_executed.rs`, with the codec paths real execution
+//! leans on fuzzed in `rust/tests/codec_adversarial.rs`.
+//!
 //! ## Approximate engine
 //!
 //! Exact RAC merges only reciprocal-nearest-neighbor pairs, so on inputs

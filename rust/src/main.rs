@@ -19,6 +19,12 @@
 //! `--engine dist_approx --machines 8 --cpus 4 --epsilon 0.1`, plus the
 //! synchronisation schedule: `--sync-mode batched [--vshards V]` drains
 //! shard-local merges between global syncs).
+//!
+//! The distributed engines also take `--exec-mode executed` to run real
+//! thread-per-machine shards over channels instead of the simulation,
+//! with `--latency-us N` / `--jitter-us N` per-link delay injection and
+//! `--fault-at M:R` to kill machine M at round R and exercise
+//! checkpoint recovery.
 
 use std::process::ExitCode;
 
@@ -65,6 +71,8 @@ USAGE:
   rac cluster [--dataset T] [--n N] [--d D] [--k K] [--xla] [--linkage L]
               [--engine E] [--machines M] [--cpus C] [--epsilon E]
               [--sync-mode per_round|batched] [--vshards V]
+              [--exec-mode simulated|executed] [--latency-us N]
+              [--jitter-us N] [--fault-at M:R]
               [--seed S] [--json]
   rac verify [--n N] [--seeds S]
   rac graph-info --config <file.toml>
@@ -167,6 +175,15 @@ fn report(out: &pipeline::RunOutput, json: bool) {
             m.rounds.len()
         );
     }
+    // Executed runs report the measured wall clock instead.
+    if m.total_exec_time() > std::time::Duration::ZERO {
+        println!(
+            "executed fleet time (measured): {:.3?}; {} sync points over {} rounds",
+            m.total_exec_time(),
+            m.total_sync_points(),
+            m.rounds.len()
+        );
+    }
 }
 
 fn cmd_run(args: &[String]) -> Result<()> {
@@ -215,6 +232,23 @@ fn cmd_cluster(args: &[String]) -> Result<()> {
     }
     if let Some(m) = flags.get("sync-mode") {
         text.push_str(&format!("sync_mode = \"{m}\"\n"));
+    }
+    if let Some(m) = flags.get("exec-mode") {
+        text.push_str(&format!("exec_mode = \"{m}\"\n"));
+    }
+    if let Some(v) = flags.get("latency-us") {
+        text.push_str(&format!("link_latency_us = {v}\n"));
+    }
+    if let Some(v) = flags.get("jitter-us") {
+        text.push_str(&format!("link_jitter_us = {v}\n"));
+    }
+    if let Some(spec) = flags.get("fault-at") {
+        let (m, r) = spec
+            .split_once(':')
+            .ok_or_else(|| anyhow!("--fault-at expects MACHINE:ROUND, got {spec:?}"))?;
+        let m: usize = m.trim().parse().with_context(|| format!("--fault-at machine {m:?}"))?;
+        let r: usize = r.trim().parse().with_context(|| format!("--fault-at round {r:?}"))?;
+        text.push_str(&format!("fault_machine = {m}\nfault_round = {r}\n"));
     }
     for key in ["machines", "cpus", "threads", "epsilon", "vshards"] {
         if let Some(v) = flags.get(key) {

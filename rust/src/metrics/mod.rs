@@ -44,6 +44,12 @@ pub struct RoundMetrics {
     /// This is what a real fleet's wall clock would track; in-process
     /// wall clock cannot show scaling on this 1-CPU testbed (DESIGN.md §1).
     pub t_sim: Duration,
+    /// Measured wall-clock round time of the *executed* distributed mode
+    /// (thread-per-machine shards exchanging real channel-backed batches;
+    /// [`crate::dist::exec`]) — the empirical sibling of the modeled
+    /// `t_sim`. Zero for simulated runs, and `t_sim` is zero for executed
+    /// runs: each mode reports the clock it actually has.
+    pub t_exec: Duration,
     /// Global synchronisation barriers this round required (distributed
     /// engines only; zero for the shared-memory engines). Every
     /// bulk-synchronous round of the per-round engines is one sync point;
@@ -98,6 +104,7 @@ impl RoundMetrics {
             ("net_messages", self.net_messages.into()),
             ("net_bytes", self.net_bytes.into()),
             ("t_sim_us", (self.t_sim.as_micros() as usize).into()),
+            ("t_exec_us", (self.t_exec.as_micros() as usize).into()),
             ("sync_points", self.sync_points.into()),
         ])
     }
@@ -163,6 +170,12 @@ impl RunMetrics {
     /// Total simulated critical-path time (see [`RoundMetrics::t_sim`]).
     pub fn total_sim_time(&self) -> Duration {
         self.rounds.iter().map(|r| r.t_sim).sum()
+    }
+
+    /// Total measured executed-mode wall time (see
+    /// [`RoundMetrics::t_exec`]). Zero for simulated runs.
+    pub fn total_exec_time(&self) -> Duration {
+        self.rounds.iter().map(|r| r.t_exec).sum()
     }
 
     pub fn total_net_messages(&self) -> usize {
@@ -264,6 +277,26 @@ mod tests {
         assert_eq!(run.total_sync_points(), 2);
         let js = run.to_json().to_string();
         assert!(js.contains("\"sync_points\":1"), "{js}");
+    }
+
+    #[test]
+    fn exec_time_aggregates_and_serializes() {
+        let run = RunMetrics {
+            rounds: vec![
+                RoundMetrics {
+                    t_exec: Duration::from_micros(40),
+                    ..round(10, 5, 5)
+                },
+                RoundMetrics {
+                    t_exec: Duration::from_micros(2),
+                    ..round(5, 2, 2)
+                },
+            ],
+            ..Default::default()
+        };
+        assert_eq!(run.total_exec_time(), Duration::from_micros(42));
+        let js = run.to_json().to_string();
+        assert!(js.contains("\"t_exec_us\":40"), "{js}");
     }
 
     #[test]

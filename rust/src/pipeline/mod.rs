@@ -79,6 +79,16 @@ pub fn build_graph(cfg: &RunConfig) -> Result<Graph> {
 
 /// Run the configured engine over a graph.
 pub fn run_engine(cfg: &RunConfig, g: &Graph) -> Result<RacResult> {
+    // The config parser already enforces this; hand-built configs get the
+    // same message instead of silently ignoring the exec block.
+    if cfg.exec.is_some()
+        && !matches!(
+            cfg.engine,
+            EngineSpec::DistRac { .. } | EngineSpec::DistApprox { .. }
+        )
+    {
+        bail!("exec options require a distributed engine (dist_rac or dist_approx)");
+    }
     match cfg.engine {
         EngineSpec::NaiveHac => {
             let t = Instant::now();
@@ -113,12 +123,13 @@ pub fn run_engine(cfg: &RunConfig, g: &Graph) -> Result<RacResult> {
             };
             Ok(RacEngine::new(g, cfg.linkage).with_threads(threads).run())
         }
-        EngineSpec::DistRac { machines, cpus } => Ok(DistRacEngine::new(
-            g,
-            cfg.linkage,
-            DistConfig::new(machines, cpus),
-        )
-        .run()),
+        EngineSpec::DistRac { machines, cpus } => {
+            let mut eng = DistRacEngine::new(g, cfg.linkage, DistConfig::new(machines, cpus));
+            if let Some(opts) = cfg.exec {
+                eng = eng.with_exec(opts);
+            }
+            Ok(eng.run())
+        }
         EngineSpec::Approx { epsilon, threads } => {
             let threads = if threads == 0 {
                 default_threads()
@@ -141,14 +152,13 @@ pub fn run_engine(cfg: &RunConfig, g: &Graph) -> Result<RacResult> {
             epsilon,
             sync,
         } => {
-            let r = DistApproxEngine::new(
-                g,
-                cfg.linkage,
-                DistConfig::new(machines, cpus),
-                epsilon,
-            )
-            .with_sync_mode(sync)
-            .run();
+            let mut eng =
+                DistApproxEngine::new(g, cfg.linkage, DistConfig::new(machines, cpus), epsilon)
+                    .with_sync_mode(sync);
+            if let Some(opts) = cfg.exec {
+                eng = eng.with_exec(opts);
+            }
+            let r = eng.run();
             Ok(RacResult {
                 dendrogram: r.dendrogram,
                 metrics: r.metrics,
@@ -312,6 +322,25 @@ mod tests {
         .result;
         assert_eq!(relaxed.dendrogram.merges().len(), 299);
         assert!(relaxed.metrics.total_sync_points() < relaxed.metrics.rounds.len());
+    }
+
+    #[test]
+    fn executed_mode_through_pipeline_matches_simulated() {
+        let base = "[dataset]\ntype = \"grid1d\"\nn = 200\n[cluster]\nlinkage = \"average\"\n\
+                    [engine]\ntype = \"dist_rac\"\nmachines = 3\ncpus = 2\n";
+        let sim = run(&cfg(base)).unwrap().result;
+        let exec = run(&cfg(&format!("{base}exec_mode = \"executed\"\n")))
+            .unwrap()
+            .result;
+        assert_eq!(
+            sim.dendrogram.bitwise_merges(),
+            exec.dendrogram.bitwise_merges()
+        );
+        // Each mode reports only the clock it has.
+        assert!(sim.metrics.total_exec_time().is_zero());
+        assert!(!sim.metrics.total_sim_time().is_zero());
+        assert!(!exec.metrics.total_exec_time().is_zero());
+        assert!(exec.metrics.total_sim_time().is_zero());
     }
 
     #[test]

@@ -27,8 +27,21 @@ impl Json {
         }
     }
 
+    /// Numeric access for index-like fields (manifest shapes, bench
+    /// report counters). Only a non-negative integral value that fits in
+    /// `usize` qualifies: negative, NaN, infinite, fractional, and
+    /// oversized numbers all return `None` instead of being silently
+    /// coerced (a bare `as usize` maps NaN and negatives to 0 — a valid
+    /// index pointing at the wrong data).
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|x| x as usize)
+        match self.as_f64() {
+            // `fract()` is NaN for NaN/±inf inputs, so the `== 0.0`
+            // comparison rejects those too. The upper bound is exclusive:
+            // `usize::MAX as f64` rounds up to 2^64, which `as` would
+            // saturate rather than represent.
+            Some(x) if x >= 0.0 && x.fract() == 0.0 && x < usize::MAX as f64 => Some(x as usize),
+            _ => None,
+        }
     }
 
     pub fn as_str(&self) -> Option<&str> {
@@ -417,5 +430,25 @@ mod tests {
     fn numbers() {
         assert_eq!(Json::parse("-1.5e3").unwrap().as_f64(), Some(-1500.0));
         assert_eq!(Json::parse("42").unwrap().as_usize(), Some(42));
+    }
+
+    #[test]
+    fn as_usize_accepts_only_non_negative_integers() {
+        assert_eq!(Json::Num(0.0).as_usize(), Some(0));
+        assert_eq!(Json::Num(-0.0).as_usize(), Some(0));
+        assert_eq!(Json::Num(42.0).as_usize(), Some(42));
+        assert_eq!(Json::Num(2.0_f64.powi(52)).as_usize(), Some(1 << 52));
+
+        // Each of these used to coerce to a "valid" index via `as usize`.
+        assert_eq!(Json::Num(-1.0).as_usize(), None);
+        assert_eq!(Json::Num(-0.5).as_usize(), None);
+        assert_eq!(Json::Num(1.5).as_usize(), None);
+        assert_eq!(Json::Num(f64::NAN).as_usize(), None);
+        assert_eq!(Json::Num(f64::INFINITY).as_usize(), None);
+        assert_eq!(Json::Num(f64::NEG_INFINITY).as_usize(), None);
+        assert_eq!(Json::Num(f64::MAX).as_usize(), None);
+        assert_eq!(Json::Num(2.0_f64.powi(64)).as_usize(), None);
+        assert_eq!(Json::Str("3".into()).as_usize(), None);
+        assert_eq!(Json::Null.as_usize(), None);
     }
 }

@@ -309,6 +309,37 @@ mod tests {
     }
 
     #[test]
+    fn panicking_phases_leave_pool_reusable_at_all_thread_counts() {
+        // The latch protocol must count down even when every chunk
+        // panics; a missed `done` would leave `wait` blocked forever and
+        // deadlock the *next* phase. Stress it across the inline path
+        // (threads=1), the minimal dispatch path (2), and a wide pool
+        // (8), with panics landing in different chunks each phase.
+        for threads in [1usize, 2, 8] {
+            let pool = Pool::new(threads);
+            for phase in 0..25 {
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    pool.par_map_indexed(64, |i| {
+                        if i % 8 == phase % 8 {
+                            panic!("boom in phase {phase}");
+                        }
+                        i
+                    })
+                }));
+                assert!(result.is_err(), "threads={threads} phase={phase}");
+                // The very next phase must run to completion on the same
+                // workers — no deadlocked latch, no dead threads.
+                let v = pool.par_map_indexed(16, |i| i * 2);
+                assert_eq!(
+                    v,
+                    (0..16).map(|i| i * 2).collect::<Vec<_>>(),
+                    "pool unusable after panic (threads={threads} phase={phase})"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn uses_multiple_threads() {
         let pool = Pool::new(4);
         let ids = pool.par_map_indexed(16, |_| {

@@ -1,0 +1,225 @@
+//! Adversarial-bytes property suite for the wire and checkpoint codecs.
+//!
+//! The executed distributed mode feeds `decode_batch` real bytes from
+//! other threads and feeds `checkpoint::decode` blobs on every boot and
+//! every recovery, so the decoders face exactly the inputs this suite
+//! synthesises: truncations at arbitrary cuts, flipped tags, corrupted
+//! length prefixes, and plain random garbage. The contract everywhere is
+//! *reject with an error* — never panic, never allocate unbounded memory,
+//! never mis-decode.
+
+use rac_hac::dist::checkpoint::{self, MachineCheckpoint};
+use rac_hac::dist::{decode_batch, encode_batch, Message};
+use rac_hac::util::prop::for_all_seeds;
+use rac_hac::util::rng::Rng;
+
+/// Draw a random but *valid* message.
+fn random_message(rng: &mut Rng) -> Message {
+    match rng.below(11) {
+        0 => Message::NnQuery {
+            cluster: rng.next_u64() as u32,
+        },
+        1 => Message::NnReply {
+            cluster: rng.next_u64() as u32,
+            nn: rng.next_u64() as u32,
+        },
+        2 => Message::PartnerFetch {
+            partner: rng.next_u64() as u32,
+        },
+        3 => Message::PartnerState {
+            partner: rng.next_u64() as u32,
+            size: rng.next_u64(),
+            entries: (0..rng.below(6))
+                .map(|_| (rng.next_u64() as u32, rng.f64(), rng.next_u64()))
+                .collect(),
+        },
+        4 => Message::PairViewQuery {
+            cluster: rng.next_u64() as u32,
+        },
+        5 => Message::PairViewReply {
+            cluster: rng.next_u64() as u32,
+            merging: rng.bool_with(0.5),
+            partner: rng.next_u64() as u32,
+            size: rng.next_u64(),
+            pair_weight: rng.f64(),
+        },
+        6 => Message::EdgePatch {
+            target: rng.next_u64() as u32,
+            leader: rng.next_u64() as u32,
+            retired: rng.next_u64() as u32,
+            weight: rng.f64(),
+            count: rng.next_u64(),
+        },
+        7 => Message::NnCacheQuery {
+            cluster: rng.next_u64() as u32,
+        },
+        8 => Message::NnCacheReply {
+            cluster: rng.next_u64() as u32,
+            nn: rng.next_u64() as u32,
+            weight: rng.f64(),
+        },
+        9 => Message::CandidateBatch {
+            edges: (0..rng.below(6))
+                .map(|_| (rng.f64(), rng.next_u64() as u32, rng.next_u64() as u32))
+                .collect(),
+        },
+        _ => Message::MatchingBroadcast {
+            pairs: (0..rng.below(6))
+                .map(|_| (rng.next_u64() as u32, rng.next_u64() as u32, rng.f64()))
+                .collect(),
+        },
+    }
+}
+
+fn random_batch(rng: &mut Rng) -> Vec<Message> {
+    (0..rng.below(8)).map(|_| random_message(rng)).collect()
+}
+
+fn random_checkpoint(rng: &mut Rng) -> MachineCheckpoint {
+    let n = rng.range_usize(0, 24);
+    MachineCheckpoint {
+        machine: rng.below(8) as u32,
+        machines: 8,
+        round: rng.next_u64() % 1000,
+        n,
+        rows: (0..rng.below(n + 1))
+            .map(|i| {
+                (
+                    i as u32,
+                    rng.next_u64() as u32,
+                    rng.f64(),
+                    (0..rng.below(5))
+                        .map(|_| (rng.next_u64() as u32, rng.f64(), rng.next_u64()))
+                        .collect(),
+                )
+            })
+            .collect(),
+        size: (0..n).map(|_| rng.next_u64() % 100).collect(),
+        active: (0..n).map(|_| rng.bool_with(0.7)).collect(),
+    }
+}
+
+#[test]
+fn valid_batches_round_trip() {
+    for_all_seeds(0xC0DEC, 32, |rng| {
+        let batch = random_batch(rng);
+        let back = decode_batch(&encode_batch(&batch)).unwrap();
+        assert_eq!(back, batch);
+    });
+}
+
+#[test]
+fn truncated_batches_are_rejected_at_every_cut() {
+    for_all_seeds(0xC0DEC + 1, 16, |rng| {
+        let bytes = encode_batch(&random_batch(rng));
+        for cut in 0..bytes.len() {
+            assert!(
+                decode_batch(&bytes[..cut]).is_err(),
+                "cut={cut}/{} accepted",
+                bytes.len()
+            );
+        }
+        // One byte too many is rejected too (trailing-bytes check).
+        let mut extended = bytes.clone();
+        extended.push(0);
+        assert!(decode_batch(&extended).is_err());
+    });
+}
+
+#[test]
+fn unknown_tags_are_rejected() {
+    for_all_seeds(0xC0DEC + 2, 16, |rng| {
+        // A batch with one message: its tag byte sits right after the
+        // 4-byte count prefix. Every out-of-range tag value must error.
+        let bytes = encode_batch(&[random_message(rng)]);
+        for bad_tag in [11u8, 12, 60, 0xFF] {
+            let mut corrupt = bytes.clone();
+            corrupt[4] = bad_tag;
+            let err = decode_batch(&corrupt).unwrap_err();
+            assert!(err.contains("tag"), "tag={bad_tag}: {err}");
+        }
+    });
+}
+
+#[test]
+fn corrupt_length_prefixes_fail_fast_without_huge_allocation() {
+    // A maxed-out count prefix claims ~4 billion elements; the decoders
+    // must reject it from the remaining-bytes bound *before* reserving
+    // element storage. If this regresses to trusting the prefix, the
+    // test dies by OOM rather than by assertion — still a failure.
+    let empty = encode_batch(&[]);
+    let mut corrupt = empty.clone();
+    corrupt[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert!(decode_batch(&corrupt).is_err());
+
+    // The same attack on an inner vector prefix: a PartnerState with no
+    // entries has its entry count in the last 4 bytes.
+    let bytes = encode_batch(&[Message::PartnerState {
+        partner: 1,
+        size: 2,
+        entries: vec![],
+    }]);
+    let mut corrupt = bytes.clone();
+    let at = corrupt.len() - 4;
+    corrupt[at..].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert!(decode_batch(&corrupt).is_err());
+}
+
+#[test]
+fn random_garbage_never_panics_the_batch_decoder() {
+    for_all_seeds(0xC0DEC + 3, 64, |rng| {
+        let len = rng.below(200);
+        let bytes: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        // Must return; Ok is fine if the garbage happens to parse.
+        let _ = decode_batch(&bytes);
+    });
+}
+
+#[test]
+fn random_single_byte_corruptions_never_panic() {
+    for_all_seeds(0xC0DEC + 4, 24, |rng| {
+        let mut bytes = encode_batch(&random_batch(rng));
+        if bytes.is_empty() {
+            return;
+        }
+        for _ in 0..16 {
+            let at = rng.below(bytes.len());
+            let old = bytes[at];
+            bytes[at] ^= (rng.next_u64() as u8) | 1;
+            let _ = decode_batch(&bytes);
+            bytes[at] = old;
+        }
+    });
+}
+
+#[test]
+fn checkpoints_round_trip_and_reject_corruption() {
+    for_all_seeds(0xC0DEC + 5, 24, |rng| {
+        let cp = random_checkpoint(rng);
+        let blob = checkpoint::encode(&cp);
+        assert_eq!(checkpoint::decode(&blob).unwrap(), cp);
+        // Every truncation rejected.
+        for cut in 0..blob.len() {
+            assert!(checkpoint::decode(&blob[..cut]).is_err(), "cut={cut}");
+        }
+        // Random single-byte corruptions never panic (magic, counts,
+        // payload — wherever they land).
+        let mut mutated = blob.clone();
+        for _ in 0..16 {
+            let at = rng.below(mutated.len());
+            let old = mutated[at];
+            mutated[at] ^= (rng.next_u64() as u8) | 1;
+            let _ = checkpoint::decode(&mutated);
+            mutated[at] = old;
+        }
+    });
+}
+
+#[test]
+fn random_garbage_never_panics_the_checkpoint_decoder() {
+    for_all_seeds(0xC0DEC + 6, 64, |rng| {
+        let len = rng.below(300);
+        let bytes: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let _ = checkpoint::decode(&bytes);
+    });
+}

@@ -1,0 +1,317 @@
+//! Differential suite for the *executed* distributed mode
+//! ([`rac_hac::dist::exec`]): thread-per-machine shards exchanging real
+//! channel-backed batches, versus the pure simulation that shares its
+//! round logic.
+//!
+//! Contracts under test:
+//!
+//! * **Bitwise equality** — for every topology × ε × sync mode, the
+//!   executed run's dendrogram, (1+ε) bounds trace, and per-round sync
+//!   schedule are bitwise identical to the simulated run's. Execution
+//!   changes the clock, never the algorithm.
+//! * **Fault recovery** — killing a shard mid-run (round-indexed fault
+//!   injection) and recovering every machine from the last sync-point
+//!   checkpoint — a BSP global rollback — replays to the *same* bitwise
+//!   result. Determinism of the round body is what makes checkpoint
+//!   replay sound; this suite is the pin.
+//! * **Link-delay injection** — per-link latency/jitter stretch the
+//!   measured `t_exec` without perturbing any result bit (delays reorder
+//!   packet arrivals; the barrier discipline absorbs them).
+//! * **Clock ownership** — executed runs report `t_exec` and zero
+//!   `t_sim`; simulated runs the reverse.
+
+use rac_hac::approx::quality::MergeBound;
+use rac_hac::approx::ApproxResult;
+use rac_hac::data::{self, grid1d_graph, random_sparse_graph, random_tied_graph};
+use rac_hac::dist::{
+    DistApproxEngine, DistConfig, DistRacEngine, ExecOptions, FaultSpec, SyncMode,
+};
+use rac_hac::graph::Graph;
+use rac_hac::linkage::Linkage;
+use rac_hac::metrics::RunMetrics;
+use rac_hac::util::prop::for_all_seeds;
+
+const TOPOLOGIES: [(usize, usize); 3] = [(1, 1), (3, 2), (7, 4)];
+const EPSILONS: [f64; 2] = [0.0, 0.1];
+const VSHARDS: u32 = 8;
+
+fn sync_modes() -> [SyncMode; 2] {
+    [SyncMode::PerRound, SyncMode::Batched { vshards: VSHARDS }]
+}
+
+fn rac_run(g: &Graph, topo: (usize, usize), exec: Option<ExecOptions>) -> rac_hac::rac::RacResult {
+    let mut eng = DistRacEngine::new(g, Linkage::Average, DistConfig::new(topo.0, topo.1));
+    if let Some(opts) = exec {
+        eng = eng.with_exec(opts);
+    }
+    eng.run()
+}
+
+fn approx_run(
+    g: &Graph,
+    topo: (usize, usize),
+    eps: f64,
+    sync: SyncMode,
+    exec: Option<ExecOptions>,
+) -> ApproxResult {
+    let mut eng = DistApproxEngine::new(g, Linkage::Average, DistConfig::new(topo.0, topo.1), eps)
+        .with_sync_mode(sync);
+    if let Some(opts) = exec {
+        eng = eng.with_exec(opts);
+    }
+    eng.run()
+}
+
+fn bounds_bits(bs: &[MergeBound]) -> Vec<(u64, u64)> {
+    bs.iter()
+        .map(|b| (b.weight.to_bits(), b.visible_min.to_bits()))
+        .collect()
+}
+
+fn sync_schedule(m: &RunMetrics) -> Vec<(usize, usize, usize)> {
+    m.rounds
+        .iter()
+        .map(|r| (r.clusters, r.merges, r.sync_points))
+        .collect()
+}
+
+/// The executed run must report only the measured clock, the simulated
+/// run only the modeled one.
+fn assert_clock_ownership(sim: &RunMetrics, exec: &RunMetrics) {
+    assert!(sim.total_exec_time().is_zero(), "simulated run has t_exec");
+    assert!(exec.total_sim_time().is_zero(), "executed run has t_sim");
+    assert!(
+        sim.total_merges() == 0 || !sim.total_sim_time().is_zero(),
+        "simulated run lost its t_sim model"
+    );
+}
+
+#[test]
+fn executed_dist_rac_is_bitwise_equal_to_simulated() {
+    for_all_seeds(0xE8EC, 4, |rng| {
+        let g = if rng.bool_with(0.5) {
+            random_tied_graph(rng)
+        } else {
+            random_sparse_graph(rng)
+        };
+        for topo in TOPOLOGIES {
+            let sim = rac_run(&g, topo, None);
+            let exec = rac_run(&g, topo, Some(ExecOptions::default()));
+            assert_eq!(
+                sim.dendrogram.bitwise_merges(),
+                exec.dendrogram.bitwise_merges(),
+                "topology={topo:?} n={}",
+                g.n()
+            );
+            assert_eq!(
+                sync_schedule(&sim.metrics),
+                sync_schedule(&exec.metrics),
+                "topology={topo:?}: round schedule diverged"
+            );
+            assert_clock_ownership(&sim.metrics, &exec.metrics);
+        }
+    });
+}
+
+#[test]
+fn executed_dist_approx_is_bitwise_equal_to_simulated() {
+    for_all_seeds(0xE8EC + 1, 3, |rng| {
+        let g = if rng.bool_with(0.5) {
+            random_tied_graph(rng)
+        } else {
+            random_sparse_graph(rng)
+        };
+        for topo in TOPOLOGIES {
+            for eps in EPSILONS {
+                for sync in sync_modes() {
+                    let sim = approx_run(&g, topo, eps, sync, None);
+                    let exec = approx_run(&g, topo, eps, sync, Some(ExecOptions::default()));
+                    assert_eq!(
+                        sim.dendrogram.bitwise_merges(),
+                        exec.dendrogram.bitwise_merges(),
+                        "topology={topo:?} eps={eps} sync={sync:?} n={}",
+                        g.n()
+                    );
+                    assert_eq!(
+                        bounds_bits(&sim.bounds),
+                        bounds_bits(&exec.bounds),
+                        "topology={topo:?} eps={eps} sync={sync:?}: bounds trace diverged"
+                    );
+                    assert_eq!(
+                        sync_schedule(&sim.metrics),
+                        sync_schedule(&exec.metrics),
+                        "topology={topo:?} eps={eps} sync={sync:?}: sync schedule diverged"
+                    );
+                    assert_clock_ownership(&sim.metrics, &exec.metrics);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn executed_mode_on_the_adversarial_chain_all_modes() {
+    // The deterministic Theorem-4 instance: lots of reciprocal structure
+    // per round, exercising multi-pair merge rounds in one shot.
+    let g = data::adversarial_thm4(5);
+    for topo in TOPOLOGIES {
+        let sim = rac_run(&g, topo, None);
+        let exec = rac_run(&g, topo, Some(ExecOptions::default()));
+        assert_eq!(exec.dendrogram.merges().len(), 31, "topology={topo:?}");
+        assert_eq!(
+            sim.dendrogram.bitwise_merges(),
+            exec.dendrogram.bitwise_merges(),
+            "topology={topo:?}"
+        );
+        for eps in EPSILONS {
+            for sync in sync_modes() {
+                let sim = approx_run(&g, topo, eps, sync, None);
+                let exec = approx_run(&g, topo, eps, sync, Some(ExecOptions::default()));
+                assert_eq!(
+                    sim.dendrogram.bitwise_merges(),
+                    exec.dendrogram.bitwise_merges(),
+                    "topology={topo:?} eps={eps} sync={sync:?}"
+                );
+                assert_eq!(bounds_bits(&sim.bounds), bounds_bits(&exec.bounds));
+            }
+        }
+    }
+}
+
+#[test]
+fn killed_shard_recovers_to_bitwise_identical_dendrogram() {
+    let g = grid1d_graph(180, 7);
+    let topo = (3, 2);
+    let fault = Some(FaultSpec {
+        machine: 1,
+        round: 3,
+    });
+    let faulted_opts = ExecOptions {
+        fault,
+        ..ExecOptions::default()
+    };
+
+    // Exact engine.
+    let clean = rac_run(&g, topo, Some(ExecOptions::default()));
+    let recovered = rac_run(&g, topo, Some(faulted_opts));
+    assert_eq!(
+        clean.dendrogram.bitwise_merges(),
+        recovered.dendrogram.bitwise_merges(),
+        "dist_rac: recovery diverged from the unfaulted run"
+    );
+    // And both equal the simulation — recovery is invisible end to end.
+    let sim = rac_run(&g, topo, None);
+    assert_eq!(
+        sim.dendrogram.bitwise_merges(),
+        recovered.dendrogram.bitwise_merges()
+    );
+
+    // ε-good engines, per-round and batched.
+    for sync in sync_modes() {
+        let clean = approx_run(&g, topo, 0.1, sync, Some(ExecOptions::default()));
+        let recovered = approx_run(&g, topo, 0.1, sync, Some(faulted_opts));
+        assert_eq!(
+            clean.dendrogram.bitwise_merges(),
+            recovered.dendrogram.bitwise_merges(),
+            "sync={sync:?}: recovery diverged from the unfaulted run"
+        );
+        assert_eq!(
+            bounds_bits(&clean.bounds),
+            bounds_bits(&recovered.bounds),
+            "sync={sync:?}: recovery perturbed the bounds trace"
+        );
+    }
+}
+
+#[test]
+fn faults_at_various_rounds_and_machines_all_recover() {
+    let g = grid1d_graph(120, 11);
+    let topo = (3, 1);
+    let clean = rac_run(&g, topo, Some(ExecOptions::default()));
+    for machine in 0..topo.0 {
+        for round in [0, 1, 4] {
+            let recovered = rac_run(
+                &g,
+                topo,
+                Some(ExecOptions {
+                    fault: Some(FaultSpec { machine, round }),
+                    ..ExecOptions::default()
+                }),
+            );
+            assert_eq!(
+                clean.dendrogram.bitwise_merges(),
+                recovered.dendrogram.bitwise_merges(),
+                "fault at machine={machine} round={round} diverged"
+            );
+        }
+    }
+    // A fault scheduled past the last round never fires; the run is just
+    // a clean run.
+    let late = rac_run(
+        &g,
+        topo,
+        Some(ExecOptions {
+            fault: Some(FaultSpec {
+                machine: 0,
+                round: 100_000,
+            }),
+            ..ExecOptions::default()
+        }),
+    );
+    assert_eq!(
+        clean.dendrogram.bitwise_merges(),
+        late.dendrogram.bitwise_merges()
+    );
+}
+
+#[test]
+fn link_delays_stretch_the_clock_but_not_the_result() {
+    use std::time::Duration;
+    let g = grid1d_graph(60, 3);
+    let topo = (3, 2);
+    let fast = rac_run(&g, topo, Some(ExecOptions::default()));
+    let slow = rac_run(
+        &g,
+        topo,
+        Some(ExecOptions {
+            latency: Duration::from_millis(2),
+            jitter: Duration::from_micros(300),
+            fault: None,
+        }),
+    );
+    assert_eq!(
+        fast.dendrogram.bitwise_merges(),
+        slow.dendrogram.bitwise_merges(),
+        "latency/jitter must not perturb results"
+    );
+    // Every merge round exchanges at least one cross-shard batch under
+    // mod placement on a grid, so 2ms per hop dominates the fast run's
+    // channel overhead by a wide margin.
+    assert!(
+        slow.metrics.total_exec_time() > fast.metrics.total_exec_time(),
+        "slow {:?} <= fast {:?}",
+        slow.metrics.total_exec_time(),
+        fast.metrics.total_exec_time()
+    );
+}
+
+#[test]
+fn single_machine_executed_has_zero_wire_traffic() {
+    let g = grid1d_graph(100, 5);
+    let sim = rac_run(&g, (1, 1), None);
+    let exec = rac_run(&g, (1, 1), Some(ExecOptions::default()));
+    assert_eq!(
+        sim.dendrogram.bitwise_merges(),
+        exec.dendrogram.bitwise_merges()
+    );
+    assert_eq!(exec.metrics.total_net_messages(), 0);
+    assert_eq!(exec.metrics.total_net_bytes(), 0);
+}
+
+#[test]
+fn multi_machine_executed_reports_real_traffic() {
+    let g = grid1d_graph(100, 5);
+    let exec = rac_run(&g, (3, 2), Some(ExecOptions::default()));
+    assert!(exec.metrics.total_net_messages() > 0);
+    assert!(exec.metrics.total_net_bytes() > 0);
+}
