@@ -3,7 +3,7 @@
 # it. `make bench` runs the perf-trajectory smoke bench and writes
 # BENCH_hot_paths.json (the per-PR datapoint CI uploads as an artifact).
 
-.PHONY: artifacts build test test-differential test-executed clippy fmt fmt-check bench bench-approx bench-dist
+.PHONY: artifacts build test test-differential test-executed test-faults clippy fmt fmt-check bench bench-approx bench-dist bench-recovery
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -30,6 +30,17 @@ test-differential:
 test-executed:
 	cargo test -q --test dist_executed --test codec_adversarial
 
+# The fault-tolerance campaign on its own: multi-fault injection, both
+# recovery modes, delta-checkpoint chains, and the hostile-bytes delta
+# codec properties. A failure here means a faulted run landed on
+# different bits than a clean one — recovery is broken, not a unit.
+test-faults:
+	cargo test -q --test dist_executed fault
+	cargo test -q --test dist_executed recover
+	cargo test -q --test dist_executed delta
+	cargo test -q --test codec_adversarial delta
+	cargo test -q --test codec_adversarial chain
+
 # Format in place; CI enforces the check variant.
 fmt:
 	cargo fmt --all
@@ -50,3 +61,6 @@ bench-approx:
 
 bench-dist:
 	cargo bench --bench dist_sync -- --json --smoke
+
+bench-recovery:
+	cargo bench --bench recovery -- --json --smoke

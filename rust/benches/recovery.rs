@@ -1,0 +1,360 @@
+//! Fault-tolerance cost harness for the executed distributed mode.
+//!
+//! ```bash
+//! cargo bench --bench recovery                    # human tables
+//! cargo bench --bench recovery -- --json          # + BENCH_recovery.json
+//! cargo bench --bench recovery -- --json --smoke  # CI short-budget mode
+//! cargo bench --bench recovery -- --json --out target/recovery.json
+//! ```
+//!
+//! Two claims of the v2 fault-tolerance subsystem, both asserted
+//! in-bench on pinned multi-sync workloads (the barrier-collapsing
+//! batched `dist_approx` engine, where cuts are sparse and segments are
+//! long — exactly where checkpoint and recovery cost matter):
+//!
+//! * **Delta checkpoints are cheaper than full blobs.** The default
+//!   cadence (a full blob every 4th cut, dirty-row deltas between) must
+//!   cut *strictly* fewer total bytes than the v1 behaviour of a full
+//!   blob at every cut (`checkpoint_full_every = 1`), on the same
+//!   schedule, with a bitwise-identical dendrogram.
+//! * **Shard replay is cheaper than global rollback.** For the same
+//!   mid-segment fault, journaled single-shard replay must replay
+//!   *strictly* fewer machine-rounds than restarting the whole fleet
+//!   from the last cut — the survivors' work is exactly what the
+//!   journal saves. Both land on the unfaulted run's bits.
+//!
+//! CI uploads the JSON as a perf-trajectory artifact next to
+//! `BENCH_dist_sync.json`.
+
+use rac_hac::approx::ApproxResult;
+use rac_hac::data;
+use rac_hac::dist::{
+    DistApproxEngine, DistConfig, ExecOptions, FaultSpec, RecoveryMode, SyncMode,
+};
+use rac_hac::graph::Graph;
+use rac_hac::linkage::Linkage;
+use rac_hac::util::bench::Table;
+use rac_hac::util::json::{obj, Json};
+
+const TOPO: (usize, usize) = (4, 2);
+const EPSILON: f64 = 0.1;
+const VSHARDS: u32 = 8;
+const FAULT_MACHINE: usize = 1;
+
+struct Workload {
+    name: &'static str,
+    graph: Graph,
+}
+
+fn workloads(smoke: bool) -> Vec<Workload> {
+    // Both collapse barriers under batched sync (dist_sync pins that),
+    // so their cut schedules leave real multi-round segments to recover.
+    let levels = if smoke { 6 } else { 8 };
+    vec![
+        Workload {
+            name: "adversarial",
+            graph: data::adversarial_thm4(levels),
+        },
+        Workload {
+            name: "stable_hierarchy",
+            graph: data::stable_hierarchy(levels, 4.0, 23),
+        },
+    ]
+}
+
+fn run(g: &Graph, opts: ExecOptions) -> ApproxResult {
+    DistApproxEngine::new(g, Linkage::Average, DistConfig::new(TOPO.0, TOPO.1), EPSILON)
+        .with_sync_mode(SyncMode::Batched { vshards: VSHARDS })
+        .with_exec(opts)
+        .run()
+}
+
+struct Cell {
+    workload: &'static str,
+    scenario: &'static str,
+    recovery_mode: &'static str,
+    checkpoint_full_every: usize,
+    fault_round: Option<usize>,
+    rounds: usize,
+    merges: usize,
+    checkpoint_bytes: usize,
+    recovery_rounds_replayed: usize,
+    recovery_bytes_replayed: usize,
+    t_recover_us: usize,
+    t_exec_us: usize,
+}
+
+impl Cell {
+    fn new(
+        workload: &'static str,
+        scenario: &'static str,
+        recovery_mode: &'static str,
+        checkpoint_full_every: usize,
+        fault_round: Option<usize>,
+        res: &ApproxResult,
+    ) -> Cell {
+        let m = &res.metrics;
+        Cell {
+            workload,
+            scenario,
+            recovery_mode,
+            checkpoint_full_every,
+            fault_round,
+            rounds: m.rounds.len(),
+            merges: res.dendrogram.merges().len(),
+            checkpoint_bytes: m.checkpoint_bytes,
+            recovery_rounds_replayed: m.recovery_rounds_replayed,
+            recovery_bytes_replayed: m.recovery_bytes_replayed,
+            t_recover_us: m.t_recover.as_micros() as usize,
+            t_exec_us: m.total_exec_time().as_micros() as usize,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        obj([
+            ("workload", self.workload.into()),
+            ("scenario", self.scenario.into()),
+            ("recovery_mode", self.recovery_mode.into()),
+            ("checkpoint_full_every", self.checkpoint_full_every.into()),
+            ("fault_round", self.fault_round.unwrap_or(0).into()),
+            ("faulted", self.fault_round.is_some().into()),
+            ("rounds", self.rounds.into()),
+            ("merges", self.merges.into()),
+            ("checkpoint_bytes", self.checkpoint_bytes.into()),
+            (
+                "recovery_rounds_replayed",
+                self.recovery_rounds_replayed.into(),
+            ),
+            (
+                "recovery_bytes_replayed",
+                self.recovery_bytes_replayed.into(),
+            ),
+            ("t_recover_us", self.t_recover_us.into()),
+            ("t_exec_us", self.t_exec_us.into()),
+        ])
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let write_json = args.iter().any(|a| a == "--json");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_recovery.json".to_string());
+
+    let mut cells: Vec<Cell> = Vec::new();
+    let mut workload_meta: Vec<Json> = Vec::new();
+    for w in workloads(smoke) {
+        println!("== workload {}: n={} edges={} ==", w.name, w.graph.n(), w.graph.m());
+
+        // Checkpoint cells: same schedule, full-blob cadence vs the
+        // default delta cadence.
+        let full_cadence = run(
+            &w.graph,
+            ExecOptions {
+                checkpoint_full_every: 1,
+                ..ExecOptions::default()
+            },
+        );
+        let delta_cadence = run(&w.graph, ExecOptions::default());
+        assert_eq!(
+            full_cadence.dendrogram.bitwise_merges(),
+            delta_cadence.dendrogram.bitwise_merges(),
+            "{}: checkpoint cadence changed the dendrogram",
+            w.name
+        );
+        assert!(
+            delta_cadence.metrics.checkpoint_bytes < full_cadence.metrics.checkpoint_bytes,
+            "{}: delta cadence cut {} checkpoint bytes, full cadence {} — deltas must be \
+             strictly cheaper",
+            w.name,
+            delta_cadence.metrics.checkpoint_bytes,
+            full_cadence.metrics.checkpoint_bytes
+        );
+        cells.push(Cell::new(
+            w.name,
+            "clean_full_cadence",
+            "none",
+            1,
+            None,
+            &full_cadence,
+        ));
+        let default_cadence = ExecOptions::default().checkpoint_full_every;
+        cells.push(Cell::new(
+            w.name,
+            "clean_delta_cadence",
+            "none",
+            default_cadence,
+            None,
+            &delta_cadence,
+        ));
+
+        // Recovery cells: fault the same machine at a mid-segment round —
+        // one where the previous round did not sync, so there is real
+        // work between the last cut and the fault. The batched engine's
+        // barrier collapse (pinned in dist_sync) guarantees one exists.
+        let schedule: Vec<usize> = delta_cadence
+            .metrics
+            .rounds
+            .iter()
+            .map(|r| r.sync_points)
+            .collect();
+        let fault_round = (1..schedule.len())
+            .find(|&f| schedule[f - 1] == 0)
+            .unwrap_or_else(|| {
+                panic!(
+                    "{}: no mid-segment round in sync schedule {schedule:?} — \
+                     the workload no longer batches",
+                    w.name
+                )
+            });
+        let faulted = |mode: RecoveryMode| {
+            run(
+                &w.graph,
+                ExecOptions {
+                    faults: vec![FaultSpec {
+                        machine: FAULT_MACHINE,
+                        round: fault_round,
+                    }],
+                    recovery_mode: mode,
+                    ..ExecOptions::default()
+                },
+            )
+        };
+        let global = faulted(RecoveryMode::Global);
+        let shard = faulted(RecoveryMode::ShardReplay);
+        for (name, res) in [("global", &global), ("shard_replay", &shard)] {
+            assert_eq!(
+                delta_cadence.dendrogram.bitwise_merges(),
+                res.dendrogram.bitwise_merges(),
+                "{}: {name} recovery diverged from the unfaulted run",
+                w.name
+            );
+        }
+        assert!(
+            global.metrics.recovery_rounds_replayed > 0,
+            "{}: mid-segment fault at round {fault_round} replayed nothing under global \
+             rollback",
+            w.name
+        );
+        assert!(
+            shard.metrics.recovery_rounds_replayed < global.metrics.recovery_rounds_replayed,
+            "{}: shard replay replayed {} machine-rounds, global rollback {} — replaying \
+             one shard must be strictly cheaper",
+            w.name,
+            shard.metrics.recovery_rounds_replayed,
+            global.metrics.recovery_rounds_replayed
+        );
+        cells.push(Cell::new(
+            w.name,
+            "fault_mid_segment",
+            "global",
+            default_cadence,
+            Some(fault_round),
+            &global,
+        ));
+        cells.push(Cell::new(
+            w.name,
+            "fault_mid_segment",
+            "shard_replay",
+            default_cadence,
+            Some(fault_round),
+            &shard,
+        ));
+
+        workload_meta.push(obj([
+            ("name", w.name.into()),
+            ("n", w.graph.n().into()),
+            ("edges", w.graph.m().into()),
+            ("fault_round", fault_round.into()),
+        ]));
+
+        let t = Table::new(
+            &[
+                "scenario", "recovery", "full_every", "fault", "rounds", "ckpt_B", "replay_rnds",
+                "replay_B", "t_recover", "t_exec",
+            ],
+            &[20, 13, 11, 6, 7, 10, 12, 10, 11, 11],
+        );
+        for c in cells.iter().filter(|c| c.workload == w.name) {
+            t.row(&[
+                c.scenario,
+                c.recovery_mode,
+                &c.checkpoint_full_every.to_string(),
+                &c.fault_round.map_or("-".to_string(), |f| f.to_string()),
+                &c.rounds.to_string(),
+                &c.checkpoint_bytes.to_string(),
+                &c.recovery_rounds_replayed.to_string(),
+                &c.recovery_bytes_replayed.to_string(),
+                &format!("{}us", c.t_recover_us),
+                &format!("{}us", c.t_exec_us),
+            ]);
+        }
+        println!();
+    }
+
+    // Headline: both inequalities on the adversarial chain.
+    let pick = |scenario: &str, mode: &str| {
+        cells
+            .iter()
+            .find(|c| {
+                c.workload == "adversarial" && c.scenario == scenario && c.recovery_mode == mode
+            })
+            .expect("headline cell measured")
+    };
+    let (full, delta) = (
+        pick("clean_full_cadence", "none"),
+        pick("clean_delta_cadence", "none"),
+    );
+    let (global, shard) = (
+        pick("fault_mid_segment", "global"),
+        pick("fault_mid_segment", "shard_replay"),
+    );
+    println!(
+        "headline (adversarial, 4x2, eps={EPSILON}, batched): checkpoints {}B delta-chained \
+         vs {}B all-full; recovery replayed {} machine-rounds shard vs {} global",
+        delta.checkpoint_bytes,
+        full.checkpoint_bytes,
+        shard.recovery_rounds_replayed,
+        global.recovery_rounds_replayed,
+    );
+
+    if write_json {
+        let report = obj([
+            ("schema", "bench_recovery/v1".into()),
+            ("mode", (if smoke { "smoke" } else { "full" }).into()),
+            ("epsilon", EPSILON.into()),
+            ("machines", TOPO.0.into()),
+            ("cpus", TOPO.1.into()),
+            ("vshards", (VSHARDS as usize).into()),
+            ("workloads", Json::Arr(workload_meta)),
+            (
+                "headline",
+                obj([
+                    ("workload", "adversarial".into()),
+                    ("checkpoint_bytes_full", full.checkpoint_bytes.into()),
+                    ("checkpoint_bytes_delta", delta.checkpoint_bytes.into()),
+                    (
+                        "replayed_machine_rounds_global",
+                        global.recovery_rounds_replayed.into(),
+                    ),
+                    (
+                        "replayed_machine_rounds_shard",
+                        shard.recovery_rounds_replayed.into(),
+                    ),
+                    ("t_recover_us_global", global.t_recover_us.into()),
+                    ("t_recover_us_shard", shard.t_recover_us.into()),
+                ]),
+            ),
+            ("cells", Json::Arr(cells.iter().map(Cell::to_json).collect())),
+        ]);
+        std::fs::write(&out_path, format!("{report}\n")).expect("write bench report");
+        println!("\nwrote {out_path}");
+    }
+
+    println!("\nrecovery bench OK");
+}

@@ -17,7 +17,7 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::data::Metric;
-use crate::dist::{ExecOptions, FaultSpec, SyncMode, DEFAULT_VSHARDS};
+use crate::dist::{ExecOptions, FaultSpec, RecoveryMode, SyncMode, DEFAULT_VSHARDS};
 use crate::linkage::Linkage;
 
 /// Which dataset generator to run (DESIGN.md §1 substitutions).
@@ -253,11 +253,38 @@ fn parse_sync_mode(doc: &TomlDoc) -> Result<SyncMode> {
     }
 }
 
+/// Parse one `"machine:round"` fault point.
+fn parse_fault_point(s: &str, machines: usize, key: &str) -> Result<FaultSpec> {
+    let Some((machine, round)) = s.split_once(':') else {
+        bail!("engine.{key} entry {s:?} must be \"machine:round\"");
+    };
+    let machine: usize = machine
+        .trim()
+        .parse()
+        .map_err(|_| anyhow!("engine.{key} entry {s:?}: bad machine"))?;
+    let round: usize = round
+        .trim()
+        .parse()
+        .map_err(|_| anyhow!("engine.{key} entry {s:?}: bad round"))?;
+    if machine >= machines {
+        bail!(
+            "engine.{key}: fault machine must be < machines \
+             (got {machine} with machines = {machines})"
+        );
+    }
+    Ok(FaultSpec { machine, round })
+}
+
 /// Parse + validate the executed-mode block: `exec_mode = "simulated"`
-/// (default) or `"executed"`, with per-link latency/jitter and an optional
-/// fault-injection point that only make sense when actually executing.
-/// Executed mode needs real shards to run on, so it is rejected for the
-/// shared-memory engines with the engine name in the error.
+/// (default) or `"executed"`, with per-link latency/jitter and the fault
+/// campaign / recovery knobs that only make sense when actually
+/// executing: `faults = "m:r,m:r"` (plus the single-fault convenience
+/// pair `fault_machine`/`fault_round`), seeded random faults
+/// (`fault_rate`/`fault_seed`), `recovery_mode = "global" |
+/// "shard_replay"`, and the delta-checkpoint cadence
+/// `checkpoint_full_every`. Executed mode needs real shards to run on,
+/// so it is rejected for the shared-memory engines with the engine name
+/// in the error.
 fn parse_exec(doc: &TomlDoc, engine: &EngineSpec) -> Result<Option<ExecOptions>> {
     let mode = doc.str_or("engine", "exec_mode", "simulated")?;
     let executed = match mode.as_str() {
@@ -273,6 +300,11 @@ fn parse_exec(doc: &TomlDoc, engine: &EngineSpec) -> Result<Option<ExecOptions>>
             "link_jitter_us",
             "fault_machine",
             "fault_round",
+            "faults",
+            "fault_rate",
+            "fault_seed",
+            "recovery_mode",
+            "checkpoint_full_every",
         ] {
             if doc.get("engine", key).is_some() {
                 bail!(
@@ -294,11 +326,17 @@ fn parse_exec(doc: &TomlDoc, engine: &EngineSpec) -> Result<Option<ExecOptions>>
     };
     let latency = Duration::from_micros(doc.usize_or("engine", "link_latency_us", 0)? as u64);
     let jitter = Duration::from_micros(doc.usize_or("engine", "link_jitter_us", 0)? as u64);
-    let fault = match (
+    let mut faults: Vec<FaultSpec> = Vec::new();
+    let campaign = doc.str_or("engine", "faults", "")?;
+    for entry in campaign.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        faults.push(parse_fault_point(entry, machines, "faults")?);
+    }
+    // Single-fault convenience pair, appended to the campaign.
+    match (
         doc.get("engine", "fault_machine"),
         doc.get("engine", "fault_round"),
     ) {
-        (None, None) => None,
+        (None, None) => {}
         (Some(_), Some(_)) => {
             let machine = doc.usize_or("engine", "fault_machine", 0)?;
             let round = doc.usize_or("engine", "fault_round", 0)?;
@@ -308,17 +346,40 @@ fn parse_exec(doc: &TomlDoc, engine: &EngineSpec) -> Result<Option<ExecOptions>>
                      (got {machine} with machines = {machines})"
                 );
             }
-            Some(FaultSpec { machine, round })
+            faults.push(FaultSpec { machine, round });
         }
         _ => bail!(
             "engine.fault_machine and engine.fault_round must be set together \
              (a fault is a (machine, round) point)"
         ),
+    }
+    let fault_rate = doc.f64_or("engine", "fault_rate", 0.0)?;
+    if !(0.0..=1.0).contains(&fault_rate) {
+        bail!("engine.fault_rate must be in [0, 1] (got {fault_rate})");
+    }
+    let fault_seed = doc.usize_or("engine", "fault_seed", 0)? as u64;
+    let recovery_mode = match doc.str_or("engine", "recovery_mode", "global")?.as_str() {
+        "global" => RecoveryMode::Global,
+        "shard_replay" => RecoveryMode::ShardReplay,
+        other => bail!(
+            "unknown engine.recovery_mode {other:?} \
+             (expected \"global\" or \"shard_replay\")"
+        ),
     };
+    let default_full_every = ExecOptions::default().checkpoint_full_every;
+    let checkpoint_full_every =
+        doc.usize_or("engine", "checkpoint_full_every", default_full_every)?;
+    if checkpoint_full_every == 0 {
+        bail!("engine.checkpoint_full_every must be at least 1 (every cut full)");
+    }
     Ok(Some(ExecOptions {
         latency,
         jitter,
-        fault,
+        faults,
+        fault_rate,
+        fault_seed,
+        recovery_mode,
+        checkpoint_full_every,
     }))
 }
 
@@ -566,18 +627,92 @@ cpus = 4
             Some(ExecOptions {
                 latency: Duration::from_micros(50),
                 jitter: Duration::from_micros(10),
-                fault: Some(FaultSpec {
+                faults: vec![FaultSpec {
                     machine: 1,
                     round: 3
-                }),
+                }],
+                ..Default::default()
             })
         );
-        // Bare executed mode: zero latency, zero jitter, no fault.
+        // Bare executed mode: zero latency, zero jitter, no faults.
         let cfg = RunConfig::from_toml_str(
             "[engine]\ntype = \"dist_rac\"\nexec_mode = \"executed\"\n",
         )
         .unwrap();
         assert_eq!(cfg.exec, Some(ExecOptions::default()));
+    }
+
+    #[test]
+    fn exec_mode_parses_fault_campaign_and_recovery_knobs() {
+        // A faults list plus the convenience pair: the pair is appended
+        // after the list, so repeated and multi-machine campaigns compose.
+        let cfg = RunConfig::from_toml_str(
+            "[engine]\ntype = \"dist_approx\"\nmachines = 4\ncpus = 2\n\
+             exec_mode = \"executed\"\nfaults = \"0:2, 2:5, 0:2\"\n\
+             fault_machine = 3\nfault_round = 1\n\
+             fault_rate = 0.25\nfault_seed = 99\n\
+             recovery_mode = \"shard_replay\"\ncheckpoint_full_every = 8\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.exec,
+            Some(ExecOptions {
+                faults: vec![
+                    FaultSpec { machine: 0, round: 2 },
+                    FaultSpec { machine: 2, round: 5 },
+                    FaultSpec { machine: 0, round: 2 },
+                    FaultSpec { machine: 3, round: 1 },
+                ],
+                fault_rate: 0.25,
+                fault_seed: 99,
+                recovery_mode: RecoveryMode::ShardReplay,
+                checkpoint_full_every: 8,
+                ..Default::default()
+            })
+        );
+        // recovery_mode = "global" is the explicit spelling of the default.
+        let cfg = RunConfig::from_toml_str(
+            "[engine]\ntype = \"dist_rac\"\nexec_mode = \"executed\"\n\
+             recovery_mode = \"global\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.exec.unwrap().recovery_mode, RecoveryMode::Global);
+    }
+
+    #[test]
+    fn exec_mode_validates_fault_campaign_and_recovery_knobs() {
+        let base = "[engine]\ntype = \"dist_rac\"\nmachines = 3\ncpus = 1\n\
+                    exec_mode = \"executed\"\n";
+        // Malformed campaign entries are named with the offending entry.
+        for bad in ["faults = \"0\"", "faults = \"a:1\"", "faults = \"0:b\""] {
+            let err = RunConfig::from_toml_str(&format!("{base}{bad}\n"))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("faults"), "{bad}: {err}");
+        }
+        // Campaign machines must exist in the topology.
+        let err = RunConfig::from_toml_str(&format!("{base}faults = \"3:0\"\n"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("machines"), "{err}");
+        // fault_rate outside [0, 1] is rejected.
+        for bad in ["-0.1", "1.5"] {
+            let err = RunConfig::from_toml_str(&format!("{base}fault_rate = {bad}\n"))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("fault_rate"), "{bad}: {err}");
+        }
+        // Unknown recovery modes are rejected with the field name.
+        let err = RunConfig::from_toml_str(&format!("{base}recovery_mode = \"psychic\"\n"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("recovery_mode"), "{err}");
+        // A zero full-checkpoint cadence would never cut a full blob.
+        let err =
+            RunConfig::from_toml_str(&format!("{base}checkpoint_full_every = 0\n"))
+                .unwrap_err()
+                .to_string();
+        assert!(err.contains("checkpoint_full_every"), "{err}");
     }
 
     #[test]
@@ -597,6 +732,11 @@ cpus = 4
             "link_jitter_us",
             "fault_machine",
             "fault_round",
+            "faults",
+            "fault_rate",
+            "fault_seed",
+            "recovery_mode",
+            "checkpoint_full_every",
         ] {
             let err = RunConfig::from_toml_str(&format!(
                 "[engine]\ntype = \"dist_rac\"\n{key} = 1\n"

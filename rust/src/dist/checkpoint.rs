@@ -4,11 +4,20 @@
 //! A sync point is the only cut where a consistent global snapshot exists
 //! for free: every deferred patch has been flushed, every in-flight
 //! exchange has been drained by its barrier, and the next round has not
-//! started. The executed driver checkpoints there, and recovery from a
-//! killed shard restores *every* machine from the same cut — a global
-//! rollback, the standard BSP recovery discipline — then replays rounds.
-//! Determinism of the round body makes the replay bitwise identical, which
+//! started. The executed driver checkpoints there; recovery restores a
+//! machine from its last cut (a full blob, or a full blob plus the delta
+//! chain hanging off it) and replays — the whole fleet under `global`
+//! recovery, a single shard under `shard_replay`. Determinism of the
+//! round body makes the replay bitwise identical, which
 //! `rust/tests/dist_executed.rs` pins.
+//!
+//! Two blob kinds share the `RACK` magic and are told apart by the
+//! version word: version 1 is a **full** snapshot (every owned row),
+//! version 2 is a **delta** (only rows and replicated scalars dirtied
+//! since the previous cut, chained to that cut by `base_round`). The
+//! driver cuts a full blob every `checkpoint_full_every`-th sync point
+//! and deltas in between; [`restore_chain`] folds `[full, delta...]`
+//! back into one [`MachineCheckpoint`].
 //!
 //! ## Wire format (version 1)
 //!
@@ -39,6 +48,29 @@
 //! orders — layout may differ after restore (arena offsets, tombstones),
 //! but the per-row live sequence is what the bitwise contract needs.
 //!
+//! ## Wire format (version 2, delta)
+//!
+//! ```text
+//! magic      u32   0x4B434152 ("RACK")
+//! version    u32   2
+//! machine    u32   owner of this blob
+//! machines   u32   fleet width the blob was cut for
+//! round      u64   next round to execute after this delta is applied
+//! base_round u64   `round` field of the cut this delta chains onto
+//! n          u64   total cluster-id space (must match the base)
+//! dirty      u32   number of dirty-row records (same record layout as v1)
+//! dirty × record
+//! size_changes   u32, × (id u32, size u64)
+//! active_changes u32, × (id u32, active u8)
+//! ```
+//!
+//! A delta row record *replaces* the base's record for that id (a retired
+//! row is recorded with zero entries, exactly as v1 does); scalar changes
+//! overwrite single entries of the replicated `size`/`active` vectors.
+//! [`apply_delta`] rejects a delta whose `base_round`, machine, fleet
+//! width, or id space disagree with the checkpoint it is applied to — a
+//! delta referencing a missing base is an error, never a partial apply.
+//!
 //! Decoding reuses the hardened wire [`Reader`]: length prefixes are
 //! validated against the remaining buffer *before* any element loop, so a
 //! corrupt or truncated blob is rejected with an error instead of a panic
@@ -49,6 +81,7 @@ use crate::linkage::Weight;
 
 const MAGIC: u32 = 0x4B43_4152; // "RACK" in little-endian byte order
 const VERSION: u32 = 1;
+const VERSION_DELTA: u32 = 2;
 
 /// One owned-row record: `(id, nn, nn_weight, entries)`.
 pub type RowRecord = (u32, u32, Weight, Vec<(u32, Weight, u64)>);
@@ -116,7 +149,8 @@ pub fn decode(bytes: &[u8]) -> Result<MachineCheckpoint, String> {
     let version = r.u32()?;
     if version != VERSION {
         return Err(format!(
-            "unsupported checkpoint version {version} (this build reads {VERSION})"
+            "unsupported full-checkpoint version {version} (full blobs are version {VERSION}; \
+             deltas are version {VERSION_DELTA} and decode via decode_delta)"
         ));
     }
     let machine = r.u32()?;
@@ -174,6 +208,237 @@ pub fn decode(bytes: &[u8]) -> Result<MachineCheckpoint, String> {
         size,
         active,
     })
+}
+
+/// The state a machine dirtied since its previous checkpoint cut: changed
+/// owned rows (full replacement records) plus changed entries of the
+/// replicated `size`/`active` vectors. Applying it to the checkpoint of
+/// the previous cut reproduces the full snapshot of this cut.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeltaCheckpoint {
+    /// Machine this blob belongs to.
+    pub machine: u32,
+    /// Fleet width the blob was cut for.
+    pub machines: u32,
+    /// Next round to execute once this delta is applied.
+    pub round: u64,
+    /// `round` of the cut this delta chains onto ([`apply_delta`] checks).
+    pub base_round: u64,
+    /// Total cluster-id space (must match the base).
+    pub n: usize,
+    /// Dirty owned rows in ascending id order, replacing the base's
+    /// records wholesale (retired rows as zero entries, like v1).
+    pub rows: Vec<RowRecord>,
+    /// Changed replicated sizes, ascending id order.
+    pub size: Vec<(u32, u64)>,
+    /// Changed replicated liveness flags, ascending id order.
+    pub active: Vec<(u32, bool)>,
+}
+
+/// Serialize a delta to the version-2 binary format.
+pub fn encode_delta(d: &DeltaCheckpoint) -> Vec<u8> {
+    let mut buf = Vec::new();
+    put_u32(&mut buf, MAGIC);
+    put_u32(&mut buf, VERSION_DELTA);
+    put_u32(&mut buf, d.machine);
+    put_u32(&mut buf, d.machines);
+    put_u64(&mut buf, d.round);
+    put_u64(&mut buf, d.base_round);
+    put_u64(&mut buf, d.n as u64);
+    put_u32(&mut buf, len_u32(d.rows.len(), "delta row"));
+    for (id, nn, nn_weight, entries) in &d.rows {
+        put_u32(&mut buf, *id);
+        put_u32(&mut buf, *nn);
+        put_f64(&mut buf, *nn_weight);
+        put_u32(&mut buf, len_u32(entries.len(), "delta row entry"));
+        for &(t, w, c) in entries {
+            put_u32(&mut buf, t);
+            put_f64(&mut buf, w);
+            put_u64(&mut buf, c);
+        }
+    }
+    put_u32(&mut buf, len_u32(d.size.len(), "delta size change"));
+    for &(id, s) in &d.size {
+        put_u32(&mut buf, id);
+        put_u64(&mut buf, s);
+    }
+    put_u32(&mut buf, len_u32(d.active.len(), "delta active change"));
+    for &(id, a) in &d.active {
+        put_u32(&mut buf, id);
+        buf.push(u8::from(a));
+    }
+    buf
+}
+
+/// Decode a version-2 delta blob, rejecting wrong magic/version,
+/// truncation, corrupt length prefixes, and trailing bytes.
+pub fn decode_delta(bytes: &[u8]) -> Result<DeltaCheckpoint, String> {
+    let mut r = Reader::new(bytes);
+    let magic = r.u32()?;
+    if magic != MAGIC {
+        return Err(format!("bad checkpoint magic {magic:#010x}"));
+    }
+    let version = r.u32()?;
+    if version != VERSION_DELTA {
+        return Err(format!(
+            "unsupported delta-checkpoint version {version} (deltas are version {VERSION_DELTA})"
+        ));
+    }
+    let machine = r.u32()?;
+    let machines = r.u32()?;
+    let round = r.u64()?;
+    let base_round = r.u64()?;
+    let n64 = r.u64()?;
+    if n64 > usize::MAX as u64 {
+        return Err(format!("corrupt delta id-space {n64}"));
+    }
+    let n = n64 as usize;
+    let dirty = r.u32()? as usize;
+    // id + nn + nn_weight + live_len = 20 bytes minimum per record.
+    r.check_count(dirty, 20, "delta row")?;
+    let mut rows = Vec::with_capacity(dirty);
+    for _ in 0..dirty {
+        let id = r.u32()?;
+        let nn = r.u32()?;
+        let nn_weight = r.f64()?;
+        let len = r.u32()? as usize;
+        r.check_count(len, 20, "delta row entry")?;
+        let mut entries = Vec::with_capacity(len);
+        for _ in 0..len {
+            entries.push((r.u32()?, r.f64()?, r.u64()?));
+        }
+        rows.push((id, nn, nn_weight, entries));
+    }
+    let size_changes = r.u32()? as usize;
+    r.check_count(size_changes, 12, "delta size change")?;
+    let mut size = Vec::with_capacity(size_changes);
+    for _ in 0..size_changes {
+        size.push((r.u32()?, r.u64()?));
+    }
+    let active_changes = r.u32()? as usize;
+    r.check_count(active_changes, 5, "delta active change")?;
+    let mut active = Vec::with_capacity(active_changes);
+    for _ in 0..active_changes {
+        active.push((r.u32()?, r.u8()? != 0));
+    }
+    if r.remaining() != 0 {
+        return Err(format!("{} trailing bytes after delta payload", r.remaining()));
+    }
+    Ok(DeltaCheckpoint {
+        machine,
+        machines,
+        round,
+        base_round,
+        n,
+        rows,
+        size,
+        active,
+    })
+}
+
+/// Either blob kind, told apart by the version word.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AnyCheckpoint {
+    Full(MachineCheckpoint),
+    Delta(DeltaCheckpoint),
+}
+
+/// Decode a blob of either version (full v1 or delta v2).
+pub fn decode_any(bytes: &[u8]) -> Result<AnyCheckpoint, String> {
+    let mut r = Reader::new(bytes);
+    let magic = r.u32()?;
+    if magic != MAGIC {
+        return Err(format!("bad checkpoint magic {magic:#010x}"));
+    }
+    match r.u32()? {
+        VERSION => decode(bytes).map(AnyCheckpoint::Full),
+        VERSION_DELTA => decode_delta(bytes).map(AnyCheckpoint::Delta),
+        v => Err(format!(
+            "unsupported checkpoint version {v} (this build reads {VERSION} and {VERSION_DELTA})"
+        )),
+    }
+}
+
+/// Apply one delta in place. Rejects a delta cut for a different machine,
+/// fleet width, or id space, a delta whose `base_round` does not match
+/// the base's `round` (a chain with a missing link), and out-of-range or
+/// un-owned ids — the base is left untouched on any error path that can
+/// be checked up front, and id errors abort before later sections apply.
+pub fn apply_delta(base: &mut MachineCheckpoint, d: &DeltaCheckpoint) -> Result<(), String> {
+    if d.machine != base.machine {
+        return Err(format!(
+            "delta for machine {} applied to machine {}",
+            d.machine, base.machine
+        ));
+    }
+    if d.machines != base.machines {
+        return Err(format!(
+            "delta cut for {} machines applied to a {}-machine checkpoint",
+            d.machines, base.machines
+        ));
+    }
+    if d.n != base.n {
+        return Err(format!(
+            "delta id-space {} does not match base id-space {}",
+            d.n, base.n
+        ));
+    }
+    if d.base_round != base.round {
+        return Err(format!(
+            "delta chains onto round {} but the base is at round {} (missing link)",
+            d.base_round, base.round
+        ));
+    }
+    for rec in &d.rows {
+        let id = rec.0;
+        let slot = base
+            .rows
+            .binary_search_by_key(&id, |r| r.0)
+            .map_err(|_| format!("delta row {id} is not an owned row of the base"))?;
+        base.rows[slot] = rec.clone();
+    }
+    for &(id, s) in &d.size {
+        let slot = base
+            .size
+            .get_mut(id as usize)
+            .ok_or_else(|| format!("delta size change for out-of-range id {id}"))?;
+        *slot = s;
+    }
+    for &(id, a) in &d.active {
+        let slot = base
+            .active
+            .get_mut(id as usize)
+            .ok_or_else(|| format!("delta active change for out-of-range id {id}"))?;
+        *slot = a;
+    }
+    base.round = d.round;
+    Ok(())
+}
+
+/// Fold a checkpoint chain — one full blob followed by zero or more
+/// deltas in cut order — back into the full snapshot of the last cut.
+pub fn restore_chain(blobs: &[Vec<u8>]) -> Result<MachineCheckpoint, String> {
+    let (first, rest) = blobs
+        .split_first()
+        .ok_or_else(|| "empty checkpoint chain".to_string())?;
+    let mut cp = match decode_any(first)? {
+        AnyCheckpoint::Full(cp) => cp,
+        AnyCheckpoint::Delta(d) => {
+            return Err(format!(
+                "checkpoint chain starts with a delta (base round {} is missing)",
+                d.base_round
+            ));
+        }
+    };
+    for blob in rest {
+        match decode_any(blob)? {
+            AnyCheckpoint::Delta(d) => apply_delta(&mut cp, &d)?,
+            AnyCheckpoint::Full(_) => {
+                return Err("full checkpoint in the middle of a delta chain".to_string());
+            }
+        }
+    }
+    Ok(cp)
 }
 
 #[cfg(test)]
@@ -258,5 +523,122 @@ mod tests {
             active: vec![],
         };
         assert_eq!(decode(&encode(&cp)).unwrap(), cp);
+    }
+
+    fn sample_delta() -> DeltaCheckpoint {
+        DeltaCheckpoint {
+            machine: 1,
+            machines: 3,
+            round: 9,
+            base_round: 7,
+            n: 5,
+            rows: vec![
+                (1, 2, 0.5, vec![(2, 0.5, 4)]),
+                (4, u32::MAX, Weight::INFINITY, vec![]),
+            ],
+            size: vec![(1, 3), (2, 0)],
+            active: vec![(2, false)],
+        }
+    }
+
+    #[test]
+    fn delta_round_trips_bitwise() {
+        let d = sample_delta();
+        let blob = encode_delta(&d);
+        let back = decode_delta(&blob).unwrap();
+        assert_eq!(back, d);
+        assert_eq!(back.rows[0].2.to_bits(), d.rows[0].2.to_bits());
+        // decode_any tells the kinds apart by the version word.
+        assert_eq!(decode_any(&blob).unwrap(), AnyCheckpoint::Delta(d));
+        let full = sample();
+        assert_eq!(
+            decode_any(&encode(&full)).unwrap(),
+            AnyCheckpoint::Full(full)
+        );
+    }
+
+    #[test]
+    fn delta_rejects_truncation_at_every_cut() {
+        let blob = encode_delta(&sample_delta());
+        for cut in 0..blob.len() {
+            assert!(decode_delta(&blob[..cut]).is_err(), "cut={cut} accepted");
+            assert!(decode_any(&blob[..cut]).is_err(), "any: cut={cut} accepted");
+        }
+        let mut extended = blob.clone();
+        extended.push(0);
+        assert!(decode_delta(&extended).unwrap_err().contains("trailing"));
+    }
+
+    #[test]
+    fn delta_rejects_corrupt_counts_without_allocation() {
+        // magic(4)+version(4)+machine(4)+machines(4)+round(8)+base(8)+n(8)
+        // = 40; the dirty-row count sits at [40..44].
+        let mut blob = encode_delta(&sample_delta());
+        blob[40..44].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = decode_delta(&blob).unwrap_err();
+        assert!(err.contains("corrupt"), "want count rejection, got: {err}");
+        // Wrong-version blobs are named, not panicked on.
+        let mut blob = encode_delta(&sample_delta());
+        blob[4] = 99;
+        assert!(decode_delta(&blob).unwrap_err().contains("version"));
+        assert!(decode_any(&blob).unwrap_err().contains("version"));
+    }
+
+    #[test]
+    fn chain_replay_reproduces_the_full_snapshot() {
+        let base = sample();
+        let d = sample_delta();
+        let mut folded = base.clone();
+        apply_delta(&mut folded, &d).unwrap();
+        assert_eq!(folded.round, 9);
+        assert_eq!(folded.rows[0], d.rows[0]);
+        assert_eq!(folded.rows[1], d.rows[1]);
+        assert_eq!(folded.size, vec![1, 3, 0, 0, 3]);
+        assert_eq!(
+            folded.active,
+            vec![true, true, false, false, true],
+            "active flag change applies"
+        );
+        let chained = restore_chain(&[encode(&base), encode_delta(&d)]).unwrap();
+        assert_eq!(chained, folded, "chain replay == in-place apply");
+        assert_eq!(restore_chain(&[encode(&base)]).unwrap(), base);
+    }
+
+    #[test]
+    fn chain_rejects_missing_or_misordered_links() {
+        let base = sample();
+        let mut d = sample_delta();
+        d.base_round = 99; // references a cut that never happened
+        let err = restore_chain(&[encode(&base), encode_delta(&d)]).unwrap_err();
+        assert!(err.contains("missing link"), "got: {err}");
+        // A chain cannot start with a delta.
+        let err = restore_chain(&[encode_delta(&sample_delta())]).unwrap_err();
+        assert!(err.contains("starts with a delta"), "got: {err}");
+        // Or contain a second full blob mid-chain.
+        let err =
+            restore_chain(&[encode(&base), encode(&base)]).unwrap_err();
+        assert!(err.contains("middle"), "got: {err}");
+        assert!(restore_chain(&[]).is_err());
+    }
+
+    #[test]
+    fn apply_rejects_mismatched_and_out_of_range_targets() {
+        let mut base = sample();
+        let ok = base.clone();
+        let mut d = sample_delta();
+        d.machine = 2;
+        assert!(apply_delta(&mut base, &d).is_err());
+        assert_eq!(base, ok, "failed apply leaves the base untouched");
+        let mut d = sample_delta();
+        d.n = 4;
+        assert!(apply_delta(&mut base, &d).unwrap_err().contains("id-space"));
+        let mut d = sample_delta();
+        d.rows[0].0 = 3; // not an owned row of the base
+        assert!(apply_delta(&mut base, &d).unwrap_err().contains("owned"));
+        let mut d = sample_delta();
+        d.size[0].0 = 5; // out of range
+        assert!(apply_delta(&mut base, &d)
+            .unwrap_err()
+            .contains("out-of-range"));
     }
 }

@@ -19,8 +19,8 @@
 //!
 //! > executed and simulated runs produce **bitwise identical** dendrogram,
 //! > (1+ε) bounds trace, and sync-point schedule, for every topology,
-//! > ε, and sync mode — and a shard killed mid-run recovers from the last
-//! > sync-point checkpoint to the same bits.
+//! > ε, and sync mode — and any shard (or several) killed mid-run
+//! > recovers to the same bits under either recovery strategy.
 //!
 //! ## Why bitwise equality holds
 //!
@@ -57,17 +57,44 @@
 //! sync-boundary lower bound. The *schedule itself* (`sync_points`) is
 //! bitwise shared.
 //!
-//! ## Checkpoint / recovery
+//! ## Checkpoint / recovery (v2)
 //!
 //! At every sync point the driver collects one versioned
-//! [`super::checkpoint`] blob per machine (the codec also serializes the
-//! initial state, so every executed run exercises a restore). A
-//! round-indexed [`FaultSpec`] kills the whole fleet at the top of the
-//! chosen round — the shard's death tears down the bulk-synchronous round
-//! for everyone, which is exactly why recovery is a *global* rollback:
-//! the driver respawns the fleet, feeds each machine its last blob, and
-//! replays from the checkpointed round. Determinism makes the replay
-//! bitwise identical to the unfaulted run.
+//! [`super::checkpoint`] blob per machine. Cuts form a **chain**: a full
+//! snapshot every [`ExecOptions::checkpoint_full_every`] cuts, deltas in
+//! between. A delta carries only the rows and replicated scalars dirtied
+//! since the previous cut (tracked through the merge/patch/rescan path;
+//! compaction preserves row content so it never re-dirties). Restore
+//! replays the chain ([`checkpoint::restore_chain`]); the codec also
+//! serializes the initial state, so every executed run exercises a
+//! restore. v1 full blobs still decode — the codec is versioned and
+//! adversarially fuzzed in `rust/tests/codec_adversarial.rs`.
+//!
+//! Faults are a campaign, not a single event: [`ExecOptions::faults`]
+//! schedules any number of `(machine, round)` kills (several machines in
+//! one round, the same machine twice, a fault during recovery), and
+//! [`ExecOptions::fault_rate`] adds seeded random kills on top. A dead
+//! shard is *detected*, not assumed: every channel send funnels through
+//! one helper that converts disconnection into a named [`MachineDown`]
+//! error, which machines report instead of panicking and the driver
+//! answers with recovery instead of a hang.
+//!
+//! Two recovery strategies, selected by [`ExecOptions::recovery_mode`]
+//! and pinned bitwise-identical to each other and to the unfaulted run:
+//!
+//! * [`RecoveryMode::Global`] — BSP rollback. Tear the fleet down,
+//!   restore every machine from the last cut, replay every round since.
+//!   Cost: `(rounds since cut) × machines` machine-rounds.
+//! * [`RecoveryMode::ShardReplay`] — respawn only the dead machine,
+//!   restore it from its own chain, and re-feed it the journaled inbound
+//!   traffic ([`JournalRecord`]: payload bytes keyed `(src, dst, round,
+//!   step)`) while the survivors idle at the barrier. The respawn's
+//!   outbound goes to a sink (survivors already consumed those bytes);
+//!   after replay the fabric is rewired. Cost: `rounds since cut`
+//!   machine-rounds — a fleet-width factor cheaper.
+//!
+//! Recovery cost is reported next to the round clocks:
+//! `recovery_rounds_replayed`, `recovery_bytes_replayed`, `t_recover`.
 
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::thread::JoinHandle;
@@ -76,7 +103,7 @@ use std::time::{Duration, Instant};
 use rustc_hash::{FxHashMap, FxHashSet};
 
 use super::checkpoint::{self, MachineCheckpoint};
-use super::network::{decode_batch, encode_batch, BatchRecord, Message, NetReport};
+use super::network::{decode_batch, encode_batch, BatchRecord, JournalRecord, Message, NetReport};
 use super::{vshard_of, DistCore, DistSelector, Placement};
 use crate::approx::good::{self, Candidate, MergePair};
 use crate::approx::quality::MergeBound;
@@ -87,35 +114,106 @@ use crate::rac::logic::{compute_union_map, scan_nn, PairView};
 use crate::rac::{RacResult, NO_NN};
 use crate::store::{NeighborStore, NeighborsRef, RowRef};
 
-/// Kill the fleet at the top of `round` (0-based), then recover every
-/// machine from its last sync-point checkpoint and replay.
+/// A named shard failure: the machine whose channel went dead and the
+/// round the death was observed in. This is the *only* way a dead shard
+/// surfaces — every channel send and collect converts disconnection into
+/// this error instead of panicking or hanging, so the driver can answer
+/// with recovery.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MachineDown {
+    /// Machine whose channel disconnected or timed out.
+    pub machine: usize,
+    /// Round in which the death was observed.
+    pub round: usize,
+}
+
+impl std::fmt::Display for MachineDown {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "machine {} down in round {}", self.machine, self.round)
+    }
+}
+
+/// How the driver recovers a dead shard. Both strategies land on bits
+/// identical to the unfaulted run; they differ in replay cost. See the
+/// module docs for guidance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RecoveryMode {
+    /// BSP global rollback: tear the whole fleet down and restore every
+    /// machine from the last sync cut. Simple, journal-free, and the
+    /// right call when faults are rare or the fleet is small.
+    #[default]
+    Global,
+    /// Respawn only the dead machine: restore it from its own chain and
+    /// replay its journaled inbound batches while survivors idle at the
+    /// barrier. A fleet-width factor cheaper per fault, at the cost of
+    /// journaling every packet between cuts.
+    ShardReplay,
+}
+
+/// Kill `machine` at the top of `round` (0-based). A round the run never
+/// reaches simply never faults.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct FaultSpec {
-    /// Machine reported as failed (must be `< machines`; with one fleet
-    /// per process the whole fleet restarts either way — BSP recovery is
-    /// a global rollback).
+    /// Machine to kill (must be `< machines`).
     pub machine: usize,
-    /// Round at whose start the fault fires. A round the run never
-    /// reaches simply never faults.
+    /// Round at whose start the fault fires.
     pub round: usize,
 }
 
 /// Knobs for the executed distributed mode.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ExecOptions {
     /// Fixed one-way link latency added to every cross-machine packet.
     pub latency: Duration,
     /// Upper bound on deterministic per-packet jitter (hashed from the
     /// link and round, so reruns see identical delays).
     pub jitter: Duration,
-    /// Optional fault injection; `None` runs clean.
-    pub fault: Option<FaultSpec>,
+    /// Scheduled fault campaign: every entry kills its machine at the top
+    /// of its round. Duplicate entries fire on consecutive passes over
+    /// the round boundary — a duplicate `(machine, round)` is a fault
+    /// *during* the recovery the first one triggered.
+    pub faults: Vec<FaultSpec>,
+    /// Per-(machine, round) probability of a seeded random kill, on top
+    /// of the scheduled campaign. `0.0` disables.
+    pub fault_rate: f64,
+    /// Seed for the random-fault hash (reruns fault identically).
+    pub fault_seed: u64,
+    /// Recovery strategy for every fault in the run.
+    pub recovery_mode: RecoveryMode,
+    /// Cut a full checkpoint every this-many sync cuts; the cuts between
+    /// are deltas chained onto it. `1` means every cut is full (the v1
+    /// behavior); clamped to at least 1.
+    pub checkpoint_full_every: usize,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        ExecOptions {
+            latency: Duration::ZERO,
+            jitter: Duration::ZERO,
+            faults: Vec::new(),
+            fault_rate: 0.0,
+            fault_seed: 0,
+            recovery_mode: RecoveryMode::Global,
+            checkpoint_full_every: 4,
+        }
+    }
 }
 
 /// How long the driver waits for any single machine report before
-/// declaring the fleet wedged. Generous: test topologies finish rounds in
-/// microseconds; only a deadlock bug ever gets near this.
+/// scanning for a dead thread. Generous: test topologies finish rounds in
+/// microseconds; only a genuine death or deadlock gets near this.
 const REPORT_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// How long a machine waits for one peer packet before naming the first
+/// silent peer in a [`MachineDown`]. The common death is *detected
+/// instantly* (a dropped inbox makes the send fail); the timeout only
+/// catches a peer that is alive but wedged.
+const PEER_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Cap on driver-*detected* recoveries (channel deaths we did not
+/// inject) before declaring the run structurally broken.
+const MAX_DETECTED_RECOVERIES: usize = 8;
 
 // Per-round exchange step ids (unique per (round, step) because a round
 // runs exactly one selector). Exact rounds:
@@ -130,6 +228,37 @@ const STEP_MATCHING: u8 = 3;
 const EXACT_MERGE_BASE: u8 = 2;
 const GOOD_MERGE_BASE: u8 = 4;
 
+/// Convert a disconnected-channel send into the named shard failure.
+/// Every send in this module — wire packets, driver commands, journal
+/// injection — funnels through here, so a dead machine is always a
+/// [`MachineDown`] error, never a panic or an ignored loss.
+fn send_or_down<T>(
+    tx: &Sender<T>,
+    machine: usize,
+    round: usize,
+    value: T,
+) -> Result<(), MachineDown> {
+    tx.send(value).map_err(|_| MachineDown { machine, round })
+}
+
+/// Deterministic seeded fault coin: splitmix64-style hash of
+/// `(seed, machine, round)` compared against `rate`. Rerunning with the
+/// same seed faults the same (machine, round) cells.
+fn random_fault(seed: u64, machine: usize, round: usize, rate: f64) -> bool {
+    if rate <= 0.0 {
+        return false;
+    }
+    let mut x = seed
+        ^ (machine as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (round as u64).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    ((x >> 11) as f64) / ((1u64 << 53) as f64) < rate
+}
+
 /// One wire packet: an encoded [`Message`] batch plus its delivery time.
 /// Empty batches still flow (they are the barrier) but are never counted.
 struct Packet {
@@ -143,14 +272,18 @@ struct Packet {
 /// Driver → machine commands.
 #[derive(Clone)]
 enum Cmd {
-    /// Adopt the given checkpoint blob as the complete machine state.
-    Restore(Vec<u8>),
+    /// Adopt the given checkpoint chain (full blob + deltas) as the
+    /// complete machine state.
+    Restore(Vec<Vec<u8>>),
     /// Run the find phase of `round` and report `Phase1`.
     Round { round: usize },
     /// Apply the globally selected pairs and report `RoundDone`.
     Merge { pairs: Vec<MergePair> },
-    /// Serialize state and report `CheckpointBlob`.
-    Checkpoint { round: usize },
+    /// Serialize state (full snapshot or dirty delta) and report
+    /// `CheckpointBlob`.
+    Checkpoint { round: usize, full: bool },
+    /// Swap the peer fabric (after a shard respawn replaced an inbox).
+    Rewire { peers: Vec<Sender<Packet>> },
     /// No pairs anywhere: report `FinishAck` and exit.
     Finish,
     /// Tear down immediately (normal completion or fault injection).
@@ -163,6 +296,9 @@ struct NetStats {
     messages: usize,
     bytes: usize,
     log: Vec<BatchRecord>,
+    /// Every packet posted this round — barriers included — when the
+    /// run journals for shard replay. Empty otherwise.
+    journal: Vec<JournalRecord>,
 }
 
 /// Machine → driver reports.
@@ -184,6 +320,9 @@ enum Report {
         eligibility_scan_entries: usize,
         net: NetStats,
     },
+    /// A peer's channel died mid-phase: the reporting machine is healthy
+    /// and idles for instructions; the *named* machine is down.
+    Down(MachineDown),
 }
 
 /// A neighbor row that is either borrowed from the local arena or was
@@ -247,6 +386,10 @@ struct Wire {
     stash: Vec<Packet>,
     latency: Duration,
     jitter: Duration,
+    /// Record every posted packet (barriers included) for shard replay.
+    journal: bool,
+    /// How long to wait on a silent peer before naming it down.
+    peer_timeout: Duration,
     round: usize,
     stats: NetStats,
 }
@@ -254,7 +397,8 @@ struct Wire {
 impl Wire {
     /// Ship one physical packet. Empty batches flow (barrier) but only
     /// non-empty ones are accounted — the simulation's counting rule.
-    fn post(&mut self, dst: usize, step: u8, msgs: &[Message]) {
+    /// A disconnected peer is a named [`MachineDown`], never a panic.
+    fn post(&mut self, dst: usize, step: u8, msgs: &[Message]) -> Result<(), MachineDown> {
         debug_assert_ne!(dst, self.me, "machines never post to themselves");
         let bytes = encode_batch(msgs);
         if !msgs.is_empty() {
@@ -268,6 +412,17 @@ impl Wire {
                 round: self.round,
             });
         }
+        if self.journal {
+            // Barriers are journaled too: the replayed shard blocks on
+            // them exactly like the original incarnation did.
+            self.stats.journal.push(JournalRecord {
+                src: self.me,
+                dst,
+                round: self.round,
+                step,
+                bytes: bytes.clone(),
+            });
+        }
         let delay = self.latency
             + Duration::from_nanos(jitter_ns(self.me, dst, self.round, step, self.jitter));
         let packet = Packet {
@@ -277,20 +432,19 @@ impl Wire {
             bytes,
             deliver_at: Instant::now() + delay,
         };
-        // A dead peer (fault teardown) makes sends fail; the machine will
-        // be told to exit via its command channel, so just drop.
-        let _ = self.peers[dst].send(packet);
+        send_or_down(&self.peers[dst], dst, self.round, packet)
     }
 
     /// Wait for one packet from each of `from`, honoring delivery times,
-    /// and decode them in ascending src order.
+    /// and decode them in ascending src order. A peer that disconnects or
+    /// stays silent past [`Wire::peer_timeout`] is named in the error.
     fn collect(
         &mut self,
         step: u8,
         from: impl Iterator<Item = usize>,
-    ) -> Vec<(usize, Vec<Message>)> {
-        let expected = from.count();
-        let mut packets: Vec<Packet> = Vec::with_capacity(expected);
+    ) -> Result<Vec<(usize, Vec<Message>)>, MachineDown> {
+        let expected: Vec<usize> = from.collect();
+        let mut packets: Vec<Packet> = Vec::with_capacity(expected.len());
         let mut i = 0;
         while i < self.stash.len() {
             if self.stash[i].round == self.round && self.stash[i].step == step {
@@ -299,11 +453,24 @@ impl Wire {
                 i += 1;
             }
         }
-        while packets.len() < expected {
-            let p = self
-                .inbox
-                .recv_timeout(REPORT_TIMEOUT)
-                .expect("peer silent mid-step: executed fleet wedged");
+        while packets.len() < expected.len() {
+            let p = match self.inbox.recv_timeout(self.peer_timeout) {
+                Ok(p) => p,
+                Err(_) => {
+                    // Disconnected or silent: name the first peer whose
+                    // packet never arrived.
+                    let have: FxHashSet<usize> = packets.iter().map(|p| p.src).collect();
+                    let missing = expected
+                        .iter()
+                        .copied()
+                        .find(|s| !have.contains(s))
+                        .expect("collect short yet no peer missing");
+                    return Err(MachineDown {
+                        machine: missing,
+                        round: self.round,
+                    });
+                }
+            };
             if p.round == self.round && p.step == step {
                 packets.push(p);
             } else {
@@ -321,20 +488,29 @@ impl Wire {
         packets.sort_by_key(|p| p.src);
         packets
             .into_iter()
-            .map(|p| {
-                let msgs = decode_batch(&p.bytes).expect("peer sent a corrupt batch");
-                (p.src, msgs)
+            .map(|p| match decode_batch(&p.bytes) {
+                Ok(msgs) => Ok((p.src, msgs)),
+                // A corrupt batch means the sender's state is gone —
+                // treat the link as dead and let the driver recover.
+                Err(_) => Err(MachineDown {
+                    machine: p.src,
+                    round: self.round,
+                }),
             })
             .collect()
     }
 
     /// Symmetric exchange: post `out[dst]` to every peer, collect one
     /// packet from every peer.
-    fn all_to_all(&mut self, step: u8, out: Vec<Vec<Message>>) -> Vec<(usize, Vec<Message>)> {
+    fn all_to_all(
+        &mut self,
+        step: u8,
+        out: Vec<Vec<Message>>,
+    ) -> Result<Vec<(usize, Vec<Message>)>, MachineDown> {
         debug_assert_eq!(out.len(), self.machines);
         for (dst, msgs) in out.iter().enumerate() {
             if dst != self.me {
-                self.post(dst, step, msgs);
+                self.post(dst, step, msgs)?;
             }
         }
         let me = self.me;
@@ -342,29 +518,39 @@ impl Wire {
     }
 
     /// Gather: non-root machines post `msgs` to `root`; root collects.
-    fn gather_to(&mut self, root: usize, step: u8, msgs: &[Message]) -> Vec<(usize, Vec<Message>)> {
+    fn gather_to(
+        &mut self,
+        root: usize,
+        step: u8,
+        msgs: &[Message],
+    ) -> Result<Vec<(usize, Vec<Message>)>, MachineDown> {
         if self.me == root {
             let machines = self.machines;
             self.collect(step, (0..machines).filter(move |&s| s != root))
         } else {
-            self.post(root, step, msgs);
-            Vec::new()
+            self.post(root, step, msgs)?;
+            Ok(Vec::new())
         }
     }
 
     /// Broadcast: root posts `out[dst]` to every peer; peers receive one
     /// batch from root.
-    fn broadcast_from(&mut self, root: usize, step: u8, out: &[Vec<Message>]) -> Vec<Message> {
+    fn broadcast_from(
+        &mut self,
+        root: usize,
+        step: u8,
+        out: &[Vec<Message>],
+    ) -> Result<Vec<Message>, MachineDown> {
         if self.me == root {
             for (dst, msgs) in out.iter().enumerate() {
                 if dst != root {
-                    self.post(dst, step, msgs);
+                    self.post(dst, step, msgs)?;
                 }
             }
-            Vec::new()
+            Ok(Vec::new())
         } else {
-            let mut got = self.collect(step, std::iter::once(root));
-            got.pop().map(|(_, msgs)| msgs).unwrap_or_default()
+            let mut got = self.collect(step, std::iter::once(root))?;
+            Ok(got.pop().map(|(_, msgs)| msgs).unwrap_or_default())
         }
     }
 
@@ -398,6 +584,17 @@ struct Machine {
     pair_weight: Vec<Weight>,
     /// Per-round ε-good sweep cost (reported, then reset).
     eligibility_scan_entries: usize,
+    /// Owned rows touched since the last cut (patch, install, clear,
+    /// phase-3 NN rescan) — the delta checkpoint's row set. Remote NN
+    /// shadows are deliberately not tracked: checkpoints only carry
+    /// owned state, and shadows are refreshed every round.
+    dirty_rows: FxHashSet<u32>,
+    /// Replicated sizes changed since the last cut.
+    dirty_size: FxHashSet<u32>,
+    /// Replicated liveness flags changed since the last cut.
+    dirty_active: FxHashSet<u32>,
+    /// `round` of the last cut — the delta's `base_round` chain link.
+    last_cut_round: u64,
     wire: Wire,
 }
 
@@ -406,13 +603,15 @@ impl Machine {
         self.place.machine_of(c) == self.me
     }
 
-    /// Adopt a checkpoint blob as the complete machine state.
-    fn restore(&mut self, blob: &[u8]) {
-        let cp = checkpoint::decode(blob).expect("driver handed a corrupt checkpoint");
-        assert_eq!(cp.machine as usize, self.me, "blob for the wrong machine");
+    /// Adopt a checkpoint chain (full blob + deltas) as the complete
+    /// machine state.
+    fn restore(&mut self, chain: &[Vec<u8>]) {
+        let cp = checkpoint::restore_chain(chain)
+            .expect("driver handed a corrupt checkpoint chain");
+        assert_eq!(cp.machine as usize, self.me, "chain for the wrong machine");
         assert_eq!(
             cp.machines as usize, self.wire.machines,
-            "blob for the wrong fleet width"
+            "chain for the wrong fleet width"
         );
         self.n = cp.n;
         self.store = NeighborStore::new(cp.n);
@@ -438,27 +637,63 @@ impl Machine {
         self.matched = vec![false; cp.n];
         self.partner = vec![NO_NN; cp.n];
         self.pair_weight = vec![0.0; cp.n];
+        // A restore *is* the cut it loaded: nothing is dirty against it.
+        self.dirty_rows.clear();
+        self.dirty_size.clear();
+        self.dirty_active.clear();
+        self.last_cut_round = cp.round;
     }
 
-    /// Serialize the complete machine state for the given next round.
-    fn checkpoint(&self, round: usize) -> Vec<u8> {
-        let rows = (0..self.n as u32)
-            .filter(|&c| self.owns(c))
-            .map(|c| {
-                let entries =
-                    self.store.row(c).iter().map(|(t, e)| (t, e.weight, e.count)).collect();
-                (c, self.nn[c as usize], self.nn_weight[c as usize], entries)
+    /// Serialize machine state for the given next round: the complete
+    /// owned shard (`full`) or only what changed since the last cut.
+    /// Either way the cut becomes the new dirty-tracking baseline.
+    fn checkpoint(&mut self, round: usize, full: bool) -> Vec<u8> {
+        let row_record = |c: u32| {
+            let entries = self
+                .store
+                .row(c)
+                .iter()
+                .map(|(t, e)| (t, e.weight, e.count))
+                .collect();
+            (c, self.nn[c as usize], self.nn_weight[c as usize], entries)
+        };
+        let blob = if full {
+            let rows = (0..self.n as u32).filter(|&c| self.owns(c)).map(row_record).collect();
+            checkpoint::encode(&MachineCheckpoint {
+                machine: self.me as u32,
+                machines: self.wire.machines as u32,
+                round: round as u64,
+                n: self.n,
+                rows,
+                size: self.size.clone(),
+                active: self.active.clone(),
             })
-            .collect();
-        checkpoint::encode(&MachineCheckpoint {
-            machine: self.me as u32,
-            machines: self.wire.machines as u32,
-            round: round as u64,
-            n: self.n,
-            rows,
-            size: self.size.clone(),
-            active: self.active.clone(),
-        })
+        } else {
+            let mut row_ids: Vec<u32> = self.dirty_rows.iter().copied().collect();
+            row_ids.sort_unstable();
+            let mut size_ids: Vec<u32> = self.dirty_size.iter().copied().collect();
+            size_ids.sort_unstable();
+            let mut active_ids: Vec<u32> = self.dirty_active.iter().copied().collect();
+            active_ids.sort_unstable();
+            checkpoint::encode_delta(&checkpoint::DeltaCheckpoint {
+                machine: self.me as u32,
+                machines: self.wire.machines as u32,
+                round: round as u64,
+                base_round: self.last_cut_round,
+                n: self.n,
+                rows: row_ids.into_iter().map(row_record).collect(),
+                size: size_ids.into_iter().map(|c| (c, self.size[c as usize])).collect(),
+                active: active_ids
+                    .into_iter()
+                    .map(|c| (c, self.active[c as usize]))
+                    .collect(),
+            })
+        };
+        self.dirty_rows.clear();
+        self.dirty_size.clear();
+        self.dirty_active.clear();
+        self.last_cut_round = round as u64;
+        blob
     }
 
     fn begin_round(&mut self, round: usize) {
@@ -470,7 +705,7 @@ impl Machine {
     /// Exact find phase: refresh remote NN shadows, then test reciprocity
     /// over owned active ids. Query staging matches the simulation's
     /// `exchange_nn_pointers` (ascending scan, per-destination dedup).
-    fn find_reciprocal(&mut self) -> Vec<MergePair> {
+    fn find_reciprocal(&mut self) -> Result<Vec<MergePair>, MachineDown> {
         let m = self.wire.machines;
         let mut queries: Vec<Vec<Message>> = vec![Vec::new(); m];
         let mut seen: FxHashSet<u32> = FxHashSet::default();
@@ -484,7 +719,7 @@ impl Machine {
                 queries[sv].push(Message::NnQuery { cluster: v });
             }
         }
-        let incoming = self.wire.all_to_all(STEP_NN_QUERY, queries);
+        let incoming = self.wire.all_to_all(STEP_NN_QUERY, queries)?;
         let mut replies: Vec<Vec<Message>> = vec![Vec::new(); m];
         for (src, batch) in incoming {
             replies[src] = batch
@@ -498,7 +733,7 @@ impl Machine {
                 })
                 .collect();
         }
-        for (_, batch) in self.wire.all_to_all(STEP_NN_REPLY, replies) {
+        for (_, batch) in self.wire.all_to_all(STEP_NN_REPLY, replies)? {
             for msg in batch {
                 match msg {
                     Message::NnReply { cluster, nn } => self.nn[cluster as usize] = nn,
@@ -517,7 +752,7 @@ impl Machine {
                 });
             }
         }
-        pairs
+        Ok(pairs)
     }
 
     /// ε-good find phase (per-round and batched). Refreshes the remote NN
@@ -526,7 +761,11 @@ impl Machine {
     /// the matching — globally for per-round mode, or with the batched
     /// local-first rule — and broadcasts it. Returns the selection on the
     /// coordinator, `None` elsewhere.
-    fn find_good(&mut self, epsilon: f64, vshards: Option<u32>) -> Option<(Vec<MergePair>, bool)> {
+    fn find_good(
+        &mut self,
+        epsilon: f64,
+        vshards: Option<u32>,
+    ) -> Result<Option<(Vec<MergePair>, bool)>, MachineDown> {
         let m = self.wire.machines;
         // Steps 0/1: refresh the shadow NN cache for remote upper
         // endpoints that pass our half of the acceptance test — the same
@@ -545,7 +784,7 @@ impl Machine {
                 }
             }
         }
-        let incoming = self.wire.all_to_all(STEP_CACHE_QUERY, queries);
+        let incoming = self.wire.all_to_all(STEP_CACHE_QUERY, queries)?;
         let mut replies: Vec<Vec<Message>> = vec![Vec::new(); m];
         for (src, batch) in incoming {
             replies[src] = batch
@@ -560,7 +799,7 @@ impl Machine {
                 })
                 .collect();
         }
-        for (_, batch) in self.wire.all_to_all(STEP_CACHE_REPLY, replies) {
+        for (_, batch) in self.wire.all_to_all(STEP_CACHE_REPLY, replies)? {
             for msg in batch {
                 match msg {
                     Message::NnCacheReply { cluster, nn, weight } => {
@@ -587,7 +826,7 @@ impl Machine {
         } else {
             Vec::new()
         };
-        let incoming = self.wire.gather_to(0, STEP_CANDIDATES, &gathered);
+        let incoming = self.wire.gather_to(0, STEP_CANDIDATES, &gathered)?;
         let selection = (self.me == 0).then(|| {
             let mut all = cands;
             for (_, batch) in incoming {
@@ -637,18 +876,20 @@ impl Machine {
                 }
             }
         }
-        let _echo = self.wire.broadcast_from(0, STEP_MATCHING, &out);
+        let _echo = self.wire.broadcast_from(0, STEP_MATCHING, &out)?;
         // Non-coordinators apply the authoritative pair list from the
         // driver's `Cmd::Merge`; the broadcast they just received carries
         // the same pairs (wire-accounting fidelity).
-        selection
+        Ok(selection)
     }
 
     /// Merge phase: replicate pair state, fetch remote partner rows, fold
     /// union maps for owned leaders, route and apply patches, update
     /// replicated scalars, rescan stale NN caches. Ordering mirrors the
-    /// simulation's `compute_unions` + `apply_unions` + phase 3.
-    fn merge_and_rescan(&mut self, pairs: &[MergePair]) -> Report {
+    /// simulation's `compute_unions` + `apply_unions` + phase 3. Every
+    /// owned-state write also lands in the dirty sets — the delta
+    /// checkpoint's change tracking.
+    fn merge_and_rescan(&mut self, pairs: &[MergePair]) -> Result<Report, MachineDown> {
         let m = self.wire.machines;
         let base = match self.selector {
             DistSelector::Rnn => EXACT_MERGE_BASE,
@@ -687,7 +928,7 @@ impl Machine {
                 }
             }
         }
-        let incoming = self.wire.all_to_all(base, fetch);
+        let incoming = self.wire.all_to_all(base, fetch)?;
         let mut replies: Vec<Vec<Message>> = vec![Vec::new(); m];
         for (src, batch) in incoming {
             replies[src] = batch
@@ -708,7 +949,7 @@ impl Machine {
                 .collect();
         }
         let mut fetched: FxHashMap<u32, Vec<(u32, EdgeState)>> = FxHashMap::default();
-        for (_, batch) in self.wire.all_to_all(base + 1, replies) {
+        for (_, batch) in self.wire.all_to_all(base + 1, replies)? {
             for msg in batch {
                 match msg {
                     Message::PartnerState { partner, entries, .. } => {
@@ -783,7 +1024,7 @@ impl Machine {
                 }
             }
         }
-        for (_, batch) in self.wire.all_to_all(base + 2, out) {
+        for (_, batch) in self.wire.all_to_all(base + 2, out)? {
             for msg in batch {
                 match msg {
                     Message::EdgePatch { target, leader, retired, weight, count } => {
@@ -798,21 +1039,28 @@ impl Machine {
         patches.sort_unstable_by_key(|&(t, l, _, _)| (t, l));
         for (t, l, pr, e) in patches {
             self.store.patch(t, l, pr, e);
+            self.dirty_rows.insert(t);
         }
         // Commit the merges to the replicated scalars and owned rows.
         for p in pairs {
             let (l, pr) = (p.leader as usize, p.partner as usize);
             self.size[l] += self.size[pr];
             self.active[pr] = false;
+            self.dirty_size.insert(p.leader);
+            self.dirty_active.insert(p.partner);
         }
         for (l, map) in &unions {
             self.store.install_row(*l, map);
+            self.dirty_rows.insert(*l);
         }
         for p in pairs {
             if self.owns(p.partner) {
                 self.store.clear_row(p.partner);
+                self.dirty_rows.insert(p.partner);
             }
         }
+        // Compaction preserves live-entry content and order, so it never
+        // re-dirties rows the cut already has the latest bytes for.
         self.store.maybe_compact();
         self.owned_active.retain(|&c| self.active[c as usize]);
         // Phase 3: rescan owned NN caches invalidated by the merges —
@@ -836,6 +1084,7 @@ impl Machine {
         for (c, nn, w, scanned) in updates {
             self.nn[c as usize] = nn;
             self.nn_weight[c as usize] = w;
+            self.dirty_rows.insert(c);
             nn_updates += 1;
             nn_scan_entries += scanned;
         }
@@ -843,17 +1092,65 @@ impl Machine {
             self.matched[p.leader as usize] = false;
             self.matched[p.partner as usize] = false;
         }
-        Report::RoundDone {
+        Ok(Report::RoundDone {
             nn_weights,
             nn_updates,
             nn_scan_entries,
             eligibility_scan_entries: std::mem::take(&mut self.eligibility_scan_entries),
             net: self.wire.take_stats(),
+        })
+    }
+
+    /// Execute one non-terminal driver command. A wire failure bubbles up
+    /// as the named dead machine.
+    fn handle(&mut self, cmd: Cmd, reports: &Sender<Report>) -> Result<(), MachineDown> {
+        match cmd {
+            Cmd::Restore(chain) => self.restore(&chain),
+            Cmd::Rewire { peers } => {
+                debug_assert!(
+                    self.wire.stash.is_empty(),
+                    "rewire with stashed packets would strand them"
+                );
+                self.wire.peers = peers;
+            }
+            Cmd::Round { round } => {
+                self.begin_round(round);
+                match self.selector {
+                    DistSelector::Rnn => {
+                        let pairs = self.find_reciprocal()?;
+                        let _ = reports.send(Report::Phase1 { pairs, synced: true });
+                    }
+                    DistSelector::Good { epsilon } => {
+                        if let Some((pairs, synced)) = self.find_good(epsilon, None)? {
+                            let _ = reports.send(Report::Phase1 { pairs, synced });
+                        }
+                    }
+                    DistSelector::GoodBatched { epsilon, vshards } => {
+                        if let Some((pairs, synced)) = self.find_good(epsilon, Some(vshards))? {
+                            let _ = reports.send(Report::Phase1 { pairs, synced });
+                        }
+                    }
+                }
+            }
+            Cmd::Merge { pairs } => {
+                let report = self.merge_and_rescan(&pairs)?;
+                let _ = reports.send(report);
+            }
+            Cmd::Checkpoint { round, full } => {
+                let blob = self.checkpoint(round, full);
+                let _ = reports.send(Report::CheckpointBlob { machine: self.me, blob });
+            }
+            Cmd::Finish | Cmd::Exit => {
+                unreachable!("terminal commands are handled by machine_main")
+            }
         }
+        Ok(())
     }
 }
 
-/// Machine thread body: obey driver commands until told to exit.
+/// Machine thread body: obey driver commands until told to exit. A dead
+/// peer mid-command is *reported*, not fatal — the machine stays up and
+/// idles for the driver's recovery instructions.
 fn machine_main(mut mc: Machine, cmds: Receiver<Cmd>, reports: Sender<Report>) {
     loop {
         let cmd = match cmds.recv() {
@@ -862,36 +1159,6 @@ fn machine_main(mut mc: Machine, cmds: Receiver<Cmd>, reports: Sender<Report>) {
             Err(_) => return,
         };
         match cmd {
-            Cmd::Restore(blob) => mc.restore(&blob),
-            Cmd::Round { round } => {
-                mc.begin_round(round);
-                match mc.selector {
-                    DistSelector::Rnn => {
-                        let pairs = mc.find_reciprocal();
-                        let _ = reports.send(Report::Phase1 { pairs, synced: true });
-                    }
-                    DistSelector::Good { epsilon } => {
-                        if let Some((pairs, synced)) = mc.find_good(epsilon, None) {
-                            let _ = reports.send(Report::Phase1 { pairs, synced });
-                        }
-                    }
-                    DistSelector::GoodBatched { epsilon, vshards } => {
-                        if let Some((pairs, synced)) = mc.find_good(epsilon, Some(vshards)) {
-                            let _ = reports.send(Report::Phase1 { pairs, synced });
-                        }
-                    }
-                }
-            }
-            Cmd::Merge { pairs } => {
-                let report = mc.merge_and_rescan(&pairs);
-                let _ = reports.send(report);
-            }
-            Cmd::Checkpoint { round } => {
-                let _ = reports.send(Report::CheckpointBlob {
-                    machine: mc.me,
-                    blob: mc.checkpoint(round),
-                });
-            }
             Cmd::Finish => {
                 let _ = reports.send(Report::FinishAck {
                     eligibility_scan_entries: std::mem::take(&mut mc.eligibility_scan_entries),
@@ -900,6 +1167,11 @@ fn machine_main(mut mc: Machine, cmds: Receiver<Cmd>, reports: Sender<Report>) {
                 return;
             }
             Cmd::Exit => return,
+            cmd => {
+                if let Err(down) = mc.handle(cmd, &reports) {
+                    let _ = reports.send(Report::Down(down));
+                }
+            }
         }
     }
 }
@@ -908,20 +1180,43 @@ fn machine_main(mut mc: Machine, cmds: Receiver<Cmd>, reports: Sender<Report>) {
 struct Fleet {
     cmds: Vec<Sender<Cmd>>,
     reports: Receiver<Report>,
+    /// Kept so the report channel never disconnects even with every
+    /// machine dead — `recv` must time out and *diagnose*, not error.
+    report_tx: Sender<Report>,
+    /// Current packet fabric (a respawn replaces one sender, then the
+    /// whole vector is rebroadcast via `Cmd::Rewire`).
+    peer_senders: Vec<Sender<Packet>>,
     handles: Vec<JoinHandle<()>>,
 }
 
 impl Fleet {
-    fn send_all(&self, cmd: &Cmd) {
-        for c in &self.cmds {
-            let _ = c.send(cmd.clone());
-        }
+    fn send_to(&self, machine: usize, round: usize, cmd: &Cmd) -> Result<(), MachineDown> {
+        send_or_down(&self.cmds[machine], machine, round, cmd.clone())
     }
 
-    fn recv(&self) -> Report {
-        self.reports
-            .recv_timeout(REPORT_TIMEOUT)
-            .expect("machine unresponsive: executed fleet wedged")
+    fn send_all(&self, round: usize, cmd: &Cmd) -> Result<(), MachineDown> {
+        for machine in 0..self.cmds.len() {
+            self.send_to(machine, round, cmd)?;
+        }
+        Ok(())
+    }
+
+    /// Receive one report. A `Down` report or a timeout with a finished
+    /// thread is the named dead machine; a timeout with every thread
+    /// alive is a wedge bug and panics loudly.
+    fn recv(&self, round: usize) -> Result<Report, MachineDown> {
+        match self.reports.recv_timeout(REPORT_TIMEOUT) {
+            Ok(Report::Down(down)) => Err(down),
+            Ok(report) => Ok(report),
+            Err(_) => {
+                let machine = self
+                    .handles
+                    .iter()
+                    .position(|h| h.is_finished())
+                    .expect("machine unresponsive yet all threads alive: fleet wedged");
+                Err(MachineDown { machine, round })
+            }
+        }
     }
 
     /// Tear the fleet down and reap the threads, surfacing any panic.
@@ -935,6 +1230,18 @@ impl Fleet {
             }
         }
     }
+
+    /// Teardown on the recovery path: a machine that died abnormally is
+    /// exactly what we are recovering from, so join errors are expected
+    /// and swallowed.
+    fn teardown_lossy(self) {
+        for c in &self.cmds {
+            let _ = c.send(Cmd::Exit);
+        }
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
 }
 
 /// Immutable per-run parameters shared by spawns and respawns.
@@ -945,12 +1252,64 @@ struct FleetSpec {
     selector: DistSelector,
     latency: Duration,
     jitter: Duration,
+    /// Journal posted packets for shard replay (`RecoveryMode::ShardReplay`).
+    journal: bool,
 }
 
-/// Spawn the fleet and feed every machine its state blob — recovery and
-/// cold start are the same code path, so the checkpoint codec is
+/// Spawn one machine thread on the given fabric and feed it its
+/// checkpoint chain.
+fn spawn_machine(
+    spec: &FleetSpec,
+    me: usize,
+    peers: Vec<Sender<Packet>>,
+    inbox: Receiver<Packet>,
+    report_tx: Sender<Report>,
+    chain: &[Vec<u8>],
+) -> (Sender<Cmd>, JoinHandle<()>) {
+    let (cmd_tx, cmd_rx) = mpsc::channel::<Cmd>();
+    let machine = Machine {
+        me,
+        n: 0,
+        linkage: spec.linkage,
+        place: spec.place,
+        selector: spec.selector,
+        store: NeighborStore::new(0),
+        owned_active: Vec::new(),
+        active: Vec::new(),
+        size: Vec::new(),
+        nn: Vec::new(),
+        nn_weight: Vec::new(),
+        matched: Vec::new(),
+        partner: Vec::new(),
+        pair_weight: Vec::new(),
+        eligibility_scan_entries: 0,
+        dirty_rows: FxHashSet::default(),
+        dirty_size: FxHashSet::default(),
+        dirty_active: FxHashSet::default(),
+        last_cut_round: 0,
+        wire: Wire {
+            me,
+            machines: spec.machines,
+            peers,
+            inbox,
+            stash: Vec::new(),
+            latency: spec.latency,
+            jitter: spec.jitter,
+            journal: spec.journal,
+            peer_timeout: PEER_TIMEOUT,
+            round: 0,
+            stats: NetStats::default(),
+        },
+    };
+    let handle = std::thread::spawn(move || machine_main(machine, cmd_rx, report_tx));
+    let _ = cmd_tx.send(Cmd::Restore(chain.to_vec()));
+    (cmd_tx, handle)
+}
+
+/// Spawn the fleet and feed every machine its checkpoint chain — recovery
+/// and cold start are the same code path, so the checkpoint codec is
 /// exercised by every executed run.
-fn spawn_fleet(spec: &FleetSpec, blobs: &[Vec<u8>]) -> Fleet {
+fn spawn_fleet(spec: &FleetSpec, chains: &[Vec<Vec<u8>>]) -> Fleet {
     let m = spec.machines;
     let (report_tx, report_rx) = mpsc::channel::<Report>();
     let data: Vec<(Sender<Packet>, Receiver<Packet>)> = (0..m).map(|_| mpsc::channel()).collect();
@@ -960,50 +1319,29 @@ fn spawn_fleet(spec: &FleetSpec, blobs: &[Vec<u8>]) -> Fleet {
     let mut cmds = Vec::with_capacity(m);
     let mut handles = Vec::with_capacity(m);
     for me in 0..m {
-        let (cmd_tx, cmd_rx) = mpsc::channel::<Cmd>();
-        let machine = Machine {
+        let (cmd_tx, handle) = spawn_machine(
+            spec,
             me,
-            n: 0,
-            linkage: spec.linkage,
-            place: spec.place,
-            selector: spec.selector,
-            store: NeighborStore::new(0),
-            owned_active: Vec::new(),
-            active: Vec::new(),
-            size: Vec::new(),
-            nn: Vec::new(),
-            nn_weight: Vec::new(),
-            matched: Vec::new(),
-            partner: Vec::new(),
-            pair_weight: Vec::new(),
-            eligibility_scan_entries: 0,
-            wire: Wire {
-                me,
-                machines: m,
-                peers: peer_senders.clone(),
-                inbox: data_rx[me].take().expect("inbox taken once"),
-                stash: Vec::new(),
-                latency: spec.latency,
-                jitter: spec.jitter,
-                round: 0,
-                stats: NetStats::default(),
-            },
-        };
-        let reports = report_tx.clone();
-        handles.push(std::thread::spawn(move || machine_main(machine, cmd_rx, reports)));
-        let _ = cmd_tx.send(Cmd::Restore(blobs[me].clone()));
+            peer_senders.clone(),
+            data_rx[me].take().expect("inbox taken once"),
+            report_tx.clone(),
+            &chains[me],
+        );
         cmds.push(cmd_tx);
+        handles.push(handle);
     }
     Fleet {
         cmds,
         reports: report_rx,
+        report_tx,
+        peer_senders,
         handles,
     }
 }
 
 /// The driver's recovery image: everything needed to roll the run back
-/// to a sync point — the machines' blobs plus the driver-side outputs
-/// accumulated up to that cut.
+/// to a sync point — the machines' checkpoint chains plus the
+/// driver-side outputs accumulated up to that cut.
 struct Snapshot {
     round: usize,
     n_active: usize,
@@ -1011,115 +1349,257 @@ struct Snapshot {
     bounds: Vec<MergeBound>,
     rounds: Vec<RoundMetrics>,
     log: Vec<BatchRecord>,
-    blobs: Vec<Vec<u8>>,
+    /// Per-machine checkpoint chain: one full blob, then deltas.
+    chains: Vec<Vec<Vec<u8>>>,
 }
 
-/// Run the distributed round schedule for real: thread-per-machine,
-/// channel-backed wire, measured `t_exec`, sync-point checkpoints, and
-/// optional fault injection + recovery. Consumes the prepared core; the
-/// returned results are bitwise identical to `core.run_rounds(selector)`
-/// on the dendrogram, bounds trace, and sync-point schedule.
-pub(super) fn run_executed(
-    core: DistCore,
-    selector: DistSelector,
-    opts: &ExecOptions,
-) -> (RacResult, NetReport, Vec<MergeBound>) {
-    let t0 = Instant::now();
-    let m = core.cfg.machines;
-    let n = core.n;
-    if let Some(f) = opts.fault {
-        assert!(
-            f.machine < m,
-            "fault machine {} out of range for {m} machines",
-            f.machine
-        );
+/// Respawn one dead machine and bring it back to the current round:
+/// restore from its own chain, replay its journaled inbound traffic
+/// (outbound goes to a sink — survivors already consumed those bytes),
+/// then rewire the fabric. Survivors idle at their command channels the
+/// whole time. Returns `(machine_rounds_replayed, journal_bytes_replayed)`.
+fn shard_recover(
+    fl: &mut Fleet,
+    spec: &FleetSpec,
+    x: usize,
+    snapshot: &Snapshot,
+    trace: &[(usize, Vec<MergePair>)],
+    journal: &[JournalRecord],
+) -> Result<(usize, usize), MachineDown> {
+    // Kill the shard (simulated preemption) and reap the old thread. The
+    // old inbox receiver dies with it; survivors still hold its sender,
+    // which is why the recovery ends in a fleet-wide rewire.
+    let _ = fl.cmds[x].send(Cmd::Exit);
+    let (new_tx, new_rx) = mpsc::channel::<Packet>();
+    let (sink_tx, _sink_rx) = mpsc::channel::<Packet>();
+    let replay_peers: Vec<Sender<Packet>> = (0..spec.machines).map(|_| sink_tx.clone()).collect();
+    let (cmd_tx, handle) = spawn_machine(
+        spec,
+        x,
+        replay_peers,
+        new_rx,
+        fl.report_tx.clone(),
+        &snapshot.chains[x],
+    );
+    let old = std::mem::replace(&mut fl.handles[x], handle);
+    // The dead incarnation exits cleanly on Exit (or already returned);
+    // a panic here is a real bug, not the injected fault.
+    if old.join().is_err() {
+        panic!("executed machine thread panicked");
     }
-    // Initial NN scan over the full graph — identical to the simulated
-    // engine's init — then cut the round-0 "checkpoint" every machine
-    // boots from.
-    let mut nn = vec![NO_NN; n];
-    let mut nn_weight = vec![Weight::INFINITY; n];
-    for c in 0..n {
-        let (v, w) = scan_nn(core.store.row(c as u32));
-        nn[c] = v;
-        nn_weight[c] = w;
+    fl.cmds[x] = cmd_tx;
+    fl.peer_senders[x] = new_tx.clone();
+    // Inject the journaled inbound traffic, barriers included, stamped
+    // deliverable now: replay runs at channel speed, not modeled-latency
+    // speed (the original delays already shaped the bytes).
+    let mut bytes_replayed = 0usize;
+    for rec in journal.iter().filter(|r| r.dst == x) {
+        bytes_replayed += rec.bytes.len();
+        let packet = Packet {
+            src: rec.src,
+            round: rec.round,
+            step: rec.step,
+            bytes: rec.bytes.clone(),
+            deliver_at: Instant::now(),
+        };
+        send_or_down(&new_tx, x, rec.round, packet)?;
     }
-    let blobs: Vec<Vec<u8>> = (0..m)
-        .map(|mid| {
-            let rows = (0..n as u32)
-                .filter(|&c| core.place.machine_of(c) == mid)
-                .map(|c| {
-                    let entries =
-                        core.store.row(c).iter().map(|(t, e)| (t, e.weight, e.count)).collect();
-                    (c, nn[c as usize], nn_weight[c as usize], entries)
-                })
-                .collect();
-            checkpoint::encode(&MachineCheckpoint {
-                machine: mid as u32,
-                machines: m as u32,
-                round: 0,
-                n,
-                rows,
-                size: core.size.clone(),
-                active: core.active.clone(),
-            })
-        })
-        .collect();
-    let spec = FleetSpec {
-        machines: m,
-        linkage: core.linkage,
-        place: core.place,
-        selector,
-        latency: opts.latency,
-        jitter: opts.jitter,
-    };
-    let mut snapshot = Snapshot {
-        round: 0,
-        n_active: n,
-        merges: Vec::new(),
-        bounds: Vec::new(),
-        rounds: Vec::new(),
-        log: Vec::new(),
-        blobs,
-    };
-    let mut merges: Vec<Merge> = Vec::new();
-    let mut bounds: Vec<MergeBound> = Vec::new();
-    let mut metrics = RunMetrics::default();
-    let mut log: Vec<BatchRecord> = Vec::new();
-    let mut n_active = n;
-    let mut fault = opts.fault;
-    let mut fleet = Some(spawn_fleet(&spec, &snapshot.blobs));
-    let mut round = 0;
-    while round < core.max_rounds {
-        if let Some(f) = fault {
-            if f.round == round {
-                // Fault: machine f.machine dies at the round boundary. A
-                // dead shard stalls the whole bulk-synchronous round, so
-                // recovery is a global rollback — tear down, respawn,
-                // restore everyone from the last sync-point cut, replay.
-                fault = None;
-                fleet.take().expect("fleet alive").shutdown();
-                merges = snapshot.merges.clone();
-                bounds = snapshot.bounds.clone();
-                metrics.rounds = snapshot.rounds.clone();
-                log = snapshot.log.clone();
-                n_active = snapshot.n_active;
-                round = snapshot.round;
-                fleet = Some(spawn_fleet(&spec, &snapshot.blobs));
-                continue;
+    // Re-drive the respawn through every round since the cut. Its
+    // reports are drained and discarded — the driver's copies from the
+    // original execution stay authoritative, so metrics and the traffic
+    // log stay identical to the unfaulted run.
+    let expects_phase1 = matches!(spec.selector, DistSelector::Rnn) || x == 0;
+    for (round, pairs) in trace {
+        fl.send_to(x, *round, &Cmd::Round { round: *round })?;
+        if expects_phase1 {
+            match fl.recv(*round)? {
+                Report::Phase1 { .. } => {}
+                _ => panic!("expected Phase1 report during shard replay"),
             }
         }
-        let fl = fleet.as_ref().expect("fleet alive");
+        fl.send_to(x, *round, &Cmd::Merge { pairs: pairs.clone() })?;
+        match fl.recv(*round)? {
+            Report::RoundDone { .. } => {}
+            _ => panic!("expected RoundDone report during shard replay"),
+        }
+    }
+    // Rewire everyone onto the new fabric. Command channels are FIFO, so
+    // the rewire is processed before any post-recovery round work; the
+    // sink drops with this frame only after the respawn has no further
+    // replay posts to make.
+    let peers = fl.peer_senders.clone();
+    for me in 0..spec.machines {
+        fl.send_to(me, snapshot.round, &Cmd::Rewire { peers: peers.clone() })?;
+    }
+    Ok((trace.len(), bytes_replayed))
+}
+
+/// What a completed round means for the run loop.
+enum Flow {
+    Continue,
+    Finished,
+}
+
+/// The executed-run driver: owns the fleet, the recovery image, and the
+/// accumulated outputs, and turns fault hits into recoveries.
+struct Driver {
+    spec: FleetSpec,
+    m: usize,
+    n: usize,
+    max_rounds: usize,
+    full_every: usize,
+    recovery_mode: RecoveryMode,
+    fault_rate: f64,
+    fault_seed: u64,
+    /// Scheduled faults not yet fired (one instance consumed per hit, so
+    /// duplicates fire on consecutive passes — fault during recovery).
+    pending_faults: Vec<FaultSpec>,
+    /// Random-fault cells already fired: a rollback re-crosses the same
+    /// round boundaries, and the same seeded coin must not refire forever.
+    fired_random: FxHashSet<(usize, usize)>,
+    snapshot: Snapshot,
+    /// Pair lists of every round since the last cut — the shard-replay
+    /// command script.
+    trace: Vec<(usize, Vec<MergePair>)>,
+    /// Every packet posted since the last cut (shard-replay mode only).
+    journal: Vec<JournalRecord>,
+    merges: Vec<Merge>,
+    bounds: Vec<MergeBound>,
+    metrics: RunMetrics,
+    log: Vec<BatchRecord>,
+    n_active: usize,
+    round: usize,
+    fleet: Option<Fleet>,
+}
+
+impl Driver {
+    fn fleet(&self) -> &Fleet {
+        self.fleet.as_ref().expect("fleet alive")
+    }
+
+    /// Machines to kill at the top of the current round: one scheduled
+    /// instance per machine per pass, plus unfired random cells.
+    fn fault_hits(&mut self) -> Vec<usize> {
+        let round = self.round;
+        let mut hits = Vec::new();
+        for x in 0..self.m {
+            if let Some(i) = self
+                .pending_faults
+                .iter()
+                .position(|f| f.machine == x && f.round == round)
+            {
+                self.pending_faults.swap_remove(i);
+                hits.push(x);
+                continue;
+            }
+            if random_fault(self.fault_seed, x, round, self.fault_rate)
+                && self.fired_random.insert((x, round))
+            {
+                hits.push(x);
+            }
+        }
+        hits
+    }
+
+    /// Global rollback: tear the fleet down, restore everyone from the
+    /// last cut, rewind the driver-side outputs, replay. The rounds and
+    /// bytes being re-executed are charged to the recovery metrics.
+    fn rollback_global(&mut self) {
+        self.fleet.take().expect("fleet alive").teardown_lossy();
+        self.metrics.recovery_rounds_replayed += (self.round - self.snapshot.round) * self.m;
+        self.metrics.recovery_bytes_replayed += self.metrics.rounds[self.snapshot.rounds.len()..]
+            .iter()
+            .map(|r| r.net_bytes)
+            .sum::<usize>();
+        self.merges = self.snapshot.merges.clone();
+        self.bounds = self.snapshot.bounds.clone();
+        self.metrics.rounds = self.snapshot.rounds.clone();
+        self.log = self.snapshot.log.clone();
+        self.n_active = self.snapshot.n_active;
+        self.round = self.snapshot.round;
+        self.trace.clear();
+        self.journal.clear();
+        self.fleet = Some(spawn_fleet(&self.spec, &self.snapshot.chains));
+    }
+
+    /// Recover the given dead machines under the configured strategy.
+    fn recover(&mut self, hits: &[usize]) -> Result<(), MachineDown> {
+        match self.recovery_mode {
+            // One rollback covers every machine lost this round.
+            RecoveryMode::Global => {
+                self.rollback_global();
+                Ok(())
+            }
+            RecoveryMode::ShardReplay => {
+                for &x in hits {
+                    let mut fl = self.fleet.take().expect("fleet alive");
+                    let res =
+                        shard_recover(&mut fl, &self.spec, x, &self.snapshot, &self.trace, &self.journal);
+                    self.fleet = Some(fl);
+                    let (rounds_replayed, bytes_replayed) = res?;
+                    self.metrics.recovery_rounds_replayed += rounds_replayed;
+                    self.metrics.recovery_bytes_replayed += bytes_replayed;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Sync point: cut a recovery image. Checkpoint time is deliberately
+    /// outside `t_exec` — it is recovery machinery, not round work. Cuts
+    /// chain: a full blob every `full_every` cuts, deltas between.
+    fn cut_checkpoint(&mut self, next_round: usize) -> Result<(), MachineDown> {
+        let full = self.snapshot.chains[0].len() >= self.full_every;
+        self.fleet()
+            .send_all(next_round, &Cmd::Checkpoint { round: next_round, full })?;
+        let mut blobs: Vec<Vec<u8>> = vec![Vec::new(); self.m];
+        for _ in 0..self.m {
+            let report = self.fleet().recv(next_round)?;
+            match report {
+                Report::CheckpointBlob { machine, blob } => blobs[machine] = blob,
+                _ => panic!("expected CheckpointBlob report"),
+            }
+        }
+        self.metrics.checkpoint_bytes += blobs.iter().map(|b| b.len()).sum::<usize>();
+        let chains: Vec<Vec<Vec<u8>>> = if full {
+            blobs.into_iter().map(|b| vec![b]).collect()
+        } else {
+            let mut chains = self.snapshot.chains.clone();
+            for (chain, blob) in chains.iter_mut().zip(blobs) {
+                chain.push(blob);
+            }
+            chains
+        };
+        self.snapshot = Snapshot {
+            round: next_round,
+            n_active: self.n_active,
+            merges: self.merges.clone(),
+            bounds: self.bounds.clone(),
+            rounds: self.metrics.rounds.clone(),
+            log: self.log.clone(),
+            chains,
+        };
+        self.trace.clear();
+        self.journal.clear();
+        Ok(())
+    }
+
+    /// Drive one full round: find phase, pair selection, merge phase,
+    /// bookkeeping, and (at sync points) a checkpoint cut.
+    fn execute_round(&mut self) -> Result<Flow, MachineDown> {
+        let round = self.round;
+        let m = self.m;
         let t_round = Instant::now();
-        fl.send_all(&Cmd::Round { round });
+        self.fleet().send_all(round, &Cmd::Round { round })?;
         // Exact rounds: every machine reports its owned pairs and the
         // driver merges them into the global ascending-leader list.
         // ε-good rounds: the coordinator reports the global matching.
-        let (pairs, synced) = match selector {
+        let (pairs, synced) = match self.spec.selector {
             DistSelector::Rnn => {
                 let mut all: Vec<MergePair> = Vec::new();
                 for _ in 0..m {
-                    match fl.recv() {
+                    let report = self.fleet().recv(round)?;
+                    match report {
                         Report::Phase1 { pairs, .. } => all.extend(pairs),
                         _ => panic!("expected Phase1 report"),
                     }
@@ -1127,48 +1607,53 @@ pub(super) fn run_executed(
                 all.sort_unstable_by_key(|p| p.leader);
                 (all, true)
             }
-            _ => match fl.recv() {
-                Report::Phase1 { pairs, synced } => (pairs, synced),
-                _ => panic!("expected Phase1 report"),
-            },
+            _ => {
+                let report = self.fleet().recv(round)?;
+                match report {
+                    Report::Phase1 { pairs, synced } => (pairs, synced),
+                    _ => panic!("expected Phase1 report"),
+                }
+            }
         };
         let t_find = t_round.elapsed();
         let mut rm = RoundMetrics {
             round,
-            clusters: n_active,
+            clusters: self.n_active,
             merges: pairs.len(),
             sync_points: usize::from(synced),
             t_find,
             ..Default::default()
         };
         if pairs.is_empty() {
-            fl.send_all(&Cmd::Finish);
+            self.fleet().send_all(round, &Cmd::Finish)?;
             for _ in 0..m {
-                match fl.recv() {
+                let report = self.fleet().recv(round)?;
+                match report {
                     Report::FinishAck { eligibility_scan_entries, net } => {
                         rm.eligibility_scan_entries += eligibility_scan_entries;
                         rm.net_messages += net.messages;
                         rm.net_bytes += net.bytes;
-                        log.extend(net.log);
+                        self.log.extend(net.log);
                     }
                     _ => panic!("expected FinishAck report"),
                 }
             }
             rm.t_exec = t_round.elapsed();
-            metrics.rounds.push(rm);
+            self.metrics.rounds.push(rm);
             // Finish is a terminal command: machines have already exited.
-            for h in fleet.take().expect("fleet alive").handles {
+            for h in self.fleet.take().expect("fleet alive").handles {
                 if h.join().is_err() {
                     panic!("executed machine thread panicked");
                 }
             }
-            break;
+            return Ok(Flow::Finished);
         }
         let t_merge = Instant::now();
-        fl.send_all(&Cmd::Merge { pairs: pairs.clone() });
+        self.fleet().send_all(round, &Cmd::Merge { pairs: pairs.clone() })?;
         let mut pre_nn: FxHashMap<u32, u64> = FxHashMap::default();
         for _ in 0..m {
-            match fl.recv() {
+            let report = self.fleet().recv(round)?;
+            match report {
                 Report::RoundDone {
                     nn_weights,
                     nn_updates,
@@ -1182,71 +1667,207 @@ pub(super) fn run_executed(
                     rm.eligibility_scan_entries += eligibility_scan_entries;
                     rm.net_messages += net.messages;
                     rm.net_bytes += net.bytes;
-                    log.extend(net.log);
+                    self.log.extend(net.log);
+                    self.journal.extend(net.journal);
                 }
                 _ => panic!("expected RoundDone report"),
             }
         }
+        self.trace.push((round, pairs.clone()));
         for p in &pairs {
-            merges.push(Merge {
+            self.merges.push(Merge {
                 a: p.leader,
                 b: p.partner,
                 weight: p.weight,
             });
             let wl = f64::from_bits(pre_nn[&p.leader]);
             let wp = f64::from_bits(pre_nn[&p.partner]);
-            bounds.push(MergeBound {
+            self.bounds.push(MergeBound {
                 weight: p.weight,
                 visible_min: wl.min(wp),
             });
         }
-        n_active -= pairs.len();
+        self.n_active -= pairs.len();
         rm.t_merge = t_merge.elapsed();
         rm.t_exec = t_round.elapsed();
-        metrics.rounds.push(rm);
-        if n_active <= 1 {
-            fleet.take().expect("fleet alive").shutdown();
-            break;
+        self.metrics.rounds.push(rm);
+        if self.n_active <= 1 {
+            self.fleet.take().expect("fleet alive").shutdown();
+            return Ok(Flow::Finished);
         }
         if synced {
-            // Sync point: cut a recovery image (checkpoint time is
-            // deliberately outside `t_exec` — it is recovery machinery,
-            // not round work).
-            let fl = fleet.as_ref().expect("fleet alive");
-            fl.send_all(&Cmd::Checkpoint { round: round + 1 });
-            let mut cp_blobs: Vec<Vec<u8>> = vec![Vec::new(); m];
-            for _ in 0..m {
-                match fl.recv() {
-                    Report::CheckpointBlob { machine, blob } => cp_blobs[machine] = blob,
-                    _ => panic!("expected CheckpointBlob report"),
+            self.cut_checkpoint(round + 1)?;
+        }
+        Ok(Flow::Continue)
+    }
+
+    /// The run loop: fire the fault campaign at round boundaries, recover
+    /// (charged to `t_recover`), and treat *detected* deaths — channel
+    /// failures we did not inject — as global rollbacks, bounded by
+    /// [`MAX_DETECTED_RECOVERIES`].
+    fn run(mut self, t0: Instant) -> (RacResult, NetReport, Vec<MergeBound>) {
+        self.fleet = Some(spawn_fleet(&self.spec, &self.snapshot.chains));
+        let mut detected = 0usize;
+        while self.round < self.max_rounds {
+            let hits = self.fault_hits();
+            if !hits.is_empty() {
+                let t = Instant::now();
+                let res = self.recover(&hits);
+                self.metrics.t_recover += t.elapsed();
+                if let Err(down) = res {
+                    detected += 1;
+                    assert!(
+                        detected <= MAX_DETECTED_RECOVERIES,
+                        "recovery kept dying ({down}); fleet structurally broken"
+                    );
+                    let t = Instant::now();
+                    self.rollback_global();
+                    self.metrics.t_recover += t.elapsed();
+                }
+                continue;
+            }
+            match self.execute_round() {
+                Ok(Flow::Finished) => break,
+                Ok(Flow::Continue) => {
+                    detected = 0;
+                    self.round += 1;
+                }
+                Err(down) => {
+                    detected += 1;
+                    assert!(
+                        detected <= MAX_DETECTED_RECOVERIES,
+                        "round kept dying ({down}); fleet structurally broken"
+                    );
+                    let t = Instant::now();
+                    self.rollback_global();
+                    self.metrics.t_recover += t.elapsed();
                 }
             }
-            snapshot = Snapshot {
-                round: round + 1,
-                n_active,
-                merges: merges.clone(),
-                bounds: bounds.clone(),
-                rounds: metrics.rounds.clone(),
-                log: log.clone(),
-                blobs: cp_blobs,
-            };
         }
-        round += 1;
+        if let Some(fl) = self.fleet.take() {
+            // Round cap exhausted with the fleet still up (safety valve).
+            fl.shutdown();
+        }
+        self.metrics.total_time = t0.elapsed();
+        self.log.sort_by_key(|b| (b.round, b.src, b.dst));
+        (
+            RacResult {
+                dendrogram: Dendrogram::new(self.n, self.merges),
+                metrics: self.metrics,
+            },
+            NetReport { batches: self.log },
+            self.bounds,
+        )
     }
-    if let Some(fl) = fleet.take() {
-        // Round cap exhausted with the fleet still up (safety valve).
-        fl.shutdown();
+}
+
+/// Run the distributed round schedule for real: thread-per-machine,
+/// channel-backed wire, measured `t_exec`, chained sync-point
+/// checkpoints, and the fault campaign + recovery. Consumes the prepared
+/// core; the returned results are bitwise identical to
+/// `core.run_rounds(selector)` on the dendrogram, bounds trace, and
+/// sync-point schedule — faulted or not, under either recovery mode.
+pub(super) fn run_executed(
+    core: DistCore,
+    selector: DistSelector,
+    opts: &ExecOptions,
+) -> (RacResult, NetReport, Vec<MergeBound>) {
+    let t0 = Instant::now();
+    let m = core.cfg.machines;
+    let n = core.n;
+    for f in &opts.faults {
+        assert!(
+            f.machine < m,
+            "fault machine {} out of range for {m} machines",
+            f.machine
+        );
     }
-    metrics.total_time = t0.elapsed();
-    log.sort_by_key(|b| (b.round, b.src, b.dst));
-    (
-        RacResult {
-            dendrogram: Dendrogram::new(n, merges),
-            metrics,
+    assert!(
+        (0.0..=1.0).contains(&opts.fault_rate),
+        "fault_rate {} outside [0, 1]",
+        opts.fault_rate
+    );
+    // Checkpoint-cut invariant: a cut must never race staged deferred
+    // batches, or batched-mode recovery would silently drop them. The
+    // boot cut holds it by construction; later cuts hold it because the
+    // executed mode ships patches eagerly (nothing is ever deferred).
+    debug_assert!(
+        core.pending_is_empty(),
+        "checkpoint cut with staged deferred batches"
+    );
+    // Initial NN scan over the full graph — identical to the simulated
+    // engine's init — then cut the round-0 full checkpoint every machine
+    // boots from (every chain starts with a full blob).
+    let mut nn = vec![NO_NN; n];
+    let mut nn_weight = vec![Weight::INFINITY; n];
+    for c in 0..n {
+        let (v, w) = scan_nn(core.store.row(c as u32));
+        nn[c] = v;
+        nn_weight[c] = w;
+    }
+    let chains: Vec<Vec<Vec<u8>>> = (0..m)
+        .map(|mid| {
+            let rows = (0..n as u32)
+                .filter(|&c| core.place.machine_of(c) == mid)
+                .map(|c| {
+                    let entries =
+                        core.store.row(c).iter().map(|(t, e)| (t, e.weight, e.count)).collect();
+                    (c, nn[c as usize], nn_weight[c as usize], entries)
+                })
+                .collect();
+            vec![checkpoint::encode(&MachineCheckpoint {
+                machine: mid as u32,
+                machines: m as u32,
+                round: 0,
+                n,
+                rows,
+                size: core.size.clone(),
+                active: core.active.clone(),
+            })]
+        })
+        .collect();
+    let mut metrics = RunMetrics::default();
+    metrics.checkpoint_bytes += chains.iter().map(|c| c[0].len()).sum::<usize>();
+    let spec = FleetSpec {
+        machines: m,
+        linkage: core.linkage,
+        place: core.place,
+        selector,
+        latency: opts.latency,
+        jitter: opts.jitter,
+        journal: opts.recovery_mode == RecoveryMode::ShardReplay,
+    };
+    let driver = Driver {
+        spec,
+        m,
+        n,
+        max_rounds: core.max_rounds,
+        full_every: opts.checkpoint_full_every.max(1),
+        recovery_mode: opts.recovery_mode,
+        fault_rate: opts.fault_rate,
+        fault_seed: opts.fault_seed,
+        pending_faults: opts.faults.clone(),
+        fired_random: FxHashSet::default(),
+        snapshot: Snapshot {
+            round: 0,
+            n_active: n,
+            merges: Vec::new(),
+            bounds: Vec::new(),
+            rounds: Vec::new(),
+            log: Vec::new(),
+            chains,
         },
-        NetReport { batches: log },
-        bounds,
-    )
+        trace: Vec::new(),
+        journal: Vec::new(),
+        merges: Vec::new(),
+        bounds: Vec::new(),
+        metrics,
+        log: Vec::new(),
+        n_active: n,
+        round: 0,
+        fleet: None,
+    };
+    driver.run(t0)
 }
 
 #[cfg(test)]
@@ -1292,5 +1913,81 @@ mod tests {
         assert_eq!(from_store, from_fetched, "adapters must iterate identically");
         assert_eq!(RowView::Store(store.row(0)).live_len(), 2);
         assert_eq!(RowView::Fetched(&row).live_len(), 2);
+    }
+
+    fn test_wire(me: usize, machines: usize, peers: Vec<Sender<Packet>>, inbox: Receiver<Packet>) -> Wire {
+        Wire {
+            me,
+            machines,
+            peers,
+            inbox,
+            stash: Vec::new(),
+            latency: Duration::ZERO,
+            jitter: Duration::ZERO,
+            journal: true,
+            peer_timeout: Duration::from_millis(25),
+            round: 3,
+            stats: NetStats::default(),
+        }
+    }
+
+    #[test]
+    fn post_to_dead_peer_is_a_named_error_not_a_panic() {
+        let (tx_self, _rx_self) = mpsc::channel::<Packet>();
+        let (tx_dead, rx_dead) = mpsc::channel::<Packet>();
+        drop(rx_dead);
+        let (_inbox_tx, inbox_rx) = mpsc::channel::<Packet>();
+        let mut wire = test_wire(0, 2, vec![tx_self, tx_dead], inbox_rx);
+        let err = wire.post(1, 0, &[]).unwrap_err();
+        assert_eq!(err, MachineDown { machine: 1, round: 3 });
+        assert_eq!(format!("{err}"), "machine 1 down in round 3");
+        // The doomed barrier was still journaled: replay must see every
+        // packet the original incarnation would have.
+        assert_eq!(wire.stats.journal.len(), 1);
+        assert!(wire.stats.journal[0].bytes.len() >= 4, "journal keeps payload bytes");
+    }
+
+    #[test]
+    fn silent_or_disconnected_peer_is_named_in_collect() {
+        // Silent peer: machine 1 delivers, machine 2 never does.
+        let (inbox_tx, inbox_rx) = mpsc::channel::<Packet>();
+        let mut wire = test_wire(0, 3, Vec::new(), inbox_rx);
+        inbox_tx
+            .send(Packet {
+                src: 1,
+                round: 3,
+                step: 0,
+                bytes: encode_batch(&[]),
+                deliver_at: Instant::now(),
+            })
+            .unwrap();
+        let err = wire.collect(0, 1..3).unwrap_err();
+        assert_eq!(err, MachineDown { machine: 2, round: 3 });
+        // Disconnected inbox: the error is immediate, no timeout wait.
+        drop(inbox_tx);
+        let t = Instant::now();
+        let err = wire.collect(0, 1..3).unwrap_err();
+        assert_eq!(err.round, 3);
+        assert!(t.elapsed() < Duration::from_secs(1), "disconnect must not wait out the timeout");
+    }
+
+    #[test]
+    fn random_faults_are_deterministic_and_rate_shaped() {
+        assert_eq!(
+            random_fault(7, 1, 3, 0.5),
+            random_fault(7, 1, 3, 0.5),
+            "same seed and cell must agree"
+        );
+        assert!(!random_fault(7, 1, 3, 0.0), "rate 0 never fires");
+        assert!(random_fault(7, 1, 3, 1.0), "rate 1 always fires");
+        let hits = (0..1000).filter(|&r| random_fault(42, 0, r, 0.1)).count();
+        assert!(
+            (20..=250).contains(&hits),
+            "rate 0.1 produced {hits}/1000 hits — hash badly shaped"
+        );
+        // Different seeds decorrelate the campaign.
+        let a: Vec<bool> = (0..64).map(|r| random_fault(1, 0, r, 0.3)).collect();
+        let b: Vec<bool> = (0..64).map(|r| random_fault(2, 0, r, 0.3)).collect();
+        assert_ne!(a, b, "seeds must produce distinct fault patterns");
     }
 }

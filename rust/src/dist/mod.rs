@@ -60,15 +60,21 @@
 //! [`DistRacEngine::with_exec`] / [`DistApproxEngine::with_exec`] switch
 //! to [`exec`] — one OS thread per machine owning only its shard of the
 //! arena, exchanging the same [`network::Message`] batches over channels
-//! with injected link latency/jitter, checkpointing at sync points
-//! through the versioned [`checkpoint`] codec, and optionally recovering
-//! from an injected shard fault. The dendrogram, (1+ε) bounds trace, and
-//! sync-point schedule are bitwise identical to the simulated run
+//! with injected link latency/jitter. At every sync point the driver
+//! cuts a *chained* checkpoint through the versioned [`checkpoint`]
+//! codec: a full blob every [`ExecOptions::checkpoint_full_every`] cuts,
+//! dirty-row deltas between. Faults are a campaign
+//! ([`ExecOptions::faults`] plus seeded [`ExecOptions::fault_rate`]);
+//! a dead shard surfaces as a named [`MachineDown`] error and is
+//! recovered either by BSP global rollback or by journaled per-shard
+//! replay ([`RecoveryMode`]). The dendrogram, (1+ε) bounds trace, and
+//! sync-point schedule are bitwise identical to the simulated run —
+//! faulted or not, under either recovery mode
 //! (`rust/tests/dist_executed.rs`); the executed mode reports measured
-//! wall clock as [`RoundMetrics::t_exec`] where the simulation reports
-//! modeled `t_sim`. Traffic accounting diverges where real execution
-//! must ship bytes the deferred accounting does not charge (see the
-//! [`exec`] module docs).
+//! wall clock as [`RoundMetrics::t_exec`] (and recovery cost as
+//! `t_recover`) where the simulation reports modeled `t_sim`. Traffic
+//! accounting diverges where real execution must ship bytes the deferred
+//! accounting does not charge (see the [`exec`] module docs).
 //!
 //! The serial round body here deliberately mirrors the shared-memory
 //! [`crate::engine::RoundDriver`] phase for phase (selection logic is
@@ -133,8 +139,10 @@ pub mod exec;
 pub mod network;
 pub mod shard;
 
-pub use exec::{ExecOptions, FaultSpec};
-pub use network::{decode_batch, encode_batch, BatchRecord, Message, NetReport, Network};
+pub use exec::{ExecOptions, FaultSpec, MachineDown, RecoveryMode};
+pub use network::{
+    decode_batch, encode_batch, BatchRecord, JournalRecord, Message, NetReport, Network,
+};
 pub use shard::{partition, shard_of, vshard_of, Placement, ShardLoad, VShardScope};
 
 use std::time::{Duration, Instant};
@@ -307,6 +315,14 @@ impl DistCore {
         self.place.machine_of(cluster)
     }
 
+    /// True when no deferred cross-machine patches are staged. This is
+    /// the checkpoint-cut invariant: blobs may only be cut at sync
+    /// points where nothing is pending, or batched-mode recovery would
+    /// silently drop staged patches ([`exec`] asserts it at every cut).
+    fn pending_is_empty(&self) -> bool {
+        self.pending.iter().all(Vec::is_empty)
+    }
+
     /// Run the sharded round loop to completion.
     fn run_rounds(mut self, selector: DistSelector) -> (RacResult, NetReport, Vec<MergeBound>) {
         let t0 = Instant::now();
@@ -421,7 +437,7 @@ impl DistCore {
                 // merges happen at sync points, which flush) — so nothing
                 // deferred can be pending here.
                 debug_assert!(
-                    self.pending.iter().all(Vec::is_empty),
+                    self.pending_is_empty(),
                     "run finished with unflushed deferred patches"
                 );
             }
@@ -1207,6 +1223,24 @@ mod tests {
     fn rejects_centroid() {
         let g = data::stable_hierarchy(2, 4.0, 0);
         DistRacEngine::new(&g, Linkage::Centroid, DistConfig::default());
+    }
+
+    #[test]
+    fn checkpoint_cut_invariant_tracks_staged_patches() {
+        let g = data::grid1d_graph(8, 1);
+        let mut core = DistCore::new(&g, Linkage::Average, DistConfig::new(2, 1));
+        assert!(core.pending_is_empty(), "boot state has nothing staged");
+        core.pending[1].push(Message::NnQuery { cluster: 3 });
+        assert!(
+            !core.pending_is_empty(),
+            "a staged deferred batch must be visible to the cut invariant"
+        );
+        let mut net = Network::new(2);
+        core.flush_pending(&mut net);
+        assert!(
+            core.pending_is_empty(),
+            "a sync-point flush must restore the cut invariant"
+        );
     }
 
     #[test]

@@ -385,6 +385,27 @@ pub struct BatchRecord {
     pub round: usize,
 }
 
+/// One journaled wire packet: the [`BatchRecord`] key promoted to a full
+/// inbound-traffic journal entry — `(src, dst, round, step)` plus the
+/// encoded payload. The executed driver keeps every packet shipped since
+/// the last checkpoint cut (empty barrier packets included, because a
+/// replayed collect blocks on them like any other), so `shard_replay`
+/// recovery can respawn one dead machine and re-feed it exactly the bytes
+/// it saw the first time, while the survivors idle at the barrier.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JournalRecord {
+    pub src: usize,
+    pub dst: usize,
+    /// Engine round the packet belongs to (0-based).
+    pub round: usize,
+    /// Exchange step within the round (unique per round; see
+    /// [`crate::dist::exec`]'s step constants).
+    pub step: u8,
+    /// Encoded batch payload, exactly as shipped (possibly the 4-byte
+    /// empty batch that carries only the barrier).
+    pub bytes: Vec<u8>,
+}
+
 /// The simulated interconnect: counts batched RPCs and payload bytes per
 /// round. Intra-machine delivery is free and never recorded — batches are
 /// cross-shard by construction (asserted).

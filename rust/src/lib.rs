@@ -91,13 +91,24 @@
 //! with injected per-link latency/jitter, so the modeled `t_sim` gains a
 //! measured sibling [`metrics::RoundMetrics::t_exec`]. Machines
 //! checkpoint at sync points through a versioned binary format
-//! ([`dist::checkpoint`]); a shard killed mid-run (round-indexed fault
-//! injection, [`dist::FaultSpec`]) recovers by BSP global rollback to
-//! the last checkpoint. Execution changes the clock, never the
-//! algorithm: dendrogram, (1+ε) bounds trace, and sync schedule stay
-//! bitwise equal to the simulation, faulted or not — pinned in
-//! `rust/tests/dist_executed.rs`, with the codec paths real execution
-//! leans on fuzzed in `rust/tests/codec_adversarial.rs`.
+//! ([`dist::checkpoint`]): every `checkpoint_full_every`-th cut is a
+//! full blob, the cuts between are dirty-row **deltas** chained onto it,
+//! and restore folds the chain back. Faults come as a campaign —
+//! [`dist::FaultSpec`] lists (multi-machine, repeated, fault *during*
+//! recovery) plus seeded random kills (`fault_rate`) — and a dead shard
+//! surfaces on the wire as a named [`dist::MachineDown`] error, never a
+//! hang. [`dist::RecoveryMode`] picks how to heal: `global` rolls the
+//! whole fleet back to the last cut; `shard_replay` respawns only the
+//! dead machine, restores it from its own chain, and replays its
+//! journaled inbound traffic while survivors idle — the cost lands in
+//! [`metrics::RunMetrics::t_recover`] /
+//! [`metrics::RunMetrics::recovery_rounds_replayed`] next to `t_exec`
+//! (`benches/recovery.rs` → `BENCH_recovery.json`). Execution changes
+//! the clock, never the algorithm: dendrogram, (1+ε) bounds trace, and
+//! sync schedule stay bitwise equal to the simulation, faulted or not,
+//! under either recovery mode — pinned in `rust/tests/dist_executed.rs`,
+//! with the codec paths real execution leans on (batches, full blobs,
+//! delta chains) fuzzed in `rust/tests/codec_adversarial.rs`.
 //!
 //! ## Approximate engine
 //!

@@ -117,6 +117,22 @@ pub struct RunMetrics {
     /// Wall time of the whole run (excludes graph loading, matching the
     /// paper's "merge time" convention for Table 4).
     pub total_time: Duration,
+    /// Machine-rounds re-executed by fault recovery (executed mode): a
+    /// global rollback charges `rounds_since_cut × machines`, a shard
+    /// replay charges `rounds_since_cut` — the fleet-width saving the
+    /// recovery benchmark pins. Zero for unfaulted and simulated runs.
+    pub recovery_rounds_replayed: usize,
+    /// Bytes re-shipped by fault recovery (executed mode): discarded
+    /// round traffic for a global rollback, injected journal payload for
+    /// a shard replay.
+    pub recovery_bytes_replayed: usize,
+    /// Wall time spent inside recovery (teardown, restore, replay) —
+    /// reported next to `t_exec`, never mixed into it.
+    pub t_recover: Duration,
+    /// Total checkpoint blob bytes cut over the run (executed mode),
+    /// full blobs and deltas alike — the delta-vs-full saving the
+    /// recovery benchmark pins.
+    pub checkpoint_bytes: usize,
 }
 
 impl RunMetrics {
@@ -211,6 +227,19 @@ impl RunMetrics {
             ),
             ("total_merges", self.total_merges().into()),
             ("merge_rounds", self.merge_rounds().into()),
+            (
+                "recovery_rounds_replayed",
+                self.recovery_rounds_replayed.into(),
+            ),
+            (
+                "recovery_bytes_replayed",
+                self.recovery_bytes_replayed.into(),
+            ),
+            (
+                "t_recover_us",
+                (self.t_recover.as_micros() as usize).into(),
+            ),
+            ("checkpoint_bytes", self.checkpoint_bytes.into()),
         ])
     }
 }
@@ -247,6 +276,7 @@ mod tests {
         let run = RunMetrics {
             rounds: vec![round(100, 40, 40), round(60, 20, 10), round(40, 0, 0)],
             total_time: Duration::from_millis(5),
+            ..Default::default()
         };
         assert_eq!(run.total_merges(), 60);
         assert_eq!(run.merge_rounds(), 2);
@@ -304,11 +334,30 @@ mod tests {
         let run = RunMetrics {
             rounds: vec![round(10, 5, 5)],
             total_time: Duration::from_micros(123),
+            ..Default::default()
         };
         let js = run.to_json().to_string();
         assert!(js.contains("\"merges\":5"), "{js}");
         assert!(js.contains("\"total_time_us\":123"), "{js}");
         // Parseable by our own reader.
+        crate::util::json::Json::parse(&js).unwrap();
+    }
+
+    #[test]
+    fn recovery_metrics_serialize() {
+        let run = RunMetrics {
+            rounds: vec![round(10, 5, 5)],
+            recovery_rounds_replayed: 6,
+            recovery_bytes_replayed: 512,
+            t_recover: Duration::from_micros(77),
+            checkpoint_bytes: 4096,
+            ..Default::default()
+        };
+        let js = run.to_json().to_string();
+        assert!(js.contains("\"recovery_rounds_replayed\":6"), "{js}");
+        assert!(js.contains("\"recovery_bytes_replayed\":512"), "{js}");
+        assert!(js.contains("\"t_recover_us\":77"), "{js}");
+        assert!(js.contains("\"checkpoint_bytes\":4096"), "{js}");
         crate::util::json::Json::parse(&js).unwrap();
     }
 }

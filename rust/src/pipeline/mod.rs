@@ -98,6 +98,7 @@ pub fn run_engine(cfg: &RunConfig, g: &Graph) -> Result<RacResult> {
                 metrics: RunMetrics {
                     rounds: vec![],
                     total_time: t.elapsed(),
+                    ..Default::default()
                 },
             })
         }
@@ -112,6 +113,7 @@ pub fn run_engine(cfg: &RunConfig, g: &Graph) -> Result<RacResult> {
                 metrics: RunMetrics {
                     rounds: vec![],
                     total_time: t.elapsed(),
+                    ..Default::default()
                 },
             })
         }
@@ -125,7 +127,7 @@ pub fn run_engine(cfg: &RunConfig, g: &Graph) -> Result<RacResult> {
         }
         EngineSpec::DistRac { machines, cpus } => {
             let mut eng = DistRacEngine::new(g, cfg.linkage, DistConfig::new(machines, cpus));
-            if let Some(opts) = cfg.exec {
+            if let Some(opts) = cfg.exec.clone() {
                 eng = eng.with_exec(opts);
             }
             Ok(eng.run())
@@ -155,7 +157,7 @@ pub fn run_engine(cfg: &RunConfig, g: &Graph) -> Result<RacResult> {
             let mut eng =
                 DistApproxEngine::new(g, cfg.linkage, DistConfig::new(machines, cpus), epsilon)
                     .with_sync_mode(sync);
-            if let Some(opts) = cfg.exec {
+            if let Some(opts) = cfg.exec.clone() {
                 eng = eng.with_exec(opts);
             }
             let r = eng.run();

@@ -1,14 +1,15 @@
 //! Adversarial-bytes property suite for the wire and checkpoint codecs.
 //!
 //! The executed distributed mode feeds `decode_batch` real bytes from
-//! other threads and feeds `checkpoint::decode` blobs on every boot and
-//! every recovery, so the decoders face exactly the inputs this suite
-//! synthesises: truncations at arbitrary cuts, flipped tags, corrupted
-//! length prefixes, and plain random garbage. The contract everywhere is
-//! *reject with an error* — never panic, never allocate unbounded memory,
-//! never mis-decode.
+//! other threads and feeds the checkpoint decoders blobs on every boot
+//! and every recovery — full v1 blobs, v2 dirty-row deltas, and whole
+//! full→delta→delta chains — so the decoders face exactly the inputs
+//! this suite synthesises: truncations at arbitrary cuts, flipped tags,
+//! corrupted length prefixes, chains with missing links, and plain
+//! random garbage. The contract everywhere is *reject with an error* —
+//! never panic, never allocate unbounded memory, never mis-decode.
 
-use rac_hac::dist::checkpoint::{self, MachineCheckpoint};
+use rac_hac::dist::checkpoint::{self, DeltaCheckpoint, MachineCheckpoint};
 use rac_hac::dist::{decode_batch, encode_batch, Message};
 use rac_hac::util::prop::for_all_seeds;
 use rac_hac::util::rng::Rng;
@@ -221,5 +222,186 @@ fn random_garbage_never_panics_the_checkpoint_decoder() {
         let len = rng.below(300);
         let bytes: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
         let _ = checkpoint::decode(&bytes);
+    });
+}
+
+/// Draw a random but *valid* delta chaining onto `base`: a subset of its
+/// owned rows replaced, a subset of the replicated vectors changed.
+fn random_delta_for(rng: &mut Rng, base: &MachineCheckpoint) -> DeltaCheckpoint {
+    let rows = base
+        .rows
+        .iter()
+        .filter(|_| rng.bool_with(0.5))
+        .map(|r| {
+            (
+                r.0,
+                rng.next_u64() as u32,
+                rng.f64(),
+                (0..rng.below(4))
+                    .map(|_| (rng.next_u64() as u32, rng.f64(), rng.next_u64()))
+                    .collect(),
+            )
+        })
+        .collect();
+    DeltaCheckpoint {
+        machine: base.machine,
+        machines: base.machines,
+        round: base.round + 1,
+        base_round: base.round,
+        n: base.n,
+        rows,
+        size: (0..base.n)
+            .filter(|_| rng.bool_with(0.3))
+            .map(|i| (i as u32, rng.next_u64() % 100))
+            .collect(),
+        active: (0..base.n)
+            .filter(|_| rng.bool_with(0.3))
+            .map(|i| (i as u32, rng.bool_with(0.5)))
+            .collect(),
+    }
+}
+
+#[test]
+fn delta_blobs_round_trip() {
+    for_all_seeds(0xC0DEC + 7, 24, |rng| {
+        let base = random_checkpoint(rng);
+        let d = random_delta_for(rng, &base);
+        let blob = checkpoint::encode_delta(&d);
+        assert_eq!(checkpoint::decode_delta(&blob).unwrap(), d);
+        // decode_any tells the versions apart by the version word.
+        assert_eq!(
+            checkpoint::decode_any(&blob).unwrap(),
+            checkpoint::AnyCheckpoint::Delta(d)
+        );
+        assert_eq!(
+            checkpoint::decode_any(&checkpoint::encode(&base)).unwrap(),
+            checkpoint::AnyCheckpoint::Full(base)
+        );
+    });
+}
+
+#[test]
+fn truncated_delta_blobs_are_rejected_at_every_cut() {
+    for_all_seeds(0xC0DEC + 8, 16, |rng| {
+        let base = random_checkpoint(rng);
+        let blob = checkpoint::encode_delta(&random_delta_for(rng, &base));
+        for cut in 0..blob.len() {
+            assert!(checkpoint::decode_delta(&blob[..cut]).is_err(), "cut={cut}");
+            assert!(checkpoint::decode_any(&blob[..cut]).is_err(), "any cut={cut}");
+        }
+        let mut extended = blob.clone();
+        extended.push(0);
+        assert!(checkpoint::decode_delta(&extended).is_err());
+    });
+}
+
+#[test]
+fn corrupt_delta_counts_fail_fast_without_huge_allocation() {
+    // The delta header is 40 bytes (magic, version, machine, machines,
+    // round, base_round, n); the dirty-row count sits at [40..44], and in
+    // an all-empty delta the size-change and active-change counts follow
+    // at [44..48] and [48..52]. A maxed count claims ~4 billion records;
+    // the remaining-bytes bound must reject it before reserving storage.
+    let empty = DeltaCheckpoint {
+        machine: 0,
+        machines: 1,
+        round: 1,
+        base_round: 0,
+        n: 4,
+        rows: vec![],
+        size: vec![],
+        active: vec![],
+    };
+    let blob = checkpoint::encode_delta(&empty);
+    for at in [40usize, 44, 48] {
+        let mut corrupt = blob.clone();
+        corrupt[at..at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(
+            checkpoint::decode_delta(&corrupt).is_err(),
+            "maxed count at {at} accepted"
+        );
+    }
+    // The per-row entry count is equally hostile territory: a one-row
+    // delta has it 16 bytes into the row record.
+    let one_row = DeltaCheckpoint {
+        rows: vec![(0, 1, 0.5, vec![])],
+        ..empty
+    };
+    let blob = checkpoint::encode_delta(&one_row);
+    let at = 44 + 16; // count(4) + id(4) + nn(4) + weight(8)
+    let mut corrupt = blob.clone();
+    corrupt[at..at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert!(checkpoint::decode_delta(&corrupt).is_err());
+}
+
+#[test]
+fn random_garbage_and_byte_flips_never_panic_the_delta_decoder() {
+    for_all_seeds(0xC0DEC + 9, 48, |rng| {
+        let len = rng.below(300);
+        let bytes: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let _ = checkpoint::decode_delta(&bytes);
+        let _ = checkpoint::decode_any(&bytes);
+        // And single-byte corruptions of a valid blob.
+        let base = random_checkpoint(rng);
+        let mut blob = checkpoint::encode_delta(&random_delta_for(rng, &base));
+        for _ in 0..16 {
+            let at = rng.below(blob.len());
+            let old = blob[at];
+            blob[at] ^= (rng.next_u64() as u8) | 1;
+            let _ = checkpoint::decode_delta(&blob);
+            let _ = checkpoint::restore_chain(&[checkpoint::encode(&base), blob.clone()]);
+            blob[at] = old;
+        }
+    });
+}
+
+#[test]
+fn checkpoint_chains_fold_correctly_and_reject_broken_links() {
+    for_all_seeds(0xC0DEC + 10, 24, |rng| {
+        let base = random_checkpoint(rng);
+        let d1 = random_delta_for(rng, &base);
+        let mut after1 = base.clone();
+        checkpoint::apply_delta(&mut after1, &d1).unwrap();
+        let d2 = random_delta_for(rng, &after1);
+        let mut after2 = after1.clone();
+        checkpoint::apply_delta(&mut after2, &d2).unwrap();
+
+        let full = checkpoint::encode(&base);
+        let b1 = checkpoint::encode_delta(&d1);
+        let b2 = checkpoint::encode_delta(&d2);
+
+        // The happy chain folds to the last cut's snapshot.
+        assert_eq!(
+            checkpoint::restore_chain(&[full.clone(), b1.clone(), b2.clone()]).unwrap(),
+            after2
+        );
+        assert_eq!(checkpoint::restore_chain(&[full.clone()]).unwrap(), base);
+
+        // An empty chain, a chain that starts with a delta (its base is
+        // gone), a full blob in the middle, and a skipped link are each
+        // rejected with a named error — never a panic, never a silent
+        // mis-restore.
+        assert!(checkpoint::restore_chain(&[])
+            .unwrap_err()
+            .contains("empty"));
+        assert!(checkpoint::restore_chain(&[b1.clone()])
+            .unwrap_err()
+            .contains("starts with a delta"));
+        assert!(checkpoint::restore_chain(&[full.clone(), full.clone(), b1.clone()])
+            .unwrap_err()
+            .contains("middle"));
+        // Skipping d1 leaves d2 chaining onto a round the base never
+        // reached: the missing-link check must catch it.
+        assert!(checkpoint::restore_chain(&[full.clone(), b2.clone()])
+            .unwrap_err()
+            .contains("missing link"));
+
+        // A delta cut for a different machine or id space is rejected by
+        // apply_delta before any mutation.
+        let mut alien = d1.clone();
+        alien.machine = base.machine.wrapping_add(1);
+        let mut scratch = base.clone();
+        assert!(checkpoint::apply_delta(&mut scratch, &alien).is_err());
+        assert_eq!(scratch, base, "failed apply mutated the base");
     });
 }

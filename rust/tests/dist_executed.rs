@@ -9,11 +9,13 @@
 //!   executed run's dendrogram, (1+ε) bounds trace, and per-round sync
 //!   schedule are bitwise identical to the simulated run's. Execution
 //!   changes the clock, never the algorithm.
-//! * **Fault recovery** — killing a shard mid-run (round-indexed fault
-//!   injection) and recovering every machine from the last sync-point
-//!   checkpoint — a BSP global rollback — replays to the *same* bitwise
+//! * **Fault recovery** — killing shards mid-run (round-indexed fault
+//!   campaigns: multi-machine, repeated, fault-during-recovery, plus
+//!   seeded random faults) and recovering — by BSP global rollback or by
+//!   journaled single-shard replay — replays to the *same* bitwise
 //!   result. Determinism of the round body is what makes checkpoint
-//!   replay sound; this suite is the pin.
+//!   replay sound; this suite is the pin, for both recovery modes and
+//!   for delta-checkpoint chains at every cadence.
 //! * **Link-delay injection** — per-link latency/jitter stretch the
 //!   measured `t_exec` without perturbing any result bit (delays reorder
 //!   packet arrivals; the barrier discipline absorbs them).
@@ -24,7 +26,7 @@ use rac_hac::approx::quality::MergeBound;
 use rac_hac::approx::ApproxResult;
 use rac_hac::data::{self, grid1d_graph, random_sparse_graph, random_tied_graph};
 use rac_hac::dist::{
-    DistApproxEngine, DistConfig, DistRacEngine, ExecOptions, FaultSpec, SyncMode,
+    DistApproxEngine, DistConfig, DistRacEngine, ExecOptions, FaultSpec, RecoveryMode, SyncMode,
 };
 use rac_hac::graph::Graph;
 use rac_hac::linkage::Linkage;
@@ -37,6 +39,28 @@ const VSHARDS: u32 = 8;
 
 fn sync_modes() -> [SyncMode; 2] {
     [SyncMode::PerRound, SyncMode::Batched { vshards: VSHARDS }]
+}
+
+fn recovery_modes() -> [RecoveryMode; 2] {
+    [RecoveryMode::Global, RecoveryMode::ShardReplay]
+}
+
+/// A fault campaign exercising every shape the driver distinguishes,
+/// clamped into an m-machine topology: two distinct machines in one
+/// round, the same machine again later, and an exact repeat — the second
+/// instance fires while the first recovery is freshest, i.e. a fault
+/// *during* recovery.
+fn campaign(m: usize) -> Vec<FaultSpec> {
+    let other = 2.min(m - 1);
+    vec![
+        FaultSpec { machine: 0, round: 2 },
+        FaultSpec {
+            machine: other,
+            round: 2,
+        },
+        FaultSpec { machine: 0, round: 4 },
+        FaultSpec { machine: 0, round: 4 },
+    ]
 }
 
 fn rac_run(g: &Graph, topo: (usize, usize), exec: Option<ExecOptions>) -> rac_hac::rac::RacResult {
@@ -182,18 +206,17 @@ fn executed_mode_on_the_adversarial_chain_all_modes() {
 fn killed_shard_recovers_to_bitwise_identical_dendrogram() {
     let g = grid1d_graph(180, 7);
     let topo = (3, 2);
-    let fault = Some(FaultSpec {
-        machine: 1,
-        round: 3,
-    });
     let faulted_opts = ExecOptions {
-        fault,
+        faults: vec![FaultSpec {
+            machine: 1,
+            round: 3,
+        }],
         ..ExecOptions::default()
     };
 
     // Exact engine.
     let clean = rac_run(&g, topo, Some(ExecOptions::default()));
-    let recovered = rac_run(&g, topo, Some(faulted_opts));
+    let recovered = rac_run(&g, topo, Some(faulted_opts.clone()));
     assert_eq!(
         clean.dendrogram.bitwise_merges(),
         recovered.dendrogram.bitwise_merges(),
@@ -209,7 +232,7 @@ fn killed_shard_recovers_to_bitwise_identical_dendrogram() {
     // ε-good engines, per-round and batched.
     for sync in sync_modes() {
         let clean = approx_run(&g, topo, 0.1, sync, Some(ExecOptions::default()));
-        let recovered = approx_run(&g, topo, 0.1, sync, Some(faulted_opts));
+        let recovered = approx_run(&g, topo, 0.1, sync, Some(faulted_opts.clone()));
         assert_eq!(
             clean.dendrogram.bitwise_merges(),
             recovered.dendrogram.bitwise_merges(),
@@ -230,19 +253,22 @@ fn faults_at_various_rounds_and_machines_all_recover() {
     let clean = rac_run(&g, topo, Some(ExecOptions::default()));
     for machine in 0..topo.0 {
         for round in [0, 1, 4] {
-            let recovered = rac_run(
-                &g,
-                topo,
-                Some(ExecOptions {
-                    fault: Some(FaultSpec { machine, round }),
-                    ..ExecOptions::default()
-                }),
-            );
-            assert_eq!(
-                clean.dendrogram.bitwise_merges(),
-                recovered.dendrogram.bitwise_merges(),
-                "fault at machine={machine} round={round} diverged"
-            );
+            for mode in recovery_modes() {
+                let recovered = rac_run(
+                    &g,
+                    topo,
+                    Some(ExecOptions {
+                        faults: vec![FaultSpec { machine, round }],
+                        recovery_mode: mode,
+                        ..ExecOptions::default()
+                    }),
+                );
+                assert_eq!(
+                    clean.dendrogram.bitwise_merges(),
+                    recovered.dendrogram.bitwise_merges(),
+                    "fault at machine={machine} round={round} mode={mode:?} diverged"
+                );
+            }
         }
     }
     // A fault scheduled past the last round never fires; the run is just
@@ -251,10 +277,10 @@ fn faults_at_various_rounds_and_machines_all_recover() {
         &g,
         topo,
         Some(ExecOptions {
-            fault: Some(FaultSpec {
+            faults: vec![FaultSpec {
                 machine: 0,
                 round: 100_000,
-            }),
+            }],
             ..ExecOptions::default()
         }),
     );
@@ -276,7 +302,7 @@ fn link_delays_stretch_the_clock_but_not_the_result() {
         Some(ExecOptions {
             latency: Duration::from_millis(2),
             jitter: Duration::from_micros(300),
-            fault: None,
+            ..ExecOptions::default()
         }),
     );
     assert_eq!(
@@ -314,4 +340,209 @@ fn multi_machine_executed_reports_real_traffic() {
     let exec = rac_run(&g, (3, 2), Some(ExecOptions::default()));
     assert!(exec.metrics.total_net_messages() > 0);
     assert!(exec.metrics.total_net_bytes() > 0);
+}
+
+#[test]
+fn multi_fault_campaigns_recover_bitwise_across_the_matrix() {
+    // The satellite matrix: a campaign with two distinct machines in one
+    // round, a repeat on the same machine, and a fault-during-recovery
+    // duplicate, across every topology × ε × sync mode × recovery mode.
+    // Dendrogram, bounds trace, and sync schedule must all be bitwise
+    // identical to the unfaulted run.
+    let g = grid1d_graph(140, 17);
+    for topo in TOPOLOGIES {
+        for eps in EPSILONS {
+            for sync in sync_modes() {
+                let clean = approx_run(&g, topo, eps, sync, Some(ExecOptions::default()));
+                for mode in recovery_modes() {
+                    let recovered = approx_run(
+                        &g,
+                        topo,
+                        eps,
+                        sync,
+                        Some(ExecOptions {
+                            faults: campaign(topo.0),
+                            recovery_mode: mode,
+                            ..ExecOptions::default()
+                        }),
+                    );
+                    let tag = format!("topo={topo:?} eps={eps} sync={sync:?} mode={mode:?}");
+                    assert_eq!(
+                        clean.dendrogram.bitwise_merges(),
+                        recovered.dendrogram.bitwise_merges(),
+                        "{tag}: dendrogram diverged"
+                    );
+                    assert_eq!(
+                        bounds_bits(&clean.bounds),
+                        bounds_bits(&recovered.bounds),
+                        "{tag}: bounds trace diverged"
+                    );
+                    assert_eq!(
+                        sync_schedule(&clean.metrics),
+                        sync_schedule(&recovered.metrics),
+                        "{tag}: sync schedule diverged"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fault_at_the_final_round_recovers() {
+    // The last round is the edge case: the checkpoint chain is at its
+    // longest and the remaining work is at its smallest.
+    let g = grid1d_graph(120, 19);
+    let topo = (3, 2);
+    for sync in sync_modes() {
+        let clean = approx_run(&g, topo, 0.1, sync, Some(ExecOptions::default()));
+        let last = clean.metrics.rounds.len() - 1;
+        for mode in recovery_modes() {
+            let recovered = approx_run(
+                &g,
+                topo,
+                0.1,
+                sync,
+                Some(ExecOptions {
+                    faults: vec![FaultSpec {
+                        machine: 1,
+                        round: last,
+                    }],
+                    recovery_mode: mode,
+                    ..ExecOptions::default()
+                }),
+            );
+            assert_eq!(
+                clean.dendrogram.bitwise_merges(),
+                recovered.dendrogram.bitwise_merges(),
+                "sync={sync:?} mode={mode:?}: fault at final round {last} diverged"
+            );
+            assert_eq!(
+                bounds_bits(&clean.bounds),
+                bounds_bits(&recovered.bounds),
+                "sync={sync:?} mode={mode:?}: bounds trace diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn shard_replay_and_global_recovery_are_differentially_identical() {
+    // The two recovery modes are semantically interchangeable: same
+    // dendrogram, bounds, schedule, and wire log as each other and as the
+    // unfaulted run. Shard replay must never replay *more* machine-rounds
+    // than a global rollback of the same fault would.
+    let g = grid1d_graph(160, 23);
+    let topo = (3, 2);
+    let sync = SyncMode::Batched { vshards: VSHARDS };
+    let clean = approx_run(&g, topo, 0.1, sync, Some(ExecOptions::default()));
+    let faulted = |mode| {
+        approx_run(
+            &g,
+            topo,
+            0.1,
+            sync,
+            Some(ExecOptions {
+                faults: vec![FaultSpec {
+                    machine: 1,
+                    round: 3,
+                }],
+                recovery_mode: mode,
+                ..ExecOptions::default()
+            }),
+        )
+    };
+    let global = faulted(RecoveryMode::Global);
+    let shard = faulted(RecoveryMode::ShardReplay);
+    for (name, run) in [("global", &global), ("shard_replay", &shard)] {
+        assert_eq!(
+            clean.dendrogram.bitwise_merges(),
+            run.dendrogram.bitwise_merges(),
+            "{name}: dendrogram diverged from unfaulted"
+        );
+        assert_eq!(
+            bounds_bits(&clean.bounds),
+            bounds_bits(&run.bounds),
+            "{name}: bounds trace diverged from unfaulted"
+        );
+        assert_eq!(
+            sync_schedule(&clean.metrics),
+            sync_schedule(&run.metrics),
+            "{name}: sync schedule diverged from unfaulted"
+        );
+        assert!(
+            !run.metrics.t_recover.is_zero(),
+            "{name}: fault fired but t_recover is zero"
+        );
+    }
+    assert!(clean.metrics.t_recover.is_zero(), "clean run recovered?");
+    assert!(
+        shard.metrics.recovery_rounds_replayed <= global.metrics.recovery_rounds_replayed,
+        "shard replay replayed more machine-rounds ({}) than global rollback ({})",
+        shard.metrics.recovery_rounds_replayed,
+        global.metrics.recovery_rounds_replayed
+    );
+}
+
+#[test]
+fn delta_checkpoint_chains_restore_bitwise_at_every_cadence() {
+    // checkpoint_full_every = 1 is the v1 behaviour (every cut a full
+    // blob); longer cadences restore through full→delta→delta chains.
+    let g = grid1d_graph(140, 29);
+    let topo = (3, 2);
+    let sync = SyncMode::Batched { vshards: VSHARDS };
+    let clean = approx_run(&g, topo, 0.1, sync, Some(ExecOptions::default()));
+    for full_every in [1, 2, 4, 7] {
+        for mode in recovery_modes() {
+            let recovered = approx_run(
+                &g,
+                topo,
+                0.1,
+                sync,
+                Some(ExecOptions {
+                    faults: vec![FaultSpec {
+                        machine: 2,
+                        round: 4,
+                    }],
+                    recovery_mode: mode,
+                    checkpoint_full_every: full_every,
+                    ..ExecOptions::default()
+                }),
+            );
+            assert_eq!(
+                clean.dendrogram.bitwise_merges(),
+                recovered.dendrogram.bitwise_merges(),
+                "full_every={full_every} mode={mode:?}: dendrogram diverged"
+            );
+            assert_eq!(
+                bounds_bits(&clean.bounds),
+                bounds_bits(&recovered.bounds),
+                "full_every={full_every} mode={mode:?}: bounds trace diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn seeded_random_faults_recover_bitwise() {
+    let g = grid1d_graph(120, 31);
+    let topo = (3, 2);
+    let clean = rac_run(&g, topo, Some(ExecOptions::default()));
+    for mode in recovery_modes() {
+        let recovered = rac_run(
+            &g,
+            topo,
+            Some(ExecOptions {
+                fault_rate: 0.08,
+                fault_seed: 0xFA17,
+                recovery_mode: mode,
+                ..ExecOptions::default()
+            }),
+        );
+        assert_eq!(
+            clean.dendrogram.bitwise_merges(),
+            recovered.dendrogram.bitwise_merges(),
+            "mode={mode:?}: random fault campaign diverged"
+        );
+    }
 }
