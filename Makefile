@@ -3,7 +3,7 @@
 # it. `make bench` runs the perf-trajectory smoke bench and writes
 # BENCH_hot_paths.json (the per-PR datapoint CI uploads as an artifact).
 
-.PHONY: artifacts build test test-differential test-executed test-faults clippy fmt fmt-check bench bench-approx bench-dist bench-recovery
+.PHONY: artifacts build test test-differential test-executed test-faults clippy fmt fmt-check bench bench-approx bench-dist bench-recovery trace-smoke
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -52,6 +52,28 @@ fmt-check:
 # leaves most of the harness code unlinted).
 clippy:
 	cargo clippy --all-targets -- -D warnings
+
+# End-to-end smoke of the observability layer: trace a faulted executed
+# fleet in Chrome format (the artifact opens directly in Perfetto /
+# chrome://tracing), then fold it with `rac trace-report` — the analyzer
+# schema-validates every event before reporting, so a non-zero exit means
+# the engines emitted a malformed trace. CI uploads the trace + report.
+trace-smoke: build
+	mkdir -p target/trace-smoke
+	printf '%s\n' \
+		'[dataset]' 'type = "grid1d"' 'n = 200' \
+		'[cluster]' 'linkage = "average"' \
+		'[engine]' 'type = "dist_rac"' 'machines = 3' 'cpus = 2' \
+		'exec_mode = "executed"' 'faults = "1:2,0:4"' \
+		'recovery_mode = "shard_replay"' 'checkpoint_full_every = 2' \
+		'[output]' 'trace_path = "target/trace-smoke/trace.json"' \
+		'trace_format = "chrome"' \
+		'metrics_out = "target/trace-smoke/metrics.json"' \
+		> target/trace-smoke/config.toml
+	./target/release/rac run --config target/trace-smoke/config.toml
+	./target/release/rac trace-report --trace target/trace-smoke/trace.json
+	./target/release/rac trace-report --trace target/trace-smoke/trace.json \
+		--json > target/trace-smoke/report.json
 
 bench:
 	cargo bench --bench hot_paths -- --json --smoke

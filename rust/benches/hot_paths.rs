@@ -35,6 +35,7 @@ use rac_hac::linkage::Linkage;
 use rac_hac::metrics::RunMetrics;
 use rac_hac::rac::baseline::HashRacEngine;
 use rac_hac::rac::{RacEngine, RacResult};
+use rac_hac::trace::TraceSink;
 use rac_hac::util::bench::{time_budget, Table, Timing};
 use rac_hac::util::json::{obj, Json};
 use rac_hac::util::parallel::default_threads;
@@ -162,7 +163,7 @@ fn main() {
 
     // ---- engine × linkage × threads matrix ------------------------------
     println!("-- engines (flat store vs hashmap baseline vs dist) --");
-    let cells = engine_matrix(&g, budget, min_samples);
+    let mut cells = engine_matrix(&g, budget, min_samples);
     let t = Table::new(
         &["engine", "linkage", "threads", "median", "mean", "samples"],
         &[14, 10, 8, 12, 12, 8],
@@ -178,8 +179,67 @@ fn main() {
         ]);
     }
 
-    // ---- headline: flat vs hashmap at default threads -------------------
+    // ---- tracing overhead guard (complete linkage, default threads) -----
+    // Two trajectory cells pinning the observability layer's cost: a run
+    // with a *disabled* sink attached must track `rac_flat` (the sink
+    // check is one branch per span site — if these drift apart, the
+    // instrumentation leaked into the hot path), and a run with an
+    // *enabled* sink shows the price of actually recording.
     let headline_threads = default_threads();
+    {
+        let (timing, metrics) = measure(budget, min_samples, || {
+            RacEngine::new(&g, Linkage::Complete)
+                .with_threads(headline_threads)
+                .with_trace(&TraceSink::disabled())
+                .run()
+        });
+        cells.push(Cell {
+            engine: "rac_flat_sink_off",
+            linkage: Linkage::Complete,
+            threads: headline_threads,
+            timing,
+            metrics,
+        });
+        let (timing, metrics) = measure(budget, min_samples, || {
+            let sink = TraceSink::enabled();
+            let r = RacEngine::new(&g, Linkage::Complete)
+                .with_threads(headline_threads)
+                .with_trace(&sink)
+                .run();
+            sink.take();
+            r
+        });
+        cells.push(Cell {
+            engine: "rac_flat_sink_on",
+            linkage: Linkage::Complete,
+            threads: headline_threads,
+            timing,
+            metrics,
+        });
+        let base = cells
+            .iter()
+            .find(|c| {
+                c.engine == "rac_flat"
+                    && c.linkage == Linkage::Complete
+                    && c.threads == headline_threads
+            })
+            .expect("baseline cell measured")
+            .timing
+            .median;
+        let off = cells[cells.len() - 2].timing.median;
+        let on = cells[cells.len() - 1].timing.median;
+        println!(
+            "\n-- tracing overhead (complete linkage, {headline_threads} threads) --\n\
+             untraced {:.3?}  sink-off {:.3?} ({:+.1}%)  sink-on {:.3?} ({:+.1}%)",
+            base,
+            off,
+            (off.as_secs_f64() / base.as_secs_f64().max(1e-12) - 1.0) * 100.0,
+            on,
+            (on.as_secs_f64() / base.as_secs_f64().max(1e-12) - 1.0) * 100.0,
+        );
+    }
+
+    // ---- headline: flat vs hashmap at default threads -------------------
     let pick = |engine: &str| {
         cells
             .iter()

@@ -67,6 +67,7 @@ use crate::graph::Graph;
 use crate::linkage::Linkage;
 use crate::metrics::RunMetrics;
 use crate::store::NeighborStore;
+use crate::trace::TraceSink;
 
 use quality::MergeBound;
 
@@ -129,6 +130,14 @@ impl ApproxEngine {
     /// Override the round safety cap.
     pub fn with_max_rounds(mut self, max_rounds: usize) -> Self {
         self.driver.set_max_rounds(max_rounds);
+        self
+    }
+
+    /// Stream structured trace events into `sink` (see [`crate::trace`]).
+    /// Tracing is purely observational: the dendrogram and bounds trace
+    /// are bitwise identical with or without it.
+    pub fn with_trace(mut self, sink: &TraceSink) -> Self {
+        self.driver.set_trace(sink.clone(), "approx");
         self
     }
 

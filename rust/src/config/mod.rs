@@ -19,6 +19,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::data::Metric;
 use crate::dist::{ExecOptions, FaultSpec, RecoveryMode, SyncMode, DEFAULT_VSHARDS};
 use crate::linkage::Linkage;
+use crate::trace::TraceFormat;
 
 /// Which dataset generator to run (DESIGN.md §1 substitutions).
 #[derive(Debug, Clone, PartialEq)]
@@ -78,6 +79,21 @@ pub enum EngineSpec {
     },
 }
 
+/// Where run artifacts land (the `[output]` section). Everything is
+/// optional; the default writes nothing beyond stdout.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct OutputSpec {
+    /// Record a structured event trace ([`crate::trace`]) and write it
+    /// here. Setting a path is what turns tracing on.
+    pub trace_path: Option<String>,
+    /// On-disk trace format (`jsonl` or `chrome`); only meaningful with
+    /// `trace_path` set — rejected otherwise.
+    pub trace_format: TraceFormat,
+    /// Write the run's `RunMetrics` JSON here (machine-readable sibling
+    /// of the stdout report).
+    pub metrics_out: Option<String>,
+}
+
 /// A full clustering run.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunConfig {
@@ -91,6 +107,8 @@ pub struct RunConfig {
     /// `exec_mode = "executed"` plus the latency/jitter/fault knobs).
     /// `None` (the default) keeps the pure simulation.
     pub exec: Option<ExecOptions>,
+    /// Trace/metrics output destinations (`[output]` section).
+    pub output: OutputSpec,
 }
 
 impl RunConfig {
@@ -178,6 +196,7 @@ impl RunConfig {
         };
 
         let exec = parse_exec(&doc, &engine)?;
+        let output = parse_output(&doc)?;
 
         Ok(RunConfig {
             dataset,
@@ -186,6 +205,7 @@ impl RunConfig {
             linkage,
             engine,
             exec,
+            output,
         })
     }
 
@@ -381,6 +401,51 @@ fn parse_exec(doc: &TomlDoc, engine: &EngineSpec) -> Result<Option<ExecOptions>>
         recovery_mode,
         checkpoint_full_every,
     }))
+}
+
+/// Parse + validate the `[output]` block: optional `trace_path` /
+/// `metrics_out` file destinations and the `trace_format` selector,
+/// which is meaningless (and therefore rejected) without a trace path.
+fn parse_output(doc: &TomlDoc) -> Result<OutputSpec> {
+    let path_field = |key: &str| -> Result<Option<String>> {
+        match doc.get("output", key) {
+            None => Ok(None),
+            Some(v) => {
+                let s = v
+                    .as_str()
+                    .ok_or_else(|| anyhow!("output.{key} must be a string path"))?;
+                if s.is_empty() {
+                    bail!("output.{key} must not be empty");
+                }
+                Ok(Some(s.to_string()))
+            }
+        }
+    };
+    let trace_path = path_field("trace_path")?;
+    let metrics_out = path_field("metrics_out")?;
+    let trace_format = match doc.get("output", "trace_format") {
+        None => TraceFormat::default(),
+        Some(v) => {
+            let s = v
+                .as_str()
+                .ok_or_else(|| anyhow!("output.trace_format must be a string"))?;
+            let format = TraceFormat::parse(s).ok_or_else(|| {
+                anyhow!("unknown output.trace_format {s:?} (expected \"jsonl\" or \"chrome\")")
+            })?;
+            if trace_path.is_none() {
+                bail!(
+                    "output.trace_format only applies when output.trace_path is set \
+                     (there is no trace to format)"
+                );
+            }
+            format
+        }
+    };
+    Ok(OutputSpec {
+        trace_path,
+        trace_format,
+        metrics_out,
+    })
 }
 
 #[cfg(test)]
@@ -769,6 +834,67 @@ cpus = 4
         .unwrap_err()
         .to_string();
         assert!(err.contains("exec_mode"), "{err}");
+    }
+
+    #[test]
+    fn output_section_defaults_to_nothing() {
+        let cfg = RunConfig::from_toml_str("").unwrap();
+        assert_eq!(cfg.output, OutputSpec::default());
+        assert_eq!(cfg.output.trace_path, None);
+        assert_eq!(cfg.output.trace_format, TraceFormat::Jsonl);
+        assert_eq!(cfg.output.metrics_out, None);
+    }
+
+    #[test]
+    fn output_section_parses_trace_and_metrics_destinations() {
+        let cfg = RunConfig::from_toml_str(
+            "[output]\ntrace_path = \"run.trace.jsonl\"\n\
+             trace_format = \"chrome\"\nmetrics_out = \"metrics.json\"\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.output,
+            OutputSpec {
+                trace_path: Some("run.trace.jsonl".to_string()),
+                trace_format: TraceFormat::Chrome,
+                metrics_out: Some("metrics.json".to_string()),
+            }
+        );
+        // The format defaults to jsonl when only a path is given.
+        let cfg =
+            RunConfig::from_toml_str("[output]\ntrace_path = \"t.jsonl\"\n").unwrap();
+        assert_eq!(cfg.output.trace_format, TraceFormat::Jsonl);
+    }
+
+    #[test]
+    fn output_section_validates() {
+        // A format without a trace is a configuration error, named.
+        let err = RunConfig::from_toml_str("[output]\ntrace_format = \"chrome\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(
+            err.contains("trace_format") && err.contains("trace_path"),
+            "{err}"
+        );
+        // Unknown formats are rejected with the candidates.
+        let err = RunConfig::from_toml_str(
+            "[output]\ntrace_path = \"t\"\ntrace_format = \"protobuf\"\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("trace_format") && err.contains("chrome"), "{err}");
+        // Paths must be non-empty strings.
+        for bad in [
+            "trace_path = \"\"",
+            "metrics_out = \"\"",
+            "trace_path = 3",
+            "metrics_out = true",
+        ] {
+            let err = RunConfig::from_toml_str(&format!("[output]\n{bad}\n"))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("output."), "{bad}: {err}");
+        }
     }
 
     #[test]

@@ -104,7 +104,7 @@ use rustc_hash::{FxHashMap, FxHashSet};
 
 use super::checkpoint::{self, MachineCheckpoint};
 use super::network::{decode_batch, encode_batch, BatchRecord, JournalRecord, Message, NetReport};
-use super::{vshard_of, DistCore, DistSelector, Placement};
+use super::{engine_name, vshard_of, DistCore, DistSelector, Placement};
 use crate::approx::good::{self, Candidate, MergePair};
 use crate::approx::quality::MergeBound;
 use crate::dendrogram::{Dendrogram, Merge};
@@ -113,6 +113,9 @@ use crate::metrics::{RoundMetrics, RunMetrics};
 use crate::rac::logic::{compute_union_map, scan_nn, PairView};
 use crate::rac::{RacResult, NO_NN};
 use crate::store::{NeighborStore, NeighborsRef, RowRef};
+use crate::trace::{
+    EventKind, Phase as TracePhase, RecoveryStage, TraceBuf, TraceEvent, TraceSink, COORD,
+};
 
 /// A named shard failure: the machine whose channel went dead and the
 /// round the death was observed in. This is the *only* way a dead shard
@@ -299,6 +302,10 @@ struct NetStats {
     /// Every packet posted this round — barriers included — when the
     /// run journals for shard replay. Empty otherwise.
     journal: Vec<JournalRecord>,
+    /// Trace events buffered on the machine since the last report —
+    /// shipped on the existing report channel, so the hot path never
+    /// takes a lock. Empty when tracing is disabled.
+    events: Vec<TraceEvent>,
 }
 
 /// Machine → driver reports.
@@ -392,6 +399,9 @@ struct Wire {
     peer_timeout: Duration,
     round: usize,
     stats: NetStats,
+    /// Per-machine trace buffer; drained into [`NetStats::events`] by
+    /// [`Wire::take_stats`]. Disabled → every emission is one branch.
+    tbuf: TraceBuf,
 }
 
 impl Wire {
@@ -410,6 +420,15 @@ impl Wire {
                 messages: msgs.len(),
                 bytes: bytes.len(),
                 round: self.round,
+            });
+            // Same accounting site as the counters above, so trace totals
+            // equal the RunMetrics columns by construction (`msgs: 1` —
+            // one batched RPC, the simulation's counting unit).
+            self.tbuf.instant(EventKind::WireSend {
+                dst: dst as u32,
+                step,
+                msgs: 1,
+                bytes: bytes.len(),
             });
         }
         if self.journal {
@@ -444,6 +463,7 @@ impl Wire {
         from: impl Iterator<Item = usize>,
     ) -> Result<Vec<(usize, Vec<Message>)>, MachineDown> {
         let expected: Vec<usize> = from.collect();
+        let wait_start = self.tbuf.now();
         let mut packets: Vec<Packet> = Vec::with_capacity(expected.len());
         let mut i = 0;
         while i < self.stash.len() {
@@ -485,7 +505,17 @@ impl Wire {
                 std::thread::sleep(latest - now);
             }
         }
+        // The span covers arrival wait + modeled link delay: how long this
+        // machine idled at the barrier before every peer was readable.
+        self.tbuf.span(wait_start, EventKind::BarrierWait { step });
         packets.sort_by_key(|p| p.src);
+        for p in &packets {
+            self.tbuf.instant(EventKind::WireRecv {
+                src: p.src as u32,
+                step,
+                bytes: p.bytes.len(),
+            });
+        }
         packets
             .into_iter()
             .map(|p| match decode_batch(&p.bytes) {
@@ -555,7 +585,9 @@ impl Wire {
     }
 
     fn take_stats(&mut self) -> NetStats {
-        std::mem::take(&mut self.stats)
+        let mut stats = std::mem::take(&mut self.stats);
+        stats.events = self.tbuf.drain();
+        stats
     }
 }
 
@@ -699,6 +731,7 @@ impl Machine {
     fn begin_round(&mut self, round: usize) {
         self.wire.round = round;
         self.wire.stats = NetStats::default();
+        self.wire.tbuf.set_round(round);
         self.eligibility_scan_entries = 0;
     }
 
@@ -891,6 +924,7 @@ impl Machine {
     /// checkpoint's change tracking.
     fn merge_and_rescan(&mut self, pairs: &[MergePair]) -> Result<Report, MachineDown> {
         let m = self.wire.machines;
+        let merge_start = self.wire.tbuf.now();
         let base = match self.selector {
             DistSelector::Rnn => EXACT_MERGE_BASE,
             _ => GOOD_MERGE_BASE,
@@ -1063,6 +1097,10 @@ impl Machine {
         // re-dirties rows the cut already has the latest bytes for.
         self.store.maybe_compact();
         self.owned_active.retain(|&c| self.active[c as usize]);
+        self.wire
+            .tbuf
+            .span(merge_start, EventKind::Phase(TracePhase::Merge));
+        let update_start = self.wire.tbuf.now();
         // Phase 3: rescan owned NN caches invalidated by the merges —
         // the same filter and scan as the simulation's round tail.
         let mut nn_updates = 0;
@@ -1092,6 +1130,9 @@ impl Machine {
             self.matched[p.leader as usize] = false;
             self.matched[p.partner as usize] = false;
         }
+        self.wire
+            .tbuf
+            .span(update_start, EventKind::Phase(TracePhase::UpdateNn));
         Ok(Report::RoundDone {
             nn_weights,
             nn_updates,
@@ -1115,21 +1156,19 @@ impl Machine {
             }
             Cmd::Round { round } => {
                 self.begin_round(round);
-                match self.selector {
-                    DistSelector::Rnn => {
-                        let pairs = self.find_reciprocal()?;
-                        let _ = reports.send(Report::Phase1 { pairs, synced: true });
-                    }
-                    DistSelector::Good { epsilon } => {
-                        if let Some((pairs, synced)) = self.find_good(epsilon, None)? {
-                            let _ = reports.send(Report::Phase1 { pairs, synced });
-                        }
-                    }
+                let find_start = self.wire.tbuf.now();
+                let phase1 = match self.selector {
+                    DistSelector::Rnn => Some((self.find_reciprocal()?, true)),
+                    DistSelector::Good { epsilon } => self.find_good(epsilon, None)?,
                     DistSelector::GoodBatched { epsilon, vshards } => {
-                        if let Some((pairs, synced)) = self.find_good(epsilon, Some(vshards))? {
-                            let _ = reports.send(Report::Phase1 { pairs, synced });
-                        }
+                        self.find_good(epsilon, Some(vshards))?
                     }
+                };
+                self.wire
+                    .tbuf
+                    .span(find_start, EventKind::Phase(TracePhase::Find));
+                if let Some((pairs, synced)) = phase1 {
+                    let _ = reports.send(Report::Phase1 { pairs, synced });
                 }
             }
             Cmd::Merge { pairs } => {
@@ -1254,6 +1293,8 @@ struct FleetSpec {
     jitter: Duration,
     /// Journal posted packets for shard replay (`RecoveryMode::ShardReplay`).
     journal: bool,
+    /// Trace sink every spawned (or respawned) machine buffers into.
+    sink: TraceSink,
 }
 
 /// Spawn one machine thread on the given fabric and feed it its
@@ -1299,6 +1340,10 @@ fn spawn_machine(
             peer_timeout: PEER_TIMEOUT,
             round: 0,
             stats: NetStats::default(),
+            // Thread tag convention: coordinator is 0, machine m is m+1.
+            tbuf: spec
+                .sink
+                .buf(engine_name(spec.selector), me as u32, me as u32 + 1),
         },
     };
     let handle = std::thread::spawn(move || machine_main(machine, cmd_rx, report_tx));
@@ -1349,6 +1394,10 @@ struct Snapshot {
     bounds: Vec<MergeBound>,
     rounds: Vec<RoundMetrics>,
     log: Vec<BatchRecord>,
+    /// Round-scoped trace events accumulated up to this cut — rewound on
+    /// rollback exactly like `log`, so re-executed rounds never
+    /// double-emit (the analyzer's totals == RunMetrics contract).
+    tevents: Vec<TraceEvent>,
     /// Per-machine checkpoint chain: one full blob, then deltas.
     chains: Vec<Vec<Vec<u8>>>,
 }
@@ -1463,6 +1512,14 @@ struct Driver {
     trace: Vec<(usize, Vec<MergePair>)>,
     /// Every packet posted since the last cut (shard-replay mode only).
     journal: Vec<JournalRecord>,
+    /// Round-scoped trace events (machine events shipped in reports,
+    /// driver round spans, sync points) — rewound with the snapshot.
+    tevents: Vec<TraceEvent>,
+    /// Durable trace buffer for events whose metrics counterparts
+    /// accumulate across rollbacks (run span, checkpoint cuts, faults,
+    /// recovery) — never rewound.
+    tbuf: TraceBuf,
+    sink: TraceSink,
     merges: Vec<Merge>,
     bounds: Vec<MergeBound>,
     metrics: RunMetrics,
@@ -1505,21 +1562,52 @@ impl Driver {
     /// last cut, rewind the driver-side outputs, replay. The rounds and
     /// bytes being re-executed are charged to the recovery metrics.
     fn rollback_global(&mut self) {
+        let teardown_start = self.tbuf.now();
         self.fleet.take().expect("fleet alive").teardown_lossy();
-        self.metrics.recovery_rounds_replayed += (self.round - self.snapshot.round) * self.m;
-        self.metrics.recovery_bytes_replayed += self.metrics.rounds[self.snapshot.rounds.len()..]
+        self.tbuf.span(
+            teardown_start,
+            EventKind::Recovery {
+                stage: RecoveryStage::Teardown,
+                target: COORD,
+                rounds: 0,
+                bytes: 0,
+            },
+        );
+        let rounds_replayed = (self.round - self.snapshot.round) * self.m;
+        let bytes_replayed = self.metrics.rounds[self.snapshot.rounds.len()..]
             .iter()
             .map(|r| r.net_bytes)
             .sum::<usize>();
+        self.metrics.recovery_rounds_replayed += rounds_replayed;
+        self.metrics.recovery_bytes_replayed += bytes_replayed;
         self.merges = self.snapshot.merges.clone();
         self.bounds = self.snapshot.bounds.clone();
         self.metrics.rounds = self.snapshot.rounds.clone();
         self.log = self.snapshot.log.clone();
+        self.tevents = self.snapshot.tevents.clone();
         self.n_active = self.snapshot.n_active;
         self.round = self.snapshot.round;
         self.trace.clear();
         self.journal.clear();
+        let restore_start = self.tbuf.now();
         self.fleet = Some(spawn_fleet(&self.spec, &self.snapshot.chains));
+        self.tbuf.span(
+            restore_start,
+            EventKind::Recovery {
+                stage: RecoveryStage::Restore,
+                target: COORD,
+                rounds: 0,
+                bytes: 0,
+            },
+        );
+        // Emitted where the recovery counters accumulate, with the same
+        // numbers — the analyzer folds these back into the totals.
+        self.tbuf.instant(EventKind::Recovery {
+            stage: RecoveryStage::Replay,
+            target: COORD,
+            rounds: rounds_replayed,
+            bytes: bytes_replayed,
+        });
     }
 
     /// Recover the given dead machines under the configured strategy.
@@ -1539,6 +1627,12 @@ impl Driver {
                     let (rounds_replayed, bytes_replayed) = res?;
                     self.metrics.recovery_rounds_replayed += rounds_replayed;
                     self.metrics.recovery_bytes_replayed += bytes_replayed;
+                    self.tbuf.instant(EventKind::Recovery {
+                        stage: RecoveryStage::Replay,
+                        target: x as u32,
+                        rounds: rounds_replayed,
+                        bytes: bytes_replayed,
+                    });
                 }
                 Ok(())
             }
@@ -1560,7 +1654,12 @@ impl Driver {
                 _ => panic!("expected CheckpointBlob report"),
             }
         }
-        self.metrics.checkpoint_bytes += blobs.iter().map(|b| b.len()).sum::<usize>();
+        let cut_bytes = blobs.iter().map(|b| b.len()).sum::<usize>();
+        self.metrics.checkpoint_bytes += cut_bytes;
+        self.tbuf.instant(EventKind::CheckpointCut {
+            full,
+            bytes: cut_bytes,
+        });
         let chains: Vec<Vec<Vec<u8>>> = if full {
             blobs.into_iter().map(|b| vec![b]).collect()
         } else {
@@ -1577,6 +1676,7 @@ impl Driver {
             bounds: self.bounds.clone(),
             rounds: self.metrics.rounds.clone(),
             log: self.log.clone(),
+            tevents: self.tevents.clone(),
             chains,
         };
         self.trace.clear();
@@ -1589,6 +1689,8 @@ impl Driver {
     fn execute_round(&mut self) -> Result<Flow, MachineDown> {
         let round = self.round;
         let m = self.m;
+        self.tbuf.set_round(round);
+        let round_start = self.tbuf.now();
         let t_round = Instant::now();
         self.fleet().send_all(round, &Cmd::Round { round })?;
         // Exact rounds: every machine reports its owned pairs and the
@@ -1624,6 +1726,13 @@ impl Driver {
             t_find,
             ..Default::default()
         };
+        // Round-scoped events route through `tevents` (not `tbuf`) so a
+        // rollback rewinds them together with the metrics they mirror.
+        if synced {
+            if let Some(e) = self.tbuf.make_instant(EventKind::SyncPoint) {
+                self.tevents.push(e);
+            }
+        }
         if pairs.is_empty() {
             self.fleet().send_all(round, &Cmd::Finish)?;
             for _ in 0..m {
@@ -1634,11 +1743,15 @@ impl Driver {
                         rm.net_messages += net.messages;
                         rm.net_bytes += net.bytes;
                         self.log.extend(net.log);
+                        self.tevents.extend(net.events);
                     }
                     _ => panic!("expected FinishAck report"),
                 }
             }
             rm.t_exec = t_round.elapsed();
+            if let Some(e) = self.tbuf.make_span(round_start, EventKind::Round) {
+                self.tevents.push(e);
+            }
             self.metrics.rounds.push(rm);
             // Finish is a terminal command: machines have already exited.
             for h in self.fleet.take().expect("fleet alive").handles {
@@ -1669,6 +1782,7 @@ impl Driver {
                     rm.net_bytes += net.bytes;
                     self.log.extend(net.log);
                     self.journal.extend(net.journal);
+                    self.tevents.extend(net.events);
                 }
                 _ => panic!("expected RoundDone report"),
             }
@@ -1690,6 +1804,9 @@ impl Driver {
         self.n_active -= pairs.len();
         rm.t_merge = t_merge.elapsed();
         rm.t_exec = t_round.elapsed();
+        if let Some(e) = self.tbuf.make_span(round_start, EventKind::Round) {
+            self.tevents.push(e);
+        }
         self.metrics.rounds.push(rm);
         if self.n_active <= 1 {
             self.fleet.take().expect("fleet alive").shutdown();
@@ -1706,11 +1823,15 @@ impl Driver {
     /// failures we did not inject — as global rollbacks, bounded by
     /// [`MAX_DETECTED_RECOVERIES`].
     fn run(mut self, t0: Instant) -> (RacResult, NetReport, Vec<MergeBound>) {
+        let run_start = self.tbuf.now();
         self.fleet = Some(spawn_fleet(&self.spec, &self.snapshot.chains));
         let mut detected = 0usize;
         while self.round < self.max_rounds {
             let hits = self.fault_hits();
             if !hits.is_empty() {
+                for &x in &hits {
+                    self.tbuf.instant(EventKind::Fault { target: x as u32 });
+                }
                 let t = Instant::now();
                 let res = self.recover(&hits);
                 self.metrics.t_recover += t.elapsed();
@@ -1750,13 +1871,26 @@ impl Driver {
         }
         self.metrics.total_time = t0.elapsed();
         self.log.sort_by_key(|b| (b.round, b.src, b.dst));
+        self.tbuf.span(run_start, EventKind::Run);
+        self.sink.absorb_events(std::mem::take(&mut self.tevents));
+        let Driver {
+            sink,
+            tbuf,
+            n,
+            merges,
+            metrics,
+            log,
+            bounds,
+            ..
+        } = self;
+        sink.absorb(tbuf);
         (
             RacResult {
-                dendrogram: Dendrogram::new(self.n, self.merges),
-                metrics: self.metrics,
+                dendrogram: Dendrogram::new(n, merges),
+                metrics,
             },
-            NetReport { batches: self.log },
-            self.bounds,
+            NetReport { batches: log },
+            bounds,
         )
     }
 }
@@ -1826,8 +1960,17 @@ pub(super) fn run_executed(
             })]
         })
         .collect();
+    let sink = core.sink.clone();
+    let mut tbuf = sink.buf(engine_name(selector), COORD, 0);
     let mut metrics = RunMetrics::default();
-    metrics.checkpoint_bytes += chains.iter().map(|c| c[0].len()).sum::<usize>();
+    let boot_bytes = chains.iter().map(|c| c[0].len()).sum::<usize>();
+    metrics.checkpoint_bytes += boot_bytes;
+    // The boot cut is a checkpoint like any other: trace it where its
+    // bytes are charged.
+    tbuf.instant(EventKind::CheckpointCut {
+        full: true,
+        bytes: boot_bytes,
+    });
     let spec = FleetSpec {
         machines: m,
         linkage: core.linkage,
@@ -1836,6 +1979,7 @@ pub(super) fn run_executed(
         latency: opts.latency,
         jitter: opts.jitter,
         journal: opts.recovery_mode == RecoveryMode::ShardReplay,
+        sink: sink.clone(),
     };
     let driver = Driver {
         spec,
@@ -1855,10 +1999,14 @@ pub(super) fn run_executed(
             bounds: Vec::new(),
             rounds: Vec::new(),
             log: Vec::new(),
+            tevents: Vec::new(),
             chains,
         },
         trace: Vec::new(),
         journal: Vec::new(),
+        tevents: Vec::new(),
+        tbuf,
+        sink,
         merges: Vec::new(),
         bounds: Vec::new(),
         metrics,
@@ -1928,6 +2076,7 @@ mod tests {
             peer_timeout: Duration::from_millis(25),
             round: 3,
             stats: NetStats::default(),
+            tbuf: TraceSink::disabled().buf("dist_rac", me as u32, me as u32 + 1),
         }
     }
 

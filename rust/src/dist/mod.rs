@@ -159,6 +159,7 @@ use crate::metrics::{RoundMetrics, RunMetrics};
 use crate::rac::logic::{compute_union_map, scan_nn, PairView};
 use crate::rac::{RacResult, NO_NN};
 use crate::store::NeighborStore;
+use crate::trace::{EventKind, Phase as TracePhase, TraceSink, COORD};
 
 /// Simulated cost of one work unit (one neighbor entry / flag op).
 const T_UNIT_NS: u128 = 200;
@@ -268,6 +269,17 @@ struct DistCore {
     pending: Vec<Vec<Message>>,
     /// Hard cap on rounds (safety valve, as in the shared-memory engines).
     max_rounds: usize,
+    /// Structured-event sink ([`crate::trace`]); disabled by default.
+    /// Purely observational — never read by the round body.
+    sink: TraceSink,
+}
+
+/// The engine name a selector runs under, for trace stamping.
+pub(crate) fn engine_name(selector: DistSelector) -> &'static str {
+    match selector {
+        DistSelector::Rnn => "dist_rac",
+        DistSelector::Good { .. } | DistSelector::GoodBatched { .. } => "dist_approx",
+    }
 }
 
 impl DistCore {
@@ -306,6 +318,7 @@ impl DistCore {
             },
             pending: vec![Vec::new(); cfg.machines * cfg.machines],
             max_rounds: 4 * n + 64,
+            sink: TraceSink::disabled(),
         }
     }
 
@@ -326,6 +339,12 @@ impl DistCore {
     /// Run the sharded round loop to completion.
     fn run_rounds(mut self, selector: DistSelector) -> (RacResult, NetReport, Vec<MergeBound>) {
         let t0 = Instant::now();
+        // Coordinator-level trace buffer. The simulation has no real
+        // per-machine threads, so wire traffic is emitted as one aggregate
+        // `wire_send` per round — totals still equal the RunMetrics
+        // counters, which is the analyzer's contract.
+        let mut tb = self.sink.buf(engine_name(selector), COORD, 0);
+        let run_start = tb.now();
         let m = self.cfg.machines;
         let cores = self.cfg.cores_per_machine as u64;
         let mut net = Network::new(m);
@@ -349,6 +368,8 @@ impl DistCore {
                 ..Default::default()
             };
             let mut load = vec![ShardLoad::default(); m];
+            tb.set_round(round);
+            let round_start = tb.now();
 
             // ---- Phase 1: select this round's merge pairs ---------------
             // Every round of the per-round engines is one global
@@ -358,6 +379,7 @@ impl DistCore {
             // deferred cross-machine patches first, so the exchange
             // operates on reconciled replicas.
             let t = Instant::now();
+            let find_start = tb.now();
             let (pairs, synced) = match selector {
                 DistSelector::Rnn => {
                     rm.sync_points = 1;
@@ -372,16 +394,30 @@ impl DistCore {
                 }
             };
             rm.t_find = t.elapsed();
+            tb.span(find_start, EventKind::Phase(TracePhase::Find));
+            for _ in 0..rm.sync_points {
+                tb.instant(EventKind::SyncPoint);
+            }
             rm.merges = pairs.len();
 
             if pairs.is_empty() {
                 finish_round(&mut rm, &mut net, &load, cores);
+                if rm.net_messages > 0 {
+                    tb.instant(EventKind::WireSend {
+                        dst: COORD,
+                        step: 0,
+                        msgs: rm.net_messages,
+                        bytes: rm.net_bytes,
+                    });
+                }
+                tb.span(round_start, EventKind::Round);
                 metrics.rounds.push(rm);
                 break;
             }
 
             // ---- Phase 2: update cluster dissimilarities ----------------
             let t = Instant::now();
+            let merge_start = tb.now();
             let unions = self.compute_unions(&pairs, &mut net, &mut load, synced);
             for p in &pairs {
                 merges.push(Merge {
@@ -399,9 +435,11 @@ impl DistCore {
             n_active -= rm.merges;
             self.active_ids.retain(|&c| self.active[c as usize]);
             rm.t_merge = t.elapsed();
+            tb.span(merge_start, EventKind::Phase(TracePhase::Merge));
 
             // ---- Phase 3: update nearest neighbors (local) --------------
             let t = Instant::now();
+            let update_start = tb.now();
             let updates: Vec<(u32, u32, Weight, usize)> = self
                 .active_ids
                 .iter()
@@ -430,6 +468,7 @@ impl DistCore {
                 self.matched[p.partner as usize] = false;
             }
             rm.t_update_nn = t.elapsed();
+            tb.span(update_start, EventKind::Phase(TracePhase::UpdateNn));
 
             if n_active <= 1 {
                 // A local round can finish the run outright only when one
@@ -442,6 +481,15 @@ impl DistCore {
                 );
             }
             finish_round(&mut rm, &mut net, &load, cores);
+            if rm.net_messages > 0 {
+                tb.instant(EventKind::WireSend {
+                    dst: COORD,
+                    step: 0,
+                    msgs: rm.net_messages,
+                    bytes: rm.net_bytes,
+                });
+            }
+            tb.span(round_start, EventKind::Round);
             metrics.rounds.push(rm);
 
             if n_active <= 1 {
@@ -450,6 +498,8 @@ impl DistCore {
         }
 
         metrics.total_time = t0.elapsed();
+        tb.span(run_start, EventKind::Run);
+        self.sink.absorb(tb);
         (
             RacResult {
                 dendrogram: Dendrogram::new(self.n, merges),
@@ -982,6 +1032,13 @@ impl DistRacEngine {
         self
     }
 
+    /// Stream structured trace events into `sink` (see [`crate::trace`]).
+    /// Works in both simulated and executed mode; purely observational.
+    pub fn with_trace(mut self, sink: &TraceSink) -> DistRacEngine {
+        self.core.sink = sink.clone();
+        self
+    }
+
     /// Run to completion; returns the dendrogram and per-round metrics
     /// (including the simulated network columns).
     pub fn run(self) -> RacResult {
@@ -1044,6 +1101,13 @@ impl DistApproxEngine {
     /// measured `t_exec` instead of modeled `t_sim`.
     pub fn with_exec(mut self, opts: ExecOptions) -> DistApproxEngine {
         self.exec = Some(opts);
+        self
+    }
+
+    /// Stream structured trace events into `sink` (see [`crate::trace`]).
+    /// Works in both simulated and executed mode; purely observational.
+    pub fn with_trace(mut self, sink: &TraceSink) -> DistApproxEngine {
+        self.core.sink = sink.clone();
         self
     }
 

@@ -60,6 +60,7 @@ use crate::metrics::{RoundMetrics, RunMetrics};
 use crate::rac::logic::{compute_union_map, scan_nn, PairView};
 use crate::rac::NO_NN;
 use crate::store::{NeighborStore, NeighborsRef, RowRef, UnionRow};
+use crate::trace::{EventKind, Phase as TracePhase, TraceSink, COORD};
 use crate::util::parallel::default_threads;
 use crate::util::pool::Pool;
 
@@ -342,6 +343,10 @@ pub struct RoundDriver<S: EngineStore> {
     state: RoundState,
     threads: usize,
     max_rounds: usize,
+    /// Where span/instant events go; the default disabled sink makes
+    /// every emission site a single branch (pinned in `hot_paths`).
+    sink: TraceSink,
+    engine_name: &'static str,
 }
 
 impl<S: EngineStore> RoundDriver<S> {
@@ -355,6 +360,8 @@ impl<S: EngineStore> RoundDriver<S> {
             // Safety valve for non-reducible linkages (same cap as the
             // pre-driver engines).
             max_rounds: 4 * n + 64,
+            sink: TraceSink::disabled(),
+            engine_name: "rac",
         }
     }
 
@@ -368,6 +375,15 @@ impl<S: EngineStore> RoundDriver<S> {
         self.max_rounds = max_rounds;
     }
 
+    /// Stream run/round/phase events into `sink`, stamped `engine`.
+    /// Tracing is purely observational: it never touches driver state,
+    /// so traced runs stay bitwise identical to untraced ones
+    /// (`rust/tests/trace_invariance.rs`).
+    pub fn set_trace(&mut self, sink: TraceSink, engine: &'static str) {
+        self.sink = sink;
+        self.engine_name = engine;
+    }
+
     /// Run to completion: init NN scan, then rounds of select → merge →
     /// rescan until no pair is selected (or the safety cap trips).
     pub fn run<P: PairSelector<S>>(mut self, selector: &mut P) -> DriverResult {
@@ -375,6 +391,8 @@ impl<S: EngineStore> RoundDriver<S> {
         // and frequent, so per-phase thread spawning would dominate.
         let pool = Pool::new(self.threads);
         let t0 = Instant::now();
+        let mut tb = self.sink.buf(self.engine_name, COORD, 0);
+        let run_start = tb.now();
         let n = self.state.n;
         let mut merges: Vec<Merge> = Vec::with_capacity(n.saturating_sub(1));
         let mut bounds: Vec<MergeBound> = Vec::with_capacity(n.saturating_sub(1));
@@ -392,6 +410,8 @@ impl<S: EngineStore> RoundDriver<S> {
 
         let mut n_active = n;
         for round in 0..self.max_rounds {
+            tb.set_round(round);
+            let round_start = tb.now();
             let mut rm = RoundMetrics {
                 round,
                 clusters: n_active,
@@ -400,11 +420,14 @@ impl<S: EngineStore> RoundDriver<S> {
 
             // ---- Phase 1: select this round's merge pairs ---------------
             let t = Instant::now();
+            let find_start = tb.now();
             let pairs = selector.select(&pool, &self.store, &mut self.state, &mut rm);
             rm.t_find = t.elapsed();
+            tb.span(find_start, EventKind::Phase(TracePhase::Find));
             rm.merges = pairs.len();
 
             if pairs.is_empty() {
+                tb.span(round_start, EventKind::Round);
                 metrics.rounds.push(rm);
                 break;
             }
@@ -414,6 +437,7 @@ impl<S: EngineStore> RoundDriver<S> {
             // shared state; pair–pair dissimilarities are computed twice,
             // once by each leader — the paper's contention-free choice)...
             let t = Instant::now();
+            let merge_start = tb.now();
             let unions: Vec<UnionRow> = {
                 let store = &self.store;
                 let state = &self.state;
@@ -457,12 +481,14 @@ impl<S: EngineStore> RoundDriver<S> {
                 self.state.active_ids.retain(|&c| active[c as usize]);
             }
             rm.t_merge = t.elapsed();
+            tb.span(merge_start, EventKind::Phase(TracePhase::Merge));
 
             // ---- Phase 3: update nearest neighbors ----------------------
             // Only a cluster that merged, or whose cached NN merged, can
             // see its row minimum change (reducibility: patches never
             // lower a row's minimum) — the paper's rescan condition.
             let t = Instant::now();
+            let update_start = tb.now();
             let updates: Vec<(u32, u32, Weight, usize)> = {
                 let st = &self.state;
                 let store = &self.store;
@@ -493,6 +519,8 @@ impl<S: EngineStore> RoundDriver<S> {
                 self.state.matched[pr.partner as usize] = false;
             }
             rm.t_update_nn = t.elapsed();
+            tb.span(update_start, EventKind::Phase(TracePhase::UpdateNn));
+            tb.span(round_start, EventKind::Round);
             metrics.rounds.push(rm);
 
             if n_active <= 1 {
@@ -501,6 +529,8 @@ impl<S: EngineStore> RoundDriver<S> {
         }
 
         metrics.total_time = t0.elapsed();
+        tb.span(run_start, EventKind::Run);
+        self.sink.absorb(tb);
         DriverResult {
             dendrogram: Dendrogram::new(n, merges),
             metrics,

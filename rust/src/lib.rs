@@ -130,6 +130,43 @@
 //! `rust/tests/approx_quality.rs`. `benches/approx_tradeoff.rs` sweeps
 //! the ε × linkage × threads matrix and reports rounds, wall time, and
 //! adjusted-Rand agreement against the exact dendrogram.
+//!
+//! ## Observability
+//!
+//! Every engine can stream structured events into a [`trace::TraceSink`]
+//! (TOML `[output] trace_path`/`trace_format`, CLI `--trace` /
+//! `--trace-format`). The schema is small and stable — each event is
+//! stamped with engine, machine id ([`trace::COORD`] for
+//! coordinator-level events), an OS-thread tag, the round, and
+//! nanoseconds on one shared monotonic clock:
+//!
+//! | kind             | span? | payload |
+//! |------------------|-------|---------|
+//! | `run`            | span  | — |
+//! | `round`          | span  | — |
+//! | `phase`          | span  | `phase` ∈ find / merge / update_nn |
+//! | `barrier_wait`   | span  | `step` |
+//! | `wire_send`      | inst. | `dst`, `step`, `msgs`, `bytes` |
+//! | `wire_recv`      | inst. | `src`, `step`, `bytes` |
+//! | `sync_point`     | inst. | — |
+//! | `checkpoint_cut` | inst. | `full`, `bytes` |
+//! | `fault`          | inst. | `target` |
+//! | `recovery`       | mixed | `stage`, `target`, `rounds`, `bytes` |
+//!
+//! The executed fleet's machines buffer events locally and ship them on
+//! the existing per-round report channel, merged at join — the hot path
+//! takes no lock. The overhead contract: tracing is purely
+//! observational (traced runs are bitwise identical to untraced —
+//! `rust/tests/trace_invariance.rs`), the *disabled* sink costs one
+//! branch per emission site (pinned in `benches/hot_paths.rs`), and
+//! event totals equal the [`metrics::RunMetrics`] counters because they
+//! are emitted at the same accounting sites — `rac trace-report`
+//! ([`trace::analyze`]) folds a trace into per-machine phase time,
+//! barrier stragglers, the wire matrix, the checkpoint/recovery
+//! timeline and per-round critical-path attribution, and asserts that
+//! equality. Perfetto how-to: run with `--trace run.json --trace-format
+//! chrome`, open <https://ui.perfetto.dev>, and load the file — each
+//! machine renders as a process, phases and barrier waits as slices.
 
 pub mod approx;
 pub mod config;
@@ -146,4 +183,5 @@ pub mod pipeline;
 pub mod rac;
 pub mod runtime;
 pub mod store;
+pub mod trace;
 pub mod util;

@@ -9,6 +9,7 @@
 //! rac verify [--n N] [--seeds S]             RAC vs HAC exactness sweep
 //! rac graph-info --config <file.toml>        build the graph, print stats
 //! rac kernels [--artifacts DIR]              list + smoke the AOT kernels
+//! rac trace-report --trace <file> [--json]   analyze a recorded trace
 //! ```
 //!
 //! `cluster` flags: `--dataset sift_like|docs_like|grid1d|adversarial|stable|random_regular`,
@@ -30,6 +31,13 @@
 //! between BSP global rollback and journaled single-shard replay, and
 //! `--checkpoint-full-every N` sets the delta-checkpoint cadence (every
 //! Nth cut is a full blob; the rest are dirty-row deltas).
+//!
+//! Observability flags (`run` and `cluster`): `--trace FILE` records a
+//! structured event trace (`--trace-format jsonl|chrome`; `chrome` loads
+//! directly in Perfetto), `--metrics-out FILE` writes the run's metrics
+//! JSON. `rac trace-report --trace FILE` folds a recorded trace into
+//! per-machine phase time, barrier stragglers, the wire matrix, and the
+//! checkpoint/recovery timeline.
 
 use std::process::ExitCode;
 
@@ -43,6 +51,7 @@ use rac_hac::linkage::Linkage;
 use rac_hac::pipeline;
 use rac_hac::rac::RacEngine;
 use rac_hac::runtime::{default_artifacts_dir, KernelRuntime};
+use rac_hac::trace::{self, TraceFormat};
 use rac_hac::util::json::obj;
 
 fn main() -> ExitCode {
@@ -53,6 +62,7 @@ fn main() -> ExitCode {
         Some("verify") => cmd_verify(&args[1..]),
         Some("graph-info") => cmd_graph_info(&args[1..]),
         Some("kernels") => cmd_kernels(&args[1..]),
+        Some("trace-report") => cmd_trace_report(&args[1..]),
         Some("help") | Some("--help") | Some("-h") | None => {
             print!("{HELP}");
             Ok(())
@@ -72,7 +82,8 @@ const HELP: &str = "\
 rac — Reciprocal Agglomerative Clustering coordinator
 
 USAGE:
-  rac run --config <file.toml> [--json]
+  rac run --config <file.toml> [--trace FILE] [--trace-format jsonl|chrome]
+          [--metrics-out FILE] [--json]
   rac cluster [--dataset T] [--n N] [--d D] [--k K] [--xla] [--linkage L]
               [--engine E] [--machines M] [--cpus C] [--epsilon E]
               [--sync-mode per_round|batched] [--vshards V]
@@ -80,10 +91,13 @@ USAGE:
               [--jitter-us N] [--fault-at M:R[,M:R...]] [--fault-rate P]
               [--fault-seed S] [--recovery-mode global|shard_replay]
               [--checkpoint-full-every N]
+              [--trace FILE] [--trace-format jsonl|chrome]
+              [--metrics-out FILE]
               [--seed S] [--json]
   rac verify [--n N] [--seeds S]
   rac graph-info --config <file.toml>
   rac kernels [--artifacts DIR]
+  rac trace-report --trace <file> [--json]
 ";
 
 /// Tiny flag parser: `--key value` pairs plus boolean `--key` switches.
@@ -204,12 +218,36 @@ fn report(out: &pipeline::RunOutput, json: bool) {
     }
 }
 
+/// Observability overrides shared by `run` and `cluster`: `--trace` /
+/// `--trace-format` / `--metrics-out` beat the config's `[output]`
+/// section, validated with the same rules as the TOML fields.
+fn apply_output_flags(cfg: &mut RunConfig, flags: &Flags) -> Result<()> {
+    if let Some(p) = flags.get("trace") {
+        cfg.output.trace_path = Some(p.to_string());
+    }
+    if let Some(f) = flags.get("trace-format") {
+        if cfg.output.trace_path.is_none() {
+            return Err(anyhow!(
+                "--trace-format needs a trace destination (--trace FILE or output.trace_path)"
+            ));
+        }
+        cfg.output.trace_format = TraceFormat::parse(f).ok_or_else(|| {
+            anyhow!("unknown --trace-format {f:?} (expected \"jsonl\" or \"chrome\")")
+        })?;
+    }
+    if let Some(p) = flags.get("metrics-out") {
+        cfg.output.metrics_out = Some(p.to_string());
+    }
+    Ok(())
+}
+
 fn cmd_run(args: &[String]) -> Result<()> {
     let flags = Flags::parse(args)?;
     let path = flags
         .get("config")
         .ok_or_else(|| anyhow!("--config <file.toml> required"))?;
-    let cfg = RunConfig::from_file(std::path::Path::new(path))?;
+    let mut cfg = RunConfig::from_file(std::path::Path::new(path))?;
+    apply_output_flags(&mut cfg, &flags)?;
     let out = pipeline::run(&cfg)?;
     report(&out, flags.has("json"));
     Ok(())
@@ -290,9 +328,32 @@ fn cmd_cluster(args: &[String]) -> Result<()> {
             text.push_str(&format!("{key} = {v}\n"));
         }
     }
-    let cfg = RunConfig::from_toml_str(&text)?;
+    let mut cfg = RunConfig::from_toml_str(&text)?;
+    apply_output_flags(&mut cfg, &flags)?;
     let out = pipeline::run(&cfg)?;
     report(&out, flags.has("json"));
+    Ok(())
+}
+
+/// Fold a recorded trace into the straggler/critical-path report
+/// (human-readable by default, `--json` for the machine shape). The
+/// events are schema-validated before analysis, so a malformed or
+/// hand-edited trace fails loudly instead of folding into nonsense.
+fn cmd_trace_report(args: &[String]) -> Result<()> {
+    let flags = Flags::parse(args)?;
+    let path = flags
+        .get("trace")
+        .ok_or_else(|| anyhow!("--trace <file> required"))?;
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+    let events = trace::parse_any(&text).map_err(|e| anyhow!("parsing trace {path:?}: {e}"))?;
+    trace::analyze::validate_events(&events)
+        .map_err(|e| anyhow!("invalid trace {path:?}: {e}"))?;
+    let report = trace::analyze::analyze(&events);
+    if flags.has("json") {
+        println!("{}", trace::analyze::report_json(&report));
+    } else {
+        print!("{}", trace::analyze::render(&report));
+    }
     Ok(())
 }
 

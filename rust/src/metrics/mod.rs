@@ -227,6 +227,17 @@ impl RunMetrics {
             ),
             ("total_merges", self.total_merges().into()),
             ("merge_rounds", self.merge_rounds().into()),
+            ("total_net_messages", self.total_net_messages().into()),
+            ("total_net_bytes", self.total_net_bytes().into()),
+            ("total_sync_points", self.total_sync_points().into()),
+            (
+                "total_sim_time_us",
+                (self.total_sim_time().as_micros() as usize).into(),
+            ),
+            (
+                "total_exec_time_us",
+                (self.total_exec_time().as_micros() as usize).into(),
+            ),
             (
                 "recovery_rounds_replayed",
                 self.recovery_rounds_replayed.into(),
@@ -341,6 +352,41 @@ mod tests {
         assert!(js.contains("\"total_time_us\":123"), "{js}");
         // Parseable by our own reader.
         crate::util::json::Json::parse(&js).unwrap();
+    }
+
+    #[test]
+    fn run_level_aggregates_serialize() {
+        let run = RunMetrics {
+            rounds: vec![
+                RoundMetrics {
+                    net_messages: 3,
+                    net_bytes: 100,
+                    sync_points: 1,
+                    t_sim: Duration::from_micros(7),
+                    t_exec: Duration::from_micros(11),
+                    ..round(10, 5, 5)
+                },
+                RoundMetrics {
+                    net_messages: 2,
+                    net_bytes: 28,
+                    sync_points: 1,
+                    t_sim: Duration::from_micros(5),
+                    t_exec: Duration::from_micros(31),
+                    ..round(5, 2, 2)
+                },
+            ],
+            ..Default::default()
+        };
+        let js = run.to_json().to_string();
+        assert!(js.contains("\"total_net_messages\":5"), "{js}");
+        assert!(js.contains("\"total_net_bytes\":128"), "{js}");
+        assert!(js.contains("\"total_sync_points\":2"), "{js}");
+        assert!(js.contains("\"total_sim_time_us\":12"), "{js}");
+        assert!(js.contains("\"total_exec_time_us\":42"), "{js}");
+        // Round-trip through our own parser and read the fields back.
+        let v = crate::util::json::Json::parse(&js).unwrap();
+        assert_eq!(v.get("total_net_bytes").unwrap().as_usize(), Some(128));
+        assert_eq!(v.get("total_sync_points").unwrap().as_usize(), Some(2));
     }
 
     #[test]

@@ -19,6 +19,7 @@ use crate::knn::{complete_graph, epsilon_graph, knn_graph, Backend};
 use crate::metrics::RunMetrics;
 use crate::rac::{RacEngine, RacResult};
 use crate::runtime::{default_artifacts_dir, KernelRuntime};
+use crate::trace::{self, TraceSink};
 use crate::util::parallel::default_threads;
 
 /// Everything a finished run reports.
@@ -77,8 +78,17 @@ pub fn build_graph(cfg: &RunConfig) -> Result<Graph> {
     }
 }
 
-/// Run the configured engine over a graph.
+/// Run the configured engine over a graph (untraced).
 pub fn run_engine(cfg: &RunConfig, g: &Graph) -> Result<RacResult> {
+    run_engine_traced(cfg, g, &TraceSink::disabled())
+}
+
+/// Run the configured engine over a graph, streaming structured trace
+/// events into `sink` (a disabled sink records nothing and costs one
+/// branch per emission site — see [`crate::trace`]). The sequential
+/// baselines (`naive_hac`, `nn_chain`) have no round structure and are
+/// not traced.
+pub fn run_engine_traced(cfg: &RunConfig, g: &Graph, sink: &TraceSink) -> Result<RacResult> {
     // The config parser already enforces this; hand-built configs get the
     // same message instead of silently ignoring the exec block.
     if cfg.exec.is_some()
@@ -123,10 +133,14 @@ pub fn run_engine(cfg: &RunConfig, g: &Graph) -> Result<RacResult> {
             } else {
                 threads
             };
-            Ok(RacEngine::new(g, cfg.linkage).with_threads(threads).run())
+            Ok(RacEngine::new(g, cfg.linkage)
+                .with_threads(threads)
+                .with_trace(sink)
+                .run())
         }
         EngineSpec::DistRac { machines, cpus } => {
-            let mut eng = DistRacEngine::new(g, cfg.linkage, DistConfig::new(machines, cpus));
+            let mut eng = DistRacEngine::new(g, cfg.linkage, DistConfig::new(machines, cpus))
+                .with_trace(sink);
             if let Some(opts) = cfg.exec.clone() {
                 eng = eng.with_exec(opts);
             }
@@ -140,6 +154,7 @@ pub fn run_engine(cfg: &RunConfig, g: &Graph) -> Result<RacResult> {
             };
             let r = ApproxEngine::new(g, cfg.linkage, epsilon)
                 .with_threads(threads)
+                .with_trace(sink)
                 .run();
             // The per-merge quality trace stays engine-side; the pipeline
             // reports the common dendrogram + metrics shape.
@@ -156,7 +171,8 @@ pub fn run_engine(cfg: &RunConfig, g: &Graph) -> Result<RacResult> {
         } => {
             let mut eng =
                 DistApproxEngine::new(g, cfg.linkage, DistConfig::new(machines, cpus), epsilon)
-                    .with_sync_mode(sync);
+                    .with_sync_mode(sync)
+                    .with_trace(sink);
             if let Some(opts) = cfg.exec.clone() {
                 eng = eng.with_exec(opts);
             }
@@ -169,12 +185,20 @@ pub fn run_engine(cfg: &RunConfig, g: &Graph) -> Result<RacResult> {
     }
 }
 
-/// Full pipeline: graph then engine, with construction timing.
+/// Full pipeline: graph then engine, with construction timing. When the
+/// config's `[output]` section asks for them, the structured trace and
+/// the metrics JSON are written before returning.
 pub fn run(cfg: &RunConfig) -> Result<RunOutput> {
     let t = Instant::now();
     let g = build_graph(cfg)?;
     let t_graph = t.elapsed();
-    let result = run_engine(cfg, &g)?;
+    let sink = if cfg.output.trace_path.is_some() {
+        TraceSink::enabled()
+    } else {
+        TraceSink::disabled()
+    };
+    let result = run_engine_traced(cfg, &g, &sink)?;
+    write_outputs(cfg, &result, &sink)?;
     Ok(RunOutput {
         result,
         t_graph,
@@ -182,6 +206,22 @@ pub fn run(cfg: &RunConfig) -> Result<RunOutput> {
         graph_edges: g.m(),
         graph_max_degree: g.max_degree(),
     })
+}
+
+/// Write the `[output]` artifacts: the collected trace (in the
+/// configured format) and the run's `RunMetrics` JSON.
+pub fn write_outputs(cfg: &RunConfig, result: &RacResult, sink: &TraceSink) -> Result<()> {
+    if let Some(path) = &cfg.output.trace_path {
+        let events = sink.take();
+        let text = trace::write(&events, cfg.output.trace_format);
+        std::fs::write(path, text).with_context(|| format!("writing trace to {path:?}"))?;
+    }
+    if let Some(path) = &cfg.output.metrics_out {
+        let mut text = result.metrics.to_json().to_string();
+        text.push('\n');
+        std::fs::write(path, text).with_context(|| format!("writing metrics to {path:?}"))?;
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -343,6 +383,42 @@ mod tests {
         assert!(!sim.metrics.total_sim_time().is_zero());
         assert!(!exec.metrics.total_exec_time().is_zero());
         assert!(exec.metrics.total_sim_time().is_zero());
+    }
+
+    #[test]
+    fn output_section_writes_trace_and_metrics_files() {
+        let dir = std::env::temp_dir().join(format!("racout-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let trace_path = dir.join("run.trace.jsonl");
+        let metrics_path = dir.join("metrics.json");
+        let out = run(&cfg(&format!(
+            "[dataset]\ntype = \"grid1d\"\nn = 120\n[cluster]\nlinkage = \"average\"\n\
+             [engine]\ntype = \"dist_rac\"\nmachines = 3\ncpus = 2\n\
+             [output]\ntrace_path = {trace_path:?}\nmetrics_out = {metrics_path:?}\n"
+        )))
+        .unwrap();
+        // The trace parses and its totals match the run's metrics.
+        let events = crate::trace::parse_any(&std::fs::read_to_string(&trace_path).unwrap())
+            .unwrap();
+        crate::trace::analyze::validate_events(&events).unwrap();
+        let report = crate::trace::analyze::analyze(&events);
+        assert_eq!(report.net_bytes, out.result.metrics.total_net_bytes());
+        assert_eq!(report.sync_points, out.result.metrics.total_sync_points());
+        // The metrics file parses back through our own reader (satellite
+        // contract: machine-readable RunMetrics on disk).
+        let js = crate::util::json::Json::parse(
+            &std::fs::read_to_string(&metrics_path).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(
+            js.get("total_merges").and_then(|v| v.as_usize()),
+            Some(out.result.metrics.total_merges())
+        );
+        assert_eq!(
+            js.get("total_net_bytes").and_then(|v| v.as_usize()),
+            Some(out.result.metrics.total_net_bytes())
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -62,6 +62,7 @@ use crate::graph::Graph;
 use crate::linkage::Linkage;
 use crate::metrics::RunMetrics;
 use crate::store::NeighborStore;
+use crate::trace::TraceSink;
 
 /// Sentinel "no nearest neighbor" (isolated cluster).
 pub const NO_NN: u32 = u32::MAX;
@@ -123,6 +124,14 @@ impl RacEngine {
     /// Override the round safety cap.
     pub fn with_max_rounds(mut self, max_rounds: usize) -> Self {
         self.driver.set_max_rounds(max_rounds);
+        self
+    }
+
+    /// Stream structured trace events into `sink` (see [`crate::trace`]).
+    /// Tracing is purely observational: the dendrogram is bitwise
+    /// identical with or without it.
+    pub fn with_trace(mut self, sink: &TraceSink) -> Self {
+        self.driver.set_trace(sink.clone(), "rac");
         self
     }
 

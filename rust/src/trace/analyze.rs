@@ -1,0 +1,682 @@
+//! Fold a trace back into the numbers the paper cares about.
+//!
+//! [`analyze`] turns an event stream into a [`TraceReport`]: per-machine
+//! per-phase time, barrier-idle and the straggler machine per sync
+//! point, the wire-traffic matrix, the checkpoint/recovery timeline,
+//! and per-round critical-path attribution (which machine's slowest
+//! phase bounded the round). The report's totals are *defined* from the
+//! same events the engines emit at their accounting sites, so they must
+//! equal the [`crate::metrics::RunMetrics`] counters — `net_messages`,
+//! `net_bytes`, `sync_points`, `checkpoint_bytes`, `recovery_*` — even
+//! on faulted executed runs (asserted in
+//! `rust/tests/trace_invariance.rs`). [`validate_events`] is the schema
+//! check `rac trace-report` and `make trace-smoke` run on every event.
+
+use std::collections::BTreeMap;
+
+use super::{EventKind, Phase, RecoveryStage, TraceEvent, COORD};
+use crate::util::json::{obj, Json};
+
+/// Accumulated per-machine time by phase, plus what it sent.
+#[derive(Debug, Clone, Default)]
+pub struct MachineSummary {
+    pub machine: u32,
+    pub find_ns: u64,
+    pub merge_ns: u64,
+    pub update_nn_ns: u64,
+    pub barrier_wait_ns: u64,
+    pub sent_msgs: usize,
+    pub sent_bytes: usize,
+}
+
+/// One barrier synchronisation: who idled, for how long, and who the
+/// straggler was. Every participant waits until the last packet lands,
+/// so the machine that waited *least* arrived last — the straggler.
+#[derive(Debug, Clone)]
+pub struct BarrierPoint {
+    pub round: u32,
+    pub step: u8,
+    pub waiters: usize,
+    pub total_wait_ns: u64,
+    pub max_wait_ns: u64,
+    pub straggler: u32,
+}
+
+/// The phase span that bounded a round (critical-path attribution).
+#[derive(Debug, Clone)]
+pub struct RoundPath {
+    pub round: u32,
+    pub machine: u32,
+    pub phase: Phase,
+    pub dur_ns: u64,
+}
+
+/// One checkpoint/fault/recovery event, in timeline order.
+#[derive(Debug, Clone)]
+pub struct TimelineEntry {
+    pub t_ns: u64,
+    pub label: String,
+}
+
+/// Everything [`analyze`] extracts from a trace.
+#[derive(Debug, Clone, Default)]
+pub struct TraceReport {
+    pub engine: String,
+    /// Duration of the `run` span.
+    pub run_ns: u64,
+    /// Completed rounds (count of `round` spans).
+    pub rounds: usize,
+    pub machines: Vec<MachineSummary>,
+    pub barriers: Vec<BarrierPoint>,
+    /// `(src, dst, msgs, bytes)` wire-traffic matrix from `wire_send`
+    /// events, sorted by `(src, dst)`.
+    pub wire: Vec<(u32, u32, usize, usize)>,
+    pub critical_path: Vec<RoundPath>,
+    pub timeline: Vec<TimelineEntry>,
+    // Totals, defined from the same accounting sites as RunMetrics.
+    pub net_messages: usize,
+    pub net_bytes: usize,
+    pub sync_points: usize,
+    pub checkpoint_cuts: usize,
+    pub checkpoint_bytes: usize,
+    pub faults: usize,
+    pub recovery_rounds_replayed: usize,
+    pub recovery_bytes_replayed: usize,
+}
+
+/// Schema validation: every event must be well-formed on its own and
+/// obey the emitter conventions (exactly one `run` span; instants carry
+/// no duration; barrier/receive events come from machines, while
+/// checkpoint/fault/recovery events come from the coordinator).
+pub fn validate_events(events: &[TraceEvent]) -> Result<(), String> {
+    if events.is_empty() {
+        return Err("empty trace".into());
+    }
+    let runs = events
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::Run))
+        .count();
+    if runs != 1 {
+        return Err(format!("expected exactly one run event, found {runs}"));
+    }
+    for (i, e) in events.iter().enumerate() {
+        let fail = |msg: &str| Err(format!("event {i} ({}): {msg}", e.kind.name()));
+        if super::intern_engine(e.engine).is_none() {
+            return fail("unknown engine");
+        }
+        if !e.kind.is_span() && e.dur_ns != 0 {
+            return fail("instant event with nonzero duration");
+        }
+        match e.kind {
+            EventKind::BarrierWait { .. } | EventKind::WireRecv { .. } => {
+                if e.machine == COORD {
+                    return fail("machine-level event stamped with the coordinator id");
+                }
+            }
+            EventKind::CheckpointCut { .. } | EventKind::Fault { .. } | EventKind::Recovery { .. } => {
+                if e.machine != COORD {
+                    return fail("driver-level event stamped with a machine id");
+                }
+            }
+            EventKind::WireSend { msgs, bytes, .. } => {
+                if msgs == 0 || bytes == 0 {
+                    return fail("wire_send with zero traffic");
+                }
+            }
+            _ => {}
+        }
+        // Our convention ties the thread tag to the machine id.
+        let expect_thread = if e.machine == COORD { 0 } else { e.machine + 1 };
+        if e.thread != expect_thread {
+            return fail("thread tag does not match machine id convention");
+        }
+    }
+    Ok(())
+}
+
+/// Fold an event stream into a [`TraceReport`]. The input need not be
+/// sorted; the report's timeline and barrier lists come out ordered.
+pub fn analyze(events: &[TraceEvent]) -> TraceReport {
+    let mut r = TraceReport::default();
+    let mut machines: BTreeMap<u32, MachineSummary> = BTreeMap::new();
+    let mut barriers: BTreeMap<(u32, u8), Vec<(u32, u64, u64)>> = BTreeMap::new();
+    let mut wire: BTreeMap<(u32, u32), (usize, usize)> = BTreeMap::new();
+    let mut paths: BTreeMap<u32, RoundPath> = BTreeMap::new();
+    let mut timeline: Vec<TimelineEntry> = Vec::new();
+    for e in events {
+        match &e.kind {
+            EventKind::Run => {
+                r.engine = e.engine.to_string();
+                r.run_ns = r.run_ns.max(e.dur_ns);
+            }
+            EventKind::Round => r.rounds += 1,
+            EventKind::Phase(p) => {
+                let m = machines.entry(e.machine).or_default();
+                m.machine = e.machine;
+                match p {
+                    Phase::Find => m.find_ns += e.dur_ns,
+                    Phase::Merge => m.merge_ns += e.dur_ns,
+                    Phase::UpdateNn => m.update_nn_ns += e.dur_ns,
+                }
+                let best = paths.entry(e.round).or_insert_with(|| RoundPath {
+                    round: e.round,
+                    machine: e.machine,
+                    phase: *p,
+                    dur_ns: e.dur_ns,
+                });
+                if e.dur_ns > best.dur_ns {
+                    *best = RoundPath {
+                        round: e.round,
+                        machine: e.machine,
+                        phase: *p,
+                        dur_ns: e.dur_ns,
+                    };
+                }
+            }
+            EventKind::BarrierWait { step } => {
+                let m = machines.entry(e.machine).or_default();
+                m.machine = e.machine;
+                m.barrier_wait_ns += e.dur_ns;
+                barriers
+                    .entry((e.round, *step))
+                    .or_default()
+                    .push((e.machine, e.dur_ns, e.t_ns));
+            }
+            EventKind::WireSend {
+                dst, msgs, bytes, ..
+            } => {
+                r.net_messages += msgs;
+                r.net_bytes += bytes;
+                let m = machines.entry(e.machine).or_default();
+                m.machine = e.machine;
+                m.sent_msgs += msgs;
+                m.sent_bytes += bytes;
+                let cell = wire.entry((e.machine, *dst)).or_default();
+                cell.0 += msgs;
+                cell.1 += bytes;
+            }
+            EventKind::WireRecv { .. } => {}
+            EventKind::SyncPoint => r.sync_points += 1,
+            EventKind::CheckpointCut { full, bytes } => {
+                r.checkpoint_cuts += 1;
+                r.checkpoint_bytes += bytes;
+                timeline.push(TimelineEntry {
+                    t_ns: e.t_ns,
+                    label: format!(
+                        "round {}: checkpoint cut ({}, {bytes} bytes)",
+                        e.round,
+                        if *full { "full" } else { "delta" }
+                    ),
+                });
+            }
+            EventKind::Fault { target } => {
+                r.faults += 1;
+                timeline.push(TimelineEntry {
+                    t_ns: e.t_ns,
+                    label: format!("round {}: machine {target} down", e.round),
+                });
+            }
+            EventKind::Recovery {
+                stage,
+                target,
+                rounds,
+                bytes,
+            } => {
+                if *stage == RecoveryStage::Replay {
+                    r.recovery_rounds_replayed += rounds;
+                    r.recovery_bytes_replayed += bytes;
+                }
+                let who = if *target == COORD {
+                    "fleet".to_string()
+                } else {
+                    format!("machine {target}")
+                };
+                timeline.push(TimelineEntry {
+                    t_ns: e.t_ns,
+                    label: format!(
+                        "round {}: recovery {} of {who} ({rounds} machine-rounds, {bytes} bytes)",
+                        e.round,
+                        stage.as_str()
+                    ),
+                });
+            }
+        }
+    }
+    r.machines = machines.into_values().collect();
+    r.barriers = barriers
+        .into_iter()
+        .map(|((round, step), waits)| {
+            let total: u64 = waits.iter().map(|w| w.1).sum();
+            let max = waits.iter().map(|w| w.1).max().unwrap_or(0);
+            // Everyone waits for the last arrival, so the shortest wait
+            // marks the straggler; break ties on the latest start.
+            let straggler = waits
+                .iter()
+                .min_by_key(|(m, dur, t)| (*dur, u64::MAX - *t, *m))
+                .map(|w| w.0)
+                .unwrap_or(COORD);
+            BarrierPoint {
+                round,
+                step,
+                waiters: waits.len(),
+                total_wait_ns: total,
+                max_wait_ns: max,
+                straggler,
+            }
+        })
+        .collect();
+    r.critical_path = paths.into_values().collect();
+    timeline.sort_by_key(|t| t.t_ns);
+    r.timeline = timeline;
+    r
+}
+
+fn ms(ns: u64) -> f64 {
+    ns as f64 / 1e6
+}
+
+/// Human-readable report (`rac trace-report`).
+pub fn render(r: &TraceReport) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "trace: engine {} · {:.3} ms run · {} rounds · {} sync points",
+        r.engine,
+        ms(r.run_ns),
+        r.rounds,
+        r.sync_points
+    );
+    let _ = writeln!(
+        out,
+        "wire: {} msgs / {} bytes · checkpoints: {} cuts / {} bytes · \
+         faults: {} · recovery: {} machine-rounds / {} bytes replayed",
+        r.net_messages,
+        r.net_bytes,
+        r.checkpoint_cuts,
+        r.checkpoint_bytes,
+        r.faults,
+        r.recovery_rounds_replayed,
+        r.recovery_bytes_replayed
+    );
+    if !r.machines.is_empty() {
+        let _ = writeln!(
+            out,
+            "\nper-machine phase time (ms):\n  {:<12} {:>9} {:>9} {:>10} {:>13} {:>12}",
+            "machine", "find", "merge", "update_nn", "barrier_idle", "sent_bytes"
+        );
+        for m in &r.machines {
+            let name = if m.machine == COORD {
+                "coordinator".to_string()
+            } else {
+                format!("machine {}", m.machine)
+            };
+            let _ = writeln!(
+                out,
+                "  {:<12} {:>9.3} {:>9.3} {:>10.3} {:>13.3} {:>12}",
+                name,
+                ms(m.find_ns),
+                ms(m.merge_ns),
+                ms(m.update_nn_ns),
+                ms(m.barrier_wait_ns),
+                m.sent_bytes
+            );
+        }
+    }
+    if !r.barriers.is_empty() {
+        let idle: u64 = r.barriers.iter().map(|b| b.total_wait_ns).sum();
+        let span_total: u64 = r.run_ns.max(1) * r.machines.len().max(1) as u64;
+        let _ = writeln!(
+            out,
+            "\nbarriers: {} sync waits · {:.3} ms total idle ({:.1}% of fleet time); \
+             worst stragglers:",
+            r.barriers.len(),
+            ms(idle),
+            100.0 * idle as f64 / span_total as f64
+        );
+        let mut worst: Vec<&BarrierPoint> = r.barriers.iter().collect();
+        worst.sort_by_key(|b| u64::MAX - b.max_wait_ns);
+        for b in worst.iter().take(5) {
+            let _ = writeln!(
+                out,
+                "  round {:>3} step {}: machine {} arrived last \
+                 ({} waiting, {:.3} ms idle, max {:.3} ms)",
+                b.round,
+                b.step,
+                b.straggler,
+                b.waiters,
+                ms(b.total_wait_ns),
+                ms(b.max_wait_ns)
+            );
+        }
+    }
+    if !r.wire.is_empty() {
+        let _ = writeln!(out, "\nwire matrix (src -> dst: msgs / bytes):");
+        for (src, dst, msgs, bytes) in &r.wire {
+            let s = if *src == COORD {
+                "coord".to_string()
+            } else {
+                src.to_string()
+            };
+            let d = if *dst == COORD {
+                "round".to_string()
+            } else {
+                dst.to_string()
+            };
+            let _ = writeln!(out, "  {s:>5} -> {d:<5}: {msgs:>6} / {bytes}");
+        }
+    }
+    if !r.critical_path.is_empty() {
+        let _ = writeln!(out, "\nper-round critical path (slowest phase span):");
+        for p in &r.critical_path {
+            let name = if p.machine == COORD {
+                "coordinator".to_string()
+            } else {
+                format!("machine {}", p.machine)
+            };
+            let _ = writeln!(
+                out,
+                "  round {:>3}: {} {} {:.3} ms",
+                p.round,
+                name,
+                p.phase.as_str(),
+                ms(p.dur_ns)
+            );
+        }
+    }
+    if !r.timeline.is_empty() {
+        let _ = writeln!(out, "\ncheckpoint / fault / recovery timeline:");
+        for t in &r.timeline {
+            let _ = writeln!(out, "  {:>12.3} ms  {}", ms(t.t_ns), t.label);
+        }
+    }
+    out
+}
+
+/// Machine-readable report (`rac trace-report --json`).
+pub fn report_json(r: &TraceReport) -> Json {
+    obj([
+        ("schema", "trace_report/v1".into()),
+        ("engine", r.engine.clone().into()),
+        ("run_ns", (r.run_ns as usize).into()),
+        ("rounds", r.rounds.into()),
+        ("net_messages", r.net_messages.into()),
+        ("net_bytes", r.net_bytes.into()),
+        ("sync_points", r.sync_points.into()),
+        ("checkpoint_cuts", r.checkpoint_cuts.into()),
+        ("checkpoint_bytes", r.checkpoint_bytes.into()),
+        ("faults", r.faults.into()),
+        (
+            "recovery_rounds_replayed",
+            r.recovery_rounds_replayed.into(),
+        ),
+        (
+            "recovery_bytes_replayed",
+            r.recovery_bytes_replayed.into(),
+        ),
+        (
+            "machines",
+            Json::Arr(
+                r.machines
+                    .iter()
+                    .map(|m| {
+                        obj([
+                            ("machine", (m.machine as usize).into()),
+                            ("find_ns", (m.find_ns as usize).into()),
+                            ("merge_ns", (m.merge_ns as usize).into()),
+                            ("update_nn_ns", (m.update_nn_ns as usize).into()),
+                            ("barrier_wait_ns", (m.barrier_wait_ns as usize).into()),
+                            ("sent_msgs", m.sent_msgs.into()),
+                            ("sent_bytes", m.sent_bytes.into()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "barriers",
+            Json::Arr(
+                r.barriers
+                    .iter()
+                    .map(|b| {
+                        obj([
+                            ("round", (b.round as usize).into()),
+                            ("step", (b.step as usize).into()),
+                            ("waiters", b.waiters.into()),
+                            ("total_wait_ns", (b.total_wait_ns as usize).into()),
+                            ("max_wait_ns", (b.max_wait_ns as usize).into()),
+                            ("straggler", (b.straggler as usize).into()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "wire",
+            Json::Arr(
+                r.wire
+                    .iter()
+                    .map(|(src, dst, msgs, bytes)| {
+                        obj([
+                            ("src", (*src as usize).into()),
+                            ("dst", (*dst as usize).into()),
+                            ("msgs", (*msgs).into()),
+                            ("bytes", (*bytes).into()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "critical_path",
+            Json::Arr(
+                r.critical_path
+                    .iter()
+                    .map(|p| {
+                        obj([
+                            ("round", (p.round as usize).into()),
+                            ("machine", (p.machine as usize).into()),
+                            ("phase", p.phase.as_str().into()),
+                            ("dur_ns", (p.dur_ns as usize).into()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{TraceBuf, TraceSink};
+    use super::*;
+
+    fn ev(machine: u32, round: u32, dur_ns: u64, kind: EventKind) -> TraceEvent {
+        TraceEvent {
+            t_ns: 0,
+            dur_ns,
+            engine: "dist_rac",
+            machine,
+            thread: if machine == COORD { 0 } else { machine + 1 },
+            round,
+            kind,
+        }
+    }
+
+    fn fleet_trace() -> Vec<TraceEvent> {
+        let sink = TraceSink::enabled();
+        let mut bufs: Vec<TraceBuf> = (0..2).map(|m| sink.buf("dist_rac", m, m + 1)).collect();
+        let mut coord = sink.buf("dist_rac", COORD, 0);
+        let run_start = coord.now();
+        for round in 0..2usize {
+            coord.set_round(round);
+            let round_start = coord.now();
+            for (m, buf) in bufs.iter_mut().enumerate() {
+                buf.set_round(round);
+                let t = buf.now();
+                buf.span(t, EventKind::Phase(Phase::Find));
+                buf.instant(EventKind::WireSend {
+                    dst: (1 - m) as u32,
+                    step: 0,
+                    msgs: 1,
+                    bytes: 100 + m,
+                });
+                buf.instant(EventKind::WireRecv {
+                    src: (1 - m) as u32,
+                    step: 0,
+                    bytes: 100 + (1 - m),
+                });
+                let t = buf.now();
+                std::thread::sleep(std::time::Duration::from_micros(50 * (m as u64 + 1)));
+                buf.span(t, EventKind::BarrierWait { step: 0 });
+                let t = buf.now();
+                buf.span(t, EventKind::Phase(Phase::Merge));
+            }
+            coord.instant(EventKind::SyncPoint);
+            coord.instant(EventKind::CheckpointCut {
+                full: round == 0,
+                bytes: 64,
+            });
+            coord.span(round_start, EventKind::Round);
+        }
+        coord.instant(EventKind::Fault { target: 1 });
+        coord.instant(EventKind::Recovery {
+            stage: RecoveryStage::Replay,
+            target: 1,
+            rounds: 3,
+            bytes: 77,
+        });
+        coord.span(run_start, EventKind::Run);
+        for buf in bufs {
+            sink.absorb(buf);
+        }
+        sink.absorb(coord);
+        sink.take()
+    }
+
+    #[test]
+    fn totals_fold_from_events() {
+        let events = fleet_trace();
+        validate_events(&events).unwrap();
+        let r = analyze(&events);
+        assert_eq!(r.engine, "dist_rac");
+        assert_eq!(r.rounds, 2);
+        assert_eq!(r.sync_points, 2);
+        assert_eq!(r.net_messages, 4);
+        assert_eq!(r.net_bytes, 2 * (100 + 101));
+        assert_eq!(r.checkpoint_cuts, 2);
+        assert_eq!(r.checkpoint_bytes, 128);
+        assert_eq!(r.faults, 1);
+        assert_eq!(r.recovery_rounds_replayed, 3);
+        assert_eq!(r.recovery_bytes_replayed, 77);
+        assert!(r.run_ns > 0);
+    }
+
+    #[test]
+    fn per_machine_and_wire_matrix() {
+        let r = analyze(&fleet_trace());
+        assert_eq!(r.machines.len(), 2);
+        for m in &r.machines {
+            assert_eq!(m.sent_msgs, 2);
+            assert!(m.barrier_wait_ns > 0);
+        }
+        // Both directions present, aggregated across rounds.
+        assert_eq!(r.wire.len(), 2);
+        assert_eq!(r.wire[0], (0, 1, 2, 200));
+        assert_eq!(r.wire[1], (1, 0, 2, 202));
+    }
+
+    #[test]
+    fn straggler_is_shortest_wait() {
+        let r = analyze(&fleet_trace());
+        assert_eq!(r.barriers.len(), 2);
+        for b in &r.barriers {
+            assert_eq!(b.waiters, 2);
+            // Machine 0 sleeps least inside its barrier span, so it is
+            // the straggler by the shortest-wait rule.
+            assert_eq!(b.straggler, 0);
+            assert!(b.total_wait_ns >= b.max_wait_ns);
+        }
+    }
+
+    #[test]
+    fn critical_path_and_timeline() {
+        let r = analyze(&fleet_trace());
+        assert_eq!(r.critical_path.len(), 2);
+        for p in &r.critical_path {
+            assert!(p.dur_ns > 0 || p.machine < 2);
+        }
+        assert_eq!(r.timeline.len(), 4, "2 cuts + fault + replay");
+        for pair in r.timeline.windows(2) {
+            assert!(pair[0].t_ns <= pair[1].t_ns);
+        }
+    }
+
+    #[test]
+    fn render_and_json_shapes() {
+        let r = analyze(&fleet_trace());
+        let text = render(&r);
+        assert!(text.contains("per-machine phase time"));
+        assert!(text.contains("wire matrix"));
+        assert!(text.contains("recovery replay of machine 1"));
+        let js = report_json(&r).to_string();
+        let back = Json::parse(&js).unwrap();
+        assert_eq!(
+            back.get("schema").and_then(Json::as_str),
+            Some("trace_report/v1")
+        );
+        assert_eq!(back.get("net_messages").and_then(Json::as_usize), Some(4));
+    }
+
+    #[test]
+    fn validate_rejects_malformed_streams() {
+        assert!(validate_events(&[]).is_err(), "empty trace");
+        let run = ev(COORD, 0, 10, EventKind::Run);
+        assert!(
+            validate_events(&[run.clone(), run.clone()]).is_err(),
+            "duplicate run span"
+        );
+        let mut bad_instant = ev(COORD, 0, 0, EventKind::SyncPoint);
+        bad_instant.dur_ns = 5;
+        assert!(
+            validate_events(&[run.clone(), bad_instant]).is_err(),
+            "instant with duration"
+        );
+        let coord_barrier = ev(COORD, 0, 3, EventKind::BarrierWait { step: 0 });
+        assert!(
+            validate_events(&[run.clone(), coord_barrier]).is_err(),
+            "coordinator barrier"
+        );
+        let machine_cut = ev(1, 0, 0, EventKind::CheckpointCut { full: true, bytes: 1 });
+        assert!(
+            validate_events(&[run.clone(), machine_cut]).is_err(),
+            "machine-level checkpoint"
+        );
+        let empty_send = ev(
+            0,
+            0,
+            0,
+            EventKind::WireSend {
+                dst: 1,
+                step: 0,
+                msgs: 0,
+                bytes: 0,
+            },
+        );
+        assert!(
+            validate_events(&[run.clone(), empty_send]).is_err(),
+            "zero-traffic send"
+        );
+        let mut wrong_thread = ev(0, 0, 0, EventKind::WireSend {
+            dst: 1,
+            step: 0,
+            msgs: 1,
+            bytes: 8,
+        });
+        wrong_thread.thread = 9;
+        assert!(
+            validate_events(&[run, wrong_thread]).is_err(),
+            "thread convention"
+        );
+    }
+}

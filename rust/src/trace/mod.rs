@@ -1,0 +1,850 @@
+//! Structured event tracing for the clustering engines.
+//!
+//! A run can record a stream of [`TraceEvent`]s — span and instant
+//! events with a stable, versioned schema — stamped with the engine,
+//! the machine id (or [`COORD`] for coordinator/driver-level events),
+//! an OS-thread tag, the round, and nanoseconds on one monotonic clock
+//! shared by every participant (the sink's origin). The stream is the
+//! ground truth the round-level [`crate::metrics`] aggregates summarize:
+//! `trace/analyze` folds it back into per-machine phase time, barrier
+//! stragglers, the wire-traffic matrix and the checkpoint/recovery
+//! timeline, and asserts its totals equal the metrics counters.
+//!
+//! ## Threading model
+//!
+//! The hot path takes no lock: each participant owns a [`TraceBuf`]
+//! (a plain `Vec` push; a disabled buf is a single branch), and buffers
+//! are merged into the shared [`TraceSink`] once — at thread join for
+//! the executed fleet's machines, at run end for the coordinator.
+//! Executed-mode machine events ride the existing per-round report
+//! channel (`NetStats`), so tracing adds no synchronization the engine
+//! did not already have. Tracing is purely observational: it never
+//! branches on or mutates algorithm state, so traced runs are bitwise
+//! identical to untraced runs (pinned in `rust/tests/trace_invariance.rs`).
+//!
+//! ## Writers
+//!
+//! Two on-disk formats, selected by `trace_format`:
+//! * `jsonl` — one event object per line ([`write_jsonl`]), the native
+//!   format `rac trace-report` and the analyzer consume.
+//! * `chrome` — Chrome trace-event JSON ([`write_chrome`]), loadable
+//!   directly in Perfetto (<https://ui.perfetto.dev>) or
+//!   `chrome://tracing`; each machine renders as a process, spans as
+//!   slices, instants as marks. The full native event is carried in
+//!   `args`, so the format round-trips losslessly.
+
+pub mod analyze;
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::{obj, Json};
+
+/// Sentinel machine id for coordinator/driver-level events (the
+/// shared-memory engines, the simulated round loop, and the executed
+/// fleet's driver thread).
+pub const COORD: u32 = u32::MAX;
+
+/// Engine names that may stamp events (the closed set lets parsed
+/// events reuse `&'static str` like freshly recorded ones).
+const ENGINES: [&str; 4] = ["rac", "approx", "dist_rac", "dist_approx"];
+
+fn intern_engine(s: &str) -> Option<&'static str> {
+    ENGINES.iter().find(|e| **e == s).copied()
+}
+
+/// The three phases of every bulk-synchronous round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Find,
+    Merge,
+    UpdateNn,
+}
+
+impl Phase {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Phase::Find => "find",
+            Phase::Merge => "merge",
+            Phase::UpdateNn => "update_nn",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Phase> {
+        match s {
+            "find" => Some(Phase::Find),
+            "merge" => Some(Phase::Merge),
+            "update_nn" => Some(Phase::UpdateNn),
+            _ => None,
+        }
+    }
+}
+
+/// Stages of executed-mode fault recovery.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecoveryStage {
+    Teardown,
+    Restore,
+    Replay,
+}
+
+impl RecoveryStage {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RecoveryStage::Teardown => "teardown",
+            RecoveryStage::Restore => "restore",
+            RecoveryStage::Replay => "replay",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RecoveryStage> {
+        match s {
+            "teardown" => Some(RecoveryStage::Teardown),
+            "restore" => Some(RecoveryStage::Restore),
+            "replay" => Some(RecoveryStage::Replay),
+            _ => None,
+        }
+    }
+}
+
+/// What happened. Span kinds carry a duration; instant kinds are points.
+///
+/// | kind             | span? | payload                          | emitted by |
+/// |------------------|-------|----------------------------------|------------|
+/// | `run`            | yes   | —                                | every traced engine, once |
+/// | `round`          | yes   | —                                | round loop / exec driver |
+/// | `phase`          | yes   | `phase`                          | round loop + exec machines |
+/// | `barrier_wait`   | yes   | `step`                           | exec machines (`Wire::collect`) |
+/// | `wire_send`      | no    | `dst`, `step`, `msgs`, `bytes`   | exec machines (`Wire::post`); sim rounds emit one coordinator-level aggregate |
+/// | `wire_recv`      | no    | `src`, `step`, `bytes`           | exec machines (`Wire::collect`) |
+/// | `sync_point`     | no    | —                                | round loop / exec driver |
+/// | `checkpoint_cut` | no    | `full`, `bytes`                  | exec driver |
+/// | `fault`          | no    | `target`                         | exec driver |
+/// | `recovery`       | mixed | `stage`, `target`, `rounds`, `bytes` | exec driver (`teardown`/`restore` spans, `replay` instants) |
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    Run,
+    Round,
+    Phase(Phase),
+    BarrierWait {
+        step: u8,
+    },
+    WireSend {
+        dst: u32,
+        step: u8,
+        msgs: usize,
+        bytes: usize,
+    },
+    WireRecv {
+        src: u32,
+        step: u8,
+        bytes: usize,
+    },
+    SyncPoint,
+    CheckpointCut {
+        full: bool,
+        bytes: usize,
+    },
+    Fault {
+        target: u32,
+    },
+    Recovery {
+        stage: RecoveryStage,
+        target: u32,
+        rounds: usize,
+        bytes: usize,
+    },
+}
+
+impl EventKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Run => "run",
+            EventKind::Round => "round",
+            EventKind::Phase(_) => "phase",
+            EventKind::BarrierWait { .. } => "barrier_wait",
+            EventKind::WireSend { .. } => "wire_send",
+            EventKind::WireRecv { .. } => "wire_recv",
+            EventKind::SyncPoint => "sync_point",
+            EventKind::CheckpointCut { .. } => "checkpoint_cut",
+            EventKind::Fault { .. } => "fault",
+            EventKind::Recovery { .. } => "recovery",
+        }
+    }
+
+    /// Span kinds may carry a nonzero duration; instants must not.
+    pub fn is_span(&self) -> bool {
+        matches!(
+            self,
+            EventKind::Run
+                | EventKind::Round
+                | EventKind::Phase(_)
+                | EventKind::BarrierWait { .. }
+                | EventKind::Recovery {
+                    stage: RecoveryStage::Teardown | RecoveryStage::Restore,
+                    ..
+                }
+        )
+    }
+
+    fn payload(&self) -> Vec<(&'static str, Json)> {
+        match self {
+            EventKind::Run | EventKind::Round | EventKind::SyncPoint => Vec::new(),
+            EventKind::Phase(p) => vec![("phase", p.as_str().into())],
+            EventKind::BarrierWait { step } => vec![("step", (*step as usize).into())],
+            EventKind::WireSend {
+                dst,
+                step,
+                msgs,
+                bytes,
+            } => vec![
+                ("dst", (*dst as usize).into()),
+                ("step", (*step as usize).into()),
+                ("msgs", (*msgs).into()),
+                ("bytes", (*bytes).into()),
+            ],
+            EventKind::WireRecv { src, step, bytes } => vec![
+                ("src", (*src as usize).into()),
+                ("step", (*step as usize).into()),
+                ("bytes", (*bytes).into()),
+            ],
+            EventKind::CheckpointCut { full, bytes } => {
+                vec![("full", (*full).into()), ("bytes", (*bytes).into())]
+            }
+            EventKind::Fault { target } => vec![("target", (*target as usize).into())],
+            EventKind::Recovery {
+                stage,
+                target,
+                rounds,
+                bytes,
+            } => vec![
+                ("stage", stage.as_str().into()),
+                ("target", (*target as usize).into()),
+                ("rounds", (*rounds).into()),
+                ("bytes", (*bytes).into()),
+            ],
+        }
+    }
+}
+
+/// One recorded event. Timestamps are nanoseconds since the owning
+/// sink's origin — a single monotonic clock for the whole run, so
+/// events from different machine threads order correctly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub t_ns: u64,
+    /// Span duration in nanoseconds; 0 for instant events.
+    pub dur_ns: u64,
+    pub engine: &'static str,
+    /// Machine id, or [`COORD`] for coordinator-level events.
+    pub machine: u32,
+    /// OS-thread tag: the coordinator is 0, machine `m` is `m + 1`.
+    pub thread: u32,
+    pub round: u32,
+    pub kind: EventKind,
+}
+
+impl TraceEvent {
+    /// Display label for trace viewers (`phase.find`, `recovery.replay`).
+    pub fn display_name(&self) -> String {
+        match &self.kind {
+            EventKind::Phase(p) => format!("phase.{}", p.as_str()),
+            EventKind::Recovery { stage, .. } => format!("recovery.{}", stage.as_str()),
+            k => k.name().to_string(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let base = vec![
+            ("t_ns", (self.t_ns as usize).into()),
+            ("dur_ns", (self.dur_ns as usize).into()),
+            ("engine", self.engine.into()),
+            ("machine", (self.machine as usize).into()),
+            ("thread", (self.thread as usize).into()),
+            ("round", (self.round as usize).into()),
+            ("kind", self.kind.name().into()),
+        ];
+        obj(base.into_iter().chain(self.kind.payload()))
+    }
+
+    pub fn from_json(v: &Json) -> Result<TraceEvent, String> {
+        let num = |k: &str| {
+            v.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| format!("trace event missing numeric field {k:?}"))
+        };
+        let text = |k: &str| {
+            v.get(k)
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("trace event missing string field {k:?}"))
+        };
+        let ename = text("engine")?;
+        let engine =
+            intern_engine(ename).ok_or_else(|| format!("unknown engine {ename:?} in trace event"))?;
+        let kind = decode_kind(text("kind")?, v)?;
+        let as_u32 = |k: &str| -> Result<u32, String> {
+            let x = num(k)?;
+            u32::try_from(x).map_err(|_| format!("trace event field {k:?} out of range: {x}"))
+        };
+        Ok(TraceEvent {
+            t_ns: num("t_ns")? as u64,
+            dur_ns: num("dur_ns")? as u64,
+            engine,
+            machine: as_u32("machine")?,
+            thread: as_u32("thread")?,
+            round: as_u32("round")?,
+            kind,
+        })
+    }
+}
+
+fn decode_kind(name: &str, v: &Json) -> Result<EventKind, String> {
+    let num = |k: &str| {
+        v.get(k)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| format!("{name} event missing numeric field {k:?}"))
+    };
+    let small = |k: &str| -> Result<u32, String> {
+        let x = num(k)?;
+        u32::try_from(x).map_err(|_| format!("{name} event field {k:?} out of range: {x}"))
+    };
+    match name {
+        "run" => Ok(EventKind::Run),
+        "round" => Ok(EventKind::Round),
+        "sync_point" => Ok(EventKind::SyncPoint),
+        "phase" => {
+            let p = v
+                .get("phase")
+                .and_then(Json::as_str)
+                .ok_or("phase event missing \"phase\" field")?;
+            Phase::parse(p)
+                .map(EventKind::Phase)
+                .ok_or_else(|| format!("unknown phase {p:?}"))
+        }
+        "barrier_wait" => Ok(EventKind::BarrierWait {
+            step: small("step")? as u8,
+        }),
+        "wire_send" => Ok(EventKind::WireSend {
+            dst: small("dst")?,
+            step: small("step")? as u8,
+            msgs: num("msgs")?,
+            bytes: num("bytes")?,
+        }),
+        "wire_recv" => Ok(EventKind::WireRecv {
+            src: small("src")?,
+            step: small("step")? as u8,
+            bytes: num("bytes")?,
+        }),
+        "checkpoint_cut" => Ok(EventKind::CheckpointCut {
+            full: v
+                .get("full")
+                .and_then(Json::as_bool)
+                .ok_or("checkpoint_cut event missing boolean \"full\" field")?,
+            bytes: num("bytes")?,
+        }),
+        "fault" => Ok(EventKind::Fault {
+            target: small("target")?,
+        }),
+        "recovery" => {
+            let s = v
+                .get("stage")
+                .and_then(Json::as_str)
+                .ok_or("recovery event missing \"stage\" field")?;
+            let stage =
+                RecoveryStage::parse(s).ok_or_else(|| format!("unknown recovery stage {s:?}"))?;
+            Ok(EventKind::Recovery {
+                stage,
+                target: small("target")?,
+                rounds: num("rounds")?,
+                bytes: num("bytes")?,
+            })
+        }
+        other => Err(format!("unknown trace event kind {other:?}")),
+    }
+}
+
+struct SinkInner {
+    origin: Instant,
+    events: Mutex<Vec<TraceEvent>>,
+}
+
+/// Shared collection point for a run's events. Clonable and cheap to
+/// pass around; the disabled sink (the default) carries nothing and
+/// every operation on it — and on buffers minted from it — is a no-op
+/// (overhead pinned in `benches/hot_paths.rs`).
+#[derive(Clone, Default)]
+pub struct TraceSink {
+    inner: Option<Arc<SinkInner>>,
+}
+
+impl TraceSink {
+    /// A live sink whose origin is now. Create it once per run, before
+    /// any participant mints a buffer, so all timestamps share a clock.
+    pub fn enabled() -> TraceSink {
+        TraceSink {
+            inner: Some(Arc::new(SinkInner {
+                origin: Instant::now(),
+                events: Mutex::new(Vec::new()),
+            })),
+        }
+    }
+
+    pub fn disabled() -> TraceSink {
+        TraceSink::default()
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Mint a thread-local buffer bound to this sink's clock.
+    pub fn buf(&self, engine: &'static str, machine: u32, thread: u32) -> TraceBuf {
+        TraceBuf {
+            enabled: self.inner.is_some(),
+            origin: self.inner.as_ref().map_or_else(Instant::now, |i| i.origin),
+            engine,
+            machine,
+            thread,
+            round: 0,
+            events: Vec::new(),
+        }
+    }
+
+    /// Merge a buffer's events in (one lock per merge, never per event).
+    pub fn absorb(&self, buf: TraceBuf) {
+        self.absorb_events(buf.events);
+    }
+
+    /// Merge a raw event batch (events shipped over report channels).
+    pub fn absorb_events(&self, events: Vec<TraceEvent>) {
+        if let Some(inner) = &self.inner {
+            if !events.is_empty() {
+                inner.events.lock().unwrap().extend(events);
+            }
+        }
+    }
+
+    /// Drain the collected events, ordered by timestamp.
+    pub fn take(&self) -> Vec<TraceEvent> {
+        match &self.inner {
+            None => Vec::new(),
+            Some(inner) => {
+                let mut events = std::mem::take(&mut *inner.events.lock().unwrap());
+                events.sort_by_key(|e| (e.t_ns, e.machine, e.thread));
+                events
+            }
+        }
+    }
+}
+
+/// A participant's private event buffer: the hot path is a branch and a
+/// `Vec` push, no locks. Disabled buffers (from a disabled sink) return
+/// immediately from every call.
+pub struct TraceBuf {
+    enabled: bool,
+    origin: Instant,
+    engine: &'static str,
+    machine: u32,
+    thread: u32,
+    round: u32,
+    events: Vec<TraceEvent>,
+}
+
+impl Default for TraceBuf {
+    fn default() -> TraceBuf {
+        TraceSink::disabled().buf("rac", COORD, 0)
+    }
+}
+
+impl TraceBuf {
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    #[inline]
+    pub fn set_round(&mut self, round: usize) {
+        self.round = round as u32;
+    }
+
+    /// Nanoseconds since the sink origin (0 when disabled): the start
+    /// stamp for a later [`TraceBuf::span`].
+    #[inline]
+    pub fn now(&self) -> u64 {
+        if self.enabled {
+            self.origin.elapsed().as_nanos() as u64
+        } else {
+            0
+        }
+    }
+
+    /// Record an instant event.
+    #[inline]
+    pub fn instant(&mut self, kind: EventKind) {
+        if let Some(e) = self.make_instant(kind) {
+            self.events.push(e);
+        }
+    }
+
+    /// Record a span from `start_ns` (a prior [`TraceBuf::now`]) to now.
+    #[inline]
+    pub fn span(&mut self, start_ns: u64, kind: EventKind) {
+        if let Some(e) = self.make_span(start_ns, kind) {
+            self.events.push(e);
+        }
+    }
+
+    /// Build an instant event without storing it (for callers that keep
+    /// events in an accumulator with different rewind semantics than
+    /// this buffer — the executed driver's rollback handling).
+    #[inline]
+    pub fn make_instant(&self, kind: EventKind) -> Option<TraceEvent> {
+        if !self.enabled {
+            return None;
+        }
+        Some(TraceEvent {
+            t_ns: self.now(),
+            dur_ns: 0,
+            engine: self.engine,
+            machine: self.machine,
+            thread: self.thread,
+            round: self.round,
+            kind,
+        })
+    }
+
+    /// Build a span event without storing it.
+    #[inline]
+    pub fn make_span(&self, start_ns: u64, kind: EventKind) -> Option<TraceEvent> {
+        if !self.enabled {
+            return None;
+        }
+        let end = self.now();
+        Some(TraceEvent {
+            t_ns: start_ns,
+            dur_ns: end.saturating_sub(start_ns),
+            engine: self.engine,
+            machine: self.machine,
+            thread: self.thread,
+            round: self.round,
+            kind,
+        })
+    }
+
+    /// Take the buffered events (for shipping over a report channel).
+    pub fn drain(&mut self) -> Vec<TraceEvent> {
+        std::mem::take(&mut self.events)
+    }
+}
+
+/// On-disk trace format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TraceFormat {
+    /// One event object per line; the native analyzer format.
+    #[default]
+    Jsonl,
+    /// Chrome trace-event JSON, loadable in Perfetto.
+    Chrome,
+}
+
+impl TraceFormat {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TraceFormat::Jsonl => "jsonl",
+            TraceFormat::Chrome => "chrome",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TraceFormat> {
+        match s {
+            "jsonl" => Some(TraceFormat::Jsonl),
+            "chrome" => Some(TraceFormat::Chrome),
+            _ => None,
+        }
+    }
+}
+
+/// Serialize in the given format.
+pub fn write(events: &[TraceEvent], format: TraceFormat) -> String {
+    match format {
+        TraceFormat::Jsonl => write_jsonl(events),
+        TraceFormat::Chrome => write_chrome(events),
+    }
+}
+
+/// Native format: one event object per line.
+pub fn write_jsonl(events: &[TraceEvent]) -> String {
+    let mut out = String::new();
+    for e in events {
+        out.push_str(&e.to_json().to_string());
+        out.push('\n');
+    }
+    out
+}
+
+pub fn parse_jsonl(text: &str) -> Result<Vec<TraceEvent>, String> {
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty())
+        .map(|line| TraceEvent::from_json(&Json::parse(line)?))
+        .collect()
+}
+
+/// Chrome trace-event JSON. Spans become `ph:"X"` complete events,
+/// instants `ph:"i"` marks; `pid` is the machine, `tid` the thread, and
+/// `args` carries the full native event so the format round-trips.
+pub fn write_chrome(events: &[TraceEvent]) -> String {
+    let mut entries = Vec::new();
+    let mut pids: Vec<u32> = events.iter().map(|e| e.machine).collect();
+    pids.sort_unstable();
+    pids.dedup();
+    for pid in pids {
+        let label = if pid == COORD {
+            "coordinator".to_string()
+        } else {
+            format!("machine {pid}")
+        };
+        entries.push(obj([
+            ("ph", "M".into()),
+            ("name", "process_name".into()),
+            ("pid", (pid as usize).into()),
+            ("args", obj([("name", label.into())])),
+        ]));
+    }
+    for e in events {
+        let span = e.kind.is_span();
+        let mut pairs = vec![
+            ("name", e.display_name().into()),
+            ("cat", e.engine.into()),
+            ("ph", if span { "X" } else { "i" }.into()),
+            ("ts", (e.t_ns as f64 / 1000.0).into()),
+            ("pid", (e.machine as usize).into()),
+            ("tid", (e.thread as usize).into()),
+            ("args", e.to_json()),
+        ];
+        if span {
+            pairs.push(("dur", (e.dur_ns as f64 / 1000.0).into()));
+        } else {
+            // Thread-scoped instant (renders as a mark, not a flash).
+            pairs.push(("s", "t".into()));
+        }
+        entries.push(obj(pairs));
+    }
+    obj([
+        ("traceEvents", Json::Arr(entries)),
+        ("displayTimeUnit", "ns".into()),
+    ])
+    .to_string()
+}
+
+pub fn parse_chrome(text: &str) -> Result<Vec<TraceEvent>, String> {
+    parse_chrome_value(&Json::parse(text)?)
+}
+
+fn parse_chrome_value(v: &Json) -> Result<Vec<TraceEvent>, String> {
+    let entries = v
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or("not a Chrome trace: missing \"traceEvents\" array")?;
+    let mut events = Vec::new();
+    for entry in entries {
+        if entry.get("ph").and_then(Json::as_str) == Some("M") {
+            continue;
+        }
+        let args = entry
+            .get("args")
+            .ok_or("Chrome trace entry missing \"args\"")?;
+        events.push(TraceEvent::from_json(args)?);
+    }
+    Ok(events)
+}
+
+/// Parse either format: a single JSON document with `traceEvents` is a
+/// Chrome trace, anything else is treated as JSONL.
+pub fn parse_any(text: &str) -> Result<Vec<TraceEvent>, String> {
+    if let Ok(v) = Json::parse(text) {
+        if v.get("traceEvents").is_some() {
+            return parse_chrome_value(&v);
+        }
+    }
+    parse_jsonl(text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<TraceEvent> {
+        let sink = TraceSink::enabled();
+        let mut coord = sink.buf("dist_rac", COORD, 0);
+        let run_start = coord.now();
+        coord.set_round(0);
+        let t = coord.now();
+        coord.span(t, EventKind::Phase(Phase::Find));
+        coord.instant(EventKind::SyncPoint);
+        coord.instant(EventKind::CheckpointCut {
+            full: true,
+            bytes: 128,
+        });
+        coord.instant(EventKind::Fault { target: 1 });
+        coord.instant(EventKind::Recovery {
+            stage: RecoveryStage::Replay,
+            target: 1,
+            rounds: 2,
+            bytes: 64,
+        });
+        let mut m0 = sink.buf("dist_rac", 0, 1);
+        m0.set_round(0);
+        m0.instant(EventKind::WireSend {
+            dst: 1,
+            step: 0,
+            msgs: 1,
+            bytes: 32,
+        });
+        m0.instant(EventKind::WireRecv {
+            src: 1,
+            step: 0,
+            bytes: 16,
+        });
+        let t = m0.now();
+        m0.span(t, EventKind::BarrierWait { step: 0 });
+        sink.absorb(m0);
+        let t = coord.now();
+        coord.span(t, EventKind::Round);
+        coord.span(run_start, EventKind::Run);
+        sink.absorb(coord);
+        sink.take()
+    }
+
+    #[test]
+    fn disabled_sink_records_nothing() {
+        let sink = TraceSink::disabled();
+        assert!(!sink.is_enabled());
+        let mut buf = sink.buf("rac", COORD, 0);
+        assert!(!buf.is_enabled());
+        assert_eq!(buf.now(), 0);
+        buf.instant(EventKind::SyncPoint);
+        let t = buf.now();
+        buf.span(t, EventKind::Round);
+        assert!(buf.make_instant(EventKind::SyncPoint).is_none());
+        sink.absorb(buf);
+        assert!(sink.take().is_empty());
+    }
+
+    #[test]
+    fn sink_merges_and_orders_buffers() {
+        let events = sample_events();
+        assert_eq!(events.len(), 10);
+        // Timestamp-ordered regardless of which buffer recorded what.
+        for pair in events.windows(2) {
+            assert!(pair[0].t_ns <= pair[1].t_ns);
+        }
+        // One run span covering the whole recording.
+        let runs: Vec<_> = events
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::Run))
+            .collect();
+        assert_eq!(runs.len(), 1);
+        // Sink is drained by take().
+        // (A fresh take on the same sink would return nothing, but
+        // sample_events consumed the sink; pin the schema instead.)
+        assert!(events.iter().all(|e| e.engine == "dist_rac"));
+    }
+
+    #[test]
+    fn jsonl_roundtrip_is_lossless() {
+        let events = sample_events();
+        let text = write_jsonl(&events);
+        assert_eq!(text.lines().count(), events.len());
+        let back = parse_jsonl(&text).unwrap();
+        assert_eq!(events, back);
+        let any = parse_any(&text).unwrap();
+        assert_eq!(events, any);
+    }
+
+    #[test]
+    fn chrome_roundtrip_is_lossless_and_parseable() {
+        let events = sample_events();
+        let text = write_chrome(&events);
+        let doc = Json::parse(&text).unwrap();
+        let entries = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // Metadata names every pid (machine 0 + coordinator).
+        let meta: Vec<_> = entries
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("M"))
+            .collect();
+        assert_eq!(meta.len(), 2);
+        let back = parse_chrome(&text).unwrap();
+        assert_eq!(events, back);
+        let any = parse_any(&text).unwrap();
+        assert_eq!(events, any);
+    }
+
+    #[test]
+    fn chrome_span_and_instant_phases() {
+        let events = sample_events();
+        let text = write_chrome(&events);
+        let doc = Json::parse(&text).unwrap();
+        for entry in doc.get("traceEvents").unwrap().as_arr().unwrap() {
+            match entry.get("ph").and_then(Json::as_str) {
+                Some("M") => {}
+                Some("X") => assert!(entry.get("dur").is_some()),
+                Some("i") => {
+                    assert_eq!(entry.get("s").and_then(Json::as_str), Some("t"));
+                    assert!(entry.get("dur").is_none());
+                }
+                other => panic!("unexpected ph {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn instants_have_zero_duration_spans_measure() {
+        let events = sample_events();
+        for e in &events {
+            if !e.kind.is_span() {
+                assert_eq!(e.dur_ns, 0, "{:?}", e.kind);
+            }
+        }
+        let run = events
+            .iter()
+            .find(|e| matches!(e.kind, EventKind::Run))
+            .unwrap();
+        // The run span covers every other event's start.
+        assert!(events
+            .iter()
+            .all(|e| e.t_ns >= run.t_ns && e.t_ns <= run.t_ns + run.dur_ns));
+    }
+
+    #[test]
+    fn rejects_malformed_events() {
+        assert!(parse_jsonl("{\"kind\":\"run\"}").is_err());
+        assert!(
+            TraceEvent::from_json(&Json::parse(
+                "{\"t_ns\":0,\"dur_ns\":0,\"engine\":\"warp\",\"machine\":0,\
+                 \"thread\":0,\"round\":0,\"kind\":\"run\"}"
+            )
+            .unwrap())
+            .is_err(),
+            "unknown engine must be rejected"
+        );
+        assert!(
+            TraceEvent::from_json(&Json::parse(
+                "{\"t_ns\":0,\"dur_ns\":0,\"engine\":\"rac\",\"machine\":0,\
+                 \"thread\":0,\"round\":0,\"kind\":\"quux\"}"
+            )
+            .unwrap())
+            .is_err(),
+            "unknown kind must be rejected"
+        );
+        assert!(parse_chrome("{\"no\":1}").is_err());
+    }
+
+    #[test]
+    fn format_parse() {
+        assert_eq!(TraceFormat::parse("jsonl"), Some(TraceFormat::Jsonl));
+        assert_eq!(TraceFormat::parse("chrome"), Some(TraceFormat::Chrome));
+        assert_eq!(TraceFormat::parse("perfetto"), None);
+        assert_eq!(TraceFormat::default(), TraceFormat::Jsonl);
+    }
+}

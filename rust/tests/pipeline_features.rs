@@ -9,6 +9,7 @@ use rac_hac::knn::epsilon_graph;
 use rac_hac::linkage::Linkage;
 use rac_hac::pipeline;
 use rac_hac::rac::RacEngine;
+use rac_hac::util::json::Json;
 
 #[test]
 fn epsilon_graph_pipeline() {
@@ -114,6 +115,44 @@ fn engine_spec_round_trip_through_pipeline() {
     .unwrap();
     assert!(matches!(cfg.engine, EngineSpec::NnChain));
     assert!(pipeline::run(&cfg).is_err(), "centroid nn_chain must fail");
+}
+
+#[test]
+fn metrics_out_writes_parseable_run_aggregates() {
+    // The `--metrics-out FILE` flag mutates `cfg.output` after parsing
+    // (see `apply_output_flags` in the CLI); pin that post-parse route
+    // end to end: run the pipeline, read the JSON back, and check the
+    // run-level aggregates against the in-memory metrics.
+    let dir = std::env::temp_dir().join(format!("racmet-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let metrics_path = dir.join("metrics.json");
+    let mut cfg = RunConfig::from_toml_str(
+        "[dataset]\ntype = \"grid1d\"\nn = 90\n[cluster]\nlinkage = \"average\"\n\
+         [engine]\ntype = \"dist_rac\"\nmachines = 3\ncpus = 2\n",
+    )
+    .unwrap();
+    assert_eq!(cfg.output.metrics_out, None);
+    cfg.output.metrics_out = Some(metrics_path.to_string_lossy().into_owned());
+    let out = pipeline::run(&cfg).unwrap();
+    let text = std::fs::read_to_string(&metrics_path).unwrap();
+    let json = Json::parse(&text).unwrap();
+    let m = &out.result.metrics;
+    for (key, want) in [
+        ("total_merges", m.total_merges()),
+        ("merge_rounds", m.merge_rounds()),
+        ("total_net_messages", m.total_net_messages()),
+        ("total_net_bytes", m.total_net_bytes()),
+        ("total_sync_points", m.total_sync_points()),
+    ] {
+        assert_eq!(
+            json.get(key).and_then(|v| v.as_usize()),
+            Some(want),
+            "metrics-out field {key}"
+        );
+    }
+    let per_round = json.get("rounds").and_then(|v| v.as_arr()).unwrap();
+    assert_eq!(per_round.len(), m.rounds.len());
+    std::fs::remove_dir_all(&dir).unwrap();
 }
 
 #[test]

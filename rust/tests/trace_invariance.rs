@@ -1,0 +1,376 @@
+//! The tracing layer's two contracts, pinned end to end:
+//!
+//! * **Invariance** — tracing is purely observational. A traced run's
+//!   dendrogram, (1+ε) bounds trace, and sync schedule are bitwise
+//!   identical to the untraced run's, across engines × topologies ×
+//!   both distributed modes (simulated and executed), including faulted
+//!   executed runs.
+//! * **Accounting equality** — the trace analyzer's totals are folded
+//!   from events emitted at the *same code sites* where `RunMetrics`
+//!   accumulates its counters, so `trace-report` and the metrics must
+//!   agree exactly: `net_messages`, `net_bytes`, `sync_points`,
+//!   `checkpoint_bytes`, and the recovery counters — even on a faulted
+//!   shard-replay run.
+//!
+//! Both writers (JSONL and Chrome/Perfetto) are round-tripped on real
+//! engine traces, and every recorded event passes schema validation.
+
+use rac_hac::approx::quality::MergeBound;
+use rac_hac::approx::ApproxEngine;
+use rac_hac::data::{adversarial_thm4, grid1d_graph};
+use rac_hac::dist::{
+    DistApproxEngine, DistConfig, DistRacEngine, ExecOptions, FaultSpec, RecoveryMode, SyncMode,
+};
+use rac_hac::graph::Graph;
+use rac_hac::linkage::Linkage;
+use rac_hac::metrics::RunMetrics;
+use rac_hac::rac::RacEngine;
+use rac_hac::trace::{
+    analyze::{analyze, validate_events, TraceReport},
+    parse_chrome, parse_jsonl, write_chrome, write_jsonl, EventKind, TraceEvent, TraceSink,
+};
+
+const TOPOLOGIES: [(usize, usize); 3] = [(1, 1), (3, 2), (5, 1)];
+
+fn sync_schedule(m: &RunMetrics) -> Vec<(usize, usize, usize)> {
+    m.rounds
+        .iter()
+        .map(|r| (r.clusters, r.merges, r.sync_points))
+        .collect()
+}
+
+fn bounds_bits(bs: &[MergeBound]) -> Vec<(u64, u64)> {
+    bs.iter()
+        .map(|b| (b.weight.to_bits(), b.visible_min.to_bits()))
+        .collect()
+}
+
+/// Drain a run's trace, schema-validate every event, and fold it.
+fn drain_and_analyze(sink: &TraceSink) -> (Vec<TraceEvent>, TraceReport) {
+    let events = sink.take();
+    validate_events(&events).unwrap_or_else(|e| panic!("trace failed validation: {e}"));
+    (events, analyze(&events))
+}
+
+/// The analyzer totals that have `RunMetrics` counterparts must match
+/// them exactly (equality by construction — same accounting sites).
+fn assert_totals_match(report: &TraceReport, m: &RunMetrics, tag: &str) {
+    assert_eq!(report.rounds, m.rounds.len(), "{tag}: round count");
+    assert_eq!(
+        report.net_messages,
+        m.total_net_messages(),
+        "{tag}: net_messages"
+    );
+    assert_eq!(report.net_bytes, m.total_net_bytes(), "{tag}: net_bytes");
+    assert_eq!(
+        report.sync_points,
+        m.total_sync_points(),
+        "{tag}: sync_points"
+    );
+    assert_eq!(
+        report.checkpoint_bytes, m.checkpoint_bytes,
+        "{tag}: checkpoint_bytes"
+    );
+    assert_eq!(
+        report.recovery_rounds_replayed, m.recovery_rounds_replayed,
+        "{tag}: recovery_rounds_replayed"
+    );
+    assert_eq!(
+        report.recovery_bytes_replayed, m.recovery_bytes_replayed,
+        "{tag}: recovery_bytes_replayed"
+    );
+}
+
+/// Both writers must round-trip the event stream losslessly.
+fn assert_writers_roundtrip(events: &[TraceEvent]) {
+    let jsonl = write_jsonl(events);
+    assert_eq!(&parse_jsonl(&jsonl).unwrap(), events, "jsonl round trip");
+    let chrome = write_chrome(events);
+    assert_eq!(&parse_chrome(&chrome).unwrap(), events, "chrome round trip");
+}
+
+#[test]
+fn traced_rac_is_bitwise_identical_to_untraced() {
+    let g = grid1d_graph(300, 7);
+    for linkage in [Linkage::Single, Linkage::Average] {
+        let plain = RacEngine::new(&g, linkage).run();
+        let sink = TraceSink::enabled();
+        let traced = RacEngine::new(&g, linkage).with_trace(&sink).run();
+        assert_eq!(
+            plain.dendrogram.bitwise_merges(),
+            traced.dendrogram.bitwise_merges(),
+            "{linkage:?}: tracing perturbed the dendrogram"
+        );
+        let (events, report) = drain_and_analyze(&sink);
+        assert_eq!(report.engine, "rac");
+        assert_totals_match(&report, &traced.metrics, "rac");
+        // Shared-memory engine: one coordinator participant, three phase
+        // spans per completed merge round, no wire traffic.
+        assert_eq!(report.net_messages, 0);
+        let phases = events
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::Phase(_)))
+            .count();
+        assert!(phases >= 3 * traced.metrics.merge_rounds());
+        assert_writers_roundtrip(&events);
+    }
+}
+
+#[test]
+fn traced_approx_preserves_bounds_trace() {
+    let g = grid1d_graph(250, 11);
+    for eps in [0.0, 0.5] {
+        let plain = ApproxEngine::new(&g, Linkage::Average, eps).run();
+        let sink = TraceSink::enabled();
+        let traced = ApproxEngine::new(&g, Linkage::Average, eps)
+            .with_trace(&sink)
+            .run();
+        assert_eq!(
+            plain.dendrogram.bitwise_merges(),
+            traced.dendrogram.bitwise_merges(),
+            "eps={eps}: tracing perturbed the dendrogram"
+        );
+        assert_eq!(
+            bounds_bits(&plain.bounds),
+            bounds_bits(&traced.bounds),
+            "eps={eps}: tracing perturbed the bounds trace"
+        );
+        let (_, report) = drain_and_analyze(&sink);
+        assert_eq!(report.engine, "approx");
+        assert_totals_match(&report, &traced.metrics, "approx");
+    }
+}
+
+#[test]
+fn traced_dist_rac_matches_untraced_across_topologies_and_modes() {
+    let g = grid1d_graph(200, 13);
+    for topo in TOPOLOGIES {
+        for exec in [None, Some(ExecOptions::default())] {
+            let mode = if exec.is_some() { "executed" } else { "sim" };
+            let mk = |sink: Option<&TraceSink>| {
+                let mut eng =
+                    DistRacEngine::new(&g, Linkage::Average, DistConfig::new(topo.0, topo.1));
+                if let Some(s) = sink {
+                    eng = eng.with_trace(s);
+                }
+                if let Some(opts) = exec.clone() {
+                    eng = eng.with_exec(opts);
+                }
+                eng.run()
+            };
+            let plain = mk(None);
+            let sink = TraceSink::enabled();
+            let traced = mk(Some(&sink));
+            let tag = format!("dist_rac topo={topo:?} mode={mode}");
+            assert_eq!(
+                plain.dendrogram.bitwise_merges(),
+                traced.dendrogram.bitwise_merges(),
+                "{tag}: tracing perturbed the dendrogram"
+            );
+            assert_eq!(
+                sync_schedule(&plain.metrics),
+                sync_schedule(&traced.metrics),
+                "{tag}: tracing perturbed the sync schedule"
+            );
+            let (events, report) = drain_and_analyze(&sink);
+            assert_eq!(report.engine, "dist_rac", "{tag}");
+            assert_totals_match(&report, &traced.metrics, &tag);
+            if topo.0 > 1 {
+                assert!(report.net_messages > 0, "{tag}: no wire traffic traced");
+            }
+            if exec.is_some() && topo.0 > 1 {
+                // Executed fleets record per-machine barrier waits and a
+                // per-(src, dst) wire matrix; the simulation records one
+                // coordinator-level aggregate instead.
+                assert!(!report.barriers.is_empty(), "{tag}: no barrier spans");
+                assert!(report.wire.len() > 1, "{tag}: no wire matrix");
+            }
+            assert_writers_roundtrip(&events);
+        }
+    }
+}
+
+#[test]
+fn traced_dist_approx_matches_untraced_across_sync_modes() {
+    let g = grid1d_graph(180, 17);
+    let topo = (3, 2);
+    for sync in [SyncMode::PerRound, SyncMode::Batched { vshards: 8 }] {
+        for exec in [None, Some(ExecOptions::default())] {
+            let mode = if exec.is_some() { "executed" } else { "sim" };
+            let mk = |sink: Option<&TraceSink>| {
+                let mut eng = DistApproxEngine::new(
+                    &g,
+                    Linkage::Average,
+                    DistConfig::new(topo.0, topo.1),
+                    0.1,
+                )
+                .with_sync_mode(sync);
+                if let Some(s) = sink {
+                    eng = eng.with_trace(s);
+                }
+                if let Some(opts) = exec.clone() {
+                    eng = eng.with_exec(opts);
+                }
+                eng.run()
+            };
+            let plain = mk(None);
+            let sink = TraceSink::enabled();
+            let traced = mk(Some(&sink));
+            let tag = format!("dist_approx sync={sync:?} mode={mode}");
+            assert_eq!(
+                plain.dendrogram.bitwise_merges(),
+                traced.dendrogram.bitwise_merges(),
+                "{tag}: tracing perturbed the dendrogram"
+            );
+            assert_eq!(
+                bounds_bits(&plain.bounds),
+                bounds_bits(&traced.bounds),
+                "{tag}: tracing perturbed the bounds trace"
+            );
+            assert_eq!(
+                sync_schedule(&plain.metrics),
+                sync_schedule(&traced.metrics),
+                "{tag}: tracing perturbed the sync schedule"
+            );
+            let (_, report) = drain_and_analyze(&sink);
+            assert_eq!(report.engine, "dist_approx", "{tag}");
+            assert_totals_match(&report, &traced.metrics, &tag);
+        }
+    }
+}
+
+#[test]
+fn traced_adversarial_instance_stays_bitwise() {
+    // The Theorem-4 chain merges one pair per round under the exact
+    // engine — the longest round schedule per node, a worst case for any
+    // per-round overhead to leak into behaviour.
+    let g = adversarial_thm4(5);
+    let plain = RacEngine::new(&g, Linkage::Average).run();
+    let sink = TraceSink::enabled();
+    let traced = RacEngine::new(&g, Linkage::Average).with_trace(&sink).run();
+    assert_eq!(
+        plain.dendrogram.bitwise_merges(),
+        traced.dendrogram.bitwise_merges()
+    );
+    let (_, report) = drain_and_analyze(&sink);
+    assert_totals_match(&report, &traced.metrics, "adversarial rac");
+}
+
+#[test]
+fn faulted_shard_replay_run_traces_recovery_and_matches_metrics() {
+    // The acceptance-criteria run: an executed fleet with a multi-fault
+    // campaign under journaled shard replay. The trace must validate,
+    // carry the fault/recovery timeline, fold to the RunMetrics
+    // counters exactly, and the run itself must stay bitwise identical
+    // to the clean and untraced runs.
+    let g = grid1d_graph(160, 23);
+    let topo = (3, 2);
+    let faulted = ExecOptions {
+        faults: vec![
+            FaultSpec { machine: 1, round: 2 },
+            FaultSpec { machine: 0, round: 4 },
+        ],
+        recovery_mode: RecoveryMode::ShardReplay,
+        checkpoint_full_every: 2,
+        ..ExecOptions::default()
+    };
+    let clean = DistRacEngine::new(&g, Linkage::Average, DistConfig::new(topo.0, topo.1))
+        .with_exec(ExecOptions::default())
+        .run();
+    let plain = DistRacEngine::new(&g, Linkage::Average, DistConfig::new(topo.0, topo.1))
+        .with_exec(faulted.clone())
+        .run();
+    let sink = TraceSink::enabled();
+    let traced = DistRacEngine::new(&g, Linkage::Average, DistConfig::new(topo.0, topo.1))
+        .with_trace(&sink)
+        .with_exec(faulted)
+        .run();
+    assert_eq!(
+        clean.dendrogram.bitwise_merges(),
+        traced.dendrogram.bitwise_merges(),
+        "faulted traced run diverged from the clean run"
+    );
+    assert_eq!(
+        plain.dendrogram.bitwise_merges(),
+        traced.dendrogram.bitwise_merges(),
+        "tracing perturbed the faulted run"
+    );
+    assert_eq!(
+        plain.metrics.recovery_rounds_replayed,
+        traced.metrics.recovery_rounds_replayed,
+        "tracing perturbed recovery accounting"
+    );
+    let (events, report) = drain_and_analyze(&sink);
+    // The core acceptance assertion: analyzer totals == RunMetrics.
+    assert_totals_match(&report, &traced.metrics, "faulted shard replay");
+    assert!(traced.metrics.recovery_rounds_replayed > 0, "no replay happened");
+    assert!(traced.metrics.checkpoint_bytes > 0, "no checkpoints cut");
+    // Both scheduled faults fired and were recorded, with their
+    // matching replay events in the timeline.
+    assert_eq!(report.faults, 2);
+    let replays = events
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::Recovery { .. }))
+        .count();
+    assert!(replays >= 2, "expected a recovery event per fault");
+    assert!(
+        report.timeline.iter().any(|t| t.label.contains("down")),
+        "fault missing from the timeline"
+    );
+    assert!(
+        report
+            .timeline
+            .iter()
+            .any(|t| t.label.contains("recovery replay")),
+        "replay missing from the timeline"
+    );
+    assert_writers_roundtrip(&events);
+}
+
+#[test]
+fn faulted_global_rollback_rewinds_trace_rounds_with_metrics() {
+    // Global rollback discards rounds since the last checkpoint and
+    // re-executes them; round-scoped trace events must rewind with the
+    // metrics (or the analyzer would double-count the replayed rounds).
+    let g = grid1d_graph(140, 29);
+    let topo = (3, 1);
+    let sink = TraceSink::enabled();
+    let traced = DistRacEngine::new(&g, Linkage::Average, DistConfig::new(topo.0, topo.1))
+        .with_trace(&sink)
+        .with_exec(ExecOptions {
+            faults: vec![FaultSpec { machine: 2, round: 3 }],
+            recovery_mode: RecoveryMode::Global,
+            ..ExecOptions::default()
+        })
+        .run();
+    let (_, report) = drain_and_analyze(&sink);
+    assert_totals_match(&report, &traced.metrics, "faulted global rollback");
+    assert!(traced.metrics.recovery_rounds_replayed > 0);
+    assert_eq!(report.faults, 1);
+}
+
+#[test]
+fn disabled_sink_runs_record_nothing() {
+    let g = grid1d_graph(80, 3);
+    let sink = TraceSink::disabled();
+    let r = RacEngine::new(&g, Linkage::Average).with_trace(&sink).run();
+    assert_eq!(r.dendrogram.merges().len(), 79);
+    assert!(sink.take().is_empty(), "disabled sink collected events");
+}
+
+#[test]
+fn one_sink_collects_exactly_one_run_span_per_engine_run() {
+    // Reusing a sink across runs would break the one-run-per-trace
+    // schema; each run gets its own sink, and each trace validates.
+    let g = Graph::from_edges(4, [(0, 1, 1.0), (1, 2, 2.0), (2, 3, 3.0)]);
+    for _ in 0..2 {
+        let sink = TraceSink::enabled();
+        RacEngine::new(&g, Linkage::Single).with_trace(&sink).run();
+        let (events, _) = drain_and_analyze(&sink);
+        let runs = events
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::Run))
+            .count();
+        assert_eq!(runs, 1);
+    }
+}
