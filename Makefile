@@ -3,7 +3,7 @@
 # it. `make bench` runs the perf-trajectory smoke bench and writes
 # BENCH_hot_paths.json (the per-PR datapoint CI uploads as an artifact).
 
-.PHONY: artifacts build test test-differential test-executed test-faults clippy fmt fmt-check bench bench-approx bench-dist bench-recovery trace-smoke
+.PHONY: artifacts build test test-scalar test-differential test-executed test-faults clippy fmt fmt-check bench bench-approx bench-dist bench-recovery trace-smoke
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -13,6 +13,13 @@ build:
 
 test:
 	cargo test -q
+
+# The whole suite again with the SIMD row-scan kernels pinned to the
+# scalar fallback (store::scan). Everything must pass identically: the
+# kernels are bitwise-pinned, so a failure only here means the dispatch
+# plumbing (not the math) regressed on the scalar path.
+test-scalar:
+	RAC_FORCE_SCALAR=1 cargo test -q
 
 # The oracle-vs-engine differential suites as a named target, so CI can
 # run them as a distinct step: a failure here means an engine diverged

@@ -12,7 +12,11 @@
 //! workload, each cell carrying the per-phase split
 //! (`t_find`/`t_merge`/`t_update_nn`) summed from [`RunMetrics`], plus a
 //! headline comparing the flat-store engine against the retained PR-1
-//! hashmap baseline ([`HashRacEngine`]) at default threads. CI runs the
+//! hashmap baseline ([`HashRacEngine`]) at default threads, and a
+//! `rac_flat_scalar` / `rac_flat_simd` counterpart pair pinning the
+//! forced-scalar fallback against the detected row-scan kernel (the run
+//! asserts their dendrograms bitwise equal; the report's `simd_dispatch`
+//! field records which kernel was active). CI runs the
 //! smoke mode on every push and uploads `BENCH_hot_paths.json` as an
 //! artifact, so regressions and wins are visible PR over PR.
 //!
@@ -239,6 +243,61 @@ fn main() {
         );
     }
 
+    // ---- simd dispatch guard (complete linkage, default threads) --------
+    // Counterpart cells for the row-scan kernels (`store::scan`): the same
+    // run pinned to the scalar fallback vs the detected SIMD kernel. The
+    // dendrograms must agree bitwise — that is the kernels' core contract —
+    // and the medians record what vectorization buys on this machine.
+    {
+        use rac_hac::store::scan;
+        scan::force_scalar(true);
+        let scalar_d = RacEngine::new(&g, Linkage::Complete)
+            .with_threads(headline_threads)
+            .run()
+            .dendrogram;
+        let (timing, metrics) = measure(budget, min_samples, || {
+            RacEngine::new(&g, Linkage::Complete).with_threads(headline_threads).run()
+        });
+        cells.push(Cell {
+            engine: "rac_flat_scalar",
+            linkage: Linkage::Complete,
+            threads: headline_threads,
+            timing,
+            metrics,
+        });
+        scan::force_scalar(false);
+        let simd_d = RacEngine::new(&g, Linkage::Complete)
+            .with_threads(headline_threads)
+            .run()
+            .dendrogram;
+        let (timing, metrics) = measure(budget, min_samples, || {
+            RacEngine::new(&g, Linkage::Complete).with_threads(headline_threads).run()
+        });
+        cells.push(Cell {
+            engine: "rac_flat_simd",
+            linkage: Linkage::Complete,
+            threads: headline_threads,
+            timing,
+            metrics,
+        });
+        assert_eq!(
+            scalar_d.bitwise_merges(),
+            simd_d.bitwise_merges(),
+            "forced-scalar and {} dendrograms must be bitwise identical",
+            scan::detect().name()
+        );
+        let sc = cells[cells.len() - 2].timing.median;
+        let sv = cells[cells.len() - 1].timing.median;
+        println!(
+            "\n-- simd dispatch ({}; complete linkage, {headline_threads} threads) --\n\
+             scalar {:.3?}  simd {:.3?} → {:.2}x (dendrograms bitwise equal)",
+            scan::detect().name(),
+            sc,
+            sv,
+            sc.as_secs_f64() / sv.as_secs_f64().max(1e-12)
+        );
+    }
+
     // ---- headline: flat vs hashmap at default threads -------------------
     let pick = |engine: &str| {
         cells
@@ -291,6 +350,7 @@ fn main() {
         let report = obj([
             ("schema", "bench_hot_paths/v1".into()),
             ("driver", rac_hac::engine::DRIVER_REV.into()),
+            ("simd_dispatch", rac_hac::store::scan::detect().name().into()),
             ("mode", (if smoke { "smoke" } else { "full" }).into()),
             (
                 "workload",

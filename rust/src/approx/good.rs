@@ -121,14 +121,18 @@ pub fn scan_row_candidates_scoped<N: NeighborsRef>(
     nn: &[u32],
     scope: impl Fn(u32, u32) -> bool,
 ) -> (Vec<(Weight, u32)>, usize) {
+    // `a`'s own acceptance band is loop-invariant, so it is hoisted into
+    // the row sweep ([`NeighborsRef::for_each_band`]) — on the flat store
+    // that is the dispatched SIMD band kernel ([`crate::store::scan`]),
+    // which applies exactly [`accepts`]' `w < thr || (w == thr && b ==
+    // nn)` test per lane. Only survivors pay the scope check and the
+    // partner-side band lookup.
+    let thr = (1.0 + epsilon) * nn_weight[a as usize];
+    let nn_a = nn[a as usize];
     let mut out = Vec::new();
-    row.for_each_edge(|b, e| {
-        if b > a
-            && scope(a, b)
-            && accepts(e.weight, b, epsilon, nn_weight[a as usize], nn[a as usize])
-            && accepts(e.weight, a, epsilon, nn_weight[b as usize], nn[b as usize])
-        {
-            out.push((e.weight, b));
+    row.for_each_band(a, thr, nn_a, |b, w| {
+        if scope(a, b) && accepts(w, a, epsilon, nn_weight[b as usize], nn[b as usize]) {
+            out.push((w, b));
         }
     });
     (out, row.live_len())
@@ -142,9 +146,7 @@ pub fn scan_row_candidates_scoped<N: NeighborsRef>(
 /// pairs sorted by ascending leader id — the order the owner-sharded
 /// apply pass and the dendrogram recording require.
 pub fn select_matching(mut candidates: Vec<Candidate>, matched: &mut [bool]) -> Vec<MergePair> {
-    candidates.sort_unstable_by(|x, y| {
-        x.0.total_cmp(&y.0).then(x.1.cmp(&y.1)).then(x.2.cmp(&y.2))
-    });
+    candidates.sort_unstable_by(crate::store::scan::cmp_weight_pair);
     let mut pairs = Vec::new();
     for (w, a, b) in candidates {
         debug_assert!(a < b, "candidates must be oriented a < b");

@@ -109,6 +109,12 @@ pub struct RunConfig {
     pub exec: Option<ExecOptions>,
     /// Trace/metrics output destinations (`[output]` section).
     pub output: OutputSpec,
+    /// Pin the row-scan kernels to the scalar fallback
+    /// (`engine.force_scalar`, or the `RAC_FORCE_SCALAR` environment
+    /// variable / `--force-scalar` CLI flag). Results are bitwise
+    /// identical either way ([`crate::store::scan`]); this exists for
+    /// differential testing and benchmarking the dispatch.
+    pub force_scalar: bool,
 }
 
 impl RunConfig {
@@ -206,6 +212,7 @@ impl RunConfig {
             engine,
             exec,
             output,
+            force_scalar: doc.bool_or("engine", "force_scalar", false)?,
         })
     }
 
@@ -509,6 +516,17 @@ cpus = 4
         assert!(matches!(cfg.dataset, DatasetSpec::SiftLike { n: 2000, .. }));
         assert_eq!(cfg.linkage, Linkage::Average);
         assert!(matches!(cfg.engine, EngineSpec::Rac { threads: 0 }));
+        assert!(!cfg.force_scalar);
+    }
+
+    #[test]
+    fn force_scalar_parses() {
+        let cfg =
+            RunConfig::from_toml_str("[engine]\ntype = \"rac\"\nforce_scalar = true\n").unwrap();
+        assert!(cfg.force_scalar);
+        let cfg =
+            RunConfig::from_toml_str("[engine]\ntype = \"rac\"\nforce_scalar = false\n").unwrap();
+        assert!(!cfg.force_scalar);
     }
 
     #[test]

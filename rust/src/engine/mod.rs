@@ -46,6 +46,16 @@
 //! are tagged with [`DRIVER_REV`] so the perf trajectory can pin this
 //! (flat-store medians must not regress against pre-driver datapoints).
 //!
+//! Below the driver, the two hot row scans — the `(weight, id)`-min NN
+//! scan and [`GoodSelector`]'s eligibility sweep — lower to the runtime-
+//! dispatched SIMD kernels in [`crate::store::scan`] whenever the store
+//! hands out flat [`RowRef`] rows (so all flat-store engines, shared-
+//! memory and distributed, get them with no driver changes); the hashmap
+//! oracle keeps the scalar fold. `RAC_FORCE_SCALAR` (env), the
+//! `force_scalar` config key, or `--force-scalar` pin the scalar
+//! fallback; results are bitwise identical either way, so the selection
+//! is invisible to everything above this paragraph.
+//!
 //! The distributed engines ([`crate::dist`]) run the same three phases
 //! serially with batched cross-shard traffic accounting woven through each
 //! phase; they share the phase-1 *selection logic* with this driver (both

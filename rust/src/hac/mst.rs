@@ -14,6 +14,7 @@
 use crate::dendrogram::{Dendrogram, Merge};
 use crate::graph::Graph;
 use crate::linkage::Weight;
+use crate::store::scan::cmp_weight_pair;
 
 /// Exact single-linkage HAC via Kruskal's MST.
 ///
@@ -30,9 +31,7 @@ pub fn mst_single_linkage(g: &Graph) -> Dendrogram {
             }
         }
     }
-    edges.sort_unstable_by(|a, b| {
-        a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
-    });
+    edges.sort_unstable_by(cmp_weight_pair);
 
     // Union-find tracking the REPRESENTATIVE (lowest member id) of each
     // component, matching the merge-record convention of the engines.

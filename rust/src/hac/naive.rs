@@ -14,8 +14,9 @@ use crate::linkage::{Linkage, Weight};
 
 use super::state::ClusterStore;
 
-/// Heap key ordered by `(weight, a, b)` — the same deterministic tie-break
-/// as [`ClusterStore::nearest_neighbor`], so all algorithms agree even on
+/// Heap key ordered by `(weight, a, b)` — the crate-wide deterministic
+/// tie-break ([`crate::store::scan::cmp_weight_pair`], same as
+/// [`ClusterStore::nearest_neighbor`]), so all algorithms agree even on
 /// tied inputs.
 #[derive(PartialEq)]
 struct Key(Weight, u32, u32);
@@ -30,10 +31,10 @@ impl PartialOrd for Key {
 
 impl Ord for Key {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.0
-            .total_cmp(&other.0)
-            .then(self.1.cmp(&other.1))
-            .then(self.2.cmp(&other.2))
+        crate::store::scan::cmp_weight_pair(
+            &(self.0, self.1, self.2),
+            &(other.0, other.1, other.2),
+        )
     }
 }
 

@@ -65,14 +65,14 @@ impl ClusterStore {
     }
 
     /// Nearest neighbor of `c` by `(weight, id)` — the deterministic
-    /// tie-break every algorithm in this crate shares, so that outputs are
-    /// comparable even in the presence of exact ties.
+    /// tie-break every algorithm in this crate shares
+    /// ([`crate::rac::logic::scan_nn`]), so that outputs are comparable
+    /// even in the presence of exact ties.
     pub fn nearest_neighbor(&self, c: u32) -> Option<(u32, Weight)> {
-        self.neighbors[c as usize]
-            .iter()
-            .map(|(&v, e)| (e.weight, v))
-            .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)))
-            .map(|(w, v)| (v, w))
+        match crate::rac::logic::scan_nn(&self.neighbors[c as usize]) {
+            (crate::rac::NO_NN, _) => None,
+            (v, w) => Some((v, w)),
+        }
     }
 
     /// Merge clusters `a` and `b` (both active, connected or not): the

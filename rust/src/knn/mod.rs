@@ -49,17 +49,21 @@ impl TopK {
 
     #[inline]
     fn push(&mut self, w: Weight, id: u32) {
+        // Ordered by the crate-wide (weight, id) lex order
+        // ([`crate::store::scan::nn_better`]); under it a NaN distance
+        // never beats anything, so NaNs can never enter a full list.
+        use crate::store::scan::nn_better;
         if self.items.len() == self.k {
             // Full: reject if not better than the current worst.
             let &(ww, wid) = self.items.last().unwrap();
-            if (w, id) >= (ww, wid) {
+            if !nn_better(w, id, ww, wid) {
                 return;
             }
             self.items.pop();
         }
         let pos = self
             .items
-            .partition_point(|&(pw, pid)| (pw, pid) < (w, id));
+            .partition_point(|&(pw, pid)| nn_better(pw, pid, w, id));
         self.items.insert(pos, (w, id));
     }
 

@@ -167,6 +167,23 @@
 //! equality. Perfetto how-to: run with `--trace run.json --trace-format
 //! chrome`, open <https://ui.perfetto.dev>, and load the file — each
 //! machine renders as a process, phases and barrier waits as slices.
+//!
+//! ## Performance
+//!
+//! The hot path of every round is two linear scans over [`store`]'s flat
+//! arena rows: the exact `(weight, id)`-min NN scan and the ε-good
+//! eligibility sweep. Both lower to explicit SIMD kernels in
+//! [`store::scan`] — AVX2 on `x86_64`, NEON on `aarch64`, selected once
+//! per process by runtime feature detection with an always-compiled
+//! scalar fallback. Arena rows are lane-padded with vacant slots so the
+//! kernels consume whole rows with no tail loop, and the `(weight, id)`
+//! lex-min tie-break is evaluated as a packed compare, which keeps the
+//! vector paths **bitwise identical** to the scalar one (the module docs
+//! prove why; `rust/tests/simd_scan.rs` property-tests it per kernel and
+//! end-to-end across all five engines). Set `RAC_FORCE_SCALAR=1` (or
+//! `force_scalar = true` under `[engine]`, or `--force-scalar`) to pin
+//! the fallback; `benches/hot_paths.rs` reports scalar-vs-SIMD
+//! counterpart cells and the active dispatch in `BENCH_hot_paths.json`.
 
 pub mod approx;
 pub mod config;

@@ -43,7 +43,11 @@ pub type Weight = f64;
 /// A cluster-to-cluster dissimilarity together with the number of
 /// underlying point pairs it aggregates (needed only by average linkage;
 /// 1 for point-point edges).
+///
+/// `repr(C)` pins the field layout: `store::Entry` (also `repr(C)`) embeds
+/// this struct in the flat arena rows the `store::scan` SIMD kernels read.
 #[derive(Debug, Clone, Copy, PartialEq)]
+#[repr(C)]
 pub struct EdgeState {
     /// Current linkage value between the two clusters.
     pub weight: Weight,

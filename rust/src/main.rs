@@ -32,6 +32,11 @@
 //! `--checkpoint-full-every N` sets the delta-checkpoint cadence (every
 //! Nth cut is a full blob; the rest are dirty-row deltas).
 //!
+//! Both pipeline subcommands take `--force-scalar` to pin the row-scan
+//! kernels to the scalar fallback instead of the detected SIMD dispatch
+///! (bitwise-identical results; see `store::scan`). The `RAC_FORCE_SCALAR`
+//! environment variable does the same without a flag.
+//!
 //! Observability flags (`run` and `cluster`): `--trace FILE` records a
 //! structured event trace (`--trace-format jsonl|chrome`; `chrome` loads
 //! directly in Perfetto), `--metrics-out FILE` writes the run's metrics
@@ -83,7 +88,7 @@ rac — Reciprocal Agglomerative Clustering coordinator
 
 USAGE:
   rac run --config <file.toml> [--trace FILE] [--trace-format jsonl|chrome]
-          [--metrics-out FILE] [--json]
+          [--metrics-out FILE] [--force-scalar] [--json]
   rac cluster [--dataset T] [--n N] [--d D] [--k K] [--xla] [--linkage L]
               [--engine E] [--machines M] [--cpus C] [--epsilon E]
               [--sync-mode per_round|batched] [--vshards V]
@@ -92,7 +97,7 @@ USAGE:
               [--fault-seed S] [--recovery-mode global|shard_replay]
               [--checkpoint-full-every N]
               [--trace FILE] [--trace-format jsonl|chrome]
-              [--metrics-out FILE]
+              [--metrics-out FILE] [--force-scalar]
               [--seed S] [--json]
   rac verify [--n N] [--seeds S]
   rac graph-info --config <file.toml>
@@ -107,7 +112,7 @@ struct Flags {
 }
 
 impl Flags {
-    const BOOL_FLAGS: &'static [&'static str] = &["json", "xla"];
+    const BOOL_FLAGS: &'static [&'static str] = &["json", "xla", "force-scalar"];
 
     fn parse(args: &[String]) -> Result<Flags> {
         let mut pairs = std::collections::BTreeMap::new();
@@ -248,6 +253,9 @@ fn cmd_run(args: &[String]) -> Result<()> {
         .ok_or_else(|| anyhow!("--config <file.toml> required"))?;
     let mut cfg = RunConfig::from_file(std::path::Path::new(path))?;
     apply_output_flags(&mut cfg, &flags)?;
+    if flags.has("force-scalar") {
+        cfg.force_scalar = true;
+    }
     let out = pipeline::run(&cfg)?;
     report(&out, flags.has("json"));
     Ok(())
@@ -285,6 +293,9 @@ fn cmd_cluster(args: &[String]) -> Result<()> {
     text.push_str("[engine]\n");
     if let Some(e) = flags.get("engine") {
         text.push_str(&format!("type = \"{e}\"\n"));
+    }
+    if flags.has("force-scalar") {
+        text.push_str("force_scalar = true\n");
     }
     if let Some(m) = flags.get("sync-mode") {
         text.push_str(&format!("sync_mode = \"{m}\"\n"));

@@ -99,6 +99,12 @@ pub fn run_engine_traced(cfg: &RunConfig, g: &Graph, sink: &TraceSink) -> Result
     {
         bail!("exec options require a distributed engine (dist_rac or dist_approx)");
     }
+    if cfg.force_scalar {
+        // Pin the row-scan kernels to the scalar fallback for this
+        // process. Only set when requested so an environment-level
+        // RAC_FORCE_SCALAR is never clobbered back to SIMD.
+        crate::store::scan::force_scalar(true);
+    }
     match cfg.engine {
         EngineSpec::NaiveHac => {
             let t = Instant::now();

@@ -37,18 +37,21 @@ use rustc_hash::FxHashMap;
 use crate::linkage::{EdgeState, Linkage, MergeCtx, Weight};
 use crate::store::NeighborsRef;
 
+// The total-order helpers live next to the kernels they pin
+// ([`crate::store::scan`]); re-exported here because this module is where
+// the engines historically import the NN order from.
+pub use crate::store::scan::{cmp_weight_pair, nn_better};
+
 /// Scan a neighbor view for the `(weight, id)`-minimal entry, returning
 /// [`super::NO_NN`] for an empty view. Shared by every engine so
 /// nearest-neighbor tie-breaking is bitwise identical everywhere.
+///
+/// Delegates to [`NeighborsRef::nn_min`]: on the flat store that is the
+/// dispatched SIMD row kernel ([`crate::store::scan`]), everywhere else
+/// the scalar reference fold — bitwise identical either way.
 #[inline]
 pub fn scan_nn<N: NeighborsRef>(neighbors: N) -> (u32, Weight) {
-    let mut best = (super::NO_NN, Weight::INFINITY);
-    neighbors.for_each_edge(|v, e| {
-        if e.weight < best.1 || (e.weight == best.1 && v < best.0) {
-            best = (v, e.weight);
-        }
-    });
-    best
+    neighbors.nn_min()
 }
 
 /// What the computation needs to know about any cluster id it encounters

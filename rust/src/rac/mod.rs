@@ -64,8 +64,9 @@ use crate::metrics::RunMetrics;
 use crate::store::NeighborStore;
 use crate::trace::TraceSink;
 
-/// Sentinel "no nearest neighbor" (isolated cluster).
-pub const NO_NN: u32 = u32::MAX;
+/// Sentinel "no nearest neighbor" (isolated cluster). Canonically
+/// defined next to the scan kernels whose accumulators start from it.
+pub use crate::store::scan::NO_NN;
 
 /// Result of a clustering run.
 #[derive(Debug)]

@@ -62,6 +62,23 @@
 //! points, and therefore row layouts, are bit-for-bit reproducible for
 //! any parallelism setting.
 //!
+//! ## Lane padding and the scan kernels
+//!
+//! Every allocation site ([`NeighborStore::from_graph`], `push`
+//! relocation, [`NeighborStore::install_row`],
+//! [`NeighborStore::maybe_compact`], the parallel apply's reserved
+//! ranges) rounds a row's reserved capacity up to a multiple of
+//! [`scan::LANES`], filling the slack with [`Entry::VACANT`] slots. The
+//! invariant — slots `[off + len, off + cap)` are always `VACANT`, and
+//! `cap % LANES == 0` — lets [`RowRef`] hand its whole padded span to the
+//! vectorized row-scan kernels in [`scan`] with no scalar tail loop:
+//! vacant slots carry `id == TOMBSTONE` and are masked exactly like
+//! deletions. The hot scans ([`NeighborsRef::nn_min`],
+//! [`NeighborsRef::for_each_band`]) dispatch to those kernels on the flat
+//! store and fall back to a scalar fold on every other backend; both
+//! paths are bitwise identical by the kernel contract ([`scan`]'s module
+//! docs).
+//!
 //! ## Determinism contract
 //!
 //! The engines require dendrograms that are bitwise identical across
@@ -72,9 +89,13 @@
 //! by ascending union index regardless of how rows are sharded over
 //! workers.
 
+pub mod scan;
+
 use crate::graph::Graph;
 use crate::linkage::{EdgeState, Weight};
 use crate::util::pool::{Pool, SendPtr};
+
+use scan::padded_len;
 
 /// Entry id marking a deleted slot (also padding in reserved-but-unwritten
 /// arena space). Cluster ids must therefore be `< u32::MAX`, which the
@@ -89,6 +110,9 @@ pub type UnionRow = (u32, Vec<(u32, EdgeState)>);
 pub const COMPACT_MIN_ARENA: usize = 1 << 12;
 
 /// One adjacency slot: a neighbor id (or [`TOMBSTONE`]) plus edge state.
+/// `repr(C)` pins the field layout the raw-slice scan kernels
+/// ([`scan`]) assume.
+#[repr(C)]
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Entry {
     pub id: u32,
@@ -96,8 +120,11 @@ pub struct Entry {
 }
 
 impl Entry {
-    /// Reserved-but-empty slot.
-    const VACANT: Entry = Entry {
+    /// Reserved-but-empty slot — also the lane-padding filler past a
+    /// row's `len`. Its `(+inf, u32::MAX)` encoding is exactly what the
+    /// scan kernels mask dead lanes to, so padded spans scan like the
+    /// unpadded row.
+    pub const VACANT: Entry = Entry {
         id: TOMBSTONE,
         edge: EdgeState {
             weight: Weight::INFINITY,
@@ -163,6 +190,14 @@ impl<'a> RowRef<'a> {
             .find(|e| e.id == id)
             .map(|e| e.edge)
     }
+
+    /// The raw contiguous slot span backing this row — live entries,
+    /// tombstones, and the trailing [`Entry::VACANT`] lane padding. What
+    /// the vectorized kernels in [`scan`] consume; dead slots must be
+    /// masked by `id == TOMBSTONE` (their stored weight is stale).
+    pub fn entries(self) -> &'a [Entry] {
+        self.entries
+    }
 }
 
 /// Read-only neighbor view the engine-shared logic
@@ -182,6 +217,34 @@ pub trait NeighborsRef: Copy {
 
     /// Number of live entries.
     fn live_len(self) -> usize;
+
+    /// `(weight, id)` lex-min live entry — `(NO_NN, +inf)` when empty.
+    /// The default is the scalar reference fold; [`RowRef`] overrides it
+    /// with the dispatched row kernel ([`scan::scan_nn_entries`]), which
+    /// is bitwise identical by the kernel contract.
+    fn nn_min(self) -> (u32, Weight) {
+        let mut best_id = scan::NO_NN;
+        let mut best_w = Weight::INFINITY;
+        self.for_each_edge(|v, e| {
+            if scan::nn_better(e.weight, v, best_w, best_id) {
+                best_w = e.weight;
+                best_id = v;
+            }
+        });
+        (best_id, best_w)
+    }
+
+    /// Visit every live entry with `id > a` inside the ε-good band
+    /// ([`scan::band_accepts`]`(w, id, thr, nn_a)`). The default is the
+    /// scalar filter over [`Self::for_each_edge`]; [`RowRef`] overrides
+    /// it with the dispatched band kernel ([`scan::scan_band_entries`]).
+    fn for_each_band(self, a: u32, thr: Weight, nn_a: u32, mut f: impl FnMut(u32, Weight)) {
+        self.for_each_edge(|b, e| {
+            if b > a && scan::band_accepts(e.weight, b, thr, nn_a) {
+                f(b, e.weight);
+            }
+        });
+    }
 }
 
 impl NeighborsRef for RowRef<'_> {
@@ -197,6 +260,16 @@ impl NeighborsRef for RowRef<'_> {
     #[inline]
     fn live_len(self) -> usize {
         self.live
+    }
+
+    #[inline]
+    fn nn_min(self) -> (u32, Weight) {
+        scan::scan_nn_entries(self.entries)
+    }
+
+    #[inline]
+    fn for_each_band(self, a: u32, thr: Weight, nn_a: u32, f: impl FnMut(u32, Weight)) {
+        scan::scan_band_entries(self.entries, a, thr, nn_a, f);
     }
 }
 
@@ -233,12 +306,13 @@ impl NeighborStore {
         }
     }
 
-    /// Build from a graph, pre-sizing every row exactly from the CSR
-    /// degrees — one arena allocation, no per-insert growth.
+    /// Build from a graph, pre-sizing every row from the CSR degrees
+    /// (rounded up to the lane multiple) — one arena allocation, no
+    /// per-insert growth.
     pub fn from_graph(g: &Graph) -> NeighborStore {
         let n = g.n();
         let total = 2 * g.m();
-        let mut arena = Vec::with_capacity(total);
+        let mut arena = Vec::with_capacity(total + n * (scan::LANES - 1));
         let mut rows = Vec::with_capacity(n);
         for u in 0..n as u32 {
             let off = arena.len();
@@ -249,10 +323,12 @@ impl NeighborStore {
                 });
             }
             let len = (arena.len() - off) as u32;
+            let cap = padded_len(len as usize) as u32;
+            arena.resize(off + cap as usize, Entry::VACANT);
             rows.push(Row {
                 off,
                 len,
-                cap: len,
+                cap,
                 dead: 0,
             });
         }
@@ -283,12 +359,16 @@ impl NeighborStore {
         self.arena.len()
     }
 
-    /// Read-only view of cluster `c`'s row.
+    /// Read-only view of cluster `c`'s row. The span covers the occupied
+    /// slots rounded up to the lane multiple — never past `cap` — so the
+    /// scan kernels can consume it whole; the extra slots are `VACANT`
+    /// by the padding invariant (module docs).
     #[inline]
     pub fn row(&self, c: u32) -> RowRef<'_> {
         let r = &self.rows[c as usize];
+        let span = padded_len(r.len as usize).min(r.cap as usize);
         RowRef {
-            entries: &self.arena[r.off..r.off + r.len as usize],
+            entries: &self.arena[r.off..r.off + span],
             live: r.live(),
         }
     }
@@ -304,7 +384,7 @@ impl NeighborStore {
             self.arena[row.off + row.len as usize] = Entry { id, edge };
             self.rows[c as usize].len += 1;
         } else {
-            let new_cap = (row.cap as usize * 2).max(4);
+            let new_cap = padded_len((row.cap as usize * 2).max(4));
             let live: Vec<Entry> = self.arena[row.off..row.off + row.len as usize]
                 .iter()
                 .copied()
@@ -346,7 +426,7 @@ impl NeighborStore {
     }
 
     /// Replace row `c` with `entries`, written contiguously at the arena
-    /// tail; the old run becomes dead space.
+    /// tail (lane-padded); the old run becomes dead space.
     pub fn install_row(&mut self, c: u32, entries: &[(u32, EdgeState)]) {
         let off = self.arena.len();
         self.arena.extend(
@@ -354,12 +434,14 @@ impl NeighborStore {
                 .iter()
                 .map(|&(id, edge)| Entry { id, edge }),
         );
+        let cap = padded_len(entries.len()) as u32;
+        self.arena.resize(off + cap as usize, Entry::VACANT);
         let old = self.rows[c as usize];
         self.live = self.live - old.live() + entries.len();
         self.rows[c as usize] = Row {
             off,
             len: entries.len() as u32,
-            cap: entries.len() as u32,
+            cap,
             dead: 0,
         };
     }
@@ -383,7 +465,7 @@ impl NeighborStore {
         if self.arena.len() < COMPACT_MIN_ARENA || dead <= self.live {
             return false;
         }
-        let mut arena = Vec::with_capacity(self.live);
+        let mut arena = Vec::with_capacity(self.live + self.rows.len() * (scan::LANES - 1));
         for row in &mut self.rows {
             let off = arena.len();
             for e in &self.arena[row.off..row.off + row.len as usize] {
@@ -392,14 +474,15 @@ impl NeighborStore {
                 }
             }
             let len = (arena.len() - off) as u32;
+            let cap = padded_len(len as usize) as u32;
+            arena.resize(off + cap as usize, Entry::VACANT);
             *row = Row {
                 off,
                 len,
-                cap: len,
+                cap,
                 dead: 0,
             };
         }
-        debug_assert_eq!(arena.len(), self.live);
         self.arena = arena;
         true
     }
@@ -454,8 +537,10 @@ impl NeighborStore {
         // rescanning every union (which would put an O(total) floor under
         // every worker regardless of shard count). Bucket order is
         // ascending union index, so each row still receives its patches in
-        // exactly the serial order.
-        let total: usize = unions.iter().map(|(_, m)| m.len()).sum();
+        // exactly the serial order. Ranges are lane-padded exactly like
+        // the serial install_row path, so arena layout stays identical
+        // across shard counts.
+        let total: usize = unions.iter().map(|(_, m)| padded_len(m.len())).sum();
         let base = self.arena.len();
         self.arena.resize(base + total, Entry::VACANT);
         let mut offs = Vec::with_capacity(unions.len());
@@ -470,7 +555,7 @@ impl NeighborStore {
             let p = partner_of(*l);
             offs.push(off);
             partners.push(p);
-            off += map.len();
+            off += padded_len(map.len());
             for (j, &(t, _)) in map.iter().enumerate() {
                 if patch_target(t) {
                     patch_work[t as usize % shards].push((i as u32, j as u32));
@@ -514,7 +599,7 @@ impl NeighborStore {
                 *row = Row {
                     off: offs[i as usize],
                     len: map.len() as u32,
-                    cap: map.len() as u32,
+                    cap: padded_len(map.len()) as u32,
                     dead: 0,
                 };
             }
@@ -616,7 +701,11 @@ mod tests {
         let s = NeighborStore::from_graph(&g);
         assert_eq!(s.n_rows(), 4);
         assert_eq!(s.live_entries(), 2 * g.m());
-        assert_eq!(s.dead_entries(), 0);
+        // The only dead space is the per-row lane padding.
+        let pad: usize = (0..4u32)
+            .map(|u| padded_len(g.degree(u)) - g.degree(u))
+            .sum();
+        assert_eq!(s.dead_entries(), pad);
         for u in 0..4u32 {
             let want: Vec<(u32, Weight)> = g.neighbors(u).collect();
             assert_eq!(row_vec(&s, u), want, "row {u}");
@@ -715,8 +804,9 @@ mod tests {
         let want: Vec<Vec<(u32, Weight)>> = (0..8u32).map(|c| row_vec(&s, c)).collect();
         assert!(s.dead_entries() > s.live_entries());
         assert!(s.maybe_compact());
-        assert_eq!(s.dead_entries(), 0);
-        assert_eq!(s.arena_len(), s.live_entries());
+        // Post-compact the only dead space is per-row lane padding.
+        assert!(s.dead_entries() < s.n_rows() * scan::LANES);
+        assert!(s.arena_len() - s.live_entries() == s.dead_entries());
         for c in 0..8u32 {
             assert_eq!(row_vec(&s, c), want[c as usize], "row {c} changed");
         }
@@ -783,6 +873,79 @@ mod tests {
                 assert_eq!(row_vec(&par, c), row_vec(&serial, c), "row {c}, t={threads}");
             }
         }
+    }
+
+    /// Every mutation path must preserve the lane-padding invariant the
+    /// scan kernels rely on: row capacity is a multiple of
+    /// [`scan::LANES`], the padded span fits inside it, and every slot in
+    /// `[off + len, off + cap)` is `VACANT`.
+    #[test]
+    fn rows_stay_lane_padded() {
+        fn check(s: &NeighborStore, when: &str) {
+            for (c, r) in s.rows.iter().enumerate() {
+                assert_eq!(r.cap as usize % scan::LANES, 0, "{when}: row {c} cap {}", r.cap);
+                assert!(r.len <= r.cap, "{when}: row {c} len {} > cap {}", r.len, r.cap);
+                for (i, e) in s.arena[r.off + r.len as usize..r.off + r.cap as usize]
+                    .iter()
+                    .enumerate()
+                {
+                    assert_eq!(
+                        *e,
+                        Entry::VACANT,
+                        "{when}: row {c} slack slot {i} not vacant"
+                    );
+                }
+            }
+        }
+
+        let g = diamond();
+        let mut s = NeighborStore::from_graph(&g);
+        check(&s, "from_graph");
+        // Spare-capacity pushes, then enough to force a relocation.
+        for i in 0..9u32 {
+            s.push(0, 10 + i, es(i as Weight));
+        }
+        check(&s, "push/relocate");
+        s.remove(0, 10);
+        s.remove(0, 2);
+        check(&s, "remove");
+        s.patch(1, 5, 2, es(0.5));
+        check(&s, "patch");
+        s.install_row(3, &[(0, es(1.0)), (5, es(2.0)), (6, es(3.0))]);
+        s.clear_row(2);
+        check(&s, "install/clear");
+
+        // The parallel apply's reserved ranges pad the same way.
+        let g2 = Graph::from_edges(
+            6,
+            [
+                (0, 1, 1.0),
+                (0, 2, 3.0),
+                (1, 3, 4.0),
+                (2, 3, 2.0),
+                (2, 4, 5.0),
+                (3, 5, 6.0),
+            ],
+        );
+        let unions: Vec<UnionRow> = vec![(0, vec![(2, es(3.0)), (3, es(4.0))])];
+        for threads in [1usize, 3] {
+            let pool = Pool::new(threads);
+            let mut par = NeighborStore::from_graph(&g2);
+            par.par_apply_round(&pool, &unions, |l| l + 1, |t| t > 1);
+            check(&par, "par_apply_round");
+        }
+
+        // Compaction rebuilds padded.
+        let mut big = NeighborStore::new(4);
+        for c in 0..4u32 {
+            for i in 0..(COMPACT_MIN_ARENA / 2) as u32 {
+                big.push(c, 4 + i, es(i as Weight));
+            }
+        }
+        big.clear_row(0);
+        big.clear_row(1);
+        assert!(big.maybe_compact());
+        check(&big, "maybe_compact");
     }
 
     #[test]

@@ -1,0 +1,660 @@
+//! Vectorized row-scan kernels for the two hot linear passes, behind
+//! one-time runtime dispatch with a bitwise-pinned scalar fallback.
+//!
+//! Every round of every engine is dominated by two contiguous-row scans
+//! over the flat arena ([`crate::store::NeighborStore`]):
+//!
+//! * the exact `(weight, id)`-min NN scan ([`crate::rac::logic::scan_nn`],
+//!   driven per-cluster by [`crate::engine::RoundDriver`] and both
+//!   distributed engines), lowered here as [`scan_nn_entries`], and
+//! * the ε-good eligibility sweep
+//!   ([`crate::approx::good::scan_row_candidates`]), whose per-row band
+//!   test `w < thr || (w == thr && id == nn)` is lowered as
+//!   [`scan_band_entries`].
+//!
+//! Both kernels operate on the raw contiguous [`Entry`] slice of a row
+//! (see `RowRef::entries`), including its tombstoned and vacant padding
+//! slots: any slot whose id is [`TOMBSTONE`] is masked by treating it as
+//! `(+inf, u32::MAX)` *before* any weight or band comparison — tombstones
+//! keep their stale weight in the arena, so the mask must come first.
+//!
+//! ## Dispatch
+//!
+//! Kernel selection happens once per process (first scan) and is cached
+//! in an atomic:
+//!
+//! * `x86_64` with AVX2 detected at runtime → [`Kernel::Avx2`]
+//!   (4 × f64 lanes);
+//! * `aarch64` with NEON detected at runtime → [`Kernel::Neon`]
+//!   (2 × f64 lanes);
+//! * everything else → [`Kernel::Scalar`], the always-compiled fallback.
+//!
+//! The scalar path can be forced for differential testing via the
+//! `RAC_FORCE_SCALAR` environment variable (any value other than empty /
+//! `0` / `false` / `off` / `no`), the `force_scalar` config key /
+//! `--force-scalar` CLI flag (see [`crate::config::RunConfig`]), or
+//! programmatically via [`force_scalar`].
+//!
+//! ## Why the packed compare preserves the tie-break (bitwise contract)
+//!
+//! The crate-wide total order for NN selection is `(weight, id)` lex-min
+//! under IEEE `<` / `==` (see [`nn_better`]): strictly smaller weight
+//! wins, equal weight falls back to smaller id. Because live ids within a
+//! row are unique, this is a *strict total order on live entries* — it
+//! has a unique minimum, and that minimum is independent of visit order:
+//!
+//! * NaN weights never win (`<` and `==` are both false), in any lane or
+//!   scalar step, so they are skipped identically on every path;
+//! * `-0.0 == +0.0` ties fall through to the id compare, which is exact
+//!   integer arithmetic;
+//! * masked lanes carry `(+inf, u32::MAX)` — the accumulator's initial
+//!   value — and therefore never displace a live candidate (equal weight,
+//!   id not smaller) and never survive a live candidate with finite
+//!   weight or smaller id.
+//!
+//! A lane-partitioned reduction (4 running minima folded at the end) thus
+//! lands on exactly the entry the scalar left-to-right fold lands on, and
+//! copies its weight bits verbatim — results are bitwise identical to the
+//! scalar path, which is the determinism contract every differential
+//! suite (`store_equivalence`, `approx_quality`, `dist_*`,
+//! `trace_invariance`) pins. `tests/simd_scan.rs` property-tests this
+//! equality over every row length and remainder shape, and end-to-end
+//! over full dendrograms for all five engines.
+//!
+//! The eligibility band is a pure per-lane predicate (no cross-lane
+//! state), so its SIMD form only has to visit accepted entries in storage
+//! order — a movemask over the packed predicate does exactly that.
+
+use crate::linkage::Weight;
+use crate::store::{Entry, TOMBSTONE};
+use std::cmp::Ordering;
+use std::sync::atomic::{AtomicU8, Ordering as AtomicOrd};
+
+/// "No nearest neighbor" sentinel shared by every engine (isolated or
+/// retired clusters). Identical to [`TOMBSTONE`] by design: cluster ids
+/// must stay `< u32::MAX` either way, and the NN scan's accumulator can
+/// start at `(NO_NN, +inf)` — the same encoding masked lanes carry.
+pub const NO_NN: u32 = u32::MAX;
+
+/// Widest SIMD lane count across supported targets (AVX2: 4 × f64).
+/// Arena rows reserve capacity in multiples of this so vector kernels
+/// never read past a row's reserved span.
+pub const LANES: usize = 4;
+
+/// `len` rounded up to a multiple of [`LANES`] (0 stays 0).
+#[inline]
+pub fn padded_len(len: usize) -> usize {
+    len.div_ceil(LANES) * LANES
+}
+
+/// The crate-wide NN total order: does candidate `(w, id)` beat the
+/// current best `(best_w, best_id)`? Strictly smaller weight wins; equal
+/// weight falls back to strictly smaller id. IEEE semantics — a NaN
+/// weight never beats anything (both compares are false), so NaNs are
+/// skipped identically on the scalar and vector paths.
+#[inline]
+pub fn nn_better(w: Weight, id: u32, best_w: Weight, best_id: u32) -> bool {
+    w < best_w || (w == best_w && id < best_id)
+}
+
+/// The ε-good eligibility band from one endpoint's perspective: accept a
+/// partner at weight `w` iff `w` is strictly inside the threshold, or
+/// exactly on the boundary *and* the partner is the cached NN pointer
+/// (`nn_a`) — the boundary case keeps exactness at ε = 0 (see
+/// [`crate::approx::good`]).
+#[inline]
+pub fn band_accepts(w: Weight, b: u32, thr: Weight, nn_a: u32) -> bool {
+    w < thr || (w == thr && b == nn_a)
+}
+
+/// Total order on `(weight, lo_id, hi_id)` triples: weight by
+/// `total_cmp`, then both ids ascending. The single shared comparator for
+/// every sort that must break weight ties deterministically
+/// ([`crate::hac::mst`], [`crate::hac::naive`]'s global heap,
+/// [`crate::approx`]'s candidate ranking).
+#[inline]
+pub fn cmp_weight_pair(a: &(Weight, u32, u32), b: &(Weight, u32, u32)) -> Ordering {
+    a.0.total_cmp(&b.0)
+        .then(a.1.cmp(&b.1))
+        .then(a.2.cmp(&b.2))
+}
+
+/// One row-scan kernel implementation. `Scalar` is always compiled; the
+/// vector variants exist only on their target architecture and are only
+/// ever *selected* after runtime feature detection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kernel {
+    /// Portable scalar loop — the reference semantics.
+    Scalar,
+    /// 4 × f64 AVX2 kernel (`x86_64` only).
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    /// 2 × f64 NEON kernel (`aarch64` only).
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+impl Kernel {
+    /// Stable name for logs / bench artifacts.
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => "avx2",
+            #[cfg(target_arch = "aarch64")]
+            Kernel::Neon => "neon",
+        }
+    }
+}
+
+/// Cached dispatch decision: 0 = undecided, otherwise `encode(kernel)`.
+static ACTIVE: AtomicU8 = AtomicU8::new(0);
+
+fn encode(k: Kernel) -> u8 {
+    match k {
+        Kernel::Scalar => 1,
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => 2,
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => 3,
+    }
+}
+
+fn decode(v: u8) -> Kernel {
+    match v {
+        #[cfg(target_arch = "x86_64")]
+        2 => Kernel::Avx2,
+        #[cfg(target_arch = "aarch64")]
+        3 => Kernel::Neon,
+        _ => Kernel::Scalar,
+    }
+}
+
+/// Best kernel this machine supports (runtime feature detection; does not
+/// consult the force-scalar override).
+pub fn detect() -> Kernel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::is_x86_feature_detected!("avx2") {
+            return Kernel::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Kernel::Neon;
+        }
+    }
+    Kernel::Scalar
+}
+
+/// Every kernel runnable on this machine (always starts with `Scalar`) —
+/// what the differential tests iterate over.
+pub fn available() -> Vec<Kernel> {
+    let mut v = vec![Kernel::Scalar];
+    let best = detect();
+    if best != Kernel::Scalar {
+        v.push(best);
+    }
+    v
+}
+
+/// Does this `RAC_FORCE_SCALAR` value request the scalar fallback?
+/// Empty / `0` / `false` / `off` / `no` (case-insensitive) mean "no";
+/// anything else (including `1`) means "yes".
+pub fn env_wants_scalar(value: &str) -> bool {
+    !matches!(
+        value.trim().to_ascii_lowercase().as_str(),
+        "" | "0" | "false" | "off" | "no"
+    )
+}
+
+fn env_forces_scalar() -> bool {
+    std::env::var("RAC_FORCE_SCALAR")
+        .map(|v| env_wants_scalar(&v))
+        .unwrap_or(false)
+}
+
+/// The kernel scans dispatch to. Decided once per process — environment
+/// override first, then feature detection — and cached; a concurrent
+/// first call computes the same value, so the race is benign.
+pub fn active() -> Kernel {
+    let v = ACTIVE.load(AtomicOrd::Relaxed);
+    if v != 0 {
+        return decode(v);
+    }
+    let k = if env_forces_scalar() {
+        Kernel::Scalar
+    } else {
+        detect()
+    };
+    let _ = ACTIVE.compare_exchange(0, encode(k), AtomicOrd::Relaxed, AtomicOrd::Relaxed);
+    decode(ACTIVE.load(AtomicOrd::Relaxed))
+}
+
+/// Programmatic override: `true` pins the scalar fallback, `false`
+/// restores the detected kernel. Used by the config/CLI plumbing and the
+/// scalar-vs-SIMD bench cells; safe to flip at any point because both
+/// settings produce bitwise-identical results.
+pub fn force_scalar(on: bool) {
+    let k = if on { Kernel::Scalar } else { detect() };
+    ACTIVE.store(encode(k), AtomicOrd::Relaxed);
+}
+
+/// `(weight, id)` lex-min over a raw row span, dispatching to the active
+/// kernel. Returns `(NO_NN, +inf)` for rows with no live entries. Slots
+/// with `id == TOMBSTONE` (deletions and vacant padding) are masked as
+/// `(+inf, u32::MAX)` — never by their stale stored weight.
+#[inline]
+pub fn scan_nn_entries(entries: &[Entry]) -> (u32, Weight) {
+    scan_nn_with(active(), entries)
+}
+
+/// [`scan_nn_entries`] pinned to a specific kernel (differential tests,
+/// bench cells). Panics if `kernel` is a vector variant the current
+/// machine does not support.
+pub fn scan_nn_with(kernel: Kernel, entries: &[Entry]) -> (u32, Weight) {
+    match kernel {
+        Kernel::Scalar => scan_nn_scalar(entries),
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => {
+            assert!(std::is_x86_feature_detected!("avx2"), "AVX2 not available");
+            // SAFETY: AVX2 support was just verified at runtime.
+            unsafe { scan_nn_avx2(entries) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => {
+            assert!(
+                std::arch::is_aarch64_feature_detected!("neon"),
+                "NEON not available"
+            );
+            // SAFETY: NEON support was just verified at runtime.
+            unsafe { scan_nn_neon(entries) }
+        }
+    }
+}
+
+/// ε-good eligibility sweep over a raw row span, dispatching to the
+/// active kernel: visit every live entry with `id > a` whose weight
+/// passes [`band_accepts`]`(w, id, thr, nn_a)`, in storage order.
+/// Tombstoned / vacant slots are masked *before* the band test — a vacant
+/// slot is `(+inf, u32::MAX)`, which would otherwise sit exactly on the
+/// boundary of an isolated cluster's band (`thr = +inf`,
+/// `nn_a = u32::MAX`).
+#[inline]
+pub fn scan_band_entries(
+    entries: &[Entry],
+    a: u32,
+    thr: Weight,
+    nn_a: u32,
+    mut f: impl FnMut(u32, Weight),
+) {
+    scan_band_with(active(), entries, a, thr, nn_a, &mut f);
+}
+
+/// [`scan_band_entries`] pinned to a specific kernel (differential tests,
+/// bench cells). Panics if `kernel` is a vector variant the current
+/// machine does not support.
+pub fn scan_band_with(
+    kernel: Kernel,
+    entries: &[Entry],
+    a: u32,
+    thr: Weight,
+    nn_a: u32,
+    f: &mut impl FnMut(u32, Weight),
+) {
+    match kernel {
+        Kernel::Scalar => scan_band_scalar(entries, a, thr, nn_a, f),
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => {
+            assert!(std::is_x86_feature_detected!("avx2"), "AVX2 not available");
+            // SAFETY: AVX2 support was just verified at runtime.
+            unsafe { scan_band_avx2(entries, a, thr, nn_a, f) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => {
+            assert!(
+                std::arch::is_aarch64_feature_detected!("neon"),
+                "NEON not available"
+            );
+            // SAFETY: NEON support was just verified at runtime.
+            unsafe { scan_band_neon(entries, a, thr, nn_a, f) }
+        }
+    }
+}
+
+fn scan_nn_scalar(entries: &[Entry]) -> (u32, Weight) {
+    let mut best_id = NO_NN;
+    let mut best_w = Weight::INFINITY;
+    for e in entries {
+        if e.id != TOMBSTONE && nn_better(e.edge.weight, e.id, best_w, best_id) {
+            best_w = e.edge.weight;
+            best_id = e.id;
+        }
+    }
+    (best_id, best_w)
+}
+
+fn scan_band_scalar(
+    entries: &[Entry],
+    a: u32,
+    thr: Weight,
+    nn_a: u32,
+    f: &mut impl FnMut(u32, Weight),
+) {
+    for e in entries {
+        if e.id != TOMBSTONE && e.id > a && band_accepts(e.edge.weight, e.id, thr, nn_a) {
+            f(e.id, e.edge.weight);
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn scan_nn_avx2(entries: &[Entry]) -> (u32, Weight) {
+    use std::arch::x86_64::*;
+    let inf = _mm256_set1_pd(f64::INFINITY);
+    let tomb = _mm256_set1_epi64x(TOMBSTONE as i64);
+    let mut best_w = inf;
+    let mut best_id = tomb; // TOMBSTONE == NO_NN: the scalar accumulator init
+    let mut chunks = entries.chunks_exact(LANES);
+    for c in chunks.by_ref() {
+        // Ids zero-extend to i64, so signed 64-bit compares are exact.
+        let id = _mm256_set_epi64x(
+            c[3].id as i64,
+            c[2].id as i64,
+            c[1].id as i64,
+            c[0].id as i64,
+        );
+        let w = _mm256_set_pd(
+            c[3].edge.weight,
+            c[2].edge.weight,
+            c[1].edge.weight,
+            c[0].edge.weight,
+        );
+        // Mask dead slots (deleted or vacant) to (+inf, u32::MAX) BEFORE
+        // comparing — tombstones keep their stale weight in the arena.
+        let dead = _mm256_cmpeq_epi64(id, tomb);
+        let w = _mm256_blendv_pd(w, inf, _mm256_castsi256_pd(dead));
+        // Packed (weight, id) lex-min: take = w < best || (w == best && id < best_id).
+        // Ordered-quiet compares are false on NaN, matching scalar `<`/`==`.
+        let lt = _mm256_cmp_pd(w, best_w, _CMP_LT_OQ);
+        let eq = _mm256_cmp_pd(w, best_w, _CMP_EQ_OQ);
+        let id_lt = _mm256_castsi256_pd(_mm256_cmpgt_epi64(best_id, id));
+        let take = _mm256_or_pd(lt, _mm256_and_pd(eq, id_lt));
+        best_w = _mm256_blendv_pd(best_w, w, take);
+        best_id = _mm256_castpd_si256(_mm256_blendv_pd(
+            _mm256_castsi256_pd(best_id),
+            _mm256_castsi256_pd(id),
+            take,
+        ));
+    }
+    let mut ws = [0.0f64; LANES];
+    let mut ids = [0i64; LANES];
+    _mm256_storeu_pd(ws.as_mut_ptr(), best_w);
+    _mm256_storeu_si256(ids.as_mut_ptr() as *mut __m256i, best_id);
+    // Fold the per-lane minima with the same total order; masked lanes
+    // hold (+inf, NO_NN) and thus never displace a live winner.
+    let mut out_id = NO_NN;
+    let mut out_w = Weight::INFINITY;
+    for (&w, &id) in ws.iter().zip(ids.iter()) {
+        let id = id as u32;
+        if nn_better(w, id, out_w, out_id) {
+            out_w = w;
+            out_id = id;
+        }
+    }
+    for e in chunks.remainder() {
+        if e.id != TOMBSTONE && nn_better(e.edge.weight, e.id, out_w, out_id) {
+            out_w = e.edge.weight;
+            out_id = e.id;
+        }
+    }
+    (out_id, out_w)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn scan_band_avx2(
+    entries: &[Entry],
+    a: u32,
+    thr: Weight,
+    nn_a: u32,
+    f: &mut impl FnMut(u32, Weight),
+) {
+    use std::arch::x86_64::*;
+    let tomb = _mm256_set1_epi64x(TOMBSTONE as i64);
+    let av = _mm256_set1_epi64x(a as i64);
+    let thrv = _mm256_set1_pd(thr);
+    let nnv = _mm256_set1_epi64x(nn_a as i64);
+    let mut chunks = entries.chunks_exact(LANES);
+    for c in chunks.by_ref() {
+        let id = _mm256_set_epi64x(
+            c[3].id as i64,
+            c[2].id as i64,
+            c[1].id as i64,
+            c[0].id as i64,
+        );
+        let w = _mm256_set_pd(
+            c[3].edge.weight,
+            c[2].edge.weight,
+            c[1].edge.weight,
+            c[0].edge.weight,
+        );
+        let dead = _mm256_cmpeq_epi64(id, tomb);
+        let gt = _mm256_cmpgt_epi64(id, av);
+        let wlt = _mm256_cmp_pd(w, thrv, _CMP_LT_OQ);
+        let weq = _mm256_cmp_pd(w, thrv, _CMP_EQ_OQ);
+        let id_is_nn = _mm256_castsi256_pd(_mm256_cmpeq_epi64(id, nnv));
+        let accept = _mm256_or_pd(wlt, _mm256_and_pd(weq, id_is_nn));
+        // The dead mask must gate the band test: a vacant slot decodes as
+        // (+inf, u32::MAX), which an isolated cluster's band (thr = +inf,
+        // nn = u32::MAX) would otherwise accept on the boundary.
+        let live_gt = _mm256_andnot_si256(dead, gt);
+        let take = _mm256_and_pd(_mm256_castsi256_pd(live_gt), accept);
+        let bits = _mm256_movemask_pd(take);
+        if bits != 0 {
+            for (lane, e) in c.iter().enumerate() {
+                if bits & (1 << lane) != 0 {
+                    f(e.id, e.edge.weight);
+                }
+            }
+        }
+    }
+    for e in chunks.remainder() {
+        if e.id != TOMBSTONE && e.id > a && band_accepts(e.edge.weight, e.id, thr, nn_a) {
+            f(e.id, e.edge.weight);
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+const NEON_LANES: usize = 2;
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn scan_nn_neon(entries: &[Entry]) -> (u32, Weight) {
+    use std::arch::aarch64::*;
+    let inf = vdupq_n_f64(f64::INFINITY);
+    let tomb = vdupq_n_u64(TOMBSTONE as u64);
+    let mut best_w = inf;
+    let mut best_id = tomb; // TOMBSTONE == NO_NN: the scalar accumulator init
+    let mut chunks = entries.chunks_exact(NEON_LANES);
+    for c in chunks.by_ref() {
+        let ids = [c[0].id as u64, c[1].id as u64];
+        let wsv = [c[0].edge.weight, c[1].edge.weight];
+        let id = vld1q_u64(ids.as_ptr());
+        let w = vld1q_f64(wsv.as_ptr());
+        // Mask dead slots to (+inf, u32::MAX) before comparing.
+        let dead = vceqq_u64(id, tomb);
+        let w = vbslq_f64(dead, inf, w);
+        // Packed (weight, id) lex-min; float compares are false on NaN.
+        let lt = vcltq_f64(w, best_w);
+        let eq = vceqq_f64(w, best_w);
+        let id_lt = vcltq_u64(id, best_id);
+        let take = vorrq_u64(lt, vandq_u64(eq, id_lt));
+        best_w = vbslq_f64(take, w, best_w);
+        best_id = vbslq_u64(take, id, best_id);
+    }
+    let ws = [vgetq_lane_f64::<0>(best_w), vgetq_lane_f64::<1>(best_w)];
+    let ids = [
+        vgetq_lane_u64::<0>(best_id) as u32,
+        vgetq_lane_u64::<1>(best_id) as u32,
+    ];
+    let mut out_id = NO_NN;
+    let mut out_w = Weight::INFINITY;
+    for (&w, &id) in ws.iter().zip(ids.iter()) {
+        if nn_better(w, id, out_w, out_id) {
+            out_w = w;
+            out_id = id;
+        }
+    }
+    for e in chunks.remainder() {
+        if e.id != TOMBSTONE && nn_better(e.edge.weight, e.id, out_w, out_id) {
+            out_w = e.edge.weight;
+            out_id = e.id;
+        }
+    }
+    (out_id, out_w)
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn scan_band_neon(
+    entries: &[Entry],
+    a: u32,
+    thr: Weight,
+    nn_a: u32,
+    f: &mut impl FnMut(u32, Weight),
+) {
+    use std::arch::aarch64::*;
+    let tomb = vdupq_n_u64(TOMBSTONE as u64);
+    let av = vdupq_n_u64(a as u64);
+    let thrv = vdupq_n_f64(thr);
+    let nnv = vdupq_n_u64(nn_a as u64);
+    let mut chunks = entries.chunks_exact(NEON_LANES);
+    for c in chunks.by_ref() {
+        let ids = [c[0].id as u64, c[1].id as u64];
+        let wsv = [c[0].edge.weight, c[1].edge.weight];
+        let id = vld1q_u64(ids.as_ptr());
+        let w = vld1q_f64(wsv.as_ptr());
+        let dead = vceqq_u64(id, tomb);
+        let gt = vcgtq_u64(id, av);
+        let wlt = vcltq_f64(w, thrv);
+        let weq = vceqq_f64(w, thrv);
+        let id_is_nn = vceqq_u64(id, nnv);
+        let accept = vorrq_u64(wlt, vandq_u64(weq, id_is_nn));
+        // Dead mask gates the band test (vacant slots decode as the
+        // isolated-cluster boundary case — see the AVX2 kernel).
+        let take = vandq_u64(vbicq_u64(gt, dead), accept);
+        if vgetq_lane_u64::<0>(take) != 0 {
+            f(c[0].id, c[0].edge.weight);
+        }
+        if vgetq_lane_u64::<1>(take) != 0 {
+            f(c[1].id, c[1].edge.weight);
+        }
+    }
+    for e in chunks.remainder() {
+        if e.id != TOMBSTONE && e.id > a && band_accepts(e.edge.weight, e.id, thr, nn_a) {
+            f(e.id, e.edge.weight);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linkage::EdgeState;
+
+    fn entry(id: u32, w: Weight) -> Entry {
+        Entry {
+            id,
+            edge: EdgeState { weight: w, count: 1 },
+        }
+    }
+
+    #[test]
+    fn padded_len_rounds_up_to_lanes() {
+        assert_eq!(padded_len(0), 0);
+        for len in 1..=3 * LANES {
+            let p = padded_len(len);
+            assert!(p >= len);
+            assert_eq!(p % LANES, 0);
+            assert!(p - len < LANES);
+        }
+    }
+
+    #[test]
+    fn env_values_parse_like_booleans() {
+        for off in ["", "0", "false", "FALSE", "off", "no", " Off "] {
+            assert!(!env_wants_scalar(off), "{off:?} should not force scalar");
+        }
+        for on in ["1", "true", "yes", "on", "anything"] {
+            assert!(env_wants_scalar(on), "{on:?} should force scalar");
+        }
+    }
+
+    #[test]
+    fn nn_better_is_lex_min_and_nan_never_wins() {
+        assert!(nn_better(1.0, 9, 2.0, 0));
+        assert!(nn_better(1.0, 3, 1.0, 5));
+        assert!(!nn_better(1.0, 5, 1.0, 3));
+        assert!(!nn_better(2.0, 0, 1.0, 9));
+        assert!(!nn_better(f64::NAN, 0, f64::INFINITY, NO_NN));
+        // -0.0 == +0.0: the tie falls through to the id compare.
+        assert!(nn_better(-0.0, 1, 0.0, 2));
+        assert!(!nn_better(-0.0, 2, 0.0, 1));
+    }
+
+    #[test]
+    fn cmp_weight_pair_totally_orders_ties() {
+        let mut v = [(1.0, 4, 0), (1.0, 2, 9), (0.5, 7, 7), (1.0, 2, 3)];
+        v.sort_unstable_by(cmp_weight_pair);
+        assert_eq!(v, [(0.5, 7, 7), (1.0, 2, 3), (1.0, 2, 9), (1.0, 4, 0)]);
+    }
+
+    #[test]
+    fn scalar_nn_masks_stale_tombstone_weights() {
+        // The tombstone carries a tempting stale weight; it must lose.
+        let row = [entry(TOMBSTONE, 0.125), entry(7, 2.0), entry(3, 2.0)];
+        assert_eq!(scan_nn_scalar(&row), (3, 2.0));
+        assert_eq!(scan_nn_scalar(&[]), (NO_NN, Weight::INFINITY));
+    }
+
+    #[test]
+    fn scalar_band_rejects_vacant_padding_on_isolated_boundary() {
+        // Isolated cluster: thr = +inf, nn = u32::MAX. A vacant slot
+        // (+inf, u32::MAX) sits exactly on that boundary and must still
+        // be rejected by the dead mask.
+        let row = [Entry::VACANT, Entry::VACANT, entry(TOMBSTONE, 1.0)];
+        let mut hits = Vec::new();
+        scan_band_scalar(&row, 0, Weight::INFINITY, NO_NN, &mut |b, w| {
+            hits.push((b, w));
+        });
+        assert!(hits.is_empty());
+    }
+
+    #[test]
+    fn scalar_band_visits_in_storage_order_with_boundary() {
+        let row = [
+            entry(5, 1.0),
+            entry(2, 3.0), // not > a for a = 4
+            entry(9, 2.0), // boundary, is the NN pointer
+            entry(8, 2.0), // boundary, not the NN pointer
+            entry(TOMBSTONE, 0.0),
+        ];
+        let mut hits = Vec::new();
+        scan_band_scalar(&row, 4, 2.0, 9, &mut |b, w| hits.push((b, w)));
+        assert_eq!(hits, vec![(5, 1.0), (9, 2.0)]);
+    }
+
+    #[test]
+    fn detected_kernel_is_listed_and_named() {
+        let kernels = available();
+        assert_eq!(kernels[0], Kernel::Scalar);
+        assert!(kernels.contains(&detect()));
+        for k in kernels {
+            assert!(!k.name().is_empty());
+        }
+    }
+}

@@ -1,0 +1,243 @@
+//! Differential suite for the SIMD row-scan kernels
+//! (`rac_hac::store::scan`): every vector kernel the machine supports
+//! must be **bitwise** equal to the scalar reference on both hot scans —
+//! per raw row (random / tie-heavy / tombstone-heavy, every length and
+//! remainder shape), through the store's padded rows, and end-to-end
+//! through full dendrograms of all five engines under forced-scalar vs
+//! forced-SIMD dispatch.
+
+use rac_hac::approx::ApproxEngine;
+use rac_hac::data::{random_sparse_graph, random_tied_graph};
+use rac_hac::dist::{DistApproxEngine, DistConfig, DistRacEngine};
+use rac_hac::graph::Graph;
+use rac_hac::linkage::{EdgeState, Linkage, Weight};
+use rac_hac::rac::baseline::HashRacEngine;
+use rac_hac::rac::RacEngine;
+use rac_hac::store::scan::{self, Kernel, LANES, NO_NN};
+use rac_hac::store::{Entry, NeighborStore, NeighborsRef, TOMBSTONE};
+use rac_hac::util::prop::for_all_seeds;
+use rac_hac::util::rng::Rng;
+
+fn entry(id: u32, w: Weight) -> Entry {
+    Entry {
+        id,
+        edge: EdgeState { weight: w, count: 1 },
+    }
+}
+
+#[derive(Clone, Copy)]
+enum Style {
+    /// Continuous weights, occasional NaN (which must never win).
+    Random,
+    /// Quantised weights (many exact ties), ±0.0 included.
+    TieHeavy,
+    /// Mostly dead slots, each keeping a tempting stale finite weight.
+    TombstoneHeavy,
+}
+
+/// Build a row of `len` slots with unique live ids and style-dependent
+/// weights. Dead slots keep a finite stale weight — exactly what the
+/// arena leaves behind after `remove` — so a kernel that forgets to mask
+/// before comparing weights fails here.
+fn make_row(rng: &mut Rng, len: usize, style: Style) -> Vec<Entry> {
+    let mut ids: Vec<u32> = (0..(3 * len.max(1)) as u32).collect();
+    rng.shuffle(&mut ids);
+    (0..len)
+        .map(|i| {
+            let dead = match style {
+                Style::Random => rng.bool_with(0.15),
+                Style::TieHeavy => rng.bool_with(0.15),
+                Style::TombstoneHeavy => rng.bool_with(0.7),
+            };
+            let w = match style {
+                Style::Random => {
+                    if rng.bool_with(0.05) {
+                        Weight::NAN
+                    } else {
+                        rng.range_f64(0.0, 4.0)
+                    }
+                }
+                Style::TieHeavy | Style::TombstoneHeavy => {
+                    let w = rng.below(4) as f64 * 0.25;
+                    if w == 0.0 && rng.bool_with(0.5) {
+                        -0.0
+                    } else {
+                        w
+                    }
+                }
+            };
+            let id = if dead { TOMBSTONE } else { ids[i] };
+            entry(id, w)
+        })
+        .collect()
+}
+
+fn styles() -> [Style; 3] {
+    [Style::Random, Style::TieHeavy, Style::TombstoneHeavy]
+}
+
+/// `(weight, id)`-min scan: every supported kernel bitwise-equals the
+/// scalar fold on every row length (all chunk/remainder shapes).
+#[test]
+fn nn_kernels_match_scalar_bitwise() {
+    let kernels = scan::available();
+    for_all_seeds(0x51D0_0001, 8, |rng| {
+        for style in styles() {
+            for len in 0..=4 * LANES + 3 {
+                let row = make_row(rng, len, style);
+                let (want_id, want_w) = scan::scan_nn_with(Kernel::Scalar, &row);
+                for &k in &kernels {
+                    let (id, w) = scan::scan_nn_with(k, &row);
+                    assert_eq!(
+                        (id, w.to_bits()),
+                        (want_id, want_w.to_bits()),
+                        "{} diverged from scalar on len {len} row {row:?}",
+                        k.name()
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// ε-good band sweep: every supported kernel visits the same entries in
+/// the same (storage) order with the same weight bits as the scalar
+/// filter — including exact-boundary thresholds and `id > a` cuts.
+#[test]
+fn band_kernels_match_scalar_bitwise() {
+    let kernels = scan::available();
+    for_all_seeds(0x51D0_0002, 8, |rng| {
+        for style in styles() {
+            for len in 0..=4 * LANES + 3 {
+                let row = make_row(rng, len, style);
+                // Threshold: often exactly a weight present in the row
+                // (the band boundary), sometimes random, sometimes +inf.
+                let live: Vec<&Entry> = row.iter().filter(|e| e.id != TOMBSTONE).collect();
+                let thr = match (live.is_empty(), rng.below(4)) {
+                    (false, 0 | 1) => live[rng.below(live.len())].edge.weight,
+                    (_, 2) => Weight::INFINITY,
+                    _ => rng.range_f64(0.0, 4.0),
+                };
+                // nn pointer: a live id, NO_NN, or arbitrary.
+                let nn_a = match (live.is_empty(), rng.below(3)) {
+                    (false, 0) => live[rng.below(live.len())].id,
+                    (_, 1) => NO_NN,
+                    _ => rng.below(64) as u32,
+                };
+                let a = rng.below(3 * len.max(1)) as u32;
+                let mut want = Vec::new();
+                scan::scan_band_with(Kernel::Scalar, &row, a, thr, nn_a, &mut |b, w| {
+                    want.push((b, w.to_bits()));
+                });
+                for &k in &kernels {
+                    let mut got = Vec::new();
+                    scan::scan_band_with(k, &row, a, thr, nn_a, &mut |b, w| {
+                        got.push((b, w.to_bits()));
+                    });
+                    assert_eq!(
+                        got,
+                        want,
+                        "{} diverged from scalar: a={a} thr={thr} nn={nn_a} row {row:?}",
+                        k.name()
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// Regression for the vacant-padding trap: an isolated cluster's band is
+/// `thr = +inf, nn = u32::MAX`, and a vacant pad slot decodes to exactly
+/// that boundary `(+inf, u32::MAX)` — the dead mask must reject it on
+/// every kernel.
+#[test]
+fn vacant_padding_never_enters_an_isolated_band() {
+    let row = vec![Entry::VACANT; 2 * LANES];
+    for &k in &scan::available() {
+        let mut hits = Vec::new();
+        scan::scan_band_with(k, &row, 0, Weight::INFINITY, NO_NN, &mut |b, w| {
+            hits.push((b, w));
+        });
+        assert!(hits.is_empty(), "{}: padding leaked {hits:?}", k.name());
+        let (id, w) = scan::scan_nn_with(k, &row);
+        assert_eq!((id, w), (NO_NN, Weight::INFINITY), "{}", k.name());
+    }
+}
+
+/// The kernels through the store itself: padded `RowRef` spans (including
+/// rows churned by removes) scan identically on every kernel, and the
+/// `RowRef` fast paths agree with the scalar `NeighborsRef` defaults
+/// through the hashmap backend.
+#[test]
+fn store_rows_scan_identically_on_every_kernel() {
+    for_all_seeds(0x51D0_0003, 6, |rng| {
+        let g = random_sparse_graph(rng);
+        let mut s = NeighborStore::from_graph(&g);
+        // Churn some tombstones into the rows.
+        for u in 0..g.n() as u32 {
+            for (v, _) in g.neighbors(u) {
+                if rng.bool_with(0.2) {
+                    s.remove(u, v);
+                }
+            }
+        }
+        for c in 0..g.n() as u32 {
+            let row = s.row(c);
+            let span = row.entries();
+            assert_eq!(span.len() % LANES, 0, "row {c} span not lane-padded");
+            let want = scan::scan_nn_with(Kernel::Scalar, span);
+            for &k in &scan::available() {
+                let got = scan::scan_nn_with(k, span);
+                assert_eq!(
+                    (got.0, got.1.to_bits()),
+                    (want.0, want.1.to_bits()),
+                    "{}: row {c}",
+                    k.name()
+                );
+            }
+            // RowRef override vs the trait's scalar default (hashmap
+            // view of the same live edges): nn_min is order-independent
+            // so the comparison is bitwise.
+            let map: rustc_hash::FxHashMap<u32, EdgeState> = row.iter().collect();
+            let (mi, mw) = (&map).nn_min();
+            assert_eq!((want.0, want.1.to_bits()), (mi, mw.to_bits()), "row {c}");
+        }
+    });
+}
+
+fn run_all_engines(g: &Graph, l: Linkage) -> Vec<Vec<(u32, u32, u64)>> {
+    vec![
+        RacEngine::new(g, l).with_threads(2).run().dendrogram.bitwise_merges(),
+        HashRacEngine::new(g, l).with_threads(1).run().dendrogram.bitwise_merges(),
+        ApproxEngine::new(g, l, 0.1).run().dendrogram.bitwise_merges(),
+        DistRacEngine::new(g, l, DistConfig::new(3, 2)).run().dendrogram.bitwise_merges(),
+        DistApproxEngine::new(g, l, DistConfig::new(3, 2), 0.1).run().dendrogram.bitwise_merges(),
+    ]
+}
+
+/// End-to-end: forcing the scalar fallback vs the detected SIMD dispatch
+/// must produce bitwise-identical dendrograms for all five engines, on
+/// continuous and tie-heavy graphs, for every sparse-reducible linkage.
+#[test]
+fn forced_scalar_and_forced_simd_full_runs_agree() {
+    for_all_seeds(0x51D0_0004, 4, |rng| {
+        let g = if rng.bool_with(0.5) {
+            random_tied_graph(rng)
+        } else {
+            random_sparse_graph(rng)
+        };
+        for l in Linkage::SPARSE_REDUCIBLE {
+            scan::force_scalar(true);
+            let scalar = run_all_engines(&g, l);
+            scan::force_scalar(false);
+            let simd = run_all_engines(&g, l);
+            assert_eq!(
+                scalar,
+                simd,
+                "{l:?}: scalar and {} dispatch diverged (n={})",
+                scan::detect().name(),
+                g.n()
+            );
+        }
+    });
+}
