@@ -250,36 +250,45 @@ fn main() {
     // and the medians record what vectorization buys on this machine.
     {
         use rac_hac::store::scan;
-        scan::force_scalar(true);
-        let scalar_d = RacEngine::new(&g, Linkage::Complete)
-            .with_threads(headline_threads)
-            .run()
-            .dendrogram;
-        let (timing, metrics) = measure(budget, min_samples, || {
-            RacEngine::new(&g, Linkage::Complete).with_threads(headline_threads).run()
-        });
-        cells.push(Cell {
-            engine: "rac_flat_scalar",
-            linkage: Linkage::Complete,
-            threads: headline_threads,
-            timing,
-            metrics,
-        });
-        scan::force_scalar(false);
-        let simd_d = RacEngine::new(&g, Linkage::Complete)
-            .with_threads(headline_threads)
-            .run()
-            .dendrogram;
-        let (timing, metrics) = measure(budget, min_samples, || {
-            RacEngine::new(&g, Linkage::Complete).with_threads(headline_threads).run()
-        });
-        cells.push(Cell {
-            engine: "rac_flat_simd",
-            linkage: Linkage::Complete,
-            threads: headline_threads,
-            timing,
-            metrics,
-        });
+        // Scoped pins: each cell runs under its kernel and the guard
+        // restores the entry dispatch, so an RAC_FORCE_SCALAR pin on the
+        // bench process still governs every cell outside this block.
+        let scalar_d = {
+            let _pin = scan::KernelPin::scalar();
+            let d = RacEngine::new(&g, Linkage::Complete)
+                .with_threads(headline_threads)
+                .run()
+                .dendrogram;
+            let (timing, metrics) = measure(budget, min_samples, || {
+                RacEngine::new(&g, Linkage::Complete).with_threads(headline_threads).run()
+            });
+            cells.push(Cell {
+                engine: "rac_flat_scalar",
+                linkage: Linkage::Complete,
+                threads: headline_threads,
+                timing,
+                metrics,
+            });
+            d
+        };
+        let simd_d = {
+            let _pin = scan::KernelPin::pin(scan::detect());
+            let d = RacEngine::new(&g, Linkage::Complete)
+                .with_threads(headline_threads)
+                .run()
+                .dendrogram;
+            let (timing, metrics) = measure(budget, min_samples, || {
+                RacEngine::new(&g, Linkage::Complete).with_threads(headline_threads).run()
+            });
+            cells.push(Cell {
+                engine: "rac_flat_simd",
+                linkage: Linkage::Complete,
+                threads: headline_threads,
+                timing,
+                metrics,
+            });
+            d
+        };
         assert_eq!(
             scalar_d.bitwise_merges(),
             simd_d.bitwise_merges(),

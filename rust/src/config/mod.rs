@@ -111,9 +111,12 @@ pub struct RunConfig {
     pub output: OutputSpec,
     /// Pin the row-scan kernels to the scalar fallback
     /// (`engine.force_scalar`, or the `RAC_FORCE_SCALAR` environment
-    /// variable / `--force-scalar` CLI flag). Results are bitwise
-    /// identical either way ([`crate::store::scan`]); this exists for
-    /// differential testing and benchmarking the dispatch.
+    /// variable / `--force-scalar` CLI flag). The config pin is scoped
+    /// to the run that carries it (the pipeline holds a
+    /// [`crate::store::scan::KernelPin`] and restores the entry dispatch
+    /// after); only the environment variable pins process-wide. Results
+    /// are bitwise identical either way ([`crate::store::scan`]); this
+    /// exists for differential testing and benchmarking the dispatch.
     pub force_scalar: bool,
 }
 

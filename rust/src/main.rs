@@ -34,7 +34,7 @@
 //!
 //! Both pipeline subcommands take `--force-scalar` to pin the row-scan
 //! kernels to the scalar fallback instead of the detected SIMD dispatch
-///! (bitwise-identical results; see `store::scan`). The `RAC_FORCE_SCALAR`
+//! (bitwise-identical results; see `store::scan`). The `RAC_FORCE_SCALAR`
 //! environment variable does the same without a flag.
 //!
 //! Observability flags (`run` and `cluster`): `--trace FILE` records a

@@ -99,12 +99,13 @@ pub fn run_engine_traced(cfg: &RunConfig, g: &Graph, sink: &TraceSink) -> Result
     {
         bail!("exec options require a distributed engine (dist_rac or dist_approx)");
     }
-    if cfg.force_scalar {
-        // Pin the row-scan kernels to the scalar fallback for this
-        // process. Only set when requested so an environment-level
-        // RAC_FORCE_SCALAR is never clobbered back to SIMD.
-        crate::store::scan::force_scalar(true);
-    }
+    // Pin the row-scan kernels to the scalar fallback for the duration of
+    // this run only — the guard restores the entry dispatch (including an
+    // environment-level RAC_FORCE_SCALAR pin) on every exit path, so a
+    // process that runs multiple configs never inherits a stale pin.
+    let _scalar_pin = cfg
+        .force_scalar
+        .then(crate::store::scan::KernelPin::scalar);
     match cfg.engine {
         EngineSpec::NaiveHac => {
             let t = Instant::now();

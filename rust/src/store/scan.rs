@@ -33,7 +33,9 @@
 //! `RAC_FORCE_SCALAR` environment variable (any value other than empty /
 //! `0` / `false` / `off` / `no`), the `force_scalar` config key /
 //! `--force-scalar` CLI flag (see [`crate::config::RunConfig`]), or
-//! programmatically via [`force_scalar`].
+//! programmatically via [`force_scalar`] (process-wide) or a scoped
+//! [`KernelPin`] (restores the entry dispatch on drop — how the config
+//! key keeps its pin from leaking past the run that asked for it).
 //!
 //! ## Why the packed compare preserves the tie-break (bitwise contract)
 //!
@@ -232,13 +234,48 @@ pub fn active() -> Kernel {
     decode(ACTIVE.load(AtomicOrd::Relaxed))
 }
 
-/// Programmatic override: `true` pins the scalar fallback, `false`
-/// restores the detected kernel. Used by the config/CLI plumbing and the
-/// scalar-vs-SIMD bench cells; safe to flip at any point because both
+/// Process-wide override: `true` pins the scalar fallback, `false`
+/// restores the *detected* kernel — note that the latter ignores an
+/// `RAC_FORCE_SCALAR` environment pin, so prefer a scoped [`KernelPin`]
+/// anywhere the surrounding dispatch should survive (the config/CLI
+/// plumbing, tests, bench cells). Safe to flip at any point because both
 /// settings produce bitwise-identical results.
 pub fn force_scalar(on: bool) {
     let k = if on { Kernel::Scalar } else { detect() };
     ACTIVE.store(encode(k), AtomicOrd::Relaxed);
+}
+
+/// RAII dispatch pin: forces `kernel` active until the guard drops, then
+/// restores whatever dispatch was active on entry — the environment-aware
+/// decision, not raw detection, so an `RAC_FORCE_SCALAR` pin survives a
+/// scoped override. This is what the config-level `force_scalar` plumbing
+/// holds for the duration of a run, so one pinned run in a process does
+/// not leak its dispatch into later runs. The underlying state is still
+/// process-global: overlapping pins from concurrent runs race (benignly —
+/// every kernel is bitwise identical), and the last guard to drop wins.
+#[must_use = "the pin is released when this guard is dropped"]
+pub struct KernelPin {
+    prev: Kernel,
+}
+
+impl KernelPin {
+    /// Pin `kernel` as the active dispatch until the guard drops.
+    pub fn pin(kernel: Kernel) -> KernelPin {
+        let prev = active();
+        ACTIVE.store(encode(kernel), AtomicOrd::Relaxed);
+        KernelPin { prev }
+    }
+
+    /// Pin the scalar fallback until the guard drops.
+    pub fn scalar() -> KernelPin {
+        Self::pin(Kernel::Scalar)
+    }
+}
+
+impl Drop for KernelPin {
+    fn drop(&mut self) {
+        ACTIVE.store(encode(self.prev), AtomicOrd::Relaxed);
+    }
 }
 
 /// `(weight, id)` lex-min over a raw row span, dispatching to the active
@@ -646,6 +683,22 @@ mod tests {
         let mut hits = Vec::new();
         scan_band_scalar(&row, 4, 2.0, 9, &mut |b, w| hits.push((b, w)));
         assert_eq!(hits, vec![(5, 1.0), (9, 2.0)]);
+    }
+
+    #[test]
+    fn kernel_pin_restores_entry_dispatch() {
+        let entry = active();
+        {
+            let _pin = KernelPin::scalar();
+            assert_eq!(active(), Kernel::Scalar);
+            {
+                let _inner = KernelPin::pin(detect());
+                assert_eq!(active(), detect());
+            }
+            // Nested pins unwind to the enclosing pin, not detection.
+            assert_eq!(active(), Kernel::Scalar);
+        }
+        assert_eq!(active(), entry);
     }
 
     #[test]

@@ -218,8 +218,12 @@ fn run_all_engines(g: &Graph, l: Linkage) -> Vec<Vec<(u32, u32, u64)>> {
 /// End-to-end: forcing the scalar fallback vs the detected SIMD dispatch
 /// must produce bitwise-identical dendrograms for all five engines, on
 /// continuous and tie-heavy graphs, for every sparse-reducible linkage.
+/// The entry dispatch is restored afterward (via [`scan::KernelPin`]) so
+/// an `RAC_FORCE_SCALAR` pin keeps governing the rest of this binary —
+/// the forced-scalar CI pass must stay a forced-scalar pass.
 #[test]
 fn forced_scalar_and_forced_simd_full_runs_agree() {
+    let _restore_entry_dispatch = scan::KernelPin::pin(scan::active());
     for_all_seeds(0x51D0_0004, 4, |rng| {
         let g = if rng.bool_with(0.5) {
             random_tied_graph(rng)
@@ -227,10 +231,14 @@ fn forced_scalar_and_forced_simd_full_runs_agree() {
             random_sparse_graph(rng)
         };
         for l in Linkage::SPARSE_REDUCIBLE {
-            scan::force_scalar(true);
-            let scalar = run_all_engines(&g, l);
-            scan::force_scalar(false);
-            let simd = run_all_engines(&g, l);
+            let scalar = {
+                let _pin = scan::KernelPin::scalar();
+                run_all_engines(&g, l)
+            };
+            let simd = {
+                let _pin = scan::KernelPin::pin(scan::detect());
+                run_all_engines(&g, l)
+            };
             assert_eq!(
                 scalar,
                 simd,
