@@ -3,7 +3,7 @@
 # it. `make bench` runs the perf-trajectory smoke bench and writes
 # BENCH_hot_paths.json (the per-PR datapoint CI uploads as an artifact).
 
-.PHONY: artifacts build test test-scalar test-differential test-executed test-faults clippy fmt fmt-check bench bench-approx bench-dist bench-recovery trace-smoke
+.PHONY: artifacts build test test-scalar test-differential test-executed test-faults clippy fmt fmt-check bench bench-approx bench-dist bench-recovery bench-serve trace-smoke
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -93,3 +93,6 @@ bench-dist:
 
 bench-recovery:
 	cargo bench --bench recovery -- --json --smoke
+
+bench-serve:
+	cargo bench --bench serve -- --json --smoke

@@ -163,7 +163,14 @@ fn main() {
             // serves every thread count.
             let exact = RacEngine::new(&w.graph, linkage).run();
             let exact_d: &Dendrogram = &exact.dendrogram;
-            let exact_cut = exact_d.cut_k(w.cut_k.min(w.graph.n()));
+            // Clamp k into the answerable range — kNN workloads can be
+            // disconnected, where cut_k below the component count is a
+            // named error by design.
+            let k_cut = w
+                .cut_k
+                .min(w.graph.n())
+                .max(exact_d.remaining_clusters());
+            let exact_cut = exact_d.cut_k(k_cut).expect("clamped k is answerable");
             for &threads in &thread_counts {
                 for epsilon in EPSILONS {
                     let mut last: Option<ApproxResult> = None;
@@ -185,7 +192,9 @@ fn main() {
                     }
                     let ari = quality::adjusted_rand_index(
                         &exact_cut,
-                        &r.dendrogram.cut_k(w.cut_k.min(w.graph.n())),
+                        // Same graph, same components: the clamped k is
+                        // answerable for the approximate dendrogram too.
+                        &r.dendrogram.cut_k(k_cut).expect("clamped k is answerable"),
                     );
                     let cell = Cell {
                         workload: w.name,

@@ -1,0 +1,388 @@
+//! Serve-layer query harness: the read path of clustering-as-a-service.
+//!
+//! ```bash
+//! cargo bench --bench serve                    # human tables
+//! cargo bench --bench serve -- --json          # + BENCH_serve.json
+//! cargo bench --bench serve -- --json --smoke  # CI short-budget mode
+//! cargo bench --bench serve -- --json --out target/serve.json
+//! ```
+//!
+//! Three sections, the first two asserted in-bench:
+//!
+//! * **Bitwise pinning.** Before any timing, every query class the index
+//!   answers is checked bitwise against the naive [`Dendrogram::cut_*`]
+//!   path, over all five engines' output on the same graph and over a
+//!   structurally disconnected kNN graph (where `cut_k` must return the
+//!   same named error from both paths). A serving layer that is fast but
+//!   wrong is worthless; the bench refuses to report numbers for one.
+//! * **Indexed vs naive threshold cuts.** The naive path rebuilds a
+//!   UnionFind and re-scans the whole merge list per query; the index
+//!   answers from a binary search plus precomputed intervals. The indexed
+//!   total over the same threshold sweep must be *strictly* faster.
+//! * **Zipfian hammering from all cores.** `default_threads()` reader
+//!   threads share one [`ServeHandle`], each drawing a skewed query mix
+//!   (hot points, hot thresholds — `Rng::zipf`) across all five query
+//!   classes through `load()` snapshots, the way a service front-end
+//!   would. Reported: per-class mean latency and aggregate queries/sec.
+//!
+//! CI uploads the JSON as a perf-trajectory artifact next to
+//! `BENCH_recovery.json`.
+
+use std::time::Instant;
+
+use rac_hac::approx::ApproxEngine;
+use rac_hac::data::{gaussian_mixture, Dataset, Metric};
+use rac_hac::dendrogram::Dendrogram;
+use rac_hac::dist::{DistApproxEngine, DistConfig, DistRacEngine};
+use rac_hac::knn::{knn_graph, Backend};
+use rac_hac::linkage::{Linkage, Weight};
+use rac_hac::rac::baseline::HashRacEngine;
+use rac_hac::rac::RacEngine;
+use rac_hac::serve::{ServeHandle, ServeIndex};
+use rac_hac::util::bench::{black_box, time_fn, Table};
+use rac_hac::util::json::{obj, Json};
+use rac_hac::util::parallel::default_threads;
+use rac_hac::util::rng::Rng;
+
+/// Zipf exponent for the hot-key query mix (`Rng::zipf` needs s > 1).
+const ZIPF_S: f64 = 1.2;
+
+/// Candidate thresholds, ascending: extremes, every distinct merge
+/// weight (the exclusive-boundary case), and midpoints between them.
+/// Ascending order matters for the Zipfian draw below: hot (low) indices
+/// mean low thresholds, i.e. small clusters, the realistic hot case.
+fn thresholds(d: &Dendrogram) -> Vec<Weight> {
+    let mut ws: Vec<Weight> = d.merges().iter().map(|m| m.weight).collect();
+    ws.sort_by(Weight::total_cmp);
+    let mut ts = vec![0.0];
+    for i in 0..ws.len() {
+        ts.push(ws[i]);
+        if i + 1 < ws.len() && ws[i] < ws[i + 1] {
+            ts.push((ws[i] + ws[i + 1]) / 2.0);
+        }
+    }
+    if let Some(last) = ws.last() {
+        ts.push(last + 1.0);
+    }
+    ts
+}
+
+/// A kNN graph over two far-apart blobs: structurally disconnected, so
+/// the `cut_k` error contract is exercised, not just the happy path.
+fn disconnected_dendrogram() -> Dendrogram {
+    let (n, dim) = (120usize, 8usize);
+    let mut rng = Rng::seed_from(0x5EB1);
+    let mut rows = vec![0.0f32; n * dim];
+    for (i, row) in rows.chunks_mut(dim).enumerate() {
+        let offset = if i < n / 2 { 0.0 } else { 1000.0 };
+        for x in row {
+            *x = (offset + rng.range_f64(0.0, 1.0)) as f32;
+        }
+    }
+    let ds = Dataset {
+        n,
+        d: dim,
+        metric: Metric::L2,
+        rows,
+    };
+    let g = knn_graph(&ds, 4, Backend::Native, None).unwrap();
+    RacEngine::new(&g, Linkage::Average).run().dendrogram
+}
+
+/// Bitwise gate: index answers == naive answers on this dendrogram, for
+/// a spread of thresholds and every answerable (and unanswerable) k.
+fn pin(name: &str, d: &Dendrogram) {
+    let idx = ServeIndex::build(d).unwrap_or_else(|e| panic!("{name}: {e}"));
+    let n = d.n();
+    let ts = thresholds(d);
+    for t in ts.iter().step_by(1 + ts.len() / 40) {
+        let naive = d.cut_threshold(*t);
+        assert_eq!(idx.cut_threshold(*t), naive, "{name}: cut_threshold({t})");
+        for p in (0..n).step_by(1 + n / 13) {
+            let rep = naive
+                .iter()
+                .position(|&l| l == naive[p])
+                .expect("p matches itself") as u32;
+            assert_eq!(
+                idx.point_membership(p as u32, *t).unwrap(),
+                rep,
+                "{name}: point_membership({p}, {t})"
+            );
+        }
+    }
+    for k in (0..=n + 1).step_by(1 + n / 29) {
+        assert_eq!(idx.cut_k(k), d.cut_k(k), "{name}: cut_k({k})");
+    }
+    // k around the component boundary, where Disconnected fires.
+    let comps = d.remaining_clusters();
+    for k in comps.saturating_sub(1)..=comps + 1 {
+        assert_eq!(idx.cut_k(k), d.cut_k(k), "{name}: boundary cut_k({k})");
+    }
+}
+
+struct ClassStat {
+    ops: usize,
+    nanos: u128,
+}
+
+const CLASSES: [&str; 5] = ["point_membership", "cut_threshold", "cut_k", "members", "diff"];
+
+/// One reader thread's Zipfian mix, through `handle.load()` per query.
+fn hammer(handle: &ServeHandle, seed: u64, ops: usize, ts: &[Weight]) -> Vec<ClassStat> {
+    let mut rng = Rng::seed_from(seed);
+    let mut stats: Vec<ClassStat> = (0..CLASSES.len())
+        .map(|_| ClassStat { ops: 0, nanos: 0 })
+        .collect();
+    let draw_t = |rng: &mut Rng| ts[(rng.zipf(ts.len() as u64, ZIPF_S) - 1) as usize];
+    for _ in 0..ops {
+        let idx = handle.load();
+        let n = idx.n();
+        let comps = idx.components();
+        let p = (rng.zipf(n as u64, ZIPF_S) - 1) as u32;
+        // 40% membership, 20% members, 15% threshold cuts, 15% k-cuts,
+        // 10% diffs — reads of single points dominate a serving mix.
+        let class = match rng.below(20) {
+            0..=7 => 0,
+            8..=11 => 3,
+            12..=14 => 1,
+            15..=17 => 2,
+            _ => 4,
+        };
+        let t0 = Instant::now();
+        match class {
+            0 => {
+                black_box(idx.point_membership(p, draw_t(&mut rng)).unwrap());
+            }
+            1 => {
+                black_box(idx.cut_threshold(draw_t(&mut rng)));
+            }
+            2 => {
+                let k = comps + (rng.zipf((n - comps + 1) as u64, ZIPF_S) - 1) as usize;
+                black_box(idx.cut_k(k).unwrap());
+            }
+            3 => {
+                black_box(idx.cluster_members(p, draw_t(&mut rng)).unwrap());
+            }
+            _ => {
+                let (a, b) = (draw_t(&mut rng), draw_t(&mut rng));
+                let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+                black_box(idx.diff(lo, hi).unwrap());
+            }
+        }
+        stats[class].ops += 1;
+        stats[class].nanos += t0.elapsed().as_nanos();
+    }
+    stats
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let write_json = args.iter().any(|a| a == "--json");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_serve.json".to_string());
+
+    // -- Section 1: bitwise pinning gates ---------------------------------
+    let gate_ds = gaussian_mixture(240, 8, 5, 0.5, 0.05, 41);
+    let gate_g = knn_graph(&gate_ds, 6, Backend::Native, None).unwrap();
+    let cfg = || DistConfig::new(3, 2);
+    let engines: Vec<(&str, Dendrogram)> = vec![
+        ("rac", RacEngine::new(&gate_g, Linkage::Average).run().dendrogram),
+        (
+            "hash_rac",
+            HashRacEngine::new(&gate_g, Linkage::Average).run().dendrogram,
+        ),
+        (
+            "approx",
+            ApproxEngine::new(&gate_g, Linkage::Average, 0.1).run().dendrogram,
+        ),
+        (
+            "dist_rac",
+            DistRacEngine::new(&gate_g, Linkage::Average, cfg()).run().dendrogram,
+        ),
+        (
+            "dist_approx",
+            DistApproxEngine::new(&gate_g, Linkage::Average, cfg(), 0.1)
+                .run()
+                .dendrogram,
+        ),
+    ];
+    for (name, d) in &engines {
+        pin(name, d);
+    }
+    let disc = disconnected_dendrogram();
+    assert!(
+        disc.remaining_clusters() >= 2,
+        "disconnected fixture merged into one component"
+    );
+    pin("disconnected", &disc);
+    println!(
+        "pinning OK: {} engines + disconnected ({} components), every query bitwise-equal \
+         to naive",
+        engines.len(),
+        disc.remaining_clusters()
+    );
+
+    // -- Main workload ----------------------------------------------------
+    let n = if smoke { 2_000 } else { 20_000 };
+    let ds = gaussian_mixture(n, 8, 20, 0.6, 0.05, 42);
+    let g = knn_graph(&ds, 8, Backend::Native, None).unwrap();
+    let d = RacEngine::new(&g, Linkage::Average).run().dendrogram;
+    let idx = ServeIndex::build(&d).expect("engine output must index");
+    println!(
+        "workload: n={n} merges={} components={} index={}B",
+        idx.num_merges(),
+        idx.components(),
+        idx.memory_bytes()
+    );
+    let ts = thresholds(&d);
+
+    // -- Section 2: indexed vs naive threshold sweep ----------------------
+    let sweep: Vec<Weight> = ts.iter().step_by(1 + ts.len() / 32).copied().collect();
+    for t in &sweep {
+        assert_eq!(idx.cut_threshold(*t), d.cut_threshold(*t), "sweep at {t}");
+    }
+    let samples = if smoke { 3 } else { 5 };
+    let t_naive = time_fn(1, samples, || {
+        for t in &sweep {
+            black_box(d.cut_threshold(*t));
+        }
+    });
+    let t_indexed = time_fn(1, samples, || {
+        for t in &sweep {
+            black_box(idx.cut_threshold(*t));
+        }
+    });
+    assert!(
+        t_indexed.median < t_naive.median,
+        "indexed threshold cuts ({:?} median) must strictly beat the naive per-query \
+         UnionFind rebuild ({:?} median) over {} thresholds",
+        t_indexed.median,
+        t_naive.median,
+        sweep.len()
+    );
+    let speedup = t_naive.median.as_nanos() as f64 / t_indexed.median.as_nanos().max(1) as f64;
+    println!(
+        "threshold sweep ({} cuts): naive {}  indexed {}  speedup {speedup:.1}x",
+        sweep.len(),
+        t_naive,
+        t_indexed
+    );
+
+    // The k-cut gap is larger still (naive re-sorts the merge list per
+    // query); reported but not gated — the acceptance claim is thresholds.
+    let ks: Vec<usize> = (0..8)
+        .map(|i| idx.components() + i * (n - idx.components()) / 8)
+        .collect();
+    let k_naive = time_fn(1, samples, || {
+        for k in &ks {
+            black_box(d.cut_k(*k).unwrap());
+        }
+    });
+    let k_indexed = time_fn(1, samples, || {
+        for k in &ks {
+            black_box(idx.cut_k(*k).unwrap());
+        }
+    });
+    let k_speedup = k_naive.median.as_nanos() as f64 / k_indexed.median.as_nanos().max(1) as f64;
+    println!(
+        "k-cut sweep ({} cuts): naive {}  indexed {}  speedup {k_speedup:.1}x",
+        ks.len(),
+        k_naive,
+        k_indexed
+    );
+
+    // -- Section 3: Zipfian hammering from all cores ----------------------
+    let threads = default_threads();
+    let per_thread_ops = if smoke { 4_000 } else { 40_000 };
+    let handle = ServeHandle::new(ServeIndex::build(&d).unwrap());
+    let wall = Instant::now();
+    let per_thread: Vec<Vec<ClassStat>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let handle = &handle;
+                let ts = &ts;
+                s.spawn(move || hammer(handle, 0x5EED ^ t as u64, per_thread_ops, ts))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let wall_s = wall.elapsed().as_secs_f64();
+
+    let mut agg: Vec<ClassStat> = (0..CLASSES.len())
+        .map(|_| ClassStat { ops: 0, nanos: 0 })
+        .collect();
+    for stats in &per_thread {
+        for (a, s) in agg.iter_mut().zip(stats) {
+            a.ops += s.ops;
+            a.nanos += s.nanos;
+        }
+    }
+    let total_ops: usize = agg.iter().map(|a| a.ops).sum();
+    let qps = total_ops as f64 / wall_s;
+    println!(
+        "\nhammer: {threads} threads x {per_thread_ops} ops in {wall_s:.2}s = {qps:.0} \
+         queries/sec aggregate"
+    );
+    let table = Table::new(&["class", "ops", "mean_us"], &[18, 10, 10]);
+    for (name, a) in CLASSES.iter().zip(&agg) {
+        let mean_us = a.nanos as f64 / 1000.0 / a.ops.max(1) as f64;
+        table.row(&[name, &a.ops.to_string(), &format!("{mean_us:.2}")]);
+    }
+
+    println!(
+        "\nheadline: n={n}, {} threads: {qps:.0} q/s mixed; indexed threshold cuts \
+         {speedup:.1}x naive, k-cuts {k_speedup:.1}x naive",
+        threads
+    );
+
+    if write_json {
+        let classes: Vec<Json> = CLASSES
+            .iter()
+            .zip(&agg)
+            .map(|(name, a)| {
+                obj([
+                    ("class", (*name).into()),
+                    ("ops", a.ops.into()),
+                    (
+                        "mean_us",
+                        (a.nanos as f64 / 1000.0 / a.ops.max(1) as f64).into(),
+                    ),
+                ])
+            })
+            .collect();
+        let report = obj([
+            ("schema", "bench_serve/v1".into()),
+            ("mode", (if smoke { "smoke" } else { "full" }).into()),
+            ("n", n.into()),
+            ("merges", idx.num_merges().into()),
+            ("components", idx.components().into()),
+            ("index_bytes", idx.memory_bytes().into()),
+            ("threads", threads.into()),
+            ("zipf_s", ZIPF_S.into()),
+            ("engines_pinned", engines.len().into()),
+            ("sweep_thresholds", sweep.len().into()),
+            ("naive_threshold_sweep_us", (t_naive.median.as_micros() as usize).into()),
+            (
+                "indexed_threshold_sweep_us",
+                (t_indexed.median.as_micros() as usize).into(),
+            ),
+            ("threshold_speedup", speedup.into()),
+            ("naive_k_sweep_us", (k_naive.median.as_micros() as usize).into()),
+            ("indexed_k_sweep_us", (k_indexed.median.as_micros() as usize).into()),
+            ("k_speedup", k_speedup.into()),
+            ("hammer_ops", total_ops.into()),
+            ("hammer_wall_s", wall_s.into()),
+            ("queries_per_sec", qps.into()),
+            ("classes", Json::Arr(classes)),
+        ]);
+        std::fs::write(&out_path, format!("{report}\n")).expect("write bench report");
+        println!("\nwrote {out_path}");
+    }
+
+    println!("\nserve bench OK");
+}

@@ -221,7 +221,10 @@ mod tests {
         let g = data::stable_hierarchy(5, 4.0, 23); // n = 32
         let hac = naive_hac(&g, Linkage::Average);
         let approx = ApproxEngine::new(&g, Linkage::Average, 1.0).run();
-        let ari = quality::adjusted_rand_index(&hac.cut_k(4), &approx.dendrogram.cut_k(4));
+        let ari = quality::adjusted_rand_index(
+            &hac.cut_k(4).unwrap(),
+            &approx.dendrogram.cut_k(4).unwrap(),
+        );
         assert_eq!(ari, 1.0);
     }
 

@@ -106,17 +106,39 @@ pub struct Comparison {
 }
 
 /// Compare an exact and an approximate run at a `k`-cluster flat cut.
+///
+/// `k` is clamped into the range both dendrograms can answer —
+/// `[max(components), n]` — so disconnected kNN graphs (where a literal
+/// `cut_k(k)` is a named [`crate::dendrogram::CutError`]) still yield a
+/// quality row: both sides are cut at the same effective `k`, which keeps
+/// the ARI an apples-to-apples comparison. The clamp is this metric
+/// layer's documented policy, not `cut_k`'s.
 pub fn compare_runs(
     exact: (&Dendrogram, &RunMetrics),
     approx: (&Dendrogram, &RunMetrics),
     k: usize,
 ) -> Comparison {
+    let n = exact.0.n();
+    debug_assert_eq!(n, approx.0.n());
+    let ari = if n == 0 {
+        1.0
+    } else {
+        let k_eff = k
+            .max(exact.0.remaining_clusters())
+            .max(approx.0.remaining_clusters())
+            .min(n);
+        let cut = |d: &Dendrogram| {
+            d.cut_k(k_eff)
+                .expect("k_eff clamped into [components, n] is always answerable")
+        };
+        adjusted_rand_index(&cut(exact.0), &cut(approx.0))
+    };
     Comparison {
         rounds_exact: exact.1.merge_rounds(),
         rounds_approx: approx.1.merge_rounds(),
         edge_scans_exact: edge_scans(exact.1),
         edge_scans_approx: edge_scans(approx.1),
-        ari: adjusted_rand_index(&exact.0.cut_k(k), &approx.0.cut_k(k)),
+        ari,
     }
 }
 

@@ -92,6 +92,10 @@ pub struct OutputSpec {
     /// Write the run's `RunMetrics` JSON here (machine-readable sibling
     /// of the stdout report).
     pub metrics_out: Option<String>,
+    /// Persist the dendrogram here in the versioned binary format
+    /// ([`crate::serve::codec`]), making the hierarchy a durable artifact
+    /// `rac query` can serve flat cuts from.
+    pub dendrogram_path: Option<String>,
 }
 
 /// A full clustering run.
@@ -414,8 +418,9 @@ fn parse_exec(doc: &TomlDoc, engine: &EngineSpec) -> Result<Option<ExecOptions>>
 }
 
 /// Parse + validate the `[output]` block: optional `trace_path` /
-/// `metrics_out` file destinations and the `trace_format` selector,
-/// which is meaningless (and therefore rejected) without a trace path.
+/// `metrics_out` / `dendrogram_path` file destinations and the
+/// `trace_format` selector, which is meaningless (and therefore rejected)
+/// without a trace path.
 fn parse_output(doc: &TomlDoc) -> Result<OutputSpec> {
     let path_field = |key: &str| -> Result<Option<String>> {
         match doc.get("output", key) {
@@ -433,6 +438,7 @@ fn parse_output(doc: &TomlDoc) -> Result<OutputSpec> {
     };
     let trace_path = path_field("trace_path")?;
     let metrics_out = path_field("metrics_out")?;
+    let dendrogram_path = path_field("dendrogram_path")?;
     let trace_format = match doc.get("output", "trace_format") {
         None => TraceFormat::default(),
         Some(v) => {
@@ -455,6 +461,7 @@ fn parse_output(doc: &TomlDoc) -> Result<OutputSpec> {
         trace_path,
         trace_format,
         metrics_out,
+        dendrogram_path,
     })
 }
 
@@ -864,13 +871,15 @@ cpus = 4
         assert_eq!(cfg.output.trace_path, None);
         assert_eq!(cfg.output.trace_format, TraceFormat::Jsonl);
         assert_eq!(cfg.output.metrics_out, None);
+        assert_eq!(cfg.output.dendrogram_path, None);
     }
 
     #[test]
     fn output_section_parses_trace_and_metrics_destinations() {
         let cfg = RunConfig::from_toml_str(
             "[output]\ntrace_path = \"run.trace.jsonl\"\n\
-             trace_format = \"chrome\"\nmetrics_out = \"metrics.json\"\n",
+             trace_format = \"chrome\"\nmetrics_out = \"metrics.json\"\n\
+             dendrogram_path = \"run.dend\"\n",
         )
         .unwrap();
         assert_eq!(
@@ -879,6 +888,7 @@ cpus = 4
                 trace_path: Some("run.trace.jsonl".to_string()),
                 trace_format: TraceFormat::Chrome,
                 metrics_out: Some("metrics.json".to_string()),
+                dendrogram_path: Some("run.dend".to_string()),
             }
         );
         // The format defaults to jsonl when only a path is given.
@@ -910,6 +920,8 @@ cpus = 4
             "metrics_out = \"\"",
             "trace_path = 3",
             "metrics_out = true",
+            "dendrogram_path = \"\"",
+            "dendrogram_path = 7",
         ] {
             let err = RunConfig::from_toml_str(&format!("[output]\n{bad}\n"))
                 .unwrap_err()

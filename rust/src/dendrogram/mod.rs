@@ -22,6 +22,34 @@ pub struct Merge {
     pub weight: Weight,
 }
 
+/// Why a count-based flat cut ([`Dendrogram::cut_k`]) cannot be answered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CutError {
+    /// `k` lies outside `[1, n]`: no partition of `n` points has that
+    /// many parts.
+    KOutOfRange { k: usize, n: usize },
+    /// The input graph was disconnected: the merge list bottoms out at
+    /// `components` clusters, so no cut can produce fewer.
+    Disconnected { k: usize, components: usize },
+}
+
+impl std::fmt::Display for CutError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            CutError::KOutOfRange { k, n } => {
+                write!(f, "cut_k: k = {k} outside [1, {n}]")
+            }
+            CutError::Disconnected { k, components } => write!(
+                f,
+                "cut_k: k = {k} below the {components} connected components \
+                 the merge list bottoms out at"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CutError {}
+
 /// The full output of a clustering run over `n` points.
 #[derive(Debug, Clone, Default)]
 pub struct Dendrogram {
@@ -61,7 +89,18 @@ impl Dendrogram {
     /// `b`) never reappears; ids in range; merge count consistent with a
     /// forest over `n` leaves.
     pub fn validate(&self) -> Result<(), String> {
-        if self.merges.len() >= self.n && self.n > 0 {
+        if self.n == 0 {
+            // A forest over zero leaves has no internal nodes; without this
+            // guard a non-empty merge list would sail through the per-merge
+            // loop only if it were also empty, but the count bound below is
+            // skipped entirely (`n - 1` underflows), so reject explicitly.
+            return if self.merges.is_empty() {
+                Ok(())
+            } else {
+                Err(format!("{} merges for 0 points", self.merges.len()))
+            };
+        }
+        if self.merges.len() >= self.n {
             return Err(format!(
                 "{} merges for {} points (max {})",
                 self.merges.len(),
@@ -129,7 +168,7 @@ impl Dendrogram {
     }
 
     /// Flat clustering with exactly `k` clusters (applies the `n - k`
-    /// smallest merges; assumes a connected input).
+    /// smallest merges).
     ///
     /// Merges are ordered by the crate-wide total order `(weight, a, b)`,
     /// so weight ties cut deterministically regardless of the order the
@@ -138,8 +177,22 @@ impl Dendrogram {
     /// agrees with [`Dendrogram::cut_threshold`] at the first withheld
     /// weight (property-tested in `rust/tests/approx_quality.rs`); a
     /// threshold cut cannot split a tie, but `cut_k` can.
-    pub fn cut_k(&self, k: usize) -> Vec<u32> {
-        assert!(k >= 1 && k <= self.n);
+    ///
+    /// Errors rather than clamping: on the disconnected kNN graphs the
+    /// pipeline routinely produces, the merge list bottoms out at one
+    /// cluster per component, and `k` below that is unanswerable — the
+    /// old code silently returned `remaining_clusters()` labels, which
+    /// downstream quality metrics then mistook for a `k`-way cut. Callers
+    /// that want the clamp can do `k.max(d.remaining_clusters())`
+    /// explicitly.
+    pub fn cut_k(&self, k: usize) -> Result<Vec<u32>, CutError> {
+        if k < 1 || k > self.n {
+            return Err(CutError::KOutOfRange { k, n: self.n });
+        }
+        let components = self.remaining_clusters();
+        if k < components {
+            return Err(CutError::Disconnected { k, components });
+        }
         let mut order: Vec<&Merge> = self.merges.iter().collect();
         order.sort_by(|x, y| {
             x.weight
@@ -148,10 +201,10 @@ impl Dendrogram {
                 .then(x.b.cmp(&y.b))
         });
         let mut uf = UnionFind::new(self.n);
-        for m in order.into_iter().take(self.n.saturating_sub(k)) {
+        for m in order.into_iter().take(self.n - k) {
             uf.union(m.a, m.b);
         }
-        uf.labels()
+        Ok(uf.labels())
     }
 
     /// Canonical fingerprint for order-independent equality: the multiset
@@ -162,7 +215,15 @@ impl Dendrogram {
     /// which independent merges are recorded is irrelevant (Lemma 3).
     /// Weights are quantised to `tol` to absorb floating-point noise
     /// between differently-ordered but algebraically identical updates.
-    pub fn canonical(&self, tol: Weight) -> Vec<(Vec<u32>, i64)> {
+    ///
+    /// `tol` must be positive and finite — a zero, negative, or NaN
+    /// tolerance has no well-defined bucket width, and the old code's
+    /// `w / tol` happily produced garbage buckets for them (panics).
+    pub fn canonical(&self, tol: Weight) -> Vec<(Vec<u32>, i128)> {
+        assert!(
+            tol.is_finite() && tol > 0.0,
+            "canonical: tolerance must be positive and finite, got {tol}"
+        );
         let mut members: HashMap<u32, Vec<u32>> = HashMap::new();
         let mut out = Vec::with_capacity(self.merges.len());
         for m in &self.merges {
@@ -170,7 +231,7 @@ impl Dendrogram {
             let lb = members.remove(&m.b).unwrap_or_else(|| vec![m.b]);
             la.extend(lb);
             la.sort_unstable();
-            out.push((la.clone(), (m.weight / tol).round() as i64));
+            out.push((la.clone(), quantise(m.weight, tol)));
             members.insert(m.a, la);
         }
         out.sort();
@@ -212,19 +273,40 @@ impl Dendrogram {
     }
 }
 
-/// Small path-compressing union-find used for flat cuts.
-struct UnionFind {
+/// Quantise a merge weight to `tol`-sized buckets. A plain
+/// `(w / tol).round() as i64` saturates every quotient beyond ±2^63 to
+/// `i64::MIN`/`MAX`, collapsing *distinct* huge weights (or ordinary
+/// weights over a tiny tolerance) into one bucket and letting
+/// `same_clustering` claim equality for different dendrograms. In-range
+/// quotients keep their exact value; out-of-range ones fall back to the
+/// weight's bit pattern offset into a disjoint region of the `i128`
+/// bucket space, so they compare equal only when bit-identical — the
+/// tolerance is meaningless at that magnitude anyway, since `tol` is
+/// below the weight's ULP there.
+fn quantise(w: Weight, tol: Weight) -> i128 {
+    let q = (w / tol).round();
+    if (-9.007199254740992e15..9.007199254740992e15).contains(&q) {
+        // |q| < 2^53: q is an exactly-represented integer, cast is lossless.
+        q as i64 as i128
+    } else {
+        (w.to_bits() as i128) + (1i128 << 64)
+    }
+}
+
+/// Small path-compressing union-find used for flat cuts (and by the
+/// serve-layer index build, which needs the same lower-root-wins rule).
+pub(crate) struct UnionFind {
     parent: Vec<u32>,
 }
 
 impl UnionFind {
-    fn new(n: usize) -> Self {
+    pub(crate) fn new(n: usize) -> Self {
         UnionFind {
             parent: (0..n as u32).collect(),
         }
     }
 
-    fn find(&mut self, mut x: u32) -> u32 {
+    pub(crate) fn find(&mut self, mut x: u32) -> u32 {
         while self.parent[x as usize] != x {
             self.parent[x as usize] = self.parent[self.parent[x as usize] as usize];
             x = self.parent[x as usize];
@@ -232,7 +314,7 @@ impl UnionFind {
         x
     }
 
-    fn union(&mut self, a: u32, b: u32) {
+    pub(crate) fn union(&mut self, a: u32, b: u32) {
         let (ra, rb) = (self.find(a), self.find(b));
         if ra != rb {
             // Lower root wins, matching the merge-representative rule.
@@ -242,7 +324,7 @@ impl UnionFind {
     }
 
     /// Dense labels in `[0, n_clusters)`, stable by root id.
-    fn labels(&mut self) -> Vec<u32> {
+    pub(crate) fn labels(&mut self) -> Vec<u32> {
         let n = self.parent.len();
         let mut label: HashMap<u32, u32> = HashMap::new();
         let mut out = Vec::with_capacity(n);
@@ -325,10 +407,31 @@ mod tests {
     fn cut_k_counts() {
         let d = chain4();
         for k in 1..=4 {
-            let labels = d.cut_k(k);
+            let labels = d.cut_k(k).unwrap();
             let distinct: std::collections::HashSet<_> = labels.iter().collect();
             assert_eq!(distinct.len(), k);
         }
+    }
+
+    #[test]
+    fn cut_k_rejects_out_of_range() {
+        let d = chain4();
+        assert_eq!(d.cut_k(0), Err(CutError::KOutOfRange { k: 0, n: 4 }));
+        assert_eq!(d.cut_k(5), Err(CutError::KOutOfRange { k: 5, n: 4 }));
+    }
+
+    #[test]
+    fn cut_k_disconnected_is_a_named_error_not_a_lie() {
+        // 4 points, one merge: the graph had 3 components. The old code
+        // returned 3 labels for cut_k(1) and cut_k(2) without complaint.
+        let d = Dendrogram::new(4, vec![Merge { a: 0, b: 1, weight: 1.0 }]);
+        for k in 1..=2 {
+            assert_eq!(d.cut_k(k), Err(CutError::Disconnected { k, components: 3 }));
+        }
+        let three = d.cut_k(3).unwrap();
+        let distinct: std::collections::HashSet<_> = three.iter().collect();
+        assert_eq!(distinct.len(), 3);
+        assert_eq!(d.cut_k(4).unwrap(), vec![0, 1, 2, 3]);
     }
 
     #[test]
@@ -352,7 +455,7 @@ mod tests {
                 Merge { a: 0, b: 2, weight: 5.0 },
             ],
         );
-        let (lf, lr) = (forward.cut_k(3), reversed.cut_k(3));
+        let (lf, lr) = (forward.cut_k(3).unwrap(), reversed.cut_k(3).unwrap());
         assert_eq!(lf, lr);
         assert_eq!(lf[0], lf[1], "the (weight, id)-first tie must merge");
         assert_ne!(lf[2], lf[3]);
@@ -410,5 +513,68 @@ mod tests {
         let d = Dendrogram::new(0, vec![]);
         d.validate().unwrap();
         assert_eq!(d.height(), 0);
+    }
+
+    #[test]
+    fn validate_rejects_merges_over_zero_points() {
+        // Previously both count bounds were skipped for n == 0, so a merge
+        // list attached to nothing validated iff its ids happened to trip
+        // the per-merge range check — and (0, 1) does, but only because
+        // b >= n; the count itself was never rejected.
+        let d = Dendrogram {
+            n: 0,
+            merges: vec![Merge { a: 0, b: 1, weight: 1.0 }],
+        };
+        let err = d.validate().unwrap_err();
+        assert!(err.contains("0 points"), "unexpected error: {err}");
+    }
+
+    #[test]
+    #[should_panic(expected = "positive and finite")]
+    fn canonical_rejects_zero_tol() {
+        chain4().canonical(0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive and finite")]
+    fn canonical_rejects_negative_tol() {
+        chain4().canonical(-1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive and finite")]
+    fn canonical_rejects_nan_tol() {
+        chain4().canonical(Weight::NAN);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive and finite")]
+    fn canonical_rejects_infinite_tol() {
+        chain4().canonical(Weight::INFINITY);
+    }
+
+    #[test]
+    fn canonical_distinguishes_huge_weights() {
+        // Both quotients saturate past i64::MAX under the old cast, so the
+        // old fingerprint put 1e300 and 2e300 in the same bucket and
+        // same_clustering reported equality for different dendrograms.
+        let d1 = Dendrogram::new(2, vec![Merge { a: 0, b: 1, weight: 1e300 }]);
+        let d2 = Dendrogram::new(2, vec![Merge { a: 0, b: 1, weight: 2e300 }]);
+        assert!(!d1.same_clustering(&d2, 1e-9));
+        assert!(d1.same_clustering(&d1.clone(), 1e-9));
+        // Negative huge weights must not alias the positive ones either.
+        let d3 = Dendrogram::new(2, vec![Merge { a: 0, b: 1, weight: -1e300 }]);
+        assert!(!d1.same_clustering(&d3, 1e-9));
+    }
+
+    #[test]
+    fn canonical_quantises_in_range_weights() {
+        // Ordinary weights within a bucket still compare equal...
+        let d1 = Dendrogram::new(2, vec![Merge { a: 0, b: 1, weight: 1.0 }]);
+        let d2 = Dendrogram::new(2, vec![Merge { a: 0, b: 1, weight: 1.0 + 1e-12 }]);
+        assert!(d1.same_clustering(&d2, 1e-9));
+        // ...and across buckets do not.
+        let d3 = Dendrogram::new(2, vec![Merge { a: 0, b: 1, weight: 1.1 }]);
+        assert!(!d1.same_clustering(&d3, 1e-9));
     }
 }

@@ -184,6 +184,29 @@
 //! `force_scalar = true` under `[engine]`, or `--force-scalar`) to pin
 //! the fallback; `benches/hot_paths.rs` reports scalar-vs-SIMD
 //! counterpart cells and the active dispatch in `BENCH_hot_paths.json`.
+//!
+//! ## Serving
+//!
+//! A dendrogram is computed once and queried many times; [`serve`] is the
+//! read path. [`serve::ServeIndex`] compiles a validated [`dendrogram::Dendrogram`]
+//! into flat arrays — merges sorted by the crate-wide `(weight, a, b)`
+//! order, the merge forest laid out so every internal node covers a
+//! contiguous interval of a fixed leaf order, plus a binary-lifting
+//! ancestor table. Flat cuts ([`serve::ServeIndex::cut_threshold`] /
+//! [`serve::ServeIndex::cut_k`]) become one binary search plus an O(n)
+//! interval paint instead of a per-query union-find rebuild; single-point
+//! membership is O(log n); membership diffs between two thresholds and
+//! subtree extraction walk only the merges in the band between them.
+//! Every answer is bitwise-pinned to the naive [`dendrogram::Dendrogram`]
+//! cuts across all five engines (`rust/tests/serve_queries.rs`). The
+//! pipeline persists dendrograms through a versioned little-endian binary
+//! codec ([`serve::codec`], `[output] dendrogram_path` /
+//! `--dendrogram-out`), and `rac query` serves `cut-k` / `cut-threshold` /
+//! `member` / `diff` against the file. [`serve::ServeHandle`] gives a
+//! re-clustering pipeline atomic snapshot publication over live readers
+//! (`Arc` swap). Concurrency/throughput numbers: `benches/serve.rs` →
+//! `BENCH_serve.json` (Zipfian query mix from all cores, per-class
+//! latency, naive-vs-indexed speedup).
 
 pub mod approx;
 pub mod config;
@@ -199,6 +222,7 @@ pub mod metrics;
 pub mod pipeline;
 pub mod rac;
 pub mod runtime;
+pub mod serve;
 pub mod store;
 pub mod trace;
 pub mod util;

@@ -10,6 +10,7 @@
 //! rac graph-info --config <file.toml>        build the graph, print stats
 //! rac kernels [--artifacts DIR]              list + smoke the AOT kernels
 //! rac trace-report --trace <file> [--json]   analyze a recorded trace
+//! rac query <op> --dendrogram <file> ...     flat-cut queries on a saved dendrogram
 //! ```
 //!
 //! `cluster` flags: `--dataset sift_like|docs_like|grid1d|adversarial|stable|random_regular`,
@@ -43,6 +44,14 @@
 //! JSON. `rac trace-report --trace FILE` folds a recorded trace into
 //! per-machine phase time, barrier stragglers, the wire matrix, and the
 //! checkpoint/recovery timeline.
+//!
+//! Serving: `--dendrogram-out FILE` (`run` and `cluster`, or `[output]
+//! dendrogram_path`) persists the dendrogram in the versioned binary
+//! format ([`rac_hac::serve::codec`]); `rac query` answers flat-cut
+//! queries against such a file through the read-optimised
+//! [`rac_hac::serve::ServeIndex`]: `cut-k --k K`, `cut-threshold
+//! --threshold T`, `member --point P --threshold T`, and `diff --from T1
+//! --to T2` (the merges separating two thresholds).
 
 use std::process::ExitCode;
 
@@ -56,8 +65,9 @@ use rac_hac::linkage::Linkage;
 use rac_hac::pipeline;
 use rac_hac::rac::RacEngine;
 use rac_hac::runtime::{default_artifacts_dir, KernelRuntime};
+use rac_hac::serve::{self, ServeIndex};
 use rac_hac::trace::{self, TraceFormat};
-use rac_hac::util::json::obj;
+use rac_hac::util::json::{obj, Json};
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -68,6 +78,7 @@ fn main() -> ExitCode {
         Some("graph-info") => cmd_graph_info(&args[1..]),
         Some("kernels") => cmd_kernels(&args[1..]),
         Some("trace-report") => cmd_trace_report(&args[1..]),
+        Some("query") => cmd_query(&args[1..]),
         Some("help") | Some("--help") | Some("-h") | None => {
             print!("{HELP}");
             Ok(())
@@ -88,7 +99,8 @@ rac — Reciprocal Agglomerative Clustering coordinator
 
 USAGE:
   rac run --config <file.toml> [--trace FILE] [--trace-format jsonl|chrome]
-          [--metrics-out FILE] [--force-scalar] [--json]
+          [--metrics-out FILE] [--dendrogram-out FILE] [--force-scalar]
+          [--json]
   rac cluster [--dataset T] [--n N] [--d D] [--k K] [--xla] [--linkage L]
               [--engine E] [--machines M] [--cpus C] [--epsilon E]
               [--sync-mode per_round|batched] [--vshards V]
@@ -97,12 +109,16 @@ USAGE:
               [--fault-seed S] [--recovery-mode global|shard_replay]
               [--checkpoint-full-every N]
               [--trace FILE] [--trace-format jsonl|chrome]
-              [--metrics-out FILE] [--force-scalar]
+              [--metrics-out FILE] [--dendrogram-out FILE] [--force-scalar]
               [--seed S] [--json]
   rac verify [--n N] [--seeds S]
   rac graph-info --config <file.toml>
   rac kernels [--artifacts DIR]
   rac trace-report --trace <file> [--json]
+  rac query cut-k          --dendrogram <file> --k K [--json]
+  rac query cut-threshold  --dendrogram <file> --threshold T [--json]
+  rac query member         --dendrogram <file> --point P --threshold T [--json]
+  rac query diff           --dendrogram <file> --from T1 --to T2 [--json]
 ";
 
 /// Tiny flag parser: `--key value` pairs plus boolean `--key` switches.
@@ -223,9 +239,10 @@ fn report(out: &pipeline::RunOutput, json: bool) {
     }
 }
 
-/// Observability overrides shared by `run` and `cluster`: `--trace` /
-/// `--trace-format` / `--metrics-out` beat the config's `[output]`
-/// section, validated with the same rules as the TOML fields.
+/// Output overrides shared by `run` and `cluster`: `--trace` /
+/// `--trace-format` / `--metrics-out` / `--dendrogram-out` beat the
+/// config's `[output]` section, validated with the same rules as the
+/// TOML fields.
 fn apply_output_flags(cfg: &mut RunConfig, flags: &Flags) -> Result<()> {
     if let Some(p) = flags.get("trace") {
         cfg.output.trace_path = Some(p.to_string());
@@ -242,6 +259,9 @@ fn apply_output_flags(cfg: &mut RunConfig, flags: &Flags) -> Result<()> {
     }
     if let Some(p) = flags.get("metrics-out") {
         cfg.output.metrics_out = Some(p.to_string());
+    }
+    if let Some(p) = flags.get("dendrogram-out") {
+        cfg.output.dendrogram_path = Some(p.to_string());
     }
     Ok(())
 }
@@ -366,6 +386,150 @@ fn cmd_trace_report(args: &[String]) -> Result<()> {
         print!("{}", trace::analyze::render(&report));
     }
     Ok(())
+}
+
+/// Flat-cut queries against a persisted dendrogram (`--dendrogram-out` /
+/// `[output] dendrogram_path`), served through the read-optimised
+/// [`ServeIndex`] — the same code path `benches/serve.rs` hammers. The
+/// file is fully validated on load; invalid or hostile bytes fail with a
+/// named error before any query runs.
+fn cmd_query(args: &[String]) -> Result<()> {
+    const USAGE: &str =
+        "usage: rac query <cut-k|cut-threshold|member|diff> --dendrogram <file> ...";
+    let op = match args.first() {
+        Some(a) if !a.starts_with("--") => a.as_str(),
+        _ => return Err(anyhow!(USAGE)),
+    };
+    let flags = Flags::parse(&args[1..])?;
+    let f64_flag = |key: &str| -> Result<f64> {
+        let v = flags
+            .get(key)
+            .ok_or_else(|| anyhow!("--{key} <number> required for `rac query {op}`"))?;
+        v.parse().with_context(|| format!("--{key} {v:?}"))
+    };
+    let path = flags
+        .get("dendrogram")
+        .ok_or_else(|| anyhow!("--dendrogram <file> required; {USAGE}"))?;
+    let d = serve::codec::read_file(path).map_err(|e| anyhow!(e))?;
+    let index = ServeIndex::build(&d).map_err(|e| anyhow!("{e}"))?;
+    let json = flags.has("json");
+    match op {
+        "cut-k" => {
+            let k = flags
+                .get("k")
+                .ok_or_else(|| anyhow!("--k <clusters> required for `rac query cut-k`"))?
+                .parse::<usize>()
+                .context("--k")?;
+            let labels = index.cut_k(k).map_err(|e| anyhow!("{e}"))?;
+            print_cut(&labels, json);
+        }
+        "cut-threshold" => {
+            let labels = index.cut_threshold(f64_flag("threshold")?);
+            print_cut(&labels, json);
+        }
+        "member" => {
+            let p = flags
+                .get("point")
+                .ok_or_else(|| anyhow!("--point <id> required for `rac query member`"))?
+                .parse::<u32>()
+                .context("--point")?;
+            let t = f64_flag("threshold")?;
+            let rep = index.point_membership(p, t).map_err(|e| anyhow!("{e}"))?;
+            let members = index.cluster_members(p, t).map_err(|e| anyhow!("{e}"))?;
+            if json {
+                let doc = obj([
+                    ("point", (p as usize).into()),
+                    ("threshold", t.into()),
+                    ("rep", (rep as usize).into()),
+                    ("size", members.len().into()),
+                    (
+                        "members",
+                        members.iter().map(|&m| m as usize).collect::<Vec<_>>().into(),
+                    ),
+                ]);
+                println!("{doc}");
+            } else {
+                println!(
+                    "point {p} at threshold {t}: cluster rep {rep}, {} members",
+                    members.len()
+                );
+                println!("{}", preview_u32(&members, 20));
+            }
+        }
+        "diff" => {
+            let (from, to) = (f64_flag("from")?, f64_flag("to")?);
+            let steps = index.diff(from, to).map_err(|e| anyhow!("{e}"))?;
+            if json {
+                let arr: Vec<Json> = steps
+                    .iter()
+                    .map(|s| {
+                        obj([
+                            ("weight", s.weight.into()),
+                            ("into", (s.into as usize).into()),
+                            ("absorbed", (s.absorbed as usize).into()),
+                        ])
+                    })
+                    .collect();
+                let doc = obj([
+                    ("from", from.into()),
+                    ("to", to.into()),
+                    ("steps", Json::Arr(arr)),
+                ]);
+                println!("{doc}");
+            } else {
+                println!("{} merges in band [{from}, {to})", steps.len());
+                for s in steps.iter().take(32) {
+                    println!("  @{:<12} cluster {} absorbs cluster {}", s.weight, s.into, s.absorbed);
+                }
+                if steps.len() > 32 {
+                    println!("  ... {} more (use --json for all)", steps.len() - 32);
+                }
+            }
+        }
+        other => return Err(anyhow!("unknown query op {other:?}; {USAGE}")),
+    }
+    Ok(())
+}
+
+/// Render a flat cut: cluster count and sizes (full labels under `--json`).
+fn print_cut(labels: &[u32], json: bool) {
+    let clusters = labels.iter().copied().max().map_or(0, |m| m as usize + 1);
+    let mut sizes = vec![0usize; clusters];
+    for &l in labels {
+        sizes[l as usize] += 1;
+    }
+    if json {
+        let doc = obj([
+            ("points", labels.len().into()),
+            ("clusters", clusters.into()),
+            ("sizes", sizes.clone().into()),
+            (
+                "labels",
+                labels.iter().map(|&l| l as usize).collect::<Vec<_>>().into(),
+            ),
+        ]);
+        println!("{doc}");
+        return;
+    }
+    println!("{} clusters over {} points", clusters, labels.len());
+    let mut ranked: Vec<usize> = sizes;
+    ranked.sort_unstable_by(|a, b| b.cmp(a));
+    ranked.truncate(20);
+    println!(
+        "largest sizes: {:?}{}",
+        ranked,
+        if clusters > 20 { " ..." } else { "" }
+    );
+}
+
+/// First `cap` ids, with an ellipsis marker when truncated.
+fn preview_u32(ids: &[u32], cap: usize) -> String {
+    let shown: Vec<String> = ids.iter().take(cap).map(u32::to_string).collect();
+    if ids.len() > cap {
+        format!("members: [{}, ...]", shown.join(", "))
+    } else {
+        format!("members: [{}]", shown.join(", "))
+    }
 }
 
 /// Exactness sweep: RAC (shared and distributed) vs sequential HAC on

@@ -216,7 +216,8 @@ pub fn run(cfg: &RunConfig) -> Result<RunOutput> {
 }
 
 /// Write the `[output]` artifacts: the collected trace (in the
-/// configured format) and the run's `RunMetrics` JSON.
+/// configured format), the run's `RunMetrics` JSON, and the binary
+/// dendrogram (`rac query`'s input).
 pub fn write_outputs(cfg: &RunConfig, result: &RacResult, sink: &TraceSink) -> Result<()> {
     if let Some(path) = &cfg.output.trace_path {
         let events = sink.take();
@@ -227,6 +228,10 @@ pub fn write_outputs(cfg: &RunConfig, result: &RacResult, sink: &TraceSink) -> R
         let mut text = result.metrics.to_json().to_string();
         text.push('\n');
         std::fs::write(path, text).with_context(|| format!("writing metrics to {path:?}"))?;
+    }
+    if let Some(path) = &cfg.output.dendrogram_path {
+        crate::serve::codec::write_file(&result.dendrogram, path)
+            .with_context(|| format!("writing dendrogram to {path:?}"))?;
     }
     Ok(())
 }
@@ -424,6 +429,30 @@ mod tests {
         assert_eq!(
             js.get("total_net_bytes").and_then(|v| v.as_usize()),
             Some(out.result.metrics.total_net_bytes())
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn output_section_writes_dendrogram_file() {
+        let dir = std::env::temp_dir().join(format!("racdend-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let dend_path = dir.join("run.dend");
+        let out = run(&cfg(&format!(
+            "[dataset]\ntype = \"grid1d\"\nn = 150\n[cluster]\nlinkage = \"average\"\n\
+             [engine]\ntype = \"rac\"\n[output]\ndendrogram_path = {dend_path:?}\n"
+        )))
+        .unwrap();
+        // The file round-trips bit-exact and serves the same cuts.
+        let back = crate::serve::codec::read_file(&dend_path).unwrap();
+        assert_eq!(
+            back.bitwise_merges(),
+            out.result.dendrogram.bitwise_merges()
+        );
+        let idx = crate::serve::ServeIndex::build(&back).unwrap();
+        assert_eq!(
+            idx.cut_threshold(1.5),
+            out.result.dendrogram.cut_threshold(1.5)
         );
         std::fs::remove_dir_all(&dir).ok();
     }

@@ -1,0 +1,224 @@
+//! Versioned little-endian binary dendrogram format — the durable artifact
+//! behind `[output] dendrogram_path` / `--dendrogram-out`, loaded back by
+//! `rac query`.
+//!
+//! Layout (all little-endian):
+//!
+//! ```text
+//! magic    u64   "RACDEND1"
+//! version  u32   1
+//! n        u64   number of points
+//! count    u64   number of merges, < max(n, 1)
+//! count ×  { a: u32, b: u32, weight: f64 }   merges in recorded order
+//! ```
+//!
+//! The recorded (engine) merge order is preserved, so a round trip is
+//! bit-exact under [`Dendrogram::bitwise_merges`].
+//!
+//! Decoding follows the `graph/io` + `dist/checkpoint` hostile-bytes
+//! rules: the count is guarded against the remaining byte budget *before*
+//! any allocation, trailing bytes are rejected, and the merge list is
+//! checked against the full [`Dendrogram::validate`] contract. The
+//! structural checks here are deliberately count-bounded (a seen-set over
+//! the ≤ count retired representatives instead of validate's `O(n)`
+//! bitmap) so a 32-byte header claiming 2^60 points cannot make the
+//! decoder allocate anything proportional to the *claim* — only to the
+//! bytes actually present.
+
+use std::path::Path;
+
+use rustc_hash::FxHashSet;
+
+use crate::dendrogram::{Dendrogram, Merge};
+use crate::dist::network::{put_f64, put_u32, put_u64, Reader};
+
+pub const MAGIC: u64 = u64::from_le_bytes(*b"RACDEND1");
+pub const VERSION: u32 = 1;
+const HEADER_BYTES: usize = 8 + 4 + 8 + 8;
+const RECORD_BYTES: usize = 4 + 4 + 8;
+
+/// Serialise a dendrogram. Panics if the merge list is structurally
+/// impossible to represent (more merges than points allow) — encode is for
+/// engine output, which is valid by construction; use
+/// [`Dendrogram::validate`] first when in doubt.
+pub fn encode(d: &Dendrogram) -> Vec<u8> {
+    assert!(
+        d.merges().len() < d.n().max(1),
+        "refusing to encode an invalid dendrogram: {} merges for {} points",
+        d.merges().len(),
+        d.n()
+    );
+    let mut buf = Vec::with_capacity(HEADER_BYTES + d.merges().len() * RECORD_BYTES);
+    put_u64(&mut buf, MAGIC);
+    put_u32(&mut buf, VERSION);
+    put_u64(&mut buf, d.n() as u64);
+    put_u64(&mut buf, d.merges().len() as u64);
+    for m in d.merges() {
+        put_u32(&mut buf, m.a);
+        put_u32(&mut buf, m.b);
+        put_f64(&mut buf, m.weight);
+    }
+    buf
+}
+
+/// Decode and fully validate a dendrogram. Every failure is a named,
+/// descriptive error; no failure path allocates proportionally to a
+/// corrupt count or point claim.
+pub fn decode(bytes: &[u8]) -> Result<Dendrogram, String> {
+    let mut r = Reader::new(bytes);
+    let magic = r.u64().map_err(|e| format!("dendrogram header: {e}"))?;
+    if magic != MAGIC {
+        return Err(format!(
+            "bad dendrogram magic {magic:#018x} (want {MAGIC:#018x})"
+        ));
+    }
+    let version = r.u32().map_err(|e| format!("dendrogram header: {e}"))?;
+    if version != VERSION {
+        return Err(format!(
+            "unsupported dendrogram version {version} (this build reads {VERSION})"
+        ));
+    }
+    let n = r.u64().map_err(|e| format!("dendrogram header: {e}"))?;
+    let n = usize::try_from(n).map_err(|_| format!("point count {n} overflows usize"))?;
+    let count = r.u64().map_err(|e| format!("dendrogram header: {e}"))?;
+    let count =
+        usize::try_from(count).map_err(|_| format!("merge count {count} overflows usize"))?;
+    if count >= n.max(1) {
+        return Err(format!(
+            "corrupt merge count {count} for {n} points (max {})",
+            n.saturating_sub(1)
+        ));
+    }
+    r.check_count(count, RECORD_BYTES, "dendrogram merge")?;
+
+    // Structural validation inline, equivalent to `Dendrogram::validate`
+    // but bounded by `count` (which the byte budget above justifies)
+    // rather than by the claimed `n`.
+    let mut merges = Vec::with_capacity(count);
+    let mut dead: FxHashSet<u32> = FxHashSet::default();
+    dead.reserve(count);
+    for i in 0..count {
+        let a = r.u32().map_err(|e| format!("merge {i}: {e}"))?;
+        let b = r.u32().map_err(|e| format!("merge {i}: {e}"))?;
+        let weight = r.f64().map_err(|e| format!("merge {i}: {e}"))?;
+        if a >= b {
+            return Err(format!("merge {i}: a >= b ({a} >= {b})"));
+        }
+        if b as usize >= n {
+            return Err(format!("merge {i}: id {b} out of range for {n} points"));
+        }
+        if dead.contains(&a) || dead.contains(&b) {
+            return Err(format!("merge {i}: uses a dead representative"));
+        }
+        dead.insert(b);
+        if !weight.is_finite() {
+            return Err(format!("merge {i}: non-finite weight"));
+        }
+        merges.push(Merge { a, b, weight });
+    }
+    if r.remaining() != 0 {
+        return Err(format!(
+            "{} trailing bytes after dendrogram payload",
+            r.remaining()
+        ));
+    }
+    Ok(Dendrogram::new(n, merges))
+}
+
+/// Write a dendrogram file.
+pub fn write_file(d: &Dendrogram, path: impl AsRef<Path>) -> std::io::Result<()> {
+    std::fs::write(path, encode(d))
+}
+
+/// Read and validate a dendrogram file.
+pub fn read_file(path: impl AsRef<Path>) -> Result<Dendrogram, String> {
+    let path = path.as_ref();
+    let bytes =
+        std::fs::read(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+    decode(&bytes).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Dendrogram {
+        Dendrogram::new(
+            5,
+            vec![
+                // Deliberately not in sorted-weight order: recorded order
+                // must survive the round trip.
+                Merge { a: 2, b: 3, weight: 2.0 },
+                Merge { a: 0, b: 1, weight: 1.0 },
+                Merge { a: 0, b: 2, weight: 3.0 },
+            ],
+        )
+    }
+
+    #[test]
+    fn round_trip_is_bit_exact() {
+        let d = sample();
+        let back = decode(&encode(&d)).unwrap();
+        assert_eq!(back.n(), d.n());
+        assert_eq!(back.bitwise_merges(), d.bitwise_merges());
+    }
+
+    #[test]
+    fn round_trip_empty_and_disconnected() {
+        for d in [
+            Dendrogram::new(0, vec![]),
+            Dendrogram::new(7, vec![]),
+            Dendrogram::new(4, vec![Merge { a: 1, b: 3, weight: 0.5 }]),
+        ] {
+            let back = decode(&encode(&d)).unwrap();
+            assert_eq!(back.n(), d.n());
+            assert_eq!(back.bitwise_merges(), d.bitwise_merges());
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_version() {
+        let mut bytes = encode(&sample());
+        bytes[0] ^= 0xff;
+        assert!(decode(&bytes).unwrap_err().contains("magic"));
+        let mut bytes = encode(&sample());
+        bytes[8] = 99;
+        assert!(decode(&bytes).unwrap_err().contains("version"));
+    }
+
+    #[test]
+    fn rejects_truncation_and_trailing() {
+        let bytes = encode(&sample());
+        assert!(decode(&bytes[..bytes.len() - 1]).is_err());
+        assert!(decode(&bytes[..HEADER_BYTES - 2]).is_err());
+        let mut padded = bytes.clone();
+        padded.push(0);
+        assert!(decode(&padded).unwrap_err().contains("trailing"));
+    }
+
+    #[test]
+    fn corrupt_count_fails_fast() {
+        // A count far beyond the payload must be rejected by the byte
+        // budget (or the n bound) before any element loop or allocation.
+        let mut bytes = encode(&sample());
+        bytes[20..28].copy_from_slice(&u64::MAX.to_le_bytes());
+        let err = decode(&bytes).unwrap_err();
+        assert!(err.contains("corrupt merge count"), "got: {err}");
+    }
+
+    #[test]
+    fn rejects_invalid_structure() {
+        // Dead representative reuse, encoded by hand.
+        let mut buf = Vec::new();
+        put_u64(&mut buf, MAGIC);
+        put_u32(&mut buf, VERSION);
+        put_u64(&mut buf, 3);
+        put_u64(&mut buf, 2);
+        for (a, b, w) in [(0u32, 1u32, 1.0f64), (1, 2, 2.0)] {
+            put_u32(&mut buf, a);
+            put_u32(&mut buf, b);
+            put_f64(&mut buf, w);
+        }
+        assert!(decode(&buf).unwrap_err().contains("dead representative"));
+    }
+}

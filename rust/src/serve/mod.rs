@@ -1,0 +1,589 @@
+//! Serving layer: a compact, read-optimised dendrogram index.
+//!
+//! The batch engines produce a dendrogram once; a service answers flat-cut
+//! queries against it millions of times. The naive path rebuilds a
+//! `UnionFind` over all `n` points per query
+//! (`Dendrogram::cut_threshold` / `cut_k`), which is O(n α(n)) *per
+//! query*. [`ServeIndex`] pays that cost once at build time and turns the
+//! hot queries into array reads:
+//!
+//! - Merges are sorted by the crate-wide `(weight, a, b)` total order into
+//!   flat arrays, so "how many merges apply below threshold t" is one
+//!   binary search.
+//! - The merge forest is laid out so every internal node covers a
+//!   *contiguous interval* of a fixed leaf order (children ordered so the
+//!   subtree holding the cluster's minimum member comes first). A flat cut
+//!   is then: find the "top" nodes for the chosen merge prefix and paint
+//!   their intervals — O(n) total work with O(1) amortised per point, no
+//!   union-find, no hashing.
+//! - A binary-lifting ancestor table makes single-point membership
+//!   (`point_membership`) O(log n), and membership diffs between two
+//!   thresholds walk only the merges in the band between them.
+//!
+//! Every query is *bitwise-pinned* against the naive `Dendrogram`
+//! implementation (`rust/tests/serve_queries.rs`, `benches/serve.rs`): the
+//! index is a pure representation change, never a semantic one.
+//!
+//! [`ServeHandle`] adds snapshot semantics: readers [`ServeHandle::load`]
+//! an `Arc<ServeIndex>` and answer from that immutable snapshot while a
+//! re-cluster [`ServeHandle::publish`]es a replacement atomically.
+//! Persistence lives in [`codec`]: a versioned little-endian binary
+//! dendrogram format written by the pipeline (`[output] dendrogram_path` /
+//! `--dendrogram-out`) and loaded by the `rac query` subcommand.
+
+pub mod codec;
+
+use std::sync::{Arc, RwLock};
+
+use crate::dendrogram::{CutError, Dendrogram, UnionFind};
+use crate::linkage::Weight;
+
+/// Sentinel node/parent id ("none").
+const NONE: u32 = u32::MAX;
+
+/// Why a [`ServeIndex`] could not be built.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The dendrogram failed [`Dendrogram::validate`]; the message is the
+    /// validator's.
+    InvalidDendrogram(String),
+    /// `n + merges` would overflow the index's `u32` node-id space.
+    TooLarge { n: usize, merges: usize },
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::InvalidDendrogram(e) => {
+                write!(f, "refusing to index an invalid dendrogram: {e}")
+            }
+            ServeError::TooLarge { n, merges } => write!(
+                f,
+                "dendrogram too large to index: {n} points + {merges} merges \
+                 exceeds the u32 node-id space"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Why a point/band query could not be answered.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum QueryError {
+    /// The queried point id is not in `[0, n)`.
+    PointOutOfRange { p: u32, n: usize },
+    /// The diff band is not an ordered pair of thresholds (`lo > hi`, or
+    /// either side NaN).
+    BadBand { lo: Weight, hi: Weight },
+}
+
+impl std::fmt::Display for QueryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            QueryError::PointOutOfRange { p, n } => {
+                write!(f, "point {p} out of range for {n} points")
+            }
+            QueryError::BadBand { lo, hi } => {
+                write!(f, "diff band [{lo}, {hi}) is not ordered")
+            }
+        }
+    }
+}
+
+impl std::error::Error for QueryError {}
+
+/// One merge inside a threshold band, reported by [`ServeIndex::diff`] in
+/// `(weight, a, b)` order: the cluster represented by `absorbed`
+/// disappears into the one represented by `into` (`into < absorbed`, and
+/// `into` is the merged cluster's minimum member, matching the engines'
+/// lower-representative-survives rule).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MergeStep {
+    pub weight: Weight,
+    pub into: u32,
+    pub absorbed: u32,
+}
+
+/// Read-optimised dendrogram index. Build once with [`ServeIndex::build`],
+/// then query concurrently — all queries take `&self`.
+///
+/// Node ids: `0..n` are leaves (point ids); `n + i` is the internal node
+/// for the `i`-th merge in the sorted `(weight, a, b)` order.
+pub struct ServeIndex {
+    n: usize,
+    /// Merge weights in sorted order (the binary-search axis).
+    weights: Vec<Weight>,
+    /// Children of internal node `i`: `left` holds the merged cluster's
+    /// minimum member, so DFS visits the minimum first.
+    left: Vec<u32>,
+    right: Vec<u32>,
+    /// Minimum member (= surviving representative) of internal node `i`.
+    min_member: Vec<u32>,
+    /// For every forest node, the *sorted merge index* of its parent
+    /// (`NONE` for roots). Strictly increases along leaf-to-root paths.
+    parent: Vec<u32>,
+    /// DFS leaf order: `pos[p]` is point `p`'s leaf position,
+    /// `order[pos] = p`.
+    pos: Vec<u32>,
+    order: Vec<u32>,
+    /// Leaf-position interval `[lo[i], hi[i])` covered by internal node `i`.
+    lo: Vec<u32>,
+    hi: Vec<u32>,
+    /// Binary lifting: `up[k][v]` is node `v`'s `2^k`-th ancestor (node
+    /// id), `NONE` past the root.
+    up: Vec<Vec<u32>>,
+}
+
+impl ServeIndex {
+    /// Build the index from a dendrogram, refusing invalid input.
+    pub fn build(d: &Dendrogram) -> Result<ServeIndex, ServeError> {
+        let n = d.n();
+        let m = d.merges().len();
+        // Size gate *before* validate: validate allocates O(n), and a
+        // hostile decoded header can claim an absurd n with few merges.
+        if (n as u64).saturating_add(m as u64) >= NONE as u64 {
+            return Err(ServeError::TooLarge { n, merges: m });
+        }
+        d.validate().map_err(ServeError::InvalidDendrogram)?;
+
+        // Sort merge indices by the crate-wide (weight, a, b) order.
+        let merges = d.merges();
+        let mut idx: Vec<u32> = (0..m as u32).collect();
+        idx.sort_by(|&x, &y| {
+            let (mx, my) = (&merges[x as usize], &merges[y as usize]);
+            mx.weight
+                .total_cmp(&my.weight)
+                .then(mx.a.cmp(&my.a))
+                .then(mx.b.cmp(&my.b))
+        });
+
+        // Replay the sorted merges to build the forest. A valid merge list
+        // is a spanning forest over point ids (each merge retires `b` for
+        // good), and forest edges union cleanly in *any* order, so sorted
+        // replay never hits an already-joined pair. With lower-root-wins
+        // the union-find root is always the component's minimum member.
+        let mut uf = UnionFind::new(n);
+        let mut node_of: Vec<u32> = (0..n as u32).collect();
+        let mut weights = Vec::with_capacity(m);
+        let mut left = Vec::with_capacity(m);
+        let mut right = Vec::with_capacity(m);
+        let mut min_member = Vec::with_capacity(m);
+        let mut parent = vec![NONE; n + m];
+        for (i, &mi) in idx.iter().enumerate() {
+            let mr = merges[mi as usize];
+            let (ra, rb) = (uf.find(mr.a), uf.find(mr.b));
+            debug_assert_ne!(ra, rb, "valid dendrograms form a forest");
+            let (rlo, rhi) = if ra < rb { (ra, rb) } else { (rb, ra) };
+            let (cl, cr) = (node_of[rlo as usize], node_of[rhi as usize]);
+            parent[cl as usize] = i as u32;
+            parent[cr as usize] = i as u32;
+            uf.union(ra, rb);
+            node_of[rlo as usize] = (n + i) as u32;
+            weights.push(mr.weight);
+            left.push(cl);
+            right.push(cr);
+            min_member.push(rlo);
+        }
+
+        // Pre-order DFS from each component root (ascending minimum
+        // member), left child first: every subtree covers a contiguous
+        // leaf interval whose first leaf is its minimum member.
+        let mut pos = vec![0u32; n];
+        let mut order = Vec::with_capacity(n);
+        let mut stack: Vec<u32> = Vec::new();
+        for p in 0..n as u32 {
+            if uf.find(p) != p {
+                continue;
+            }
+            stack.push(node_of[p as usize]);
+            while let Some(v) = stack.pop() {
+                if (v as usize) < n {
+                    pos[v as usize] = order.len() as u32;
+                    order.push(v);
+                } else {
+                    let i = v as usize - n;
+                    stack.push(right[i]);
+                    stack.push(left[i]);
+                }
+            }
+        }
+        debug_assert_eq!(order.len(), n);
+
+        // Subtree sizes bottom-up (children always have a smaller merge
+        // index than their parent), then intervals: a subtree's first
+        // leaf is its minimum member.
+        let mut size = vec![0u32; m];
+        for i in 0..m {
+            let s = |c: u32| {
+                if (c as usize) < n {
+                    1
+                } else {
+                    size[c as usize - n]
+                }
+            };
+            size[i] = s(left[i]) + s(right[i]);
+        }
+        let mut lo = vec![0u32; m];
+        let mut hi = vec![0u32; m];
+        for i in 0..m {
+            lo[i] = pos[min_member[i] as usize];
+            hi[i] = lo[i] + size[i];
+        }
+
+        // Binary-lifting table over parent pointers.
+        let total = n + m;
+        let mut levels = 1usize;
+        while (1usize << levels) < total.max(1) {
+            levels += 1;
+        }
+        let mut up0 = vec![NONE; total];
+        for v in 0..total {
+            if parent[v] != NONE {
+                up0[v] = (n as u32) + parent[v];
+            }
+        }
+        let mut up = vec![up0];
+        for k in 1..levels {
+            let prev = &up[k - 1];
+            let mut cur = vec![NONE; total];
+            for v in 0..total {
+                let a = prev[v];
+                if a != NONE {
+                    cur[v] = prev[a as usize];
+                }
+            }
+            up.push(cur);
+        }
+
+        Ok(ServeIndex {
+            n,
+            weights,
+            left,
+            right,
+            min_member,
+            parent,
+            pos,
+            order,
+            lo,
+            hi,
+            up,
+        })
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn num_merges(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Connected components of the input graph (clusters at +infinity).
+    pub fn components(&self) -> usize {
+        self.n - self.weights.len()
+    }
+
+    /// Merge weights in the sorted `(weight, a, b)` order — useful for
+    /// choosing interesting thresholds.
+    pub fn merge_weights(&self) -> &[Weight] {
+        &self.weights
+    }
+
+    /// Number of merges with `weight < t` — the prefix a threshold cut
+    /// applies. One binary search; valid because the weights are sorted
+    /// under `total_cmp`, which agrees with `<` on the finite weights
+    /// `validate` guarantees.
+    fn prefix_len(&self, t: Weight) -> usize {
+        self.weights.partition_point(|&w| w < t)
+    }
+
+    /// Highest ancestor of leaf `p` whose merge index is `< l` (or `p`
+    /// itself if none). Merge indices strictly increase along leaf-to-root
+    /// paths, so the greedy high-to-low lifting descent is exact.
+    fn top_of(&self, p: u32, l: usize) -> u32 {
+        let mut v = p;
+        if l == 0 {
+            return v;
+        }
+        for tab in self.up.iter().rev() {
+            let a = tab[v as usize];
+            if a != NONE && (a as usize - self.n) < l {
+                v = a;
+            }
+        }
+        v
+    }
+
+    /// The leaf-position interval a node covers.
+    fn span(&self, v: u32) -> (usize, usize) {
+        if (v as usize) < self.n {
+            let p = self.pos[v as usize] as usize;
+            (p, p + 1)
+        } else {
+            let i = v as usize - self.n;
+            (self.lo[i] as usize, self.hi[i] as usize)
+        }
+    }
+
+    /// A node's cluster representative: its minimum member.
+    fn rep_of(&self, v: u32) -> u32 {
+        if (v as usize) < self.n {
+            v
+        } else {
+            self.min_member[v as usize - self.n]
+        }
+    }
+
+    /// Labels for the cut that applies the first `l` sorted merges,
+    /// bitwise-identical to the naive `UnionFind::labels()` output: dense
+    /// labels assigned by first encounter over points in id order.
+    fn labels_for_prefix(&self, l: usize) -> Vec<u32> {
+        let n = self.n;
+        // Paint each top node's interval with its node id; each position
+        // is painted exactly once, so this is O(n) plus one lifting walk
+        // per *cluster*, not per point.
+        let mut top_at = vec![NONE; n];
+        let mut p = 0usize;
+        while p < n {
+            let top = self.top_of(self.order[p], l);
+            let (s, e) = self.span(top);
+            debug_assert_eq!(s, p);
+            for q in s..e {
+                top_at[q] = top;
+            }
+            p = e;
+        }
+        let mut node_label = vec![NONE; n + self.weights.len()];
+        let mut out = Vec::with_capacity(n);
+        let mut next = 0u32;
+        for point in 0..n {
+            let t = top_at[self.pos[point] as usize] as usize;
+            if node_label[t] == NONE {
+                node_label[t] = next;
+                next += 1;
+            }
+            out.push(node_label[t]);
+        }
+        out
+    }
+
+    /// Flat clustering at dissimilarity `threshold` (exclusive).
+    /// Bitwise-equal to [`Dendrogram::cut_threshold`].
+    pub fn cut_threshold(&self, threshold: Weight) -> Vec<u32> {
+        self.labels_for_prefix(self.prefix_len(threshold))
+    }
+
+    /// Flat clustering with exactly `k` clusters. Same error contract as
+    /// [`Dendrogram::cut_k`], same labels bitwise.
+    pub fn cut_k(&self, k: usize) -> Result<Vec<u32>, CutError> {
+        if k < 1 || k > self.n {
+            return Err(CutError::KOutOfRange { k, n: self.n });
+        }
+        let components = self.components();
+        if k < components {
+            return Err(CutError::Disconnected { k, components });
+        }
+        Ok(self.labels_for_prefix(self.n - k))
+    }
+
+    /// The representative (minimum member) of point `p`'s cluster at
+    /// `threshold`. O(log n): one binary search + one lifting walk.
+    pub fn point_membership(&self, p: u32, threshold: Weight) -> Result<u32, QueryError> {
+        if p as usize >= self.n {
+            return Err(QueryError::PointOutOfRange { p, n: self.n });
+        }
+        let top = self.top_of(p, self.prefix_len(threshold));
+        Ok(self.rep_of(top))
+    }
+
+    /// All members of point `p`'s cluster at `threshold`, ascending.
+    /// Subtree extraction: one interval slice, no traversal of the rest
+    /// of the forest.
+    pub fn cluster_members(&self, p: u32, threshold: Weight) -> Result<Vec<u32>, QueryError> {
+        if p as usize >= self.n {
+            return Err(QueryError::PointOutOfRange { p, n: self.n });
+        }
+        let top = self.top_of(p, self.prefix_len(threshold));
+        let (s, e) = self.span(top);
+        let mut members = self.order[s..e].to_vec();
+        members.sort_unstable();
+        Ok(members)
+    }
+
+    /// The merges that separate the clustering at `lo` from the one at
+    /// `hi` (`lo <= hi`), in `(weight, a, b)` order — exactly the work a
+    /// subscriber replays to move a materialised cut between thresholds.
+    /// Walks only the band, not the whole merge list.
+    pub fn diff(&self, lo: Weight, hi: Weight) -> Result<Vec<MergeStep>, QueryError> {
+        if !(lo <= hi) {
+            return Err(QueryError::BadBand { lo, hi });
+        }
+        let (l0, l1) = (self.prefix_len(lo), self.prefix_len(hi));
+        let mut out = Vec::with_capacity(l1 - l0);
+        for i in l0..l1 {
+            let into = self.min_member[i];
+            let absorbed = self.rep_of(self.left[i]).max(self.rep_of(self.right[i]));
+            debug_assert_eq!(into, self.rep_of(self.left[i]).min(self.rep_of(self.right[i])));
+            out.push(MergeStep {
+                weight: self.weights[i],
+                into,
+                absorbed,
+            });
+        }
+        Ok(out)
+    }
+
+    /// Rough in-memory footprint, for capacity planning.
+    pub fn memory_bytes(&self) -> usize {
+        let u32s = self.left.len() * 5 // left, right, min_member, lo, hi
+            + self.parent.len()
+            + self.pos.len()
+            + self.order.len()
+            + self.up.iter().map(Vec::len).sum::<usize>();
+        u32s * 4 + self.weights.len() * 8
+    }
+}
+
+/// Shared handle with snapshot semantics. Readers [`load`](Self::load) an
+/// `Arc<ServeIndex>` and answer any number of queries from that immutable
+/// snapshot; a re-cluster [`publish`](Self::publish)es a new index
+/// atomically. In-flight readers keep their old snapshot (self-consistent
+/// answers), new loads observe the new one; the old index frees when the
+/// last reader drops it.
+pub struct ServeHandle {
+    current: RwLock<Arc<ServeIndex>>,
+}
+
+impl ServeHandle {
+    pub fn new(index: ServeIndex) -> ServeHandle {
+        ServeHandle {
+            current: RwLock::new(Arc::new(index)),
+        }
+    }
+
+    /// Snapshot the current index. The lock is held only for the `Arc`
+    /// clone, never across queries.
+    pub fn load(&self) -> Arc<ServeIndex> {
+        self.current.read().expect("serve handle poisoned").clone()
+    }
+
+    /// Atomically replace the served index; returns the new snapshot.
+    pub fn publish(&self, index: ServeIndex) -> Arc<ServeIndex> {
+        let next = Arc::new(index);
+        *self.current.write().expect("serve handle poisoned") = next.clone();
+        next
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dendrogram::Merge;
+
+    fn chain4() -> Dendrogram {
+        Dendrogram::new(
+            4,
+            vec![
+                Merge { a: 0, b: 1, weight: 1.0 },
+                Merge { a: 2, b: 3, weight: 2.0 },
+                Merge { a: 0, b: 2, weight: 3.0 },
+            ],
+        )
+    }
+
+    #[test]
+    fn build_rejects_invalid() {
+        let dead = Dendrogram::new(
+            3,
+            vec![
+                Merge { a: 0, b: 1, weight: 1.0 },
+                Merge { a: 1, b: 2, weight: 2.0 },
+            ],
+        );
+        assert!(matches!(
+            ServeIndex::build(&dead),
+            Err(ServeError::InvalidDendrogram(_))
+        ));
+        let ghost = Dendrogram::new(0, vec![Merge { a: 0, b: 1, weight: 1.0 }]);
+        assert!(matches!(
+            ServeIndex::build(&ghost),
+            Err(ServeError::InvalidDendrogram(_))
+        ));
+    }
+
+    #[test]
+    fn cut_threshold_matches_naive() {
+        let d = chain4();
+        let idx = ServeIndex::build(&d).unwrap();
+        for t in [-1.0, 0.0, 0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 10.0, f64::NAN] {
+            assert_eq!(idx.cut_threshold(t), d.cut_threshold(t), "t={t}");
+        }
+    }
+
+    #[test]
+    fn cut_k_matches_naive_including_errors() {
+        let d = chain4();
+        let idx = ServeIndex::build(&d).unwrap();
+        for k in 0..=5 {
+            assert_eq!(idx.cut_k(k), d.cut_k(k), "k={k}");
+        }
+        let disc = Dendrogram::new(4, vec![Merge { a: 0, b: 1, weight: 1.0 }]);
+        let idx = ServeIndex::build(&disc).unwrap();
+        for k in 0..=5 {
+            assert_eq!(idx.cut_k(k), disc.cut_k(k), "disconnected k={k}");
+        }
+    }
+
+    #[test]
+    fn membership_and_members() {
+        let d = chain4();
+        let idx = ServeIndex::build(&d).unwrap();
+        assert_eq!(idx.point_membership(3, 2.5).unwrap(), 2);
+        assert_eq!(idx.point_membership(3, 10.0).unwrap(), 0);
+        assert_eq!(idx.cluster_members(3, 2.5).unwrap(), vec![2, 3]);
+        assert_eq!(idx.cluster_members(3, 10.0).unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(idx.cluster_members(1, 0.5).unwrap(), vec![1]);
+        assert!(matches!(
+            idx.point_membership(4, 1.0),
+            Err(QueryError::PointOutOfRange { p: 4, n: 4 })
+        ));
+    }
+
+    #[test]
+    fn diff_walks_only_the_band() {
+        let d = chain4();
+        let idx = ServeIndex::build(&d).unwrap();
+        let steps = idx.diff(1.5, 3.5).unwrap();
+        assert_eq!(
+            steps,
+            vec![
+                MergeStep { weight: 2.0, into: 2, absorbed: 3 },
+                MergeStep { weight: 3.0, into: 0, absorbed: 2 },
+            ]
+        );
+        assert!(idx.diff(3.5, 1.5).is_err());
+        assert!(idx.diff(f64::NAN, 1.0).is_err());
+        assert_eq!(idx.diff(0.0, 0.5).unwrap(), vec![]);
+    }
+
+    #[test]
+    fn empty_index() {
+        let d = Dendrogram::new(0, vec![]);
+        let idx = ServeIndex::build(&d).unwrap();
+        assert_eq!(idx.cut_threshold(1.0), Vec::<u32>::new());
+        assert!(idx.cut_k(1).is_err());
+    }
+
+    #[test]
+    fn handle_swaps_atomically() {
+        let h = ServeHandle::new(ServeIndex::build(&chain4()).unwrap());
+        let old = h.load();
+        let disc = Dendrogram::new(4, vec![Merge { a: 0, b: 1, weight: 1.0 }]);
+        h.publish(ServeIndex::build(&disc).unwrap());
+        // The old snapshot still answers from the old tree...
+        assert_eq!(old.cut_threshold(10.0), vec![0, 0, 0, 0]);
+        // ...while new loads see the replacement.
+        assert_eq!(h.load().cut_threshold(10.0), vec![0, 0, 1, 2]);
+    }
+}

@@ -234,7 +234,10 @@ fn flat_cuts_agree_with_exact_hac_on_stable_hierarchies() {
     for eps in [0.0, 0.1, 1.0] {
         let approx = ApproxEngine::new(&g, Linkage::Average, eps).run();
         for k in [2usize, 4, 8, 16] {
-            let ari = quality::adjusted_rand_index(&hac.cut_k(k), &approx.dendrogram.cut_k(k));
+            let ari = quality::adjusted_rand_index(
+                &hac.cut_k(k).unwrap(),
+                &approx.dendrogram.cut_k(k).unwrap(),
+            );
             assert_eq!(ari, 1.0, "eps={eps} k={k}");
         }
     }
@@ -419,7 +422,9 @@ fn cut_k_agrees_with_cut_threshold_at_strict_boundaries() {
                     weights[j]
                 };
                 assert_eq!(
-                    d.cut_k(n - j),
+                    // n - j >= remaining_clusters always, so the cut is
+                    // answerable even on disconnected inputs.
+                    d.cut_k(n - j).unwrap(),
                     d.cut_threshold(threshold),
                     "{l:?}: j={j} of {} merges (n={n})",
                     weights.len()
@@ -449,7 +454,11 @@ fn cut_agreement_holds_for_approx_dendrograms_too() {
             } else {
                 weights[j]
             };
-            assert_eq!(d.cut_k(n - j), d.cut_threshold(threshold), "j={j} (n={n})");
+            assert_eq!(
+                d.cut_k(n - j).unwrap(),
+                d.cut_threshold(threshold),
+                "j={j} (n={n})"
+            );
         }
     });
 }

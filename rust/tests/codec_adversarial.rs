@@ -9,8 +9,10 @@
 //! random garbage. The contract everywhere is *reject with an error* —
 //! never panic, never allocate unbounded memory, never mis-decode.
 
+use rac_hac::dendrogram::{Dendrogram, Merge};
 use rac_hac::dist::checkpoint::{self, DeltaCheckpoint, MachineCheckpoint};
 use rac_hac::dist::{decode_batch, encode_batch, Message};
+use rac_hac::serve::{codec as dendrogram_codec, ServeIndex};
 use rac_hac::util::prop::for_all_seeds;
 use rac_hac::util::rng::Rng;
 
@@ -403,5 +405,118 @@ fn checkpoint_chains_fold_correctly_and_reject_broken_links() {
         let mut scratch = base.clone();
         assert!(checkpoint::apply_delta(&mut scratch, &alien).is_err());
         assert_eq!(scratch, base, "failed apply mutated the base");
+    });
+}
+
+/// Draw a random but *valid* dendrogram: a forest built by merging random
+/// live representatives, with a mix of continuous and deliberately tied
+/// weights (ties stress the serve-layer sort downstream, but here they
+/// just need to survive the codec bit-exactly).
+fn random_dendrogram(rng: &mut Rng) -> Dendrogram {
+    let n = rng.range_usize(0, 40);
+    let mut live: Vec<u32> = (0..n as u32).collect();
+    let target = if n == 0 { 0 } else { rng.below(n) };
+    let mut merges = Vec::new();
+    for _ in 0..target {
+        if live.len() < 2 {
+            break;
+        }
+        let i = rng.below(live.len());
+        let mut j = rng.below(live.len());
+        while j == i {
+            j = rng.below(live.len());
+        }
+        let (a, b) = (live[i].min(live[j]), live[i].max(live[j]));
+        live.retain(|&x| x != b);
+        let weight = if rng.bool_with(0.3) {
+            rng.below(5) as f64 * 0.5
+        } else {
+            rng.range_f64(-5.0, 5.0)
+        };
+        merges.push(Merge { a, b, weight });
+    }
+    Dendrogram::new(n, merges)
+}
+
+#[test]
+fn dendrogram_blobs_round_trip_bit_exact() {
+    for_all_seeds(0xC0DEC + 11, 32, |rng| {
+        let d = random_dendrogram(rng);
+        let blob = dendrogram_codec::encode(&d);
+        let back = dendrogram_codec::decode(&blob).unwrap();
+        assert_eq!(back.n(), d.n());
+        assert_eq!(back.bitwise_merges(), d.bitwise_merges());
+    });
+}
+
+#[test]
+fn truncated_dendrogram_blobs_are_rejected_at_every_cut() {
+    for_all_seeds(0xC0DEC + 12, 16, |rng| {
+        let blob = dendrogram_codec::encode(&random_dendrogram(rng));
+        for cut in 0..blob.len() {
+            assert!(
+                dendrogram_codec::decode(&blob[..cut]).is_err(),
+                "cut={cut}/{} accepted",
+                blob.len()
+            );
+        }
+        let mut extended = blob.clone();
+        extended.push(0);
+        assert!(dendrogram_codec::decode(&extended).is_err());
+    });
+}
+
+#[test]
+fn corrupt_dendrogram_counts_fail_fast_without_huge_allocation() {
+    // Header layout: magic [0..8], version [8..12], n [12..20],
+    // count [20..28]. A maxed merge count claims 2^64-1 records; the
+    // `count < max(n, 1)` bound must reject it before the element loop.
+    let d = Dendrogram::new(4, vec![Merge { a: 0, b: 2, weight: 1.5 }]);
+    let blob = dendrogram_codec::encode(&d);
+    let mut corrupt = blob.clone();
+    corrupt[20..28].copy_from_slice(&u64::MAX.to_le_bytes());
+    let err = dendrogram_codec::decode(&corrupt).unwrap_err();
+    assert!(err.contains("corrupt merge count"), "got: {err}");
+
+    // A count that passes the n bound but not the byte budget is caught
+    // by the remaining-bytes check, again before allocation.
+    let mut corrupt = blob.clone();
+    corrupt[12..20].copy_from_slice(&1000u64.to_le_bytes());
+    corrupt[20..28].copy_from_slice(&999u64.to_le_bytes());
+    assert!(dendrogram_codec::decode(&corrupt).is_err());
+
+    // A maxed *point* count with an in-budget merge list decodes without
+    // allocating anything proportional to the claim (the decoder's
+    // validation is count-bounded by design) — and the serve layer's own
+    // size gate then refuses to build an index over it, also without
+    // touching memory proportional to n.
+    let mut corrupt = blob;
+    corrupt[12..20].copy_from_slice(&u64::MAX.to_le_bytes());
+    if let Ok(huge) = dendrogram_codec::decode(&corrupt) {
+        assert_eq!(huge.merges().len(), 1);
+        let err = ServeIndex::build(&huge).unwrap_err();
+        assert!(format!("{err}").contains("too large"), "got: {err}");
+    }
+}
+
+#[test]
+fn random_garbage_and_byte_flips_never_panic_the_dendrogram_decoder() {
+    for_all_seeds(0xC0DEC + 13, 48, |rng| {
+        let len = rng.below(300);
+        let bytes: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let _ = dendrogram_codec::decode(&bytes);
+        // And single-byte corruptions of a valid blob: reject or decode,
+        // never panic, never over-allocate.
+        let mut blob = dendrogram_codec::encode(&random_dendrogram(rng));
+        if blob.is_empty() {
+            return;
+        }
+        for _ in 0..16 {
+            let at = rng.below(blob.len());
+            let old = blob[at];
+            blob[at] ^= (rng.next_u64() as u8) | 1;
+            let _ = dendrogram_codec::decode(&blob);
+            blob[at] = old;
+        }
     });
 }

@@ -306,7 +306,10 @@ fn stable_hierarchy_sync_point_collapse_with_perfect_cuts() {
             "eps={eps}: subtree merges did not batch ({syncs} of {rounds})"
         );
         for k in [2usize, 4, 8] {
-            let ari = quality::adjusted_rand_index(&hac.cut_k(k), &b.dendrogram.cut_k(k));
+            let ari = quality::adjusted_rand_index(
+                &hac.cut_k(k).unwrap(),
+                &b.dendrogram.cut_k(k).unwrap(),
+            );
             assert_eq!(ari, 1.0, "eps={eps} k={k}");
         }
     }

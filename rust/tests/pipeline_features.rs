@@ -38,7 +38,7 @@ fn threshold_cut_matches_k_cut_on_monotone_output() {
     let k = 7;
     let thr = (ws[200 - k - 1] + ws[200 - k]) / 2.0;
     let by_thr = d.cut_threshold(thr);
-    let by_k = d.cut_k(k);
+    let by_k = d.cut_k(k).unwrap();
     for i in 0..200 {
         for j in (i + 1)..200 {
             assert_eq!(

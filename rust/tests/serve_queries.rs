@@ -1,0 +1,330 @@
+//! Differential suite for the serving layer (`rac_hac::serve`).
+//!
+//! The contract under test: [`ServeIndex`] is a *pure representation
+//! change*. Every query it answers — threshold cuts, k-cuts (including
+//! their error cases), single-point membership, cluster extraction,
+//! threshold-band diffs — must agree **bitwise** with the naive
+//! [`Dendrogram`] implementation, across the outputs of all five engines,
+//! on random sparse graphs (routinely disconnected), tie-heavy quantised
+//! weights, and thresholds sitting exactly on merge weights.
+//!
+//! Plus the snapshot-swap property: readers holding an `Arc` from
+//! [`ServeHandle::load`] keep getting answers consistent with *their*
+//! snapshot while a publisher swaps new indexes underneath them.
+
+use rac_hac::approx::ApproxEngine;
+use rac_hac::data::{gaussian_mixture, random_sparse_graph, random_tied_graph};
+use rac_hac::dendrogram::{CutError, Dendrogram};
+use rac_hac::dist::{DistApproxEngine, DistConfig, DistRacEngine};
+use rac_hac::graph::Graph;
+use rac_hac::knn::{knn_graph, Backend};
+use rac_hac::linkage::{Linkage, Weight};
+use rac_hac::rac::baseline::HashRacEngine;
+use rac_hac::rac::RacEngine;
+use rac_hac::serve::{codec, ServeHandle, ServeIndex};
+use rac_hac::util::prop::for_all_seeds;
+
+/// The five engines' dendrograms for one graph.
+fn engine_dendrograms(g: &Graph, l: Linkage) -> Vec<(&'static str, Dendrogram)> {
+    vec![
+        ("rac", RacEngine::new(g, l).run().dendrogram),
+        ("hash_rac", HashRacEngine::new(g, l).run().dendrogram),
+        ("approx", ApproxEngine::new(g, l, 0.1).run().dendrogram),
+        (
+            "dist_rac",
+            DistRacEngine::new(g, l, DistConfig::new(3, 2)).run().dendrogram,
+        ),
+        (
+            "dist_approx",
+            DistApproxEngine::new(g, l, DistConfig::new(3, 2), 0.1)
+                .run()
+                .dendrogram,
+        ),
+    ]
+}
+
+/// Thresholds worth probing for a dendrogram: every merge weight itself
+/// (the exclusive-boundary case), midpoints between distinct weights, and
+/// the extremes.
+fn probe_thresholds(d: &Dendrogram) -> Vec<Weight> {
+    let mut ws: Vec<Weight> = d.merges().iter().map(|m| m.weight).collect();
+    ws.sort_by(Weight::total_cmp);
+    let mut ts = vec![0.0, -1.0, Weight::INFINITY, Weight::NEG_INFINITY];
+    for i in 0..ws.len() {
+        ts.push(ws[i]);
+        if i + 1 < ws.len() && ws[i] < ws[i + 1] {
+            ts.push((ws[i] + ws[i + 1]) / 2.0);
+        }
+    }
+    if let (Some(first), Some(last)) = (ws.first(), ws.last()) {
+        ts.push(first - 1.0);
+        ts.push(last + 1.0);
+    }
+    ts
+}
+
+/// Naive cluster representative: the minimum point id sharing `p`'s label.
+fn naive_rep(labels: &[u32], p: usize) -> u32 {
+    labels
+        .iter()
+        .position(|&l| l == labels[p])
+        .expect("p itself matches") as u32
+}
+
+/// Naive cluster extraction: all points sharing `p`'s label, ascending.
+fn naive_members(labels: &[u32], p: usize) -> Vec<u32> {
+    labels
+        .iter()
+        .enumerate()
+        .filter(|&(_, &l)| l == labels[p])
+        .map(|(i, _)| i as u32)
+        .collect()
+}
+
+/// Pin every query class on one (dendrogram, index) pair.
+fn pin_against_naive(name: &str, d: &Dendrogram) {
+    let idx = ServeIndex::build(d).expect("engine output must index");
+    let n = d.n();
+    assert_eq!(idx.n(), n);
+    assert_eq!(idx.components(), d.remaining_clusters(), "{name}");
+
+    for t in probe_thresholds(d) {
+        let naive = d.cut_threshold(t);
+        assert_eq!(idx.cut_threshold(t), naive, "{name}: cut_threshold({t})");
+        // Membership + extraction, sampled across the id range.
+        for p in (0..n).step_by(1 + n / 17) {
+            assert_eq!(
+                idx.point_membership(p as u32, t).unwrap(),
+                naive_rep(&naive, p),
+                "{name}: point_membership({p}, {t})"
+            );
+            assert_eq!(
+                idx.cluster_members(p as u32, t).unwrap(),
+                naive_members(&naive, p),
+                "{name}: cluster_members({p}, {t})"
+            );
+        }
+    }
+
+    // k-cuts: agreement over the whole range, errors included.
+    for k in 0..=n + 1 {
+        assert_eq!(idx.cut_k(k), d.cut_k(k), "{name}: cut_k({k})");
+    }
+}
+
+#[test]
+fn all_engines_all_queries_bitwise_on_random_sparse_graphs() {
+    for_all_seeds(0x5E41, 8, |rng| {
+        let g = random_sparse_graph(rng);
+        for (name, d) in engine_dendrograms(&g, Linkage::Average) {
+            pin_against_naive(name, &d);
+        }
+    });
+}
+
+#[test]
+fn tie_heavy_graphs_cut_identically_at_tied_weights() {
+    // Quantised weights put many merges at exactly the probed thresholds;
+    // the exclusive boundary must land identically on both paths.
+    for_all_seeds(0x5E42, 8, |rng| {
+        let g = random_tied_graph(rng);
+        for (name, d) in engine_dendrograms(&g, Linkage::Single) {
+            pin_against_naive(name, &d);
+        }
+    });
+}
+
+#[test]
+fn single_linkage_and_ward_shapes_also_agree() {
+    // One more linkage over the sparse shape, plus a complete-graph Ward
+    // run: different weight distributions, same bitwise contract.
+    for_all_seeds(0x5E43, 4, |rng| {
+        let g = random_sparse_graph(rng);
+        for (name, d) in engine_dendrograms(&g, Linkage::Single) {
+            pin_against_naive(name, &d);
+        }
+    });
+    let pts = gaussian_mixture(60, 8, 4, 3.0, 0.3, 9);
+    let g = rac_hac::knn::complete_graph(&pts);
+    let d = RacEngine::new(&g, Linkage::Ward).run().dendrogram;
+    pin_against_naive("rac/ward", &d);
+}
+
+/// Minimal lower-root-wins union-find, reimplemented here so the diff
+/// replay check is independent of the crate's own union-find.
+struct Uf(Vec<u32>);
+
+impl Uf {
+    fn new(n: usize) -> Uf {
+        Uf((0..n as u32).collect())
+    }
+    fn find(&mut self, mut x: u32) -> u32 {
+        while self.0[x as usize] != x {
+            self.0[x as usize] = self.0[self.0[x as usize] as usize];
+            x = self.0[x as usize];
+        }
+        x
+    }
+    fn union(&mut self, a: u32, b: u32) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        let (lo, hi) = (ra.min(rb), ra.max(rb));
+        self.0[hi as usize] = lo;
+    }
+    fn dense_labels(&mut self) -> Vec<u32> {
+        let n = self.0.len();
+        let mut map = std::collections::HashMap::new();
+        let mut out = Vec::with_capacity(n);
+        for x in 0..n as u32 {
+            let r = self.find(x);
+            let next = map.len() as u32;
+            out.push(*map.entry(r).or_insert(next));
+        }
+        out
+    }
+}
+
+#[test]
+fn diff_replays_a_threshold_band_exactly() {
+    for_all_seeds(0x5E44, 10, |rng| {
+        let g = random_sparse_graph(rng);
+        let d = RacEngine::new(&g, Linkage::Average).run().dendrogram;
+        let idx = ServeIndex::build(&d).unwrap();
+        // Sampled threshold pairs: the full probe list is quadratic in
+        // merge count and this replay is itself O(n α) per pair.
+        let all = probe_thresholds(&d);
+        let ts: Vec<Weight> = all.iter().step_by(1 + all.len() / 12).copied().collect();
+        for (i, &lo) in ts.iter().enumerate() {
+            for &hi in &ts[i..] {
+                // The probe list is not sorted; orient each pair (no NaNs
+                // in it, so the swap is total).
+                let (lo, hi) = if lo <= hi { (lo, hi) } else { (hi, lo) };
+                let steps = idx.diff(lo, hi).unwrap();
+                // Replay the band on top of the lo-cut with an
+                // independent union-find; each step must name the two
+                // clusters' *current* minimum members, and the result
+                // must be exactly the hi-cut.
+                let labels_lo = d.cut_threshold(lo);
+                let mut uf = Uf::new(d.n());
+                // Seed the lo-cut: union every point onto its label's
+                // first occurrence (labels are dense first-encounter, so
+                // the first occurrence is the cluster's minimum member).
+                let mut first = vec![u32::MAX; labels_lo.len()];
+                for (p, &l) in labels_lo.iter().enumerate() {
+                    if first[l as usize] == u32::MAX {
+                        first[l as usize] = p as u32;
+                    } else {
+                        uf.union(first[l as usize], p as u32);
+                    }
+                }
+                for s in &steps {
+                    assert!(s.into < s.absorbed, "step reps ordered");
+                    assert_eq!(uf.find(s.into), s.into, "into is a live rep");
+                    assert_eq!(uf.find(s.absorbed), s.absorbed, "absorbed is a live rep");
+                    uf.union(s.into, s.absorbed);
+                }
+                assert_eq!(
+                    uf.dense_labels(),
+                    d.cut_threshold(hi),
+                    "band [{lo}, {hi}) replay diverged"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn cut_k_on_a_disconnected_knn_graph_is_a_named_error() {
+    // Two tight, far-apart blobs and a small k: the kNN graph cannot
+    // connect them — the exact regression scenario for the old silent
+    // `remaining_clusters()` fallback. Built deterministically so the
+    // disconnection is structural, not a lucky seed.
+    let mut rng = rac_hac::util::rng::Rng::seed_from(0x5E46);
+    let (n, d) = (60usize, 8usize);
+    let mut rows = vec![0.0f32; n * d];
+    for (i, row) in rows.chunks_mut(d).enumerate() {
+        let offset = if i < n / 2 { 0.0 } else { 1000.0 };
+        for x in row {
+            *x = (offset + rng.range_f64(0.0, 1.0)) as f32;
+        }
+    }
+    let pts = rac_hac::data::Dataset {
+        n,
+        d,
+        metric: rac_hac::data::Metric::L2,
+        rows,
+    };
+    let g = knn_graph(&pts, 3, Backend::Native, None).unwrap();
+    let d = RacEngine::new(&g, Linkage::Average).run().dendrogram;
+    let components = d.remaining_clusters();
+    assert!(
+        components >= 2,
+        "fixture must be disconnected, got {components} component(s)"
+    );
+    assert_eq!(
+        d.cut_k(1),
+        Err(CutError::Disconnected { k: 1, components })
+    );
+    // The indexed path agrees on the error, and on the first answerable k.
+    let idx = ServeIndex::build(&d).unwrap();
+    assert_eq!(idx.cut_k(1), d.cut_k(1));
+    assert_eq!(idx.cut_k(components), d.cut_k(components));
+    assert!(d.cut_k(components).is_ok());
+}
+
+#[test]
+fn persisted_dendrogram_serves_identically() {
+    let g = random_tied_graph(&mut rac_hac::util::rng::Rng::seed_from(0x5E45));
+    let d = RacEngine::new(&g, Linkage::Average).run().dendrogram;
+    let dir = std::env::temp_dir().join(format!("racserve-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("t.dend");
+    codec::write_file(&d, &path).unwrap();
+    let back = codec::read_file(&path).unwrap();
+    assert_eq!(back.bitwise_merges(), d.bitwise_merges());
+    pin_against_naive("rac/persisted", &back);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn snapshot_swap_keeps_live_readers_consistent() {
+    // Two dendrograms with different n, so a reader can tell which
+    // snapshot it is holding and check against the matching naive answer.
+    let chain = |n: u32, scale: f64| {
+        Graph::from_edges(
+            n as usize,
+            (1..n).map(move |v| (v - 1, v, scale * v as f64)),
+        )
+    };
+    let d_a = RacEngine::new(&chain(40, 1.0), Linkage::Single).run().dendrogram;
+    let d_b = RacEngine::new(&chain(31, 0.5), Linkage::Single).run().dendrogram;
+    let t = 7.25;
+    let naive_a = d_a.cut_threshold(t);
+    let naive_b = d_b.cut_threshold(t);
+    let handle = ServeHandle::new(ServeIndex::build(&d_a).unwrap());
+
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            s.spawn(|| {
+                for _ in 0..300 {
+                    let snap = handle.load();
+                    let labels = snap.cut_threshold(t);
+                    let expect = if snap.n() == naive_a.len() {
+                        &naive_a
+                    } else {
+                        &naive_b
+                    };
+                    assert_eq!(&labels, expect, "reader saw a torn snapshot");
+                }
+            });
+        }
+        s.spawn(|| {
+            for i in 0..40 {
+                let next = if i % 2 == 0 { &d_b } else { &d_a };
+                handle.publish(ServeIndex::build(next).unwrap());
+                std::thread::yield_now();
+            }
+        });
+    });
+    // The publisher's last swap (i = 39, odd) reinstated d_a.
+    assert_eq!(handle.load().cut_threshold(t), naive_a);
+}

@@ -166,7 +166,7 @@ fn flat_cuts_consistent_across_engines() {
         let a = naive_hac(&g, Linkage::Average);
         let b = RacEngine::new(&g, Linkage::Average).run().dendrogram;
         let k = rng.range_usize(1, g.n().min(8));
-        let (ca, cb) = (a.cut_k(k), b.cut_k(k));
+        let (ca, cb) = (a.cut_k(k).unwrap(), b.cut_k(k).unwrap());
         for _ in 0..200 {
             let i = rng.below(g.n());
             let j = rng.below(g.n());
